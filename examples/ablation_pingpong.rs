@@ -1,0 +1,83 @@
+//! Ablation: ping-pong pipeline parallelism (paper §7.4, Figure 12) plus
+//! the expert load-balancer ablation (§6) under skewed expert popularity.
+//!
+//! ```bash
+//! cargo run --release --example ablation_pingpong
+//! ```
+
+use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
+use megascale_infer::coordinator::{balance_experts, PingPongSim};
+use megascale_infer::perf_model::PerfModel;
+use megascale_infer::plan::PlanSearcher;
+use megascale_infer::sim::SimRng;
+
+fn main() {
+    // --- micro-batch ablation (Figure 12) ---
+    println!("== ping-pong ablation: throughput vs m (DBRX, const micro-batch) ==");
+    let model = ModelConfig::dbrx();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    // Use the *balanced* optimal plan's operating point (§7.4).
+    let plan = PlanSearcher::new(model.clone(), cluster.clone(), 730.0)
+        .search()
+        .expect("plan");
+    let pm = PerfModel::new(&model, &cluster, plan.tp_a, plan.tp_e, 730.0);
+    let (b_a, n_a) = (plan.b_a(), plan.n_a as f64);
+    let b_e = plan.b_e(&model);
+    let (t_a, t_e, t_c) = (pm.t_a(b_a), pm.t_e(b_e), pm.t_c(b_a, b_e));
+    println!(
+        "per-layer: T_a {:.0}us  T_e {:.0}us  T_c {:.0}us  (min m = {:.0})",
+        t_a * 1e6,
+        t_e * 1e6,
+        t_c * 1e6,
+        (2.0 * (1.0 + t_c / t_a.max(t_e))).ceil()
+    );
+    let mut prev = None;
+    for m in 1..=5 {
+        let s = PingPongSim {
+            t_a,
+            t_e,
+            t_c,
+            m,
+            layers: model.layers,
+        }
+        .run();
+        let tput = m as f64 * b_a * n_a / s.total_time;
+        let gain = prev.map(|p: f64| tput / p).unwrap_or(1.0);
+        println!(
+            "m={m}: {:>8.0} tok/s  (x{:.2} vs m={})  attn busy {:>3.0}%  expert busy {:>3.0}%",
+            tput,
+            gain,
+            m.max(2) - 1,
+            s.attn_utilization * 100.0,
+            s.expert_utilization * 100.0
+        );
+        prev = Some(tput);
+    }
+
+    // --- load-balance ablation (§6) ---
+    println!("\n== expert load balance: static placement vs greedy redundancy ==");
+    let mut rng = SimRng::new(3);
+    let experts = 16;
+    let mut traffic = vec![0.0f64; experts];
+    for _ in 0..200_000 {
+        let e = ((rng.uniform().powf(2.5)) * experts as f64) as usize;
+        traffic[e.min(experts - 1)] += 1.0;
+    }
+    let nodes = 16;
+    let static_makespan = traffic
+        .iter()
+        .map(|&t| t.max(1000.0))
+        .fold(0.0f64, f64::max);
+    let balanced = balance_experts(&traffic, nodes, 1000.0);
+    println!("traffic (tokens per expert): {traffic:.0?}");
+    println!(
+        "static one-expert-per-node makespan: {:.0}   greedy-redundancy makespan: {:.0}  ({:.2}x better)",
+        static_makespan,
+        balanced.makespan,
+        static_makespan / balanced.makespan
+    );
+    let replicated: Vec<usize> = (0..experts)
+        .filter(|&i| balanced.replicas(i) > 1)
+        .collect();
+    println!("experts replicated across nodes: {replicated:?}");
+}

@@ -1,0 +1,59 @@
+//! Deployment plan search across all paper models and hardware options,
+//! including the full heterogeneous pairing enumeration of §4.3.
+//!
+//! ```bash
+//! cargo run --release --example plan_search
+//! ```
+
+use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
+use megascale_infer::plan::{search_heterogeneous, table3_kinds, PlanSearcher, SearchLimits};
+
+fn main() {
+    // Homogeneous plans per model on the Ampere testbed.
+    println!("== homogeneous plans (Ampere-80GB, TPOT<=150ms, s=730) ==");
+    for model in ModelConfig::paper_models() {
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        match PlanSearcher::new(model.clone(), cluster, 730.0).search() {
+            Some(p) => println!(
+                "{:<14} tp_a={} n_a={:<2} tp_e={} m={} B={:<5} TPOT {:>5.1}ms  {:>7.0} tok/s/GPU",
+                model.name,
+                p.tp_a,
+                p.n_a,
+                p.tp_e,
+                p.m,
+                p.global_batch,
+                p.metrics.tpot * 1e3,
+                p.metrics.per_gpu_throughput
+            ),
+            None => println!("{:<14} no feasible plan", model.name),
+        }
+    }
+
+    // Every Table 3 pairing, ranked by throughput per dollar.
+    println!("\n== heterogeneous pairings (Mixtral-8x22B, all Table 3 GPUs) ==");
+    let results = search_heterogeneous(
+        &ModelConfig::mixtral_8x22b(),
+        &table3_kinds(),
+        730.0,
+        &SearchLimits::default(),
+    );
+    println!(
+        "{:<22} {:>12} {:>10} {:>8}",
+        "attention + experts", "tok/s/$", "tok/s", "GPUs"
+    );
+    for r in results.iter().take(10) {
+        println!(
+            "{:<22} {:>12.0} {:>10.0} {:>8}",
+            format!("{:?} + {:?}", r.attention_gpu, r.expert_gpu),
+            r.plan.metrics.throughput_per_dollar,
+            r.plan.metrics.throughput,
+            r.plan.total_gpus()
+        );
+    }
+    if let Some(best) = results.first() {
+        println!(
+            "\nbest pairing: {:?} attention + {:?} experts (paper §4.3 expects H20 + L40S)",
+            best.attention_gpu, best.expert_gpu
+        );
+    }
+}

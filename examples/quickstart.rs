@@ -1,0 +1,61 @@
+//! Quickstart: plan a deployment for Mixtral-8x22B on an Ampere cluster,
+//! inspect the plan, and simulate serving a synthetic workload on it.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
+use megascale_infer::coordinator::RuntimeInstance;
+use megascale_infer::plan::PlanSearcher;
+use megascale_infer::workload::WorkloadSpec;
+
+fn main() {
+    // 1. Describe the model (paper Table 4) and the hardware.
+    let model = ModelConfig::mixtral_8x22b();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+
+    // 2. Describe the workload: the paper's production trace medians.
+    let workload = WorkloadSpec::default(); // median in/out = 571/159 tokens
+
+    // 3. Run the deployment plan search (paper Algorithm 1).
+    let searcher = PlanSearcher::new(model.clone(), cluster.clone(), workload.avg_seq_len());
+    let plan = searcher.search().expect("a feasible plan exists");
+    println!("optimal deployment plan for {}:", model.name);
+    println!(
+        "  attention: {} nodes x TP{}   experts: {} nodes x TP{}   micro-batches: {}",
+        plan.n_a, plan.tp_a, plan.n_e, plan.tp_e, plan.m
+    );
+    println!(
+        "  global batch {} | predicted TPOT {:.1} ms | {:.0} tok/s/GPU | {:.0} tok/s/$",
+        plan.global_batch,
+        plan.metrics.tpot * 1e3,
+        plan.metrics.per_gpu_throughput,
+        plan.metrics.throughput_per_dollar
+    );
+    println!(
+        "  per-layer times: T_a {:.0} us, T_e {:.0} us, T_c {:.0} us (pipeline full: {})",
+        plan.metrics.t_a * 1e6,
+        plan.metrics.t_e * 1e6,
+        plan.metrics.t_c * 1e6,
+        plan.metrics.pipeline_full
+    );
+
+    // 4. Simulate decoding 256 requests on the planned instance
+    //    (virtual-time discrete-event simulation of the full coordinator).
+    let requests = workload.generate(256, 42);
+    let report = RuntimeInstance::new(model, cluster, plan).simulate(&requests);
+    println!("\nsimulated serving of {} requests:", report.completed);
+    println!(
+        "  {:.0} output tok/s ({:.0}/GPU) | TPOT p50 {:.1} ms p99 {:.1} ms",
+        report.throughput,
+        report.per_gpu_throughput,
+        report.tpot.median() * 1e3,
+        report.tpot.p99() * 1e3
+    );
+    println!(
+        "  stage utilization: attention {:.0}%, experts {:.0}%",
+        report.attn_utilization * 100.0,
+        report.expert_utilization * 100.0
+    );
+}

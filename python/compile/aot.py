@@ -1,0 +1,278 @@
+"""AOT bridge: lower the L2 functions to HLO **text** + write weights and
+the manifest the Rust runtime consumes.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); Python
+never runs on the request path.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_weights(cfg: M.TinyConfig, seed: int = 0):
+    """Random-initialized weights, scaled for stable propagation."""
+    rng = np.random.RandomState(seed)
+    h, f = cfg.hidden, cfg.intermediate
+    qh, kvh, d = cfg.q_heads, cfg.kv_heads, cfg.head_dim
+
+    def mat(*shape, scale=None):
+        scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+        return (rng.randn(*shape) * scale).astype(np.float32)
+
+    weights = {"emb": mat(cfg.vocab, h, scale=0.5), "final_norm": np.ones(h, np.float32)}
+    for l in range(cfg.layers):
+        p = f"l{l}."
+        weights[p + "attn_norm"] = np.ones(h, np.float32)
+        weights[p + "wq"] = mat(h, qh * d)
+        weights[p + "wk"] = mat(h, kvh * d)
+        weights[p + "wv"] = mat(h, kvh * d)
+        weights[p + "wo"] = mat(qh * d, h)
+        weights[p + "ffn_norm"] = np.ones(h, np.float32)
+        weights[p + "wg"] = mat(h, cfg.experts)
+        for e in range(cfg.experts):
+            ep = f"{p}e{e}."
+            weights[ep + "w1"] = mat(h, f)
+            weights[ep + "w3"] = mat(h, f)
+            weights[ep + "w2"] = mat(f, h)
+    return weights
+
+
+def lower_all(cfg: M.TinyConfig):
+    """Lower each disaggregated function at the fixed micro-batch size."""
+    b, h, s = cfg.micro_batch, cfg.hidden, cfg.max_seq
+    kvh, d, qh = cfg.kv_heads, cfg.head_dim, cfg.q_heads
+    f32 = jnp.float32
+    i32 = jnp.int32
+    spec = jax.ShapeDtypeStruct
+
+    shapes = {
+        "attention": (
+            spec((b, h), f32),
+            spec((b, s, kvh, d), f32),
+            spec((b, s, kvh, d), f32),
+            spec((b,), i32),
+            spec((h,), f32),
+            spec((h, qh * d), f32),
+            spec((h, kvh * d), f32),
+            spec((h, kvh * d), f32),
+            spec((qh * d, h), f32),
+        ),
+        "gating": (
+            spec((b, h), f32),
+            spec((h,), f32),
+            spec((h, cfg.experts), f32),
+        ),
+        "expert": (
+            spec((b, h), f32),
+            spec((h, cfg.intermediate), f32),
+            spec((h, cfg.intermediate), f32),
+            spec((cfg.intermediate, h), f32),
+        ),
+        "experts_grouped": (
+            spec((cfg.experts, b, h), f32),
+            spec((cfg.experts, h, cfg.intermediate), f32),
+            spec((cfg.experts, h, cfg.intermediate), f32),
+            spec((cfg.experts, cfg.intermediate, h), f32),
+        ),
+        "embed": (spec((b,), i32), spec((cfg.vocab, h), f32)),
+        "lm_head": (spec((b, h), f32), spec((h,), f32), spec((cfg.vocab, h), f32)),
+    }
+    fns = {
+        "attention": M.attention_step_tuple,
+        "gating": M.gating_tuple,
+        "expert": M.expert_fn,
+        "experts_grouped": M.experts_grouped_fn,
+        "embed": M.embed_fn,
+        "lm_head": M.lm_head_fn,
+    }
+    return {
+        name: to_hlo_text(jax.jit(fns[name]).lower(*shapes[name])) for name in fns
+    }
+
+
+def build_test_vectors(cfg: M.TinyConfig, weights, seed: int = 1):
+    """Golden input/output pairs, computed by JAX, checked by Rust."""
+    rng = np.random.RandomState(seed)
+    b, h, s = cfg.micro_batch, cfg.hidden, cfg.max_seq
+    kvh, d = cfg.kv_heads, cfg.head_dim
+
+    def arr(name, a):
+        a = np.asarray(a, np.float32)
+        # Shortest-repr rounding keeps the manifest small; the Rust check
+        # uses atol=1e-3 so 7 significant digits are ample.
+        return {
+            "name": name,
+            "shape": list(a.shape),
+            "data": [float(f"{x:.7g}") for x in a.ravel()],
+        }
+
+    def wref(name, weight_name):
+        """Reference a tensor already present in weights.bin by name."""
+        return {"name": name, "weight": weight_name}
+
+    vectors = []
+
+    # expert
+    x = rng.randn(b, h).astype(np.float32) * 0.3
+    w = weights["l0.e0.w1"], weights["l0.e0.w3"], weights["l0.e0.w2"]
+    (y,) = M.expert_fn(jnp.asarray(x), *map(jnp.asarray, w))
+    vectors.append(
+        {
+            "name": "expert",
+            "inputs": [arr("x", x), wref("w1", "l0.e0.w1"), wref("w3", "l0.e0.w3"), wref("w2", "l0.e0.w2")],
+            "outputs": [arr("y", np.asarray(y))],
+        }
+    )
+
+    # gating
+    gamma, wg = weights["l0.ffn_norm"], weights["l0.wg"]
+    normed, logits = M.gating_fn(jnp.asarray(x), jnp.asarray(gamma), jnp.asarray(wg))
+    vectors.append(
+        {
+            "name": "gating",
+            "inputs": [arr("x", x), wref("gamma", "l0.ffn_norm"), wref("wg", "l0.wg")],
+            "outputs": [arr("normed", np.asarray(normed)), arr("logits", np.asarray(logits))],
+        }
+    )
+
+    # attention (positions staggered across slots; caches pre-filled)
+    k_cache = (rng.randn(b, s, kvh, d) * 0.1).astype(np.float32)
+    v_cache = (rng.randn(b, s, kvh, d) * 0.1).astype(np.float32)
+    positions = (np.arange(b) % (s // 2)).astype(np.int32)
+    aw = [weights[f"l0.{n}"] for n in ("attn_norm", "wq", "wk", "wv", "wo")]
+    h1, nk, nv = M.attention_step(
+        jnp.asarray(x),
+        jnp.asarray(k_cache),
+        jnp.asarray(v_cache),
+        jnp.asarray(positions),
+        *map(jnp.asarray, aw),
+    )
+    vectors.append(
+        {
+            "name": "attention",
+            "inputs": [
+                arr("x", x),
+                arr("k_cache", k_cache),
+                arr("v_cache", v_cache),
+                {
+                    "name": "positions",
+                    "shape": [b],
+                    "data": [float(p) for p in positions],
+                },
+            ]
+            + [wref(n, f"l0.{n}") for n in ("attn_norm", "wq", "wk", "wv", "wo")],
+            "outputs": [
+                arr("h1", np.asarray(h1)),
+                arr("new_k", np.asarray(nk)),
+                arr("new_v", np.asarray(nv)),
+            ],
+        }
+    )
+
+    # embed + lm_head
+    ids = rng.randint(0, cfg.vocab, size=b).astype(np.int32)
+    (xe,) = M.embed_fn(jnp.asarray(ids), jnp.asarray(weights["emb"]))
+    vectors.append(
+        {
+            "name": "embed",
+            "inputs": [
+                {"name": "ids", "shape": [b], "data": [float(i) for i in ids]},
+                wref("emb", "emb"),
+            ],
+            "outputs": [arr("x", np.asarray(xe))],
+        }
+    )
+    (logits,) = M.lm_head_fn(
+        jnp.asarray(x), jnp.asarray(weights["final_norm"]), jnp.asarray(weights["emb"])
+    )
+    vectors.append(
+        {
+            "name": "lm_head",
+            "inputs": [arr("x", x), wref("final_norm", "final_norm"), wref("emb", "emb")],
+            "outputs": [arr("logits", np.asarray(logits))],
+        }
+    )
+    return vectors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = M.TinyConfig()
+    os.makedirs(args.out, exist_ok=True)
+
+    # 1. HLO text per executable.
+    executables = {}
+    for name, text in lower_all(cfg).items():
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        executables[name] = fname
+        print(f"  lowered {name}: {len(text)} chars")
+
+    # 2. Weights blob + tensor table.
+    weights = build_weights(cfg, args.seed)
+    tensors = []
+    offset = 0
+    blob = []
+    for name in sorted(weights):
+        a = weights[name]
+        tensors.append({"name": name, "shape": list(a.shape), "offset": offset})
+        blob.append(a.ravel())
+        offset += a.size
+    with open(os.path.join(args.out, "weights.bin"), "wb") as f:
+        f.write(np.concatenate(blob).astype("<f4").tobytes())
+    print(f"  weights.bin: {offset * 4} bytes, {len(tensors)} tensors")
+
+    # 3. Test vectors (JAX golden outputs for the Rust numerics test).
+    vectors = build_test_vectors(cfg, weights)
+
+    manifest = {
+        "model": {
+            "layers": cfg.layers,
+            "hidden": cfg.hidden,
+            "intermediate": cfg.intermediate,
+            "experts": cfg.experts,
+            "top_k": cfg.top_k,
+            "q_heads": cfg.q_heads,
+            "kv_heads": cfg.kv_heads,
+            "head_dim": cfg.head_dim,
+            "vocab": cfg.vocab,
+            "max_seq": cfg.max_seq,
+            "micro_batch": cfg.micro_batch,
+        },
+        "executables": executables,
+        "weights_file": "weights.bin",
+        "tensors": tensors,
+        "test_vectors": vectors,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    print(f"  manifest.json written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: single-token GQA decode attention.
+
+The memory-intensive core of an attention node (§2.1: every decode step
+scans each request's own KV cache, so batching cannot raise arithmetic
+intensity — the reason attention nodes are provisioned for bandwidth).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid over the batch; each grid
+step streams one request's ``[S, KVH, D]`` K/V panels HBM→VMEM and keeps an
+online-softmax accumulator in VMEM. GQA query groups share a single K/V
+panel load (the ``bkgd,bskd`` contraction below). Per-step VMEM:
+``2·S·KVH·D + QH·D`` elements ≈ 1 MB for the compiled shapes.
+
+NOTE: ``interpret=True`` — see expert_ffn.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, o_ref):
+    # Block shapes: q [1, QH, D]; k,v [1, S, KVH, D]; pos [1].
+    q = q_ref[0]  # [QH, D]
+    k = k_ref[0]  # [S, KVH, D]
+    v = v_ref[0]
+    pos = pos_ref[0]
+
+    qh, d = q.shape
+    s, kvh, _ = k.shape
+    g = qh // kvh
+    qg = q.reshape(kvh, g, d)
+
+    scores = jnp.einsum("kgd,skd->kgs", qg, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    mask = (jnp.arange(s) <= pos)[None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("kgs,skd->kgd", p, v)
+    o_ref[0] = out.reshape(qh, d)
+
+
+@jax.jit
+def attention_core(q, k_cache, v_cache, positions):
+    """Masked GQA decode attention as a Pallas kernel.
+
+    q: [b, QH, D]; k_cache, v_cache: [b, S, KVH, D]; positions: [b] int32
+    (cache entries 0..pos inclusive are attended). Returns [b, QH, D].
+    """
+    b, qh, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, qh, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, kvh, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, s, kvh, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, qh, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, qh, d), q.dtype),
+        interpret=True,
+    )(q, k_cache, v_cache, positions)

@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: SwiGLU expert FFN.
+
+This is the compute hot-spot of an expert node (paper Table 2: "FFN Input" /
+"FFN Output" GEMMs; the real models are gated, so the up-projection shape
+occurs twice).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the token axis
+in ``block_b`` rows; each grid step streams the full weight panels HBM→VMEM
+once and drives the MXU with an ``[block_b, h] x [h, f]`` matmul. VMEM
+working set per step is ``block_b·h + 2·h·f + f·h + block_b·f`` elements —
+sized well under the ~16 MB VMEM budget for the shapes we compile
+(block_b ≤ 128, h ≤ 1024, f ≤ 2048 ⇒ ≤ 13 MB in f32).
+
+NOTE: lowered with ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example/README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    x = x_ref[...]
+    up = x @ w1_ref[...]
+    gate = x @ w3_ref[...]
+    act = up * (1.0 / (1.0 + jnp.exp(-up))) * gate  # silu(up) * gate
+    o_ref[...] = act @ w2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def expert_ffn(x, w1, w3, w2, block_b=None):
+    """SwiGLU expert: ``(silu(x @ w1) * (x @ w3)) @ w2`` as a Pallas kernel.
+
+    x: [b, h]; w1, w3: [h, f]; w2: [f, h]. ``block_b`` tiles the token axis
+    (defaults to min(b, 128)).
+    """
+    b, h = x.shape
+    f = w1.shape[1]
+    if block_b is None:
+        block_b = min(b, 128)
+    assert b % block_b == 0, f"batch {b} not divisible by block {block_b}"
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, h), lambda i: (i, 0)),
+            pl.BlockSpec((h, f), lambda i: (0, 0)),
+            pl.BlockSpec((h, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2)
+
+
+def _kernel_grouped(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    # Batched over the experts in this block: [be,b,h] @ [be,h,f].
+    x = x_ref[...]
+    up = jnp.einsum("ebh,ehf->ebf", x, w1_ref[...])
+    gate = jnp.einsum("ebh,ehf->ebf", x, w3_ref[...])
+    act = up * (1.0 / (1.0 + jnp.exp(-up))) * gate
+    o_ref[...] = jnp.einsum("ebf,efh->ebh", act, w2_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_e",))
+def expert_ffn_grouped(x, w1, w3, w2, block_e=None):
+    """All experts' SwiGLU FFNs in ONE kernel (grouped-GEMM style, §6
+    "fused kernels" / §Perf): grid over the expert axis, each step streams
+    one expert's weight panels and computes its (padded) token block.
+
+    x: [E, b, h]; w1, w3: [E, h, f]; w2: [E, f, h]. Returns [E, b, h].
+
+    One kernel launch per layer instead of up to E — the launch/dispatch
+    amortization MegaScale-Infer's fused kernels target on GPU, realized
+    here as a single PJRT executable call on the serving path.
+
+    ``block_e`` experts are processed per grid step. On a real TPU the VMEM
+    budget forces block_e=1 (one expert's panels at a time); the tiny
+    CPU-demo model fits all experts at once, where block_e=E minimizes the
+    interpret-mode grid overhead (§Perf).
+    """
+    e, b, h = x.shape
+    f = w1.shape[2]
+    if block_e is None:
+        block_e = e if (b * h + 2 * h * f + f * h) * e * 4 < 16 << 20 else 1
+    assert e % block_e == 0
+    return pl.pallas_call(
+        _kernel_grouped,
+        grid=(e // block_e,),
+        in_specs=[
+            pl.BlockSpec((block_e, b, h), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_e, h, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_e, h, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_e, f, h), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_e, b, h), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, b, h), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2)

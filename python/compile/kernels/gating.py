@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: fused pre-FFN RMSNorm + router logits.
+
+Paper §6 ("Fused kernels"): attention nodes fuse the gating computation with
+the adjacent memory-intensive operators to cut kernel launches and memory
+round-trips. Here the pre-FFN RMSNorm and the router GEMM run in one kernel
+and emit both the normalized activations (consumed by the experts after
+dispatch) and the logits (consumed by the coordinator's top-k).
+
+The top-k selection itself and the scatter are *coordination*, not GPU
+compute, in the disaggregated architecture — they live in the Rust L3
+(``coordinator::gating`` / ``coordinator::dispatch``).
+
+NOTE: ``interpret=True`` — see expert_ffn.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, gamma_ref, wg_ref, normed_ref, logits_ref):
+    x = x_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    normed = x * (1.0 / jnp.sqrt(ms + 1e-6)) * gamma_ref[...]
+    normed_ref[...] = normed
+    logits_ref[...] = normed @ wg_ref[...]
+
+
+@jax.jit
+def gating(x, gamma, wg):
+    """Fused RMSNorm + router logits. x: [b, h]; gamma: [h]; wg: [h, E].
+
+    Returns (normed [b, h], logits [b, E]).
+    """
+    b, h = x.shape
+    e = wg.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((b, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, e), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, h), lambda i: (0, 0)),
+            pl.BlockSpec((b, e), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h), x.dtype),
+            jax.ShapeDtypeStruct((b, e), x.dtype),
+        ],
+        interpret=True,
+    )(x, gamma, wg)

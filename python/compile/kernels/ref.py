@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every kernel in this package has a reference implementation here written in
+straight-line jax.numpy. ``python/tests/test_kernels.py`` sweeps shapes and
+dtypes with hypothesis and asserts allclose between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def rmsnorm(x, gamma, eps=1e-6):
+    """RMSNorm over the last axis: x / rms(x) * gamma."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * gamma
+
+
+def silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def expert_ffn(x, w1, w3, w2):
+    """SwiGLU expert: (silu(x @ w1) * (x @ w3)) @ w2.
+
+    x: [b, h]; w1, w3: [h, f]; w2: [f, h].
+    """
+    return (silu(x @ w1) * (x @ w3)) @ w2
+
+
+def gating(x, gamma, wg):
+    """Fused pre-FFN RMSNorm + router logits.
+
+    Returns (normed [b, h], logits [b, E]).
+    """
+    normed = rmsnorm(x, gamma)
+    return normed, normed @ wg
+
+
+def attention_core(q, k_cache, v_cache, positions):
+    """Single-token GQA decode attention against a fixed-capacity KV cache.
+
+    q:         [b, QH, D]   query of the current token
+    k_cache:   [b, S, KVH, D]
+    v_cache:   [b, S, KVH, D]
+    positions: [b] int32    index of the current token in the cache; entries
+                            0..pos (inclusive) are valid.
+    Returns    [b, QH, D].
+    """
+    b, qh, d = q.shape
+    s = k_cache.shape[1]
+    kvh = k_cache.shape[2]
+    g = qh // kvh
+
+    qg = q.reshape(b, kvh, g, d)
+    # scores[b, kvh, g, s]
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache) / jnp.sqrt(
+        jnp.asarray(d, q.dtype)
+    )
+    mask = jnp.arange(s)[None, :] <= positions[:, None]  # [b, s]
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache)
+    return out.reshape(b, qh, d)

@@ -1,0 +1,115 @@
+"""L2: the MoE decode step, split along the paper's disaggregation boundary.
+
+Each function below becomes one AOT-compiled PJRT executable (see aot.py).
+The split *is* the architecture: the Rust coordinator shuttles activations
+between the attention executable and the expert executable (ping-pong
+pipeline), runs top-k/dispatch/combine itself, and owns all state.
+
+    attention_step : attention-node work for one layer (pre-norm + QKV +
+                     KV-cache scatter + Pallas attention core + output proj
+                     + residual)
+    gating_fn      : fused pre-FFN RMSNorm + router logits (Pallas)
+    expert_fn      : one expert's SwiGLU FFN (Pallas)
+    embed_fn       : token embedding lookup
+    lm_head_fn     : final RMSNorm + tied-embedding logits
+
+The demo model is a pre-norm transformer without positional encoding (NoPE);
+see DESIGN.md §Substitutions.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from .kernels import expert_ffn as expert_kernel
+from .kernels import gating as gating_kernel
+from .kernels.ref import rmsnorm
+
+
+@dataclass(frozen=True)
+class TinyConfig:
+    """The tiny MoE compiled for the executable end-to-end path.
+
+    Mirrors the structure of the paper's models (GQA attention, top-k
+    gating, SwiGLU experts) at CPU-runnable scale.
+    """
+
+    layers: int = 4
+    hidden: int = 256
+    intermediate: int = 512
+    experts: int = 8
+    top_k: int = 2
+    q_heads: int = 8
+    kv_heads: int = 2
+    head_dim: int = 32
+    vocab: int = 512
+    max_seq: int = 64
+    micro_batch: int = 8
+
+
+def attention_step(x, k_cache, v_cache, positions, attn_norm, wq, wk, wv, wo):
+    """One layer's attention-node work for a single decode token per slot.
+
+    x:         [b, h]        current token activations
+    k_cache:   [b, S, KVH, D]
+    v_cache:   [b, S, KVH, D]
+    positions: [b] int32     write index for this token (per slot)
+    weights:   attn_norm [h]; wq [h, QH*D]; wk, wv [h, KVH*D]; wo [QH*D, h]
+
+    Returns (x + attn_out, new_k_cache, new_v_cache).
+    """
+    b, h = x.shape
+    s, kvh, d = k_cache.shape[1], k_cache.shape[2], k_cache.shape[3]
+    qh = wq.shape[1] // d
+
+    xn = rmsnorm(x, attn_norm)
+    q = (xn @ wq).reshape(b, qh, d)
+    k = (xn @ wk).reshape(b, kvh, d)
+    v = (xn @ wv).reshape(b, kvh, d)
+
+    # Per-row scatter at `positions` via one-hot (rows have independent
+    # write indices under continuous batching).
+    onehot = (jnp.arange(s)[None, :] == positions[:, None]).astype(x.dtype)
+    oh = onehot[:, :, None, None]  # [b, S, 1, 1]
+    new_k = k_cache * (1.0 - oh) + k[:, None, :, :] * oh
+    new_v = v_cache * (1.0 - oh) + v[:, None, :, :] * oh
+
+    attn = attn_kernel.attention_core(q, new_k, new_v, positions)  # [b,QH,D]
+    out = attn.reshape(b, qh * d) @ wo
+    return x + out, new_k, new_v
+
+
+def gating_fn(x, ffn_norm, wg):
+    """Fused pre-FFN norm + router logits (Pallas kernel)."""
+    return gating_kernel.gating(x, ffn_norm, wg)
+
+
+def expert_fn(x, w1, w3, w2):
+    """One expert's SwiGLU FFN (Pallas kernel). x: [b, h] (padded rows ok)."""
+    return (expert_kernel.expert_ffn(x, w1, w3, w2),)
+
+
+def experts_grouped_fn(x, w1, w3, w2):
+    """All experts in one call (grouped kernel). x: [E, b, h]."""
+    return (expert_kernel.expert_ffn_grouped(x, w1, w3, w2),)
+
+
+def embed_fn(ids, emb):
+    """Token embedding lookup. ids: [b] int32; emb: [V, h]."""
+    return (jnp.take(emb, ids, axis=0),)
+
+
+def lm_head_fn(x, final_norm, emb):
+    """Final RMSNorm + tied-embedding logits. Returns [b, V]."""
+    return (rmsnorm(x, final_norm) @ emb.T,)
+
+
+def attention_step_tuple(*args):
+    """Tuple-returning wrapper for AOT lowering."""
+    return tuple(attention_step(*args))
+
+
+def gating_tuple(*args):
+    return tuple(gating_fn(*args))

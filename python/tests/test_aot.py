@@ -1,0 +1,79 @@
+"""AOT path: lowering produces parseable HLO text with the agreed entry
+signature, and the weight/manifest layout is self-consistent."""
+
+import json
+
+import numpy as np
+
+from compile import aot
+from compile import model as M
+
+CFG = M.TinyConfig(layers=1, hidden=32, intermediate=64, experts=4, top_k=2,
+                   q_heads=4, kv_heads=2, head_dim=8, vocab=64, max_seq=16,
+                   micro_batch=4)
+
+
+def test_lower_all_produces_hlo_text():
+    hlos = aot.lower_all(CFG)
+    assert set(hlos) == {"attention", "gating", "expert", "experts_grouped", "embed", "lm_head"}
+    for name, text in hlos.items():
+        assert text.startswith("HloModule"), f"{name} not HLO text"
+        assert "ENTRY" in text, f"{name} missing entry computation"
+        # Tuple return (return_tuple=True) so the Rust side can to_tuple().
+        assert "tuple" in text or ")->(" in text.replace(" ", ""), name
+
+
+def test_hlo_parameter_counts_match_contract():
+    hlos = aot.lower_all(CFG)
+    expected_params = {
+        "attention": 9,
+        "gating": 3,
+        "expert": 4,
+        "experts_grouped": 4,
+        "embed": 2,
+        "lm_head": 3,
+    }
+    for name, n in expected_params.items():
+        lines = hlos[name].splitlines()
+        start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+        count = 0
+        for line in lines[start:]:
+            if " parameter(" in line:
+                count += 1
+            if line.strip() == "}" and line.startswith("}"):
+                break
+        assert count == n, (name, count)
+
+
+def test_weights_cover_all_modules():
+    w = aot.build_weights(CFG)
+    assert "emb" in w and "final_norm" in w
+    for l in range(CFG.layers):
+        for part in ("attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "wg"):
+            assert f"l{l}.{part}" in w
+        for e in range(CFG.experts):
+            for part in ("w1", "w3", "w2"):
+                assert f"l{l}.e{e}.{part}" in w
+    assert w["emb"].shape == (CFG.vocab, CFG.hidden)
+    assert w["l0.e0.w1"].shape == (CFG.hidden, CFG.intermediate)
+
+
+def test_weights_deterministic_by_seed():
+    a = aot.build_weights(CFG, seed=3)
+    b = aot.build_weights(CFG, seed=3)
+    c = aot.build_weights(CFG, seed=4)
+    np.testing.assert_array_equal(a["l0.wq"], b["l0.wq"])
+    assert not np.array_equal(a["l0.wq"], c["l0.wq"])
+
+
+def test_test_vectors_json_serializable_and_tagged():
+    w = aot.build_weights(CFG)
+    vectors = aot.build_test_vectors(CFG, w)
+    names = {v["name"] for v in vectors}
+    assert names == {"expert", "gating", "attention", "embed", "lm_head"}
+    text = json.dumps(vectors)  # must not raise
+    back = json.loads(text)
+    for v in back:
+        for side in ("inputs", "outputs"):
+            for na in v[side]:
+                assert "weight" in na or ("shape" in na and "data" in na)

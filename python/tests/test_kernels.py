@@ -1,0 +1,182 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and value scales; assert_allclose against the
+reference for every kernel. This is the core correctness signal for the
+compute layer — the AOT path lowers exactly these kernels into the HLO the
+Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import expert_ffn as expert_k
+from compile.kernels import gating as gating_k
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def rnd(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- expert ffn
+@given(
+    b=st.sampled_from([1, 2, 4, 8, 16]),
+    h=st.sampled_from([8, 32, 64, 256]),
+    f=st.sampled_from([16, 64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_matches_ref(b, h, f, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, b, h, scale=0.5)
+    w1, w3 = rnd(rng, h, f, scale=h**-0.5), rnd(rng, h, f, scale=h**-0.5)
+    w2 = rnd(rng, f, h, scale=f**-0.5)
+    got = expert_k.expert_ffn(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w3), jnp.asarray(w2))
+    want = ref.expert_ffn(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w3), jnp.asarray(w2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("block_b", [1, 2, 4, 8])
+def test_expert_ffn_blocking_invariant(block_b):
+    """Different token-axis tilings must give identical results."""
+    rng = np.random.default_rng(0)
+    x, w1, w3, w2 = rnd(rng, 8, 32), rnd(rng, 32, 64), rnd(rng, 32, 64), rnd(rng, 64, 32)
+    full = expert_k.expert_ffn(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w3), jnp.asarray(w2), block_b=8)
+    tiled = expert_k.expert_ffn(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w3), jnp.asarray(w2), block_b=block_b)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(tiled), atol=1e-5)
+
+
+def test_expert_ffn_zero_input_is_zero():
+    z = jnp.zeros((4, 16))
+    w = jnp.ones((16, 32)), jnp.ones((16, 32)), jnp.ones((32, 16))
+    out = expert_k.expert_ffn(z, *w)
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-7)
+
+
+# ------------------------------------------------------------------- gating
+@given(
+    b=st.sampled_from([1, 4, 8, 32]),
+    h=st.sampled_from([8, 64, 256]),
+    e=st.sampled_from([2, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gating_matches_ref(b, h, e, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, b, h, scale=0.7)
+    gamma = rnd(rng, h, scale=1.0) + 1.0
+    wg = rnd(rng, h, e, scale=h**-0.5)
+    gn, gl = gating_k.gating(jnp.asarray(x), jnp.asarray(gamma), jnp.asarray(wg))
+    rn, rl = ref.gating(jnp.asarray(x), jnp.asarray(gamma), jnp.asarray(wg))
+    np.testing.assert_allclose(np.asarray(gn), np.asarray(rn), atol=2e-5, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(gl), np.asarray(rl), atol=2e-4, rtol=2e-4)
+
+
+def test_gating_norm_is_scale_invariant_direction():
+    """RMSNorm output has unit RMS (gamma=1): per-row mean square == 1."""
+    rng = np.random.default_rng(1)
+    x = rnd(rng, 8, 64, scale=3.0)
+    gn, _ = gating_k.gating(jnp.asarray(x), jnp.ones(64), jnp.eye(64))
+    ms = np.mean(np.square(np.asarray(gn)), axis=-1)
+    np.testing.assert_allclose(ms, 1.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------- attention
+@given(
+    b=st.sampled_from([1, 2, 8]),
+    s=st.sampled_from([4, 16, 64]),
+    kvh=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([4, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_core_matches_ref(b, s, kvh, g, d, seed):
+    rng = np.random.default_rng(seed)
+    qh = kvh * g
+    q = rnd(rng, b, qh, d, scale=0.5)
+    k = rnd(rng, b, s, kvh, d, scale=0.5)
+    v = rnd(rng, b, s, kvh, d, scale=0.5)
+    pos = rng.integers(0, s, size=b).astype(np.int32)
+    got = attn_k.attention_core(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(pos))
+    want = ref.attention_core(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(pos))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-4, rtol=3e-4)
+
+
+def test_attention_mask_excludes_future():
+    """Entries beyond pos must not affect the output."""
+    rng = np.random.default_rng(2)
+    b, s, kvh, d, qh = 2, 8, 1, 4, 2
+    q = rnd(rng, b, qh, d)
+    k = rnd(rng, b, s, kvh, d)
+    v = rnd(rng, b, s, kvh, d)
+    pos = np.array([3, 5], dtype=np.int32)
+    base = np.asarray(attn_k.attention_core(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(pos)))
+    # Corrupt the masked region.
+    k2, v2 = k.copy(), v.copy()
+    k2[0, 4:] = 99.0
+    v2[0, 4:] = -99.0
+    k2[1, 6:] = 99.0
+    v2[1, 6:] = -99.0
+    out = np.asarray(attn_k.attention_core(jnp.asarray(q), jnp.asarray(k2), jnp.asarray(v2), jnp.asarray(pos)))
+    np.testing.assert_allclose(out, base, atol=1e-5)
+
+
+def test_attention_single_valid_token_returns_its_value():
+    """pos=0: softmax over one entry -> output == v[0]."""
+    rng = np.random.default_rng(3)
+    b, s, kvh, d, qh = 1, 4, 1, 4, 2
+    q = rnd(rng, b, qh, d)
+    k = rnd(rng, b, s, kvh, d)
+    v = rnd(rng, b, s, kvh, d)
+    pos = np.zeros(b, dtype=np.int32)
+    out = np.asarray(attn_k.attention_core(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(pos)))
+    want = np.broadcast_to(v[0, 0, 0], (qh, d))
+    np.testing.assert_allclose(out[0], want, atol=1e-5)
+
+
+# ------------------------------------------------------- grouped expert ffn
+@given(
+    e=st.sampled_from([1, 2, 4, 8]),
+    b=st.sampled_from([1, 4, 8]),
+    h=st.sampled_from([16, 64]),
+    f=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_grouped_matches_per_expert(e, b, h, f, seed):
+    """The grouped (one-launch) kernel equals E independent expert kernels."""
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, e, b, h, scale=0.5)
+    w1 = rnd(rng, e, h, f, scale=h**-0.5)
+    w3 = rnd(rng, e, h, f, scale=h**-0.5)
+    w2 = rnd(rng, e, f, h, scale=f**-0.5)
+    grouped = np.asarray(
+        expert_k.expert_ffn_grouped(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w3), jnp.asarray(w2))
+    )
+    for i in range(e):
+        single = np.asarray(
+            expert_k.expert_ffn(jnp.asarray(x[i]), jnp.asarray(w1[i]), jnp.asarray(w3[i]), jnp.asarray(w2[i]))
+        )
+        np.testing.assert_allclose(grouped[i], single, atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("block_e", [1, 2, 4])
+def test_expert_ffn_grouped_blocking_invariant(block_e):
+    """Different expert-axis tilings must give identical results."""
+    rng = np.random.default_rng(5)
+    e, b, h, f = 4, 4, 16, 32
+    args = [
+        jnp.asarray(rnd(rng, e, b, h)),
+        jnp.asarray(rnd(rng, e, h, f)),
+        jnp.asarray(rnd(rng, e, h, f)),
+        jnp.asarray(rnd(rng, e, f, h)),
+    ]
+    full = expert_k.expert_ffn_grouped(*args, block_e=e)
+    tiled = expert_k.expert_ffn_grouped(*args, block_e=block_e)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(tiled), atol=1e-5)

@@ -1,0 +1,55 @@
+//! Ablation — expert load balancing with on-device redundancy (paper §6):
+//! end-to-end decoding throughput under uniform vs Zipf-skewed expert
+//! popularity, with static one-expert-per-node placement vs the greedy
+//! redundancy balancer, at the optimal Mixtral deployment plan.
+
+use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
+use megascale_infer::coordinator::{ExpertTraffic, RuntimeInstance};
+use megascale_infer::plan::PlanSearcher;
+use megascale_infer::util::bench::section;
+use megascale_infer::workload::WorkloadSpec;
+
+fn main() {
+    let model = ModelConfig::mixtral_8x22b();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let plan = PlanSearcher::new(model.clone(), cluster.clone(), 730.0)
+        .search()
+        .expect("plan");
+    let reqs = WorkloadSpec {
+        median_output: 25.0,
+        sigma: 0.1,
+        ..Default::default()
+    }
+    .generate(plan.global_batch, 3);
+
+    section("Ablation (§6): expert load balance under skewed popularity (Mixtral, optimal plan)");
+    println!(
+        "{:<34} {:>12} {:>12} {:>10}",
+        "traffic / placement", "tok/s", "tok/s/GPU", "vs uniform"
+    );
+    let run = |traffic| {
+        RuntimeInstance::new(model.clone(), cluster.clone(), plan.clone())
+            .with_traffic(traffic, 9)
+            .simulate(&reqs)
+    };
+    let uniform = run(ExpertTraffic::Uniform);
+    for (label, traffic) in [
+        ("uniform", ExpertTraffic::Uniform),
+        ("zipf(0.5) static placement", ExpertTraffic::Skewed(0.5)),
+        ("zipf(0.5) greedy redundancy", ExpertTraffic::SkewedBalanced(0.5)),
+        ("zipf(1.0) static placement", ExpertTraffic::Skewed(1.0)),
+        ("zipf(1.0) greedy redundancy", ExpertTraffic::SkewedBalanced(1.0)),
+        ("zipf(1.5) static placement", ExpertTraffic::Skewed(1.5)),
+        ("zipf(1.5) greedy redundancy", ExpertTraffic::SkewedBalanced(1.5)),
+    ] {
+        let r = run(traffic);
+        println!(
+            "{:<34} {:>12.0} {:>12.1} {:>9.2}x",
+            label,
+            r.throughput,
+            r.per_gpu_throughput,
+            r.throughput / uniform.throughput
+        );
+    }
+    println!("\nexpected shape: skew degrades throughput; the §6 balancer recovers most of it");
+}

@@ -1,0 +1,45 @@
+//! Figure 5 — One-to-N latency: a single sender transmits 128 KB to each of
+//! N receivers, NCCL vs the perftest lower bound, at (a) median and (b) P99.
+//!
+//! Paper observations reproduced: NCCL's median sits well above the
+//! baseline at every N; the gap explodes at the 99th percentile,
+//! "particularly when scaling to 32 receivers", while perftest's tail
+//! barely moves.
+
+use megascale_infer::m2n::{simulate_m2n, LibraryKind, LibraryProfile, M2nScenario};
+use megascale_infer::util::bench::section;
+
+fn run(kind: LibraryKind, n: usize) -> (f64, f64) {
+    let s = simulate_m2n(&M2nScenario {
+        profile: LibraryProfile::of(kind),
+        senders: 1,
+        receivers: n,
+        msg_bytes: 128 * 1024,
+        rounds: 3000,
+        bidirectional: false,
+        seed: 5,
+    });
+    (s.latency.median() * 1e6, s.latency.p99() * 1e6)
+}
+
+fn main() {
+    section("Figure 5: One-to-N latency, 128KB per receiver (us)");
+    println!(
+        "{:>4}  {:>14} {:>14}  {:>14} {:>14}  {:>9} {:>9}",
+        "N", "NCCL p50", "perftest p50", "NCCL p99", "perftest p99", "gap p50", "gap p99"
+    );
+    for n in [8usize, 16, 32] {
+        let (n50, n99) = run(LibraryKind::Nccl, n);
+        let (p50, p99) = run(LibraryKind::Perftest, n);
+        println!(
+            "{:>4}  {:>14.1} {:>14.1}  {:>14.1} {:>14.1}  {:>8.2}x {:>8.2}x",
+            n,
+            n50,
+            p50,
+            n99,
+            p99,
+            n50 / p50,
+            n99 / p99
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! Figure 9 — Per-cost decoding throughput (tokens/s per normalized dollar,
+//! Table 3 prices) on the heterogeneous H20 + L40S cluster: baselines run
+//! homogeneously on each GPU type (they do not support heterogeneous
+//! deployment); MegaScale-Infer assigns H20 to attention and L40S to
+//! experts.
+//!
+//! Paper: MSI improves per-cost throughput by up to 3.24x over vLLM and
+//! 1.86x over TensorRT-LLM on H20; baselines do better on H20 than L40S.
+
+use megascale_infer::baselines::{best_under_slo, minimal_deployment, BaselineKind};
+use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig, NodeSpec};
+use megascale_infer::plan::PlanSearcher;
+use megascale_infer::util::bench::section;
+
+fn baseline_tpd(kind: BaselineKind, model: &ModelConfig, gpu: GpuKind) -> Option<f64> {
+    let c = ClusterSpec::homogeneous(gpu);
+    let dep = minimal_deployment(kind, model, &c);
+    best_under_slo(&dep, model, &c, 730.0, 0.150).map(|m| m.throughput_per_dollar)
+}
+
+fn main() {
+    section("Figure 9: decoding throughput per normalized dollar, H20/L40S cluster");
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} {:>10} {:>14} | {:>10} {:>10}",
+        "model", "vLLM@H20", "vLLM@L40S", "TRT@H20", "TRT@L40S", "MSI H20+L40S", "vs vLLM", "vs TRT"
+    );
+    for model in ModelConfig::paper_models() {
+        let v_h20 = baseline_tpd(BaselineKind::Vllm, &model, GpuKind::H20);
+        let v_l40 = baseline_tpd(BaselineKind::Vllm, &model, GpuKind::L40S);
+        let t_h20 = baseline_tpd(BaselineKind::TrtLlm, &model, GpuKind::H20);
+        let t_l40 = baseline_tpd(BaselineKind::TrtLlm, &model, GpuKind::L40S);
+
+        let cluster = ClusterSpec {
+            attention: NodeSpec {
+                gpu: GpuKind::H20,
+                gpus_per_node: 8,
+                nodes: None,
+            },
+            expert: NodeSpec {
+                gpu: GpuKind::L40S,
+                gpus_per_node: 8,
+                nodes: None,
+            },
+        };
+        let plan = PlanSearcher::new(model.clone(), cluster, 730.0)
+            .search()
+            .expect("plan");
+        let msi = plan.metrics.throughput_per_dollar;
+        let fmt = |x: Option<f64>| x.map(|v| format!("{v:.0}")).unwrap_or("n/a".into());
+        println!(
+            "{:<14} {:>10} {:>10} {:>10} {:>10} {:>14.0} | {:>9.2}x {:>9.2}x",
+            model.name,
+            fmt(v_h20),
+            fmt(v_l40),
+            fmt(t_h20),
+            fmt(t_l40),
+            msi,
+            msi / v_h20.unwrap_or(f64::NAN).max(v_l40.unwrap_or(0.0)),
+            msi / t_h20.unwrap_or(f64::NAN).max(t_l40.unwrap_or(0.0)),
+        );
+        println!(
+            "{:<14} plan: H20 attention tp_a={} n_a={}, L40S experts tp_e={}x{}, m={}, B={}",
+            "", plan.tp_a, plan.n_a, plan.tp_e, plan.n_e, plan.m, plan.global_batch
+        );
+    }
+    println!("\npaper reference: up to 3.24x vs vLLM and 1.86x vs TRT-LLM (on H20)");
+}

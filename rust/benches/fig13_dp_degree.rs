@@ -1,0 +1,52 @@
+//! Figure 13 — DBRX latency and per-GPU throughput vs the data-parallel
+//! degree of the attention pool (m = 3 fixed, constant per-node
+//! micro-batch).
+//!
+//! Paper: latency stays flat while DP ≤ the balance point (attention-bound
+//! regime, throughput scales linearly), peaks per-GPU throughput at DP = 8,
+//! then latency rises and normalized throughput falls as experts become
+//! the bottleneck.
+
+use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
+use megascale_infer::coordinator::PingPongSim;
+use megascale_infer::perf_model::PerfModel;
+use megascale_infer::util::bench::section;
+
+fn main() {
+    let model = ModelConfig::dbrx();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let (tp_a, tp_e) = (8usize, 8usize);
+    let pm = PerfModel::new(&model, &cluster, tp_a, tp_e, 730.0);
+    let b_a = 512.0;
+    let m = 3usize;
+
+    section("Figure 13: DBRX latency & per-GPU throughput vs attention DP degree (m=3)");
+    println!(
+        "{:>4}  {:>12} {:>14} {:>12} {:>12} {:>10}",
+        "DP", "TPOT (ms)", "tok/s (inst)", "tok/s/GPU", "attn util", "expert util"
+    );
+    for n_a in [1usize, 2, 4, 8, 12, 16, 24] {
+        let b_e = b_a * n_a as f64 * model.top_k as f64 / model.experts as f64;
+        let stats = PingPongSim {
+            t_a: pm.t_a(b_a),
+            t_e: pm.t_e(b_e),
+            t_c: pm.t_c(b_a, b_e),
+            m,
+            layers: model.layers,
+        }
+        .run();
+        let global_batch = b_a * n_a as f64 * m as f64;
+        let tput = global_batch / stats.total_time;
+        let gpus = (tp_a * n_a + tp_e * model.experts) as f64;
+        println!(
+            "{:>4}  {:>12.1} {:>14.0} {:>12.1} {:>11.0}% {:>10.0}%",
+            n_a,
+            stats.total_time * 1e3,
+            tput,
+            tput / gpus,
+            stats.attn_utilization * 100.0,
+            stats.expert_utilization * 100.0,
+        );
+    }
+    println!("\npaper reference: flat latency to DP~4, per-GPU peak at DP=8, decline beyond");
+}

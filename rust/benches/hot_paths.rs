@@ -1,0 +1,135 @@
+//! Coordinator hot-path micro-benchmarks (the §Perf targets):
+//! gating top-k, dispatch-table construction, combine, KV allocator churn,
+//! the ping-pong DES, the M2N simulator event rate, and a full plan search.
+//!
+//! Run via `cargo bench --bench hot_paths`. Results feed EXPERIMENTS.md
+//! §Perf (before/after the optimization pass).
+
+use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
+use megascale_infer::coordinator::{
+    build_dispatch, combine_expert_outputs, gather_expert_input, softmax_topk, BlockAllocator,
+    KvCacheConfig, PingPongSim,
+};
+use megascale_infer::m2n::{simulate_m2n, LibraryKind, LibraryProfile, M2nScenario};
+use megascale_infer::plan::PlanSearcher;
+use megascale_infer::sim::SimRng;
+use megascale_infer::util::bench::{bench, black_box, section};
+
+fn main() {
+    section("hot paths (single core)");
+
+    // ---- gating + dispatch + combine at serving-representative sizes ----
+    let batch = 512usize;
+    let experts = 16usize;
+    let k = 4usize;
+    let hidden = 128usize;
+    let mut rng = SimRng::new(1);
+    let logits: Vec<f32> = (0..batch * experts)
+        .map(|_| rng.uniform() as f32)
+        .collect();
+
+    let r = bench("softmax_topk 512x16 k=4", || {
+        black_box(softmax_topk(black_box(&logits), experts, k));
+    });
+    r.print();
+    println!("    = {:.1} M tokens/s routed", batch as f64 * r.rate() / 1e6);
+
+    let gating = softmax_topk(&logits, experts, k);
+    let r = bench("build_dispatch 512x16 k=4", || {
+        black_box(build_dispatch(black_box(&gating), experts));
+    });
+    r.print();
+    println!(
+        "    = {:.1} M token-copies/s",
+        (batch * k) as f64 * r.rate() / 1e6
+    );
+
+    let plan = build_dispatch(&gating, experts);
+    let x: Vec<f32> = (0..batch * hidden).map(|i| (i % 97) as f32).collect();
+    let r = bench("gather_expert_input 512x128", || {
+        for e in 0..experts {
+            black_box(gather_expert_input(&plan, e, black_box(&x), hidden));
+        }
+    });
+    r.print();
+
+    let outputs: Vec<Vec<f32>> = (0..experts)
+        .map(|e| gather_expert_input(&plan, e, &x, hidden))
+        .collect();
+    let r = bench("combine_expert_outputs 512x128", || {
+        black_box(combine_expert_outputs(
+            black_box(&plan),
+            black_box(&outputs),
+            batch,
+            hidden,
+        ));
+    });
+    r.print();
+    println!(
+        "    = {:.2} GB/s weighted-summed",
+        (batch * k * hidden * 4) as f64 * r.rate() / 1e9
+    );
+
+    // ---- KV allocator churn ----
+    let r = bench("kv_allocator admit/append/release x128", || {
+        let mut a = BlockAllocator::new(KvCacheConfig {
+            block_size: 16,
+            num_blocks: 4096,
+        });
+        for id in 0..128u64 {
+            a.admit(id, 500);
+            a.append_token(id);
+        }
+        for id in 0..128u64 {
+            a.release(id);
+        }
+        black_box(a.free_blocks());
+    });
+    r.print();
+
+    // ---- ping-pong DES ----
+    let r = bench("pingpong DES m=4 L=56", || {
+        black_box(
+            PingPongSim {
+                t_a: 1.0,
+                t_e: 0.9,
+                t_c: 0.3,
+                m: 4,
+                layers: 56,
+            }
+            .run(),
+        );
+    });
+    r.print();
+    println!(
+        "    = {:.2} M pipeline events/s",
+        (4 * 56 * 5) as f64 * r.rate() / 1e6
+    );
+
+    // ---- M2N simulator ----
+    let r = bench("m2n sim 8x8 x50 rounds", || {
+        black_box(simulate_m2n(&M2nScenario {
+            profile: LibraryProfile::of(LibraryKind::Nccl),
+            senders: 8,
+            receivers: 8,
+            msg_bytes: 256 * 1024,
+            rounds: 50,
+            bidirectional: false,
+            seed: 3,
+        }));
+    });
+    r.print();
+    println!(
+        "    = {:.2} M messages/s simulated",
+        (8 * 8 * 50) as f64 * r.rate() / 1e6
+    );
+
+    // ---- plan search ----
+    let model = ModelConfig::mixtral_8x22b();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let r = bench("plan search (Algorithm 1, Mixtral)", || {
+        let s = PlanSearcher::new(model.clone(), cluster.clone(), 730.0);
+        black_box(s.search());
+    });
+    r.print();
+}

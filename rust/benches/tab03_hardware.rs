@@ -1,0 +1,41 @@
+//! Table 3 — hardware specifications and cost-effectiveness ratios, plus
+//! the §4.3 deployment intuition check (which GPU is best per role).
+
+use megascale_infer::config::gpu_catalog;
+use megascale_infer::util::bench::section;
+
+fn main() {
+    section("Table 3: performance specifications and cost-effectiveness");
+    println!(
+        "{:<12} {:>6} {:>6} {:>9} {:>9} | {:>7} {:>9} {:>9}",
+        "Accelerator", "Price", "GB", "GB/s", "TFLOPS", "GB/$", "GB/s/$", "TFLOPS/$"
+    );
+    for g in gpu_catalog() {
+        println!(
+            "{:<12} {:>6.2} {:>6.0} {:>9.1} {:>9.1} | {:>7.1} {:>9.1} {:>9.1}",
+            g.name,
+            g.price,
+            g.mem_gb,
+            g.mem_bw_gbps,
+            g.tflops,
+            g.gb_per_cost(),
+            g.bw_per_cost(),
+            g.tflops_per_cost()
+        );
+    }
+
+    let cat = gpu_catalog();
+    let best_attn = cat
+        .iter()
+        .max_by(|a, b| a.bw_per_cost().total_cmp(&b.bw_per_cost()))
+        .unwrap();
+    let best_expert = cat
+        .iter()
+        .max_by(|a, b| a.tflops_per_cost().total_cmp(&b.tflops_per_cost()))
+        .unwrap();
+    println!(
+        "\nbest attention GPU (GB/s per $): {}   best expert GPU (TFLOPS per $): {}",
+        best_attn.name, best_expert.name
+    );
+    println!("paper reference: \"H20 is more suitable for attention ... L40S more cost-effective for experts\"");
+}

@@ -1,0 +1,326 @@
+//! Baseline serving systems for the end-to-end comparison (paper §7.2):
+//! monolithic (non-disaggregated) deployments in the style of **vLLM**
+//! (tensor parallelism for the whole model) and **TensorRT-LLM** (tensor
+//! parallelism + expert parallelism for MoE layers, faster custom kernels).
+//!
+//! Both share the substrate of [`crate::perf_model`], so measured
+//! differences come from *architecture*: in a monolithic deployment every
+//! GPU holds a slice of every expert (TP) or a subset of experts (EP) and
+//! the decode batch is never aggregated across replicas, so each expert
+//! sees only `b·K/E` tokens — the low-utilization regime of Figure 1(b).
+
+use crate::config::{ClusterSpec, GpuSpec, ModelConfig, DTYPE_BYTES};
+use crate::perf_model::{AttentionModel, GpuPerf, GemmShape};
+
+/// Which baseline system to model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselineKind {
+    /// vLLM 0.6.6-style: TP (+PP across nodes), PagedAttention, continuous
+    /// batching; experts computed as TP-sharded GEMMs.
+    Vllm,
+    /// TensorRT-LLM 0.15-style: like vLLM plus expert parallelism for MoE
+    /// layers and more aggressive kernel fusion.
+    TrtLlm,
+}
+
+impl BaselineKind {
+    /// Achieved efficiency vs the substrate's achievable-rate model.
+    ///
+    /// This folds together the real-system effects the paper's measured
+    /// baselines exhibit and MegaScale-Infer engineers away: unoverlapped
+    /// MoE all-to-all and TP collectives in the decode loop, per-step
+    /// scheduler/sampling overhead, and grouped-GEMM inefficiency at small
+    /// per-expert batches. TensorRT-LLM's custom kernels sit well above
+    /// vLLM's Triton path (paper: "TensorRT-LLM achieves higher throughput
+    /// than vLLM through custom kernel optimizations"); both sit below the
+    /// fused, overlap-scheduled MegaScale stack. Calibrated so the Figure 8
+    /// ratios land in the paper's measured bands (see DESIGN.md).
+    pub fn kernel_efficiency(&self) -> f64 {
+        match self {
+            BaselineKind::Vllm => 0.55,
+            BaselineKind::TrtLlm => 0.80,
+        }
+    }
+
+    /// Maximum concurrent sequences per serving group — the shipped
+    /// scheduler defaults (vLLM `max_num_seqs`, TRT-LLM batch scheduler).
+    /// A monolithic group cannot aggregate beyond this; aggregating across
+    /// replicas is exactly the capability disaggregation adds (§2.4).
+    pub fn max_batch(&self) -> usize {
+        match self {
+            BaselineKind::Vllm => 256,
+            BaselineKind::TrtLlm => 512,
+        }
+    }
+
+    /// Whether MoE layers run with expert parallelism (full per-expert
+    /// GEMMs on one GPU) instead of TP-sharded GEMMs.
+    pub fn uses_expert_parallelism(&self) -> bool {
+        matches!(self, BaselineKind::TrtLlm)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BaselineKind::Vllm => "vLLM",
+            BaselineKind::TrtLlm => "TensorRT-LLM",
+        }
+    }
+}
+
+/// A monolithic deployment: `tp` GPUs per stage within a node, `pp` stages
+/// across nodes.
+#[derive(Debug, Clone)]
+pub struct BaselineDeployment {
+    pub kind: BaselineKind,
+    pub tp: usize,
+    pub pp: usize,
+}
+
+/// Simulated metrics for a baseline at a given batch size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineMetrics {
+    pub tpot: f64,
+    pub throughput: f64,
+    pub per_gpu_throughput: f64,
+    pub throughput_per_dollar: f64,
+    pub batch: usize,
+    pub gpus: usize,
+    pub cost: f64,
+}
+
+/// Per-layer decode time of the monolithic deployment at batch `b`.
+///
+/// Attention: the same model as MegaScale's attention nodes, TP over `tp`.
+/// MoE: every expert computes on `b·K/E` tokens; under TP the expert weight
+/// panels are sharded (`h'/tp` columns) but **all experts' panels stream
+/// every iteration**; under EP each GPU holds `E/tp` full experts. Either
+/// way the per-expert batch stays small — the utilization collapse of §2.3.
+fn layer_time(
+    kind: BaselineKind,
+    model: &ModelConfig,
+    gpu: &GpuSpec,
+    tp: usize,
+    avg_seq: f64,
+    b: f64,
+) -> f64 {
+    let mut perf = GpuPerf::from_spec(gpu);
+    perf.mfu_cap *= kind.kernel_efficiency();
+    perf.mem_eff *= kind.kernel_efficiency().max(0.85);
+    let h = model.hidden as f64;
+    let h2 = model.intermediate as f64;
+    let e = model.experts as f64;
+    let k = model.top_k as f64;
+
+    // Attention side (shared implementation with MegaScale's model, at this
+    // baseline's kernel efficiency).
+    let attn = {
+        let m = AttentionModel::new(model, gpu, tp, avg_seq);
+        // Scale the whole attention term by kernel efficiency.
+        (m.k1 * b + m.k2) / kind.kernel_efficiency()
+    };
+
+    // MoE side.
+    let b_exp = b * k / e; // tokens per expert
+    let moe = if kind.uses_expert_parallelism() {
+        // EP: each GPU computes E/tp full experts back to back.
+        let experts_per_gpu = (e / tp as f64).ceil();
+        let fin = GemmShape::new(b_exp, h, h2);
+        let fout = GemmShape::new(b_exp, h2, h);
+        experts_per_gpu * (perf.gemm_time(&fin) + perf.gemm_time(&fout))
+            // all-to-all dispatch+combine inside the TP group (NVLink).
+            + 2.0 * perf.allreduce_time(b * h * DTYPE_BYTES * k / e, tp, 0.0)
+    } else {
+        // TP: all E experts' sharded panels stream every iteration.
+        let fin = GemmShape::new(b_exp, h, h2 / tp as f64);
+        let fout = GemmShape::new(b_exp, h2 / tp as f64, h);
+        e * (perf.gemm_time(&fin) + perf.gemm_time(&fout))
+    };
+
+    // Two TP all-reduces per layer (attention out, FFN out).
+    let ar = 2.0 * perf.allreduce_time(b * h * DTYPE_BYTES, tp, 0.0);
+
+    attn + moe + ar
+}
+
+/// Inter-stage activation send for pipeline parallelism (per token batch).
+fn pp_send_time(model: &ModelConfig, gpu: &GpuSpec, b: f64) -> f64 {
+    let bytes = b * model.hidden as f64 * DTYPE_BYTES;
+    bytes / (gpu.nic_gbps * 1e9 / 8.0) + 10e-6
+}
+
+/// Evaluate a baseline deployment at batch `b`.
+pub fn evaluate_at_batch(
+    dep: &BaselineDeployment,
+    model: &ModelConfig,
+    cluster: &ClusterSpec,
+    avg_seq: f64,
+    b: usize,
+) -> BaselineMetrics {
+    let gpu = cluster.attention_gpu(); // monolithic: one GPU type
+    let layers_per_stage = (model.layers as f64 / dep.pp as f64).ceil();
+    let lt = layer_time(dep.kind, model, &gpu, dep.tp, avg_seq, b as f64);
+    // Decode has no intra-request pipelining across stages: TPOT is the sum
+    // of stage times plus inter-stage hops.
+    let tpot = lt * layers_per_stage * dep.pp as f64
+        + (dep.pp as f64 - 1.0) * pp_send_time(model, &gpu, b as f64);
+    let gpus = dep.tp * dep.pp;
+    let cost = gpus as f64 * gpu.price;
+    let throughput = b as f64 / tpot;
+    BaselineMetrics {
+        tpot,
+        throughput,
+        per_gpu_throughput: throughput / gpus as f64,
+        throughput_per_dollar: throughput / cost,
+        batch: b,
+        gpus,
+        cost,
+    }
+}
+
+/// KV memory feasibility for the monolithic deployment: params + KV must fit
+/// in the aggregate GPU memory of the serving group.
+pub fn kv_fits(
+    dep: &BaselineDeployment,
+    model: &ModelConfig,
+    cluster: &ClusterSpec,
+    avg_seq: f64,
+    b: usize,
+) -> bool {
+    let gpu = cluster.attention_gpu();
+    let total_mem = (dep.tp * dep.pp) as f64 * gpu.mem_bytes();
+    let params = model.total_params() * DTYPE_BYTES;
+    let kv = b as f64 * avg_seq * model.kv_bytes_per_token();
+    params * 1.05 + kv < total_mem
+}
+
+/// Find the best batch size under the SLO (binary search like Algorithm 1's
+/// SIMULATE, applied to the baseline).
+pub fn best_under_slo(
+    dep: &BaselineDeployment,
+    model: &ModelConfig,
+    cluster: &ClusterSpec,
+    avg_seq: f64,
+    slo: f64,
+) -> Option<BaselineMetrics> {
+    let ok = |b: usize| -> Option<BaselineMetrics> {
+        if b == 0 || b > dep.kind.max_batch() || !kv_fits(dep, model, cluster, avg_seq, b) {
+            return None;
+        }
+        let m = evaluate_at_batch(dep, model, cluster, avg_seq, b);
+        (m.tpot <= slo).then_some(m)
+    };
+    ok(1)?;
+    let (mut lo, mut hi) = (1usize, 2usize);
+    while ok(hi).is_some() {
+        lo = hi;
+        hi *= 2;
+        if hi > 1 << 22 {
+            break;
+        }
+    }
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if ok(mid).is_some() {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    ok(lo)
+}
+
+/// The minimal viable deployment for a model on a GPU type, mirroring §7.2:
+/// "serving Mixtral 8x22B and DBRX requires a minimum of 8 GPUs, while the
+/// scaled-MoE necessitates multi-node deployment". Grows PP until the
+/// parameters fit.
+pub fn minimal_deployment(
+    kind: BaselineKind,
+    model: &ModelConfig,
+    cluster: &ClusterSpec,
+) -> BaselineDeployment {
+    let gpu = cluster.attention_gpu();
+    let tp = gpu.max_per_node;
+    let params = model.total_params() * DTYPE_BYTES;
+    let mut pp = 1usize;
+    // Require ~20% headroom beyond parameters for KV + activations.
+    while (tp * pp) as f64 * gpu.mem_bytes() < params * 1.25 {
+        pp += 1;
+    }
+    BaselineDeployment { kind, tp, pp }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuKind;
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::homogeneous(GpuKind::Ampere80G)
+    }
+
+    #[test]
+    fn minimal_deployment_matches_paper() {
+        // Mixtral/DBRX: single 8-GPU node; Scaled-MoE: two nodes.
+        let c = cluster();
+        let m = minimal_deployment(BaselineKind::Vllm, &ModelConfig::mixtral_8x22b(), &c);
+        assert_eq!((m.tp, m.pp), (8, 1));
+        let d = minimal_deployment(BaselineKind::Vllm, &ModelConfig::dbrx(), &c);
+        assert_eq!((d.tp, d.pp), (8, 1));
+        let s = minimal_deployment(BaselineKind::Vllm, &ModelConfig::scaled_moe(), &c);
+        assert!(s.pp >= 2, "Scaled-MoE needs multi-node, got pp={}", s.pp);
+    }
+
+    #[test]
+    fn trtllm_beats_vllm() {
+        let c = cluster();
+        let model = ModelConfig::mixtral_8x22b();
+        let v = best_under_slo(
+            &minimal_deployment(BaselineKind::Vllm, &model, &c),
+            &model,
+            &c,
+            730.0,
+            0.150,
+        )
+        .unwrap();
+        let t = best_under_slo(
+            &minimal_deployment(BaselineKind::TrtLlm, &model, &c),
+            &model,
+            &c,
+            730.0,
+            0.150,
+        )
+        .unwrap();
+        assert!(
+            t.per_gpu_throughput > v.per_gpu_throughput,
+            "TRT {} vs vLLM {}",
+            t.per_gpu_throughput,
+            v.per_gpu_throughput
+        );
+    }
+
+    #[test]
+    fn slo_respected() {
+        let c = cluster();
+        let model = ModelConfig::dbrx();
+        let dep = minimal_deployment(BaselineKind::TrtLlm, &model, &c);
+        let m = best_under_slo(&dep, &model, &c, 730.0, 0.150).unwrap();
+        assert!(m.tpot <= 0.150);
+        // Next larger batch violates SLO, KV memory, or the scheduler cap.
+        let next = evaluate_at_batch(&dep, &model, &c, 730.0, m.batch + 1);
+        assert!(
+            next.tpot > 0.150
+                || !kv_fits(&dep, &model, &c, 730.0, m.batch + 1)
+                || m.batch + 1 > dep.kind.max_batch()
+        );
+    }
+
+    #[test]
+    fn tpot_monotone_in_batch() {
+        let c = cluster();
+        let model = ModelConfig::mixtral_8x22b();
+        let dep = minimal_deployment(BaselineKind::Vllm, &model, &c);
+        let a = evaluate_at_batch(&dep, &model, &c, 730.0, 32);
+        let b = evaluate_at_batch(&dep, &model, &c, 730.0, 256);
+        assert!(b.tpot > a.tpot);
+    }
+}

@@ -1,0 +1,97 @@
+//! Cluster descriptions: which GPU types are available for attention and
+//! expert pools, and in what quantity.
+
+use super::hardware::{GpuKind, GpuSpec};
+
+/// One homogeneous group of nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub gpu: GpuKind,
+    /// GPUs per physical node.
+    pub gpus_per_node: usize,
+    /// Number of nodes available (None = unbounded, plan search sizes it).
+    pub nodes: Option<usize>,
+}
+
+/// A (possibly heterogeneous) cluster: the hardware offered to the plan
+/// search for attention nodes and expert nodes respectively.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    /// GPU type used for attention nodes.
+    pub attention: NodeSpec,
+    /// GPU type used for expert nodes.
+    pub expert: NodeSpec,
+}
+
+impl ClusterSpec {
+    /// Homogeneous cluster of a single GPU type (the paper's first testbed:
+    /// 8 nodes x 8 Ampere-80GB GPUs).
+    pub fn homogeneous(gpu: GpuKind) -> Self {
+        let spec = GpuSpec::of(gpu);
+        let node = NodeSpec {
+            gpu,
+            gpus_per_node: spec.max_per_node,
+            nodes: None,
+        };
+        Self {
+            attention: node.clone(),
+            expert: node,
+        }
+    }
+
+    /// The paper's heterogeneous testbed: H20 for attention, L40S for
+    /// experts (§4.3, §7.2).
+    pub fn heterogeneous_h20_l40s() -> Self {
+        Self {
+            attention: NodeSpec {
+                gpu: GpuKind::H20,
+                gpus_per_node: 8,
+                nodes: None,
+            },
+            expert: NodeSpec {
+                gpu: GpuKind::L40S,
+                gpus_per_node: 8,
+                nodes: None,
+            },
+        }
+    }
+
+    pub fn attention_gpu(&self) -> GpuSpec {
+        GpuSpec::of(self.attention.gpu)
+    }
+
+    pub fn expert_gpu(&self) -> GpuSpec {
+        GpuSpec::of(self.expert.gpu)
+    }
+
+    pub fn is_heterogeneous(&self) -> bool {
+        self.attention.gpu != self.expert.gpu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_cluster() {
+        let c = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        assert!(!c.is_heterogeneous());
+        assert_eq!(c.attention.gpus_per_node, 8);
+    }
+
+    #[test]
+    fn heterogeneous_cluster() {
+        let c = ClusterSpec::heterogeneous_h20_l40s();
+        assert!(c.is_heterogeneous());
+        assert_eq!(c.attention.gpu, GpuKind::H20);
+        assert_eq!(c.expert.gpu, GpuKind::L40S);
+    }
+
+    #[test]
+    fn gpu_spec_lookup() {
+        let c = ClusterSpec::heterogeneous_h20_l40s();
+        assert_eq!(c.attention_gpu().name, "H20");
+        assert_eq!(c.expert_gpu().name, "L40S");
+    }
+}

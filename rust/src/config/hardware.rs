@@ -1,0 +1,207 @@
+//! GPU hardware specifications and cost-effectiveness ratios (paper Table 3),
+//! plus the network parameters of the paper's testbeds (§7.1).
+
+/// The GPU types evaluated in the paper (Table 3) plus the Ampere testbed
+/// part (80GB, A800-class NVLink box with 200 Gbps NICs, §7.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuKind {
+    L20,
+    H800,
+    A800,
+    H20,
+    L40S,
+    /// "NVIDIA 80GB Ampere" of the homogeneous testbed; modeled with A100
+    /// SXM numbers used in the paper's §2.3 roofline example
+    /// (312 TFLOPS bf16, 2 TB/s HBM).
+    Ampere80G,
+}
+
+/// Performance/price description of one GPU type.
+///
+/// `price` is normalized by L20 = 1.00, exactly as in paper Table 3.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub kind: GpuKind,
+    pub name: String,
+    /// Normalized purchase price (L20 = 1.00).
+    pub price: f64,
+    /// Memory capacity in GB.
+    pub mem_gb: f64,
+    /// Memory bandwidth in GB/s.
+    pub mem_bw_gbps: f64,
+    /// Dense bf16 compute in TFLOPS.
+    pub tflops: f64,
+    /// Network bandwidth per GPU in Gbps (NIC).
+    pub nic_gbps: f64,
+    /// Intra-node interconnect bandwidth per GPU in GB/s (NVLink or PCIe).
+    pub intra_node_gbps: f64,
+    /// Maximum GPUs per node for this part.
+    pub max_per_node: usize,
+}
+
+impl GpuSpec {
+    /// Memory-capacity per unit cost (GB / price) — Table 3 column.
+    pub fn gb_per_cost(&self) -> f64 {
+        self.mem_gb / self.price
+    }
+    /// Memory-bandwidth per unit cost (GB/s / price) — Table 3 column.
+    pub fn bw_per_cost(&self) -> f64 {
+        self.mem_bw_gbps / self.price
+    }
+    /// Compute per unit cost (TFLOPS / price) — Table 3 column.
+    pub fn tflops_per_cost(&self) -> f64 {
+        self.tflops / self.price
+    }
+    /// Minimum batch size for a GEMM to become compute-bound on this GPU:
+    /// `b >= F/B` from the roofline model (§2.3).
+    pub fn roofline_batch(&self) -> f64 {
+        self.tflops * 1e12 / (self.mem_bw_gbps * 1e9)
+    }
+
+    /// Memory capacity in bytes.
+    pub fn mem_bytes(&self) -> f64 {
+        self.mem_gb * 1e9
+    }
+
+    /// Look up a spec by kind from the catalog.
+    pub fn of(kind: GpuKind) -> GpuSpec {
+        gpu_catalog()
+            .into_iter()
+            .find(|g| g.kind == kind)
+            .expect("all kinds present in catalog")
+    }
+}
+
+/// The full Table 3 catalog (plus the Ampere 80GB testbed part).
+pub fn gpu_catalog() -> Vec<GpuSpec> {
+    vec![
+        GpuSpec {
+            kind: GpuKind::L20,
+            name: "L20".into(),
+            price: 1.00,
+            mem_gb: 48.0,
+            mem_bw_gbps: 864.0,
+            tflops: 119.5,
+            nic_gbps: 200.0,
+            intra_node_gbps: 64.0, // PCIe Gen4 x16
+            max_per_node: 8,
+        },
+        GpuSpec {
+            kind: GpuKind::H800,
+            name: "H800".into(),
+            price: 5.28,
+            mem_gb: 80.0,
+            mem_bw_gbps: 3430.4,
+            tflops: 989.0,
+            nic_gbps: 400.0,
+            intra_node_gbps: 400.0,
+            max_per_node: 8,
+        },
+        GpuSpec {
+            kind: GpuKind::A800,
+            name: "A800".into(),
+            price: 2.26,
+            mem_gb: 80.0,
+            mem_bw_gbps: 2039.0,
+            tflops: 312.0,
+            nic_gbps: 200.0,
+            intra_node_gbps: 200.0,
+            max_per_node: 8,
+        },
+        GpuSpec {
+            kind: GpuKind::H20,
+            name: "H20".into(),
+            price: 1.85,
+            mem_gb: 96.0,
+            mem_bw_gbps: 4096.0,
+            tflops: 148.0,
+            // §7.1: H20 nodes have 900GB/s NVLink and four 400 Gbps NICs
+            // for 8 GPUs => 200 Gbps per GPU.
+            nic_gbps: 200.0,
+            intra_node_gbps: 450.0,
+            max_per_node: 8,
+        },
+        GpuSpec {
+            kind: GpuKind::L40S,
+            name: "L40S".into(),
+            price: 1.08,
+            mem_gb: 48.0,
+            mem_bw_gbps: 864.0,
+            tflops: 362.0,
+            // §7.1: L40S nodes use PCIe intra-node and two 400 Gbps NICs
+            // => 100 Gbps per GPU for an 8-GPU node.
+            nic_gbps: 100.0,
+            intra_node_gbps: 64.0,
+            max_per_node: 8,
+        },
+        GpuSpec {
+            kind: GpuKind::Ampere80G,
+            name: "Ampere-80GB".into(),
+            // Same class as A800 price-wise; used for the homogeneous
+            // testbed where only *per-GPU* throughput matters.
+            price: 2.26,
+            mem_gb: 80.0,
+            mem_bw_gbps: 2039.0,
+            tflops: 312.0,
+            nic_gbps: 200.0,
+            intra_node_gbps: 400.0, // §7.1: 400GB/s NVLink
+            max_per_node: 8,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_per_cost_columns() {
+        // Check the "Performance per Cost" columns of Table 3 exactly.
+        let h20 = GpuSpec::of(GpuKind::H20);
+        assert!((h20.gb_per_cost() - 51.9).abs() < 0.1);
+        assert!((h20.bw_per_cost() - 2214.1).abs() < 0.5);
+        assert!((h20.tflops_per_cost() - 80.0).abs() < 0.1);
+
+        let l40s = GpuSpec::of(GpuKind::L40S);
+        assert!((l40s.gb_per_cost() - 44.4).abs() < 0.1);
+        assert!((l40s.bw_per_cost() - 800.0).abs() < 0.5);
+        assert!((l40s.tflops_per_cost() - 335.2).abs() < 0.1);
+
+        let h800 = GpuSpec::of(GpuKind::H800);
+        assert!((h800.gb_per_cost() - 15.2).abs() < 0.1);
+        assert!((h800.bw_per_cost() - 649.7).abs() < 0.5);
+        assert!((h800.tflops_per_cost() - 187.3).abs() < 0.1);
+
+        let a800 = GpuSpec::of(GpuKind::A800);
+        assert!((a800.gb_per_cost() - 35.4).abs() < 0.1);
+        assert!((a800.bw_per_cost() - 902.2).abs() < 0.5);
+        assert!((a800.tflops_per_cost() - 138.1).abs() < 0.1);
+    }
+
+    #[test]
+    fn a100_roofline_batch_is_156() {
+        // §2.3: "For an A100 GPU, the batch size at least needs to be 156
+        // tokens (312 TFLOPS / 2 TB/s)". Our Ampere part uses 2039 GB/s,
+        // giving 153 — the paper rounds 2 TB/s.
+        let amp = GpuSpec::of(GpuKind::Ampere80G);
+        let b = amp.roofline_batch();
+        assert!((150.0..160.0).contains(&b), "roofline batch {b}");
+    }
+
+    #[test]
+    fn h20_best_attention_l40s_best_expert() {
+        // §4.3 intuition: H20 maximizes memory capacity+bandwidth per cost,
+        // L40S maximizes compute per cost.
+        let cat = gpu_catalog();
+        let best_bw = cat
+            .iter()
+            .max_by(|a, b| a.bw_per_cost().total_cmp(&b.bw_per_cost()))
+            .unwrap();
+        assert_eq!(best_bw.kind, GpuKind::H20);
+        let best_comp = cat
+            .iter()
+            .max_by(|a, b| a.tflops_per_cost().total_cmp(&b.tflops_per_cost()))
+            .unwrap();
+        assert_eq!(best_comp.kind, GpuKind::L40S);
+    }
+}

@@ -1,0 +1,13 @@
+//! Static configuration: model architectures (paper Table 4), GPU hardware
+//! specifications (paper Table 3), and cluster descriptions.
+//!
+//! Configurations serialize via the in-tree JSON support
+//! (`crate::util::json`) for the `msi` CLI.
+
+mod cluster;
+mod hardware;
+mod model;
+
+pub use cluster::{ClusterSpec, NodeSpec};
+pub use hardware::{GpuSpec, GpuKind, gpu_catalog};
+pub use model::{ModelConfig, DTYPE_BYTES};

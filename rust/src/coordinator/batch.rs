@@ -1,0 +1,139 @@
+//! Batch bookkeeping: the set of requests currently decoding on an
+//! instance, and its partitioning into micro-batches.
+
+use crate::workload::Request;
+
+/// A request admitted to the decode batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActiveRequest {
+    pub id: u64,
+    /// Current sequence length (prompt + decoded so far).
+    pub seq_len: usize,
+    /// Output tokens still to produce.
+    pub remaining: usize,
+    /// Virtual/wall time at admission (for latency accounting).
+    pub admitted_at: f64,
+    /// Tokens decoded so far.
+    pub decoded: usize,
+}
+
+impl ActiveRequest {
+    pub fn from_request(r: &Request, now: f64) -> Self {
+        Self {
+            id: r.id,
+            seq_len: r.input_len,
+            remaining: r.output_len,
+            admitted_at: now,
+            decoded: 0,
+        }
+    }
+
+    /// Advance one decode step; returns true if the request just finished.
+    pub fn step(&mut self) -> bool {
+        debug_assert!(self.remaining > 0);
+        self.seq_len += 1;
+        self.decoded += 1;
+        self.remaining -= 1;
+        self.remaining == 0
+    }
+}
+
+/// The decoding batch of one instance. During decoding each request
+/// contributes exactly one token per iteration, so `len()` is both the
+/// request count and the token batch size `B`.
+#[derive(Debug, Clone, Default)]
+pub struct DecodeBatch {
+    pub requests: Vec<ActiveRequest>,
+}
+
+impl DecodeBatch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Mean sequence length over the batch (`s` in the perf model).
+    pub fn avg_seq_len(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.seq_len as f64).sum::<f64>()
+            / self.requests.len() as f64
+    }
+
+    /// Split into `m` micro-batches of near-equal size (sizes differ by at
+    /// most 1). Returns the token count of each micro-batch.
+    pub fn micro_batch_sizes(&self, m: usize) -> Vec<usize> {
+        debug_assert!(m >= 1);
+        let n = self.requests.len();
+        let base = n / m;
+        let extra = n % m;
+        (0..m).map(|i| base + usize::from(i < extra)).collect()
+    }
+
+    /// Run one decode iteration over every request: returns ids of requests
+    /// that finished and removes them from the batch.
+    pub fn step_all(&mut self) -> Vec<u64> {
+        let mut done = Vec::new();
+        self.requests.retain_mut(|r| {
+            if r.step() {
+                done.push(r.id);
+                false
+            } else {
+                true
+            }
+        });
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, input: usize, output: usize) -> ActiveRequest {
+        ActiveRequest {
+            id,
+            seq_len: input,
+            remaining: output,
+            admitted_at: 0.0,
+            decoded: 0,
+        }
+    }
+
+    #[test]
+    fn micro_batch_sizes_balanced() {
+        let mut b = DecodeBatch::default();
+        for i in 0..10 {
+            b.requests.push(req(i, 100, 5));
+        }
+        assert_eq!(b.micro_batch_sizes(3), vec![4, 3, 3]);
+        assert_eq!(b.micro_batch_sizes(3).iter().sum::<usize>(), 10);
+        assert_eq!(b.micro_batch_sizes(1), vec![10]);
+    }
+
+    #[test]
+    fn step_retires_finished() {
+        let mut b = DecodeBatch::default();
+        b.requests.push(req(0, 100, 1));
+        b.requests.push(req(1, 100, 2));
+        let done = b.step_all();
+        assert_eq!(done, vec![0]);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.requests[0].seq_len, 101);
+        let done = b.step_all();
+        assert_eq!(done, vec![1]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn avg_seq_len() {
+        let mut b = DecodeBatch::default();
+        b.requests.push(req(0, 100, 5));
+        b.requests.push(req(1, 300, 5));
+        assert_eq!(b.avg_seq_len(), 200.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Token dispatch and aggregation — the data-plane hot path between
+//! attention and expert nodes (the computation the M2N library transports,
+//! and the scatter/gather the paper's fused kernels accelerate, §6).
+//!
+//! `build_dispatch` turns a gating decision into per-expert routing tables;
+//! `combine_expert_outputs` computes the weighted sum of expert outputs back
+//! into token order. Both are allocation-lean: the routing tables are flat
+//! index vectors sized in one pass (optimized in the §Perf pass — see
+//! EXPERIMENTS.md).
+
+use super::gating::GatingOutput;
+
+/// Routing tables for one micro-batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchPlan {
+    /// Flat token indices grouped by expert: tokens for expert `e` are
+    /// `token_idx[offsets[e] .. offsets[e+1]]`.
+    pub token_idx: Vec<u32>,
+    /// The gating weight aligned with `token_idx`.
+    pub gate_weight: Vec<f32>,
+    /// Per-expert offsets into `token_idx`; length `num_experts + 1`.
+    pub offsets: Vec<u32>,
+}
+
+impl DispatchPlan {
+    pub fn num_experts(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Token rows (and weights) destined for expert `e`.
+    pub fn expert_slice(&self, e: usize) -> (&[u32], &[f32]) {
+        let lo = self.offsets[e] as usize;
+        let hi = self.offsets[e + 1] as usize;
+        (&self.token_idx[lo..hi], &self.gate_weight[lo..hi])
+    }
+
+    /// Tokens routed to expert `e`.
+    pub fn expert_load(&self, e: usize) -> usize {
+        (self.offsets[e + 1] - self.offsets[e]) as usize
+    }
+
+    /// Total dispatched token-copies (== batch · top_k).
+    pub fn total_dispatched(&self) -> usize {
+        self.token_idx.len()
+    }
+}
+
+/// Build the per-expert routing tables from a gating decision.
+///
+/// Counting-sort layout: one pass to histogram expert loads, one pass to
+/// scatter indices — O(batch·k), no per-expert Vec allocations.
+pub fn build_dispatch(gating: &GatingOutput, num_experts: usize) -> DispatchPlan {
+    let total = gating.experts.len();
+    let k = gating.k;
+
+    // Pass 1: histogram.
+    let mut counts = vec![0u32; num_experts + 1];
+    for &e in &gating.experts {
+        counts[e as usize + 1] += 1;
+    }
+    // Prefix sum -> offsets.
+    for e in 0..num_experts {
+        counts[e + 1] += counts[e];
+    }
+    let offsets = counts;
+
+    // Pass 2: scatter (flat [batch*k] layout, token = index / k).
+    let mut cursor: Vec<u32> = offsets[..num_experts].to_vec();
+    let mut token_idx = vec![0u32; total];
+    let mut gate_weight = vec![0f32; total];
+    for (i, (&e, &w)) in gating.experts.iter().zip(&gating.weights).enumerate() {
+        let slot = cursor[e as usize] as usize;
+        token_idx[slot] = (i / k) as u32;
+        gate_weight[slot] = w;
+        cursor[e as usize] += 1;
+    }
+
+    DispatchPlan {
+        token_idx,
+        gate_weight,
+        offsets,
+    }
+}
+
+/// Aggregate expert outputs back into token order:
+/// `out[t] = Σ_e w_{t,e} · expert_out_e[row of t]`.
+///
+/// `expert_outputs[e]` is row-major `[expert_load(e), hidden]` in the same
+/// order as `expert_slice(e)`. Returns row-major `[batch, hidden]`.
+pub fn combine_expert_outputs(
+    plan: &DispatchPlan,
+    expert_outputs: &[Vec<f32>],
+    batch: usize,
+    hidden: usize,
+) -> Vec<f32> {
+    assert_eq!(expert_outputs.len(), plan.num_experts());
+    let mut out = vec![0f32; batch * hidden];
+    for e in 0..plan.num_experts() {
+        let (tokens, weights) = plan.expert_slice(e);
+        let eo = &expert_outputs[e];
+        assert_eq!(eo.len(), tokens.len() * hidden, "expert {e} output shape");
+        for (row, (&t, &w)) in tokens.iter().zip(weights).enumerate() {
+            let src = &eo[row * hidden..(row + 1) * hidden];
+            let dst = &mut out[t as usize * hidden..(t as usize + 1) * hidden];
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += w * s;
+            }
+        }
+    }
+    out
+}
+
+/// Gather the input rows for one expert: `x` is `[batch, hidden]` row-major,
+/// returns `[expert_load(e), hidden]`.
+pub fn gather_expert_input(
+    plan: &DispatchPlan,
+    e: usize,
+    x: &[f32],
+    hidden: usize,
+) -> Vec<f32> {
+    let (tokens, _) = plan.expert_slice(e);
+    let mut out = Vec::with_capacity(tokens.len() * hidden);
+    for &t in tokens {
+        out.extend_from_slice(&x[t as usize * hidden..(t as usize + 1) * hidden]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::gating::softmax_topk;
+
+    fn gating_fixture() -> GatingOutput {
+        // 3 tokens, 4 experts, top-2.
+        GatingOutput {
+            k: 2,
+            experts: vec![0, 2, 2, 1, 0, 1],
+            weights: vec![0.7, 0.3, 0.6, 0.4, 0.5, 0.5],
+        }
+    }
+
+    #[test]
+    fn conservation_every_token_copy_routed() {
+        let g = gating_fixture();
+        let plan = build_dispatch(&g, 4);
+        assert_eq!(plan.total_dispatched(), 6);
+        let by_expert: usize = (0..4).map(|e| plan.expert_load(e)).sum();
+        assert_eq!(by_expert, 6);
+        assert_eq!(plan.expert_load(0), 2);
+        assert_eq!(plan.expert_load(1), 2);
+        assert_eq!(plan.expert_load(2), 2);
+        assert_eq!(plan.expert_load(3), 0);
+    }
+
+    #[test]
+    fn combine_identity_expert_recovers_weighted_sum() {
+        // Expert output == its input rows; weights sum to 1, so combining
+        // over identity experts reproduces the input exactly.
+        let g = gating_fixture();
+        let plan = build_dispatch(&g, 4);
+        let hidden = 2;
+        let x: Vec<f32> = vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0]; // 3 tokens
+        let outs: Vec<Vec<f32>> = (0..4)
+            .map(|e| gather_expert_input(&plan, e, &x, hidden))
+            .collect();
+        let combined = combine_expert_outputs(&plan, &outs, 3, hidden);
+        for (a, b) in combined.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-6, "{combined:?} vs {x:?}");
+        }
+    }
+
+    #[test]
+    fn combine_scales_by_gate_weight() {
+        let g = GatingOutput {
+            k: 1,
+            experts: vec![0],
+            weights: vec![1.0],
+        };
+        let plan = build_dispatch(&g, 2);
+        let outs = vec![vec![4.0, 8.0], vec![]];
+        let combined = combine_expert_outputs(&plan, &outs, 1, 2);
+        assert_eq!(combined, vec![4.0, 8.0]);
+    }
+
+    #[test]
+    fn works_with_real_gating() {
+        let logits: Vec<f32> = (0..32 * 8).map(|i| ((i * 37) % 11) as f32 * 0.1).collect();
+        let g = softmax_topk(&logits, 8, 2);
+        let plan = build_dispatch(&g, 8);
+        assert_eq!(plan.total_dispatched(), 64);
+        // Offsets monotone.
+        for w in plan.offsets.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn empty_batch() {
+        let g = GatingOutput {
+            k: 2,
+            experts: vec![],
+            weights: vec![],
+        };
+        let plan = build_dispatch(&g, 4);
+        assert_eq!(plan.total_dispatched(), 0);
+        let combined = combine_expert_outputs(&plan, &vec![vec![]; 4], 0, 8);
+        assert!(combined.is_empty());
+    }
+}

@@ -1,0 +1,201 @@
+//! Gating: softmax over router logits and top-k expert selection with
+//! normalized weights (paper §2.2). This is the CPU-side mirror of the fused
+//! Pallas gating kernel (L1); the PJRT serving path obtains logits from the
+//! compiled gating executable and this module turns them into a dispatch
+//! decision. The virtual-time path uses it directly on synthetic logits.
+//!
+//! Hot path (§Perf): selection is an O(E·k) partial scan on raw logits (no
+//! sort, no allocation per row), and — because the top-k weights are
+//! re-normalized over the selected experts — the full-softmax denominator
+//! cancels, so `exp()` runs only on the k selected logits instead of all E.
+
+/// Gating decision for a batch of tokens, flat row-major `[batch, k]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GatingOutput {
+    pub k: usize,
+    /// `[batch * k]` selected expert ids, by descending router weight.
+    pub experts: Vec<u16>,
+    /// `[batch * k]` normalized weights (sum to 1 over each row).
+    pub weights: Vec<f32>,
+}
+
+impl GatingOutput {
+    pub fn batch(&self) -> usize {
+        if self.k == 0 {
+            0
+        } else {
+            self.experts.len() / self.k
+        }
+    }
+
+    /// Selected expert ids of token `t`.
+    pub fn experts_of(&self, t: usize) -> &[u16] {
+        &self.experts[t * self.k..(t + 1) * self.k]
+    }
+
+    /// Normalized weights of token `t`.
+    pub fn weights_of(&self, t: usize) -> &[f32] {
+        &self.weights[t * self.k..(t + 1) * self.k]
+    }
+
+    /// Number of tokens routed to each expert (the load vector `a_i` used by
+    /// the load balancer).
+    pub fn expert_loads(&self, num_experts: usize) -> Vec<usize> {
+        let mut loads = vec![0usize; num_experts];
+        for &e in &self.experts {
+            loads[e as usize] += 1;
+        }
+        loads
+    }
+}
+
+/// Compute top-k selection + renormalized softmax weights over per-token
+/// router logits.
+///
+/// `logits` is row-major `[batch, num_experts]`. Ties break toward the lower
+/// expert id (deterministic). Weights are the softmax probabilities of the
+/// selected experts renormalized to sum to 1, matching Mixtral/DBRX routers.
+pub fn softmax_topk(logits: &[f32], num_experts: usize, k: usize) -> GatingOutput {
+    assert!(k >= 1 && k <= num_experts && num_experts <= u16::MAX as usize);
+    assert_eq!(logits.len() % num_experts, 0);
+    let batch = logits.len() / num_experts;
+    let mut experts = vec![0u16; batch * k];
+    let mut weights = vec![0f32; batch * k];
+
+    // Per-row scratch: the current top-k (logit, id), kept sorted descending
+    // by (logit, -id). Small k => insertion into a fixed array beats a sort.
+    let mut top: Vec<(f32, u16)> = vec![(0.0, 0); k];
+
+    for b in 0..batch {
+        let row = &logits[b * num_experts..(b + 1) * num_experts];
+
+        // Partial selection scan.
+        let mut filled = 0usize;
+        for (e, &l) in row.iter().enumerate() {
+            let cand = (l, e as u16);
+            if filled < k {
+                // Insert into the sorted prefix.
+                let mut i = filled;
+                while i > 0 && better(cand, top[i - 1]) {
+                    top[i] = top[i - 1];
+                    i -= 1;
+                }
+                top[i] = cand;
+                filled += 1;
+            } else if better(cand, top[k - 1]) {
+                let mut i = k - 1;
+                while i > 0 && better(cand, top[i - 1]) {
+                    top[i] = top[i - 1];
+                    i -= 1;
+                }
+                top[i] = cand;
+            }
+        }
+
+        // Renormalized softmax over the selected logits only: the full
+        // denominator cancels, so exp() is needed just k times.
+        let mx = top[0].0;
+        let out_e = &mut experts[b * k..(b + 1) * k];
+        let out_w = &mut weights[b * k..(b + 1) * k];
+        let mut denom = 0f32;
+        for i in 0..k {
+            let w = (top[i].0 - mx).exp();
+            out_e[i] = top[i].1;
+            out_w[i] = w;
+            denom += w;
+        }
+        let inv = 1.0 / denom;
+        for w in out_w.iter_mut() {
+            *w *= inv;
+        }
+    }
+    GatingOutput {
+        k,
+        experts,
+        weights,
+    }
+}
+
+/// Ordering for selection: higher logit wins; ties go to the lower id.
+#[inline]
+fn better(a: (f32, u16), b: (f32, u16)) -> bool {
+    a.0 > b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_top_experts() {
+        // one token, 4 experts, logits favour 2 then 0.
+        let logits = vec![1.0, -1.0, 3.0, 0.0];
+        let g = softmax_topk(&logits, 4, 2);
+        assert_eq!(g.experts_of(0), &[2, 0]);
+        assert!(g.weights_of(0)[0] > g.weights_of(0)[1]);
+    }
+
+    #[test]
+    fn weights_normalized() {
+        let logits = vec![0.3, 0.1, -0.5, 2.0, 0.0, 0.0, 1.0, 1.0];
+        let g = softmax_topk(&logits, 4, 3);
+        for t in 0..2 {
+            let s: f32 = g.weights_of(t).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matches_full_softmax_renormalized() {
+        // Cross-check against the straightforward full-softmax formula.
+        let logits: Vec<f32> = (0..6 * 16)
+            .map(|i| ((i * 2654435761u64 as usize) % 97) as f32 * 0.07)
+            .collect();
+        let g = softmax_topk(&logits, 16, 4);
+        for t in 0..6 {
+            let row = &logits[t * 16..(t + 1) * 16];
+            let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = row.iter().map(|&x| (x - mx).exp()).collect();
+            let mut idx: Vec<usize> = (0..16).collect();
+            idx.sort_by(|&a, &b| exps[b].partial_cmp(&exps[a]).unwrap().then(a.cmp(&b)));
+            let denom: f32 = idx[..4].iter().map(|&e| exps[e]).sum();
+            for (i, &e) in idx[..4].iter().enumerate() {
+                assert_eq!(g.experts_of(t)[i] as usize, e, "token {t} slot {i}");
+                let want = exps[e] / denom;
+                let got = g.weights_of(t)[i];
+                assert!((got - want).abs() < 1e-6, "token {t}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_logits_tie_break_low_id() {
+        let logits = vec![0.0; 8];
+        let g = softmax_topk(&logits, 8, 2);
+        assert_eq!(g.experts_of(0), &[0, 1]);
+        assert!((g.weights_of(0)[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn expert_loads_count_topk_fanout() {
+        let logits = vec![
+            1.0, 0.0, 0.0, 0.0, // token 0 -> experts {0, 1..}
+            1.0, 0.9, 0.0, 0.0, // token 1 -> experts {0, 1}
+        ];
+        let g = softmax_topk(&logits, 4, 2);
+        let loads = g.expert_loads(4);
+        assert_eq!(loads.iter().sum::<usize>(), 4); // 2 tokens * k=2
+        assert_eq!(loads[0], 2);
+    }
+
+    #[test]
+    fn k_equals_num_experts() {
+        let logits = vec![0.5, 1.5, -0.5];
+        let g = softmax_topk(&logits, 3, 3);
+        assert_eq!(g.experts_of(0).len(), 3);
+        let s: f32 = g.weights_of(0).iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        // Descending weight order.
+        assert_eq!(g.experts_of(0)[0], 1);
+    }
+}

@@ -1,0 +1,187 @@
+//! Paged KV-cache management for attention nodes (vLLM-style block
+//! allocator). Attention nodes own all KV state in the disaggregated
+//! architecture (§3); the allocator tracks block budgets so the scheduler
+//! can enforce the Eq. 8 memory constraint online.
+
+use std::collections::HashMap;
+
+/// Allocator configuration.
+#[derive(Debug, Clone)]
+pub struct KvCacheConfig {
+    /// Tokens per block (vLLM default 16).
+    pub block_size: usize,
+    /// Total blocks available on this attention node.
+    pub num_blocks: usize,
+}
+
+impl KvCacheConfig {
+    /// Size the allocator from hardware: GPU memory left after parameters,
+    /// divided by per-token KV bytes.
+    pub fn from_budget(bytes_budget: f64, kv_bytes_per_token: f64, block_size: usize) -> Self {
+        let tokens = (bytes_budget / kv_bytes_per_token).max(0.0) as usize;
+        Self {
+            block_size,
+            num_blocks: tokens / block_size,
+        }
+    }
+}
+
+/// Block-granular KV cache allocator.
+///
+/// Invariants (exercised by proptests in `rust/tests/proptests.rs`):
+/// free + allocated == total; no block is owned twice; freeing a request
+/// returns exactly the blocks it held.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    config: KvCacheConfig,
+    free: Vec<u32>,
+    owned: HashMap<u64, Vec<u32>>,
+    /// Tokens stored per request (to size partial blocks).
+    tokens: HashMap<u64, usize>,
+}
+
+impl BlockAllocator {
+    pub fn new(config: KvCacheConfig) -> Self {
+        let free = (0..config.num_blocks as u32).rev().collect();
+        Self {
+            config,
+            free,
+            owned: HashMap::new(),
+            tokens: HashMap::new(),
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn allocated_blocks(&self) -> usize {
+        self.config.num_blocks - self.free.len()
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.config.block_size)
+    }
+
+    /// Can a request with `tokens` of context be admitted?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.free.len()
+    }
+
+    /// Admit a request with an initial context of `tokens`. Returns false
+    /// (and allocates nothing) if blocks are insufficient or the id exists.
+    pub fn admit(&mut self, request_id: u64, tokens: usize) -> bool {
+        if self.owned.contains_key(&request_id) || !self.can_admit(tokens) {
+            return false;
+        }
+        let need = self.blocks_for(tokens);
+        let blocks: Vec<u32> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.owned.insert(request_id, blocks);
+        self.tokens.insert(request_id, tokens);
+        true
+    }
+
+    /// Append one decoded token; may allocate a new block. Returns false if
+    /// out of memory (caller must preempt).
+    pub fn append_token(&mut self, request_id: u64) -> bool {
+        let Some(tokens) = self.tokens.get_mut(&request_id) else {
+            return false;
+        };
+        *tokens += 1;
+        let need = tokens.div_ceil(self.config.block_size);
+        let blocks = self.owned.get_mut(&request_id).unwrap();
+        if need > blocks.len() {
+            match self.free.pop() {
+                Some(b) => blocks.push(b),
+                None => {
+                    // Roll back the token count so state stays consistent.
+                    *self.tokens.get_mut(&request_id).unwrap() -= 1;
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Release all blocks of a finished/preempted request.
+    pub fn release(&mut self, request_id: u64) -> usize {
+        let blocks = self.owned.remove(&request_id).unwrap_or_default();
+        self.tokens.remove(&request_id);
+        let n = blocks.len();
+        self.free.extend(blocks);
+        n
+    }
+
+    /// Tokens currently cached for a request.
+    pub fn tokens_of(&self, request_id: u64) -> Option<usize> {
+        self.tokens.get(&request_id).copied()
+    }
+
+    pub fn num_requests(&self) -> usize {
+        self.owned.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc(blocks: usize) -> BlockAllocator {
+        BlockAllocator::new(KvCacheConfig {
+            block_size: 16,
+            num_blocks: blocks,
+        })
+    }
+
+    #[test]
+    fn admit_and_release_conserves_blocks() {
+        let mut a = alloc(10);
+        assert!(a.admit(1, 33)); // 3 blocks
+        assert_eq!(a.free_blocks(), 7);
+        assert!(a.admit(2, 16)); // 1 block
+        assert_eq!(a.free_blocks(), 6);
+        assert_eq!(a.release(1), 3);
+        assert_eq!(a.free_blocks(), 9);
+        assert_eq!(a.release(2), 1);
+        assert_eq!(a.free_blocks(), 10);
+    }
+
+    #[test]
+    fn append_allocates_at_block_boundary() {
+        let mut a = alloc(4);
+        assert!(a.admit(7, 16)); // exactly 1 block full
+        assert_eq!(a.allocated_blocks(), 1);
+        assert!(a.append_token(7)); // 17th token -> new block
+        assert_eq!(a.allocated_blocks(), 2);
+        for _ in 0..15 {
+            assert!(a.append_token(7)); // fill block 2
+        }
+        assert_eq!(a.allocated_blocks(), 2);
+        assert!(a.append_token(7));
+        assert_eq!(a.allocated_blocks(), 3);
+    }
+
+    #[test]
+    fn oom_on_append_rolls_back() {
+        let mut a = alloc(1);
+        assert!(a.admit(1, 16));
+        assert!(!a.append_token(1), "no block available");
+        assert_eq!(a.tokens_of(1), Some(16), "token count rolled back");
+    }
+
+    #[test]
+    fn rejects_duplicate_and_oversized() {
+        let mut a = alloc(2);
+        assert!(a.admit(1, 16));
+        assert!(!a.admit(1, 16), "duplicate id");
+        assert!(!a.admit(2, 33), "needs 3 blocks, 1 free");
+        assert!(a.admit(3, 10));
+    }
+
+    #[test]
+    fn from_budget_sizing() {
+        // 10 GB budget, 100 KB/token, 16-token blocks -> 100k tokens -> 6250 blocks.
+        let c = KvCacheConfig::from_budget(10e9, 100e3, 16);
+        assert_eq!(c.num_blocks, 6250);
+    }
+}

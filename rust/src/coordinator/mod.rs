@@ -1,0 +1,33 @@
+//! The MegaScale-Infer runtime instance (paper §3, Figure 3): disaggregated
+//! attention and expert node pools, ping-pong pipeline scheduling, token
+//! dispatch/aggregation, KV-cache management, continuous batching, and
+//! expert load balancing.
+//!
+//! The scheduling/routing/batching logic here is backend-agnostic:
+//!
+//! * the **virtual-time** driver ([`pingpong`], [`instance`]) advances a
+//!   discrete-event clock using the analytical [`crate::perf_model`] — this
+//!   regenerates every end-to-end figure of the paper at cluster scale;
+//! * the **real** driver ([`crate::runtime::ServingEngine`]) executes the
+//!   AOT-compiled JAX/Pallas artifacts through PJRT using the *same*
+//!   dispatch, gating, KV-cache and batching code.
+
+pub mod batch;
+pub mod dispatch;
+pub mod gating;
+pub mod instance;
+pub mod kv_cache;
+pub mod load_balance;
+pub mod pingpong;
+pub mod router;
+pub mod scheduler;
+
+pub use batch::{ActiveRequest, DecodeBatch};
+pub use dispatch::{build_dispatch, combine_expert_outputs, gather_expert_input, DispatchPlan};
+pub use gating::{softmax_topk, GatingOutput};
+pub use instance::{ExpertTraffic, InstanceReport, RuntimeInstance};
+pub use kv_cache::{BlockAllocator, KvCacheConfig};
+pub use load_balance::{balance_experts, ExpertPlacement};
+pub use pingpong::{PingPongSim, PipelineStats};
+pub use router::{RoutePolicy, Router};
+pub use scheduler::{ContinuousBatcher, SchedulerConfig};

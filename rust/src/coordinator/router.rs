@@ -1,0 +1,187 @@
+//! Multi-instance request router.
+//!
+//! MegaScale-Infer serves a model as a fleet of runtime instances (one per
+//! model replica, §3); production traffic is spread across them. This
+//! router implements the standard policies of LLM serving fleets
+//! (vllm-project/router, Llumnix): least-outstanding-tokens routing with
+//! KV-capacity awareness, plus plain round-robin for comparison.
+//!
+//! The router is deliberately state-light: it tracks per-instance
+//! outstanding work from its own dispatch decisions and completion
+//! callbacks, exactly like a front-end proxy that never inspects
+//! instance internals.
+
+use crate::workload::Request;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    /// Route to the instance with the least outstanding decode tokens,
+    /// skipping instances whose KV headroom cannot admit the request.
+    LeastLoaded,
+}
+
+/// Router-side view of one instance.
+#[derive(Debug, Clone)]
+pub struct InstanceState {
+    /// Outstanding decode tokens (sum of remaining output lengths).
+    pub outstanding_tokens: u64,
+    /// Outstanding requests.
+    pub outstanding_requests: u64,
+    /// KV-token headroom (capacity minus committed prompt+output tokens).
+    pub kv_headroom: u64,
+}
+
+/// The fleet router.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    instances: Vec<InstanceState>,
+    rr_next: usize,
+}
+
+impl Router {
+    /// `kv_capacity[i]` is instance `i`'s KV budget in tokens.
+    pub fn new(policy: RoutePolicy, kv_capacity: &[u64]) -> Self {
+        Self {
+            policy,
+            instances: kv_capacity
+                .iter()
+                .map(|&c| InstanceState {
+                    outstanding_tokens: 0,
+                    outstanding_requests: 0,
+                    kv_headroom: c,
+                })
+                .collect(),
+            rr_next: 0,
+        }
+    }
+
+    pub fn instances(&self) -> &[InstanceState] {
+        &self.instances
+    }
+
+    /// Tokens a request will commit in the KV cache (prompt + output).
+    fn kv_cost(r: &Request) -> u64 {
+        (r.input_len + r.output_len) as u64
+    }
+
+    /// Pick an instance for `r`; returns `None` when no instance has KV
+    /// headroom (caller should queue and retry on completion).
+    pub fn route(&mut self, r: &Request) -> Option<usize> {
+        let need = Self::kv_cost(r);
+        let n = self.instances.len();
+        let pick = match self.policy {
+            RoutePolicy::RoundRobin => (0..n)
+                .map(|i| (self.rr_next + i) % n)
+                .find(|&i| self.instances[i].kv_headroom >= need),
+            RoutePolicy::LeastLoaded => (0..n)
+                .filter(|&i| self.instances[i].kv_headroom >= need)
+                .min_by_key(|&i| (self.instances[i].outstanding_tokens, i)),
+        }?;
+        if self.policy == RoutePolicy::RoundRobin {
+            self.rr_next = (pick + 1) % n;
+        }
+        let s = &mut self.instances[pick];
+        s.outstanding_tokens += r.output_len as u64;
+        s.outstanding_requests += 1;
+        s.kv_headroom -= need;
+        Some(pick)
+    }
+
+    /// Completion callback: release the request's accounting.
+    pub fn complete(&mut self, instance: usize, r: &Request) {
+        let s = &mut self.instances[instance];
+        s.outstanding_tokens = s.outstanding_tokens.saturating_sub(r.output_len as u64);
+        s.outstanding_requests = s.outstanding_requests.saturating_sub(1);
+        s.kv_headroom += Self::kv_cost(r);
+    }
+
+    /// Imbalance metric: max/mean outstanding tokens (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let toks: Vec<u64> = self.instances.iter().map(|s| s.outstanding_tokens).collect();
+        let max = *toks.iter().max().unwrap_or(&0) as f64;
+        let mean = toks.iter().sum::<u64>() as f64 / toks.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimRng;
+    use crate::workload::WorkloadSpec;
+
+    fn req(id: u64, input: usize, output: usize) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            input_len: input,
+            output_len: output,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, &[10_000; 3]);
+        let picks: Vec<usize> = (0..6).map(|i| r.route(&req(i, 10, 5)).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_balances_heavy_tail() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, &[1_000_000; 4]);
+        let mut rng = SimRng::new(3);
+        let reqs = WorkloadSpec::default().generate(400, 7);
+        for q in &reqs {
+            r.route(q).unwrap();
+            // Randomly complete some work to create churn.
+            if rng.chance(0.3) {
+                let i = rng.below(4);
+                // Synthetic completion of a small request.
+                r.complete(i, &req(0, 0, 0));
+            }
+        }
+        assert!(
+            r.imbalance() < 1.2,
+            "least-loaded imbalance {}",
+            r.imbalance()
+        );
+    }
+
+    #[test]
+    fn kv_headroom_gates_admission() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, &[100, 25]);
+        // 30-token request only fits instance 0.
+        assert_eq!(r.route(&req(0, 20, 10)), Some(0));
+        assert_eq!(r.route(&req(1, 20, 10)), Some(0));
+        assert_eq!(r.route(&req(2, 20, 10)), Some(0));
+        // Instance 0 now has 10 headroom; instance 1 has 25 — too small.
+        assert_eq!(r.route(&req(3, 20, 10)), None, "fleet full");
+        // A tiny request still fits instance 1.
+        assert_eq!(r.route(&req(4, 10, 10)), Some(1));
+    }
+
+    #[test]
+    fn completion_restores_capacity() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, &[30]);
+        let q = req(0, 20, 10);
+        assert_eq!(r.route(&q), Some(0));
+        assert_eq!(r.route(&req(1, 20, 10)), None);
+        r.complete(0, &q);
+        assert_eq!(r.route(&req(2, 20, 10)), Some(0));
+        assert_eq!(r.instances()[0].outstanding_requests, 1);
+    }
+
+    #[test]
+    fn round_robin_skips_full_instances() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, &[25, 10_000, 25]);
+        assert_eq!(r.route(&req(0, 50, 10)).unwrap(), 1);
+        assert_eq!(r.route(&req(1, 50, 10)).unwrap(), 1);
+    }
+}

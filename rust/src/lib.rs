@@ -1,0 +1,43 @@
+//! # MegaScale-Infer
+//!
+//! A reproduction of *"MegaScale-Infer: Serving Mixture-of-Experts at Scale
+//! with Disaggregated Expert Parallelism"* (ByteDance Seed / Peking
+//! University, 2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The library implements the paper's full system:
+//!
+//! * **Disaggregated expert parallelism** — attention nodes (data-parallel
+//!   replicas, TP inside a node) and expert nodes (expert-parallel, one
+//!   expert per node) as separate pools ([`coordinator`]).
+//! * **Ping-pong pipeline parallelism** — `m` micro-batches shuttled between
+//!   the pools so compute hides communication ([`coordinator::pingpong`]).
+//! * **Deployment plan search** — Algorithm 1: enumerate `(tp_a, tp_e)`,
+//!   balance `n_a`, sweep `m`, binary-search the max batch under the TPOT
+//!   SLO, maximize throughput per dollar ([`plan`]).
+//! * **M2N communication library** — an RDMA-style sender/receiver model and
+//!   an NCCL baseline on a discrete-event network simulator ([`m2n`]).
+//! * **Analytical performance model** — roofline GEMM timing (Table 2),
+//!   `T_a`/`T_e`/`T_c` models and iteration-latency equations (Eq. 4–6)
+//!   ([`perf_model`]).
+//! * **Baselines** — vLLM-like and TensorRT-LLM-like monolithic serving
+//!   simulators sharing the same substrate ([`baselines`]).
+//! * **PJRT runtime** — loads JAX/Pallas-AOT-compiled HLO artifacts and runs
+//!   the same coordinator logic against real compute ([`runtime`]).
+//!
+//! See `DESIGN.md` for the experiment index and substitution notes, and
+//! `EXPERIMENTS.md` for measured results.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod m2n;
+pub mod metrics;
+pub mod perf_model;
+pub mod plan;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use config::{ClusterSpec, GpuSpec, ModelConfig};
+pub use plan::{DeploymentPlan, PlanSearcher};

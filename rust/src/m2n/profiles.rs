@@ -1,0 +1,145 @@
+//! Cost profiles of the three communication stacks compared in the paper.
+//!
+//! Constants are chosen from the paper's qualitative attribution (§5) and
+//! public RDMA/NCCL microbenchmark lore, scaled so that the headline
+//! comparisons of §7.3 (median/P99/throughput at 256 KB, 8→8 on 200 Gbps
+//! NICs) reproduce in *shape*. They are inputs to the message-level
+//! simulator in [`super::simnet`].
+
+/// Which communication stack to model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LibraryKind {
+    /// The paper's RDMA write-with-immediate library.
+    MegaScale,
+    /// NCCL peer-to-peer send/recv groups.
+    Nccl,
+    /// `perftest` (ib_write_bw-style): CPU-driven RDMA, the latency floor.
+    Perftest,
+}
+
+/// Per-operation cost constants for one stack.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LibraryProfile {
+    pub kind: LibraryKind,
+    /// NIC line rate per GPU, bytes/s (200 Gbps default, §7.3 testbed).
+    pub nic_bw: f64,
+    /// CPU/NIC work to post one message (doorbell, WQE build), seconds.
+    pub post_overhead: f64,
+    /// Fixed cost to set up one batch/group of sends (kernel launch for
+    /// NCCL's group, nothing for RDMA-direct stacks), seconds.
+    pub group_setup: f64,
+    /// Max operations per group batch (NCCL processes p2p groups in batches
+    /// of at most 8; others unlimited => usize::MAX).
+    pub group_batch: usize,
+    /// Extra per-byte cost of intermediate GPU→CPU proxy copies (NCCL
+    /// networking copies through the CPU proxy), seconds per byte.
+    pub copy_per_byte: f64,
+    /// Fixed receiver-side completion cost (CQ poll + GDRCopy flush for
+    /// MegaScale; proxy delivery + stream wait for NCCL), seconds.
+    pub recv_overhead: f64,
+    /// GPU synchronization cost per operation (stream sync/event waits NCCL
+    /// needs; eliminated in MegaScale), seconds.
+    pub sync_overhead: f64,
+    /// Probability that one message hits a slow-path stall (OS noise,
+    /// GPU-sync interference). Drawn per message.
+    pub stall_prob: f64,
+    /// Pareto scale (minimum) of a stall, seconds.
+    pub stall_scale: f64,
+    /// Pareto shape of a stall; smaller = heavier tail.
+    pub stall_alpha: f64,
+    /// Log-normal sigma of benign per-message jitter.
+    pub jitter_sigma: f64,
+    /// Incast penalty: effective receiver bandwidth fraction when k senders
+    /// converge is `1/(1 + incast_penalty·(k−1))` beyond fair sharing.
+    /// Congestion-control fine-tuning (§5) lowers it.
+    pub incast_penalty: f64,
+    /// Extra delay for ACK processing under bidirectional load; the
+    /// high-priority-ACK fix (§5) removes it.
+    pub ack_delay: f64,
+}
+
+impl LibraryProfile {
+    pub fn of(kind: LibraryKind) -> Self {
+        match kind {
+            LibraryKind::MegaScale => Self {
+                kind,
+                nic_bw: 25e9,
+                post_overhead: 1.2e-6,
+                group_setup: 0.0,
+                group_batch: usize::MAX,
+                copy_per_byte: 0.0,
+                recv_overhead: 1.5e-6, // CQ poll + GDRCopy flush + flag update
+                sync_overhead: 0.0,
+                stall_prob: 0.0005,
+                stall_scale: 4e-6,
+                stall_alpha: 2.5, // light tail
+                jitter_sigma: 0.04,
+                incast_penalty: 0.02, // congestion control fine-tuned
+                ack_delay: 0.0,       // high-priority ACK queues
+            },
+            LibraryKind::Nccl => Self {
+                kind,
+                nic_bw: 25e9,
+                post_overhead: 2.5e-6,
+                group_setup: 14e-6, // group launch + checks + proxy wakeup
+                group_batch: 8,     // p2p groups processed <=8 ops at a time
+                // proxy copy path ~ 20 GB/s effective => 5e-11 s/B extra
+                copy_per_byte: 5e-11,
+                recv_overhead: 4e-6,
+                sync_overhead: 7e-6, // stream sync / event wait per op
+                stall_prob: 0.004,
+                stall_scale: 60e-6,
+                stall_alpha: 1.15, // heavy tail: GPU sync + device mem access
+                jitter_sigma: 0.10,
+                incast_penalty: 0.35,
+                ack_delay: 3e-6,
+            },
+            LibraryKind::Perftest => Self {
+                kind,
+                nic_bw: 25e9,
+                post_overhead: 1.0e-6,
+                group_setup: 0.0,
+                group_batch: usize::MAX,
+                copy_per_byte: 0.0,
+                recv_overhead: 1.0e-6,
+                sync_overhead: 0.0,
+                stall_prob: 0.0003,
+                stall_scale: 3e-6,
+                stall_alpha: 2.5,
+                jitter_sigma: 0.03,
+                incast_penalty: 0.05,
+                ack_delay: 0.0,
+            },
+        }
+    }
+
+    /// Serial wire time of one message.
+    pub fn wire_time(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.nic_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn megascale_removes_the_overheads() {
+        let ours = LibraryProfile::of(LibraryKind::MegaScale);
+        let nccl = LibraryProfile::of(LibraryKind::Nccl);
+        assert_eq!(ours.copy_per_byte, 0.0);
+        assert_eq!(ours.sync_overhead, 0.0);
+        assert_eq!(ours.group_setup, 0.0);
+        assert!(nccl.copy_per_byte > 0.0);
+        assert!(nccl.sync_overhead > 0.0);
+        assert_eq!(nccl.group_batch, 8);
+        assert!(ours.stall_alpha > nccl.stall_alpha, "NCCL tail heavier");
+    }
+
+    #[test]
+    fn wire_time_256kb() {
+        let p = LibraryProfile::of(LibraryKind::MegaScale);
+        let t = p.wire_time(256 * 1024);
+        assert!((t - 256.0 * 1024.0 / 25e9).abs() < 1e-12);
+    }
+}

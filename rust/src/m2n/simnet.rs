@@ -1,0 +1,259 @@
+//! Message-level discrete-event simulation of M-to-N token dispatch.
+//!
+//! One *round* = every sender transmits one message to every receiver (the
+//! MoE dispatch pattern: each attention GPU scatters its tokens' activations
+//! to all expert GPUs it selected). The per-round latency of a sender is the
+//! time from round start until its last message is confirmed delivered —
+//! matching how the paper's microbenchmarks report One-to-N / M2N latency.
+//!
+//! Modeled costs per message (see [`super::LibraryProfile`]):
+//!
+//! ```text
+//! sender:   group setup (per batch of <=group_batch ops)
+//!           + post_overhead  (serialized on the sender CPU/NIC)
+//!           + copy_per_byte·size (GPU->CPU proxy copy, NCCL only)
+//!           + sender NIC serialization at line rate
+//! network:  propagation (fixed 2us)
+//! receiver: NIC serialization with incast penalty when k senders converge
+//!           + recv_overhead + sync_overhead
+//! both:     lognormal jitter, Pareto stalls with probability stall_prob
+//! ```
+
+use crate::metrics::Histogram;
+use crate::sim::SimRng;
+
+use super::profiles::LibraryProfile;
+
+/// Scenario description for one microbenchmark run.
+#[derive(Debug, Clone)]
+pub struct M2nScenario {
+    pub profile: LibraryProfile,
+    /// Number of senders (M).
+    pub senders: usize,
+    /// Number of receivers (N).
+    pub receivers: usize,
+    /// Bytes per (sender, receiver) message.
+    pub msg_bytes: usize,
+    /// Rounds to simulate (statistics accumulate per sender per round).
+    pub rounds: usize,
+    /// Model bidirectional load (ping-pong pipeline in flight both ways):
+    /// adds the ACK-delay term for stacks without high-priority ACKs.
+    pub bidirectional: bool,
+    pub seed: u64,
+}
+
+/// Results of a run.
+#[derive(Debug, Clone)]
+pub struct M2nStats {
+    /// Per-sender per-round dispatch latency (seconds).
+    pub latency: Histogram,
+    /// Goodput per sender GPU, bytes/s (total bytes sent / busy time).
+    pub throughput: f64,
+}
+
+const PROPAGATION: f64 = 2e-6;
+
+/// Run the microbenchmark and return latency/throughput statistics.
+pub fn simulate_m2n(sc: &M2nScenario) -> M2nStats {
+    let p = &sc.profile;
+    let mut rng = SimRng::new(sc.seed);
+    let mut latency = Histogram::new();
+
+    // busy-until per receiver NIC (seconds).
+    let mut recv_busy = vec![0.0f64; sc.receivers];
+    // busy-until per sender NIC.
+    let mut send_busy = vec![0.0f64; sc.senders];
+
+    let mut clock = 0.0f64; // round start
+    let mut total_busy = 0.0f64;
+    let wire = p.wire_time(sc.msg_bytes);
+    // Effective per-receiver incast slowdown this round: with M senders
+    // converging on each receiver, serialization plus penalty.
+    let incast_factor = 1.0 + p.incast_penalty * (sc.senders.saturating_sub(1)) as f64;
+
+    // GPU-sync interference grows with fan-in for stacks that synchronize
+    // the device (absent in RDMA-direct stacks).
+    let sync_pressure = if p.sync_overhead > 0.0 {
+        1.0 + 0.5 * ((sc.receivers as f64 / 8.0) - 1.0).max(0.0)
+    } else {
+        1.0
+    };
+
+    struct Msg {
+        sender: usize,
+        rx: usize,
+        head_arrive: f64,
+    }
+
+    let mut msgs: Vec<Msg> = Vec::with_capacity(sc.senders * sc.receivers);
+    for _ in 0..sc.rounds {
+        // --- sender side: compute each message's arrival at its receiver ---
+        msgs.clear();
+        for s in 0..sc.senders {
+            let mut t = clock;
+            let mut ops_in_batch = 0usize;
+            for r in 0..sc.receivers {
+                // Group setup applies at the start of every batch of ops
+                // (NCCL processes p2p groups in batches of <= 8).
+                if ops_in_batch == 0 && p.group_setup > 0.0 {
+                    t += p.group_setup;
+                }
+                ops_in_batch += 1;
+                if ops_in_batch >= p.group_batch {
+                    ops_in_batch = 0;
+                }
+
+                // Post (CPU) + proxy copy (GPU->CPU staging on the sender).
+                t += p.post_overhead + p.copy_per_byte * sc.msg_bytes as f64;
+
+                // Sender NIC serialization.
+                let nic_start = t.max(send_busy[s]);
+                send_busy[s] = nic_start + wire;
+
+                // Cut-through: the head of the message reaches the receiver
+                // after propagation; the receiver NIC's serialization window
+                // overlaps the sender's.
+                msgs.push(Msg {
+                    sender: s,
+                    rx: (s + r) % sc.receivers,
+                    head_arrive: nic_start + PROPAGATION,
+                });
+            }
+        }
+
+        // --- receiver side: FIFO service in arrival order ---
+        msgs.sort_by(|a, b| a.head_arrive.total_cmp(&b.head_arrive));
+        let mut last_delivery = vec![clock; sc.senders];
+        for m in &msgs {
+            let jit = if p.jitter_sigma > 0.0 {
+                rng.lognormal_median(1.0, p.jitter_sigma * sync_pressure)
+            } else {
+                1.0
+            };
+            let rx_start = m.head_arrive.max(recv_busy[m.rx]);
+            // Proxy stacks copy CPU->GPU on the receive side as well.
+            let service =
+                (wire * incast_factor + p.copy_per_byte * sc.msg_bytes as f64) * jit;
+            let rx_done = rx_start + service;
+            recv_busy[m.rx] = rx_done;
+
+            // Receiver-side completion: CQ poll / proxy delivery + sync.
+            let mut done = rx_done + p.recv_overhead + p.sync_overhead;
+
+            // ACK handling under bidirectional load.
+            if sc.bidirectional {
+                done += p.ack_delay * sc.senders as f64;
+            }
+
+            // Heavy-tailed stall? A GPU-sync/OS stall halts the proxy
+            // progress thread with the rest of the group queued behind it,
+            // so its impact scales with the outstanding-op pressure — this
+            // is the "instability exacerbates at higher percentiles when
+            // scaling to 32 receivers" effect of Figure 5(b).
+            if p.stall_prob > 0.0 && rng.chance(p.stall_prob) {
+                done += rng.pareto(p.stall_scale * sync_pressure, p.stall_alpha);
+            }
+
+            last_delivery[m.sender] = last_delivery[m.sender].max(done);
+        }
+
+        let mut round_end = clock;
+        for &d in &last_delivery {
+            latency.record(d - clock);
+            round_end = round_end.max(d);
+        }
+        total_busy += round_end - clock;
+        clock = round_end;
+    }
+
+    let bytes_per_sender = (sc.msg_bytes * sc.receivers * sc.rounds) as f64;
+    M2nStats {
+        latency,
+        throughput: if total_busy > 0.0 {
+            bytes_per_sender / total_busy
+        } else {
+            0.0
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::m2n::LibraryKind;
+
+    #[test]
+    fn latency_grows_with_receivers() {
+        let mk = |n| {
+            simulate_m2n(&M2nScenario {
+                profile: LibraryProfile::of(LibraryKind::MegaScale),
+                senders: 1,
+                receivers: n,
+                msg_bytes: 128 * 1024,
+                rounds: 100,
+                bidirectional: false,
+                seed: 1,
+            })
+            .latency
+            .median()
+        };
+        assert!(mk(8) < mk(16));
+        assert!(mk(16) < mk(32));
+    }
+
+    #[test]
+    fn latency_grows_with_size() {
+        let mk = |b| {
+            simulate_m2n(&M2nScenario {
+                profile: LibraryProfile::of(LibraryKind::Nccl),
+                senders: 8,
+                receivers: 8,
+                msg_bytes: b,
+                rounds: 100,
+                bidirectional: false,
+                seed: 1,
+            })
+            .latency
+            .median()
+        };
+        assert!(mk(16 * 1024) < mk(512 * 1024));
+    }
+
+    #[test]
+    fn bidirectional_hurts_nccl_more() {
+        let run = |kind, bidir| {
+            simulate_m2n(&M2nScenario {
+                profile: LibraryProfile::of(kind),
+                senders: 8,
+                receivers: 8,
+                msg_bytes: 256 * 1024,
+                rounds: 200,
+                bidirectional: bidir,
+                seed: 5,
+            })
+            .latency
+            .median()
+        };
+        let nccl_penalty = run(LibraryKind::Nccl, true) / run(LibraryKind::Nccl, false);
+        let ours_penalty =
+            run(LibraryKind::MegaScale, true) / run(LibraryKind::MegaScale, false);
+        assert!(nccl_penalty > ours_penalty, "{nccl_penalty} vs {ours_penalty}");
+    }
+
+    #[test]
+    fn sender_nic_serializes() {
+        // One sender to 32 receivers of 1MB each cannot be faster than
+        // 32 MB at line rate.
+        let s = simulate_m2n(&M2nScenario {
+            profile: LibraryProfile::of(LibraryKind::Perftest),
+            senders: 1,
+            receivers: 32,
+            msg_bytes: 1024 * 1024,
+            rounds: 20,
+            bidirectional: false,
+            seed: 2,
+        });
+        let floor = 31.0 * 1024.0 * 1024.0 / 25e9; // 31 msgs serialized + last overlaps
+        assert!(s.latency.median() >= floor);
+    }
+}

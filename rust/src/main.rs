@@ -1,0 +1,245 @@
+//! `msi` — the MegaScale-Infer command-line launcher.
+//!
+//! ```text
+//! msi plan      --model mixtral --attention-gpu ampere [--expert-gpu l40s]
+//!               [--slo-ms 150] [--avg-seq 730] [--all]
+//! msi simulate  --model mixtral --gpu ampere [--requests 512] [--baselines]
+//! msi serve     --artifacts artifacts [--micro-batches 2] [--requests 16]
+//! msi m2n       --library megascale|nccl|perftest [--senders 8]
+//!               [--receivers 8] [--size-kib 256] [--rounds 1000]
+//! msi hardware
+//! msi trace     --out trace.jsonl [--requests 1000] [--seed 42]
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use megascale_infer::baselines::{best_under_slo, minimal_deployment, BaselineKind};
+use megascale_infer::config::{gpu_catalog, ClusterSpec, GpuKind, ModelConfig, NodeSpec};
+use megascale_infer::coordinator::RuntimeInstance;
+use megascale_infer::m2n::{simulate_m2n, LibraryKind, LibraryProfile, M2nScenario};
+use megascale_infer::plan::PlanSearcher;
+use megascale_infer::runtime::ServingEngine;
+use megascale_infer::util::cli::Args;
+use megascale_infer::workload::{Trace, WorkloadSpec};
+
+const USAGE: &str = "usage: msi <plan|simulate|serve|m2n|hardware|trace> [--options]
+run `msi help` or see README.md for details";
+
+fn parse_model(name: &str) -> Result<ModelConfig> {
+    Ok(match name.to_lowercase().as_str() {
+        "mixtral" | "mixtral-8x22b" => ModelConfig::mixtral_8x22b(),
+        "dbrx" => ModelConfig::dbrx(),
+        "scaled-moe" | "scaled_moe" | "scaled" => ModelConfig::scaled_moe(),
+        "tiny" => ModelConfig::tiny(),
+        other => bail!("unknown model {other}"),
+    })
+}
+
+fn parse_gpu(name: &str) -> Result<GpuKind> {
+    Ok(match name.to_lowercase().as_str() {
+        "ampere" | "a100" => GpuKind::Ampere80G,
+        "h20" => GpuKind::H20,
+        "l40s" => GpuKind::L40S,
+        "a800" => GpuKind::A800,
+        "h800" => GpuKind::H800,
+        "l20" => GpuKind::L20,
+        other => bail!("unknown gpu {other}"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["all", "baselines"])?;
+    match args.subcommand.as_str() {
+        "plan" => cmd_plan(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "m2n" => cmd_m2n(&args),
+        "hardware" => cmd_hardware(),
+        "trace" => cmd_trace(&args),
+        "" | "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other}\n{USAGE}"),
+    }
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let model = parse_model(&args.str_or("model", "mixtral"))?;
+    let a = parse_gpu(&args.str_or("attention-gpu", "ampere"))?;
+    let e = match args.get("expert-gpu") {
+        Some(g) => parse_gpu(g)?,
+        None => a,
+    };
+    let cluster = ClusterSpec {
+        attention: NodeSpec {
+            gpu: a,
+            gpus_per_node: 8,
+            nodes: None,
+        },
+        expert: NodeSpec {
+            gpu: e,
+            gpus_per_node: 8,
+            nodes: None,
+        },
+    };
+    let mut searcher = PlanSearcher::new(model, cluster, args.f64_or("avg-seq", 730.0)?);
+    searcher.limits.slo = args.f64_or("slo-ms", 150.0)? / 1000.0;
+    if args.flag("all") {
+        for p in searcher.search_all() {
+            println!("{}", p.to_json());
+        }
+    } else {
+        match searcher.search() {
+            Some(p) => println!("{}", p.to_json()),
+            None => bail!("no feasible plan"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let model = parse_model(&args.str_or("model", "mixtral"))?;
+    let cluster = ClusterSpec::homogeneous(parse_gpu(&args.str_or("gpu", "ampere"))?);
+    let requests = args.usize_or("requests", 512)?;
+    let seed = args.u64_or("seed", 42)?;
+    let spec = WorkloadSpec::default();
+    let searcher = PlanSearcher::new(model.clone(), cluster.clone(), spec.avg_seq_len());
+    let plan = searcher
+        .search()
+        .ok_or_else(|| anyhow::anyhow!("no feasible plan"))?;
+    let reqs = spec.generate(requests, seed);
+    let inst = RuntimeInstance::new(model.clone(), cluster.clone(), plan.clone());
+    let rep = inst.simulate(&reqs);
+    println!(
+        "MegaScale-Infer  plan: tp_a={} tp_e={} n_a={} m={} B={}",
+        plan.tp_a, plan.tp_e, plan.n_a, plan.m, plan.global_batch
+    );
+    println!(
+        "  throughput {:.1} tok/s | per-GPU {:.2} tok/s/GPU | TPOT p50 {:.1} ms p99 {:.1} ms",
+        rep.throughput,
+        rep.per_gpu_throughput,
+        rep.tpot.median() * 1e3,
+        rep.tpot.p99() * 1e3
+    );
+    if args.flag("baselines") {
+        for kind in [BaselineKind::Vllm, BaselineKind::TrtLlm] {
+            let dep = minimal_deployment(kind, &model, &cluster);
+            if let Some(m) = best_under_slo(&dep, &model, &cluster, spec.avg_seq_len(), 0.150) {
+                println!(
+                    "{:>14}  tp={} pp={} B={} | per-GPU {:.2} tok/s/GPU | TPOT {:.1} ms",
+                    kind.name(),
+                    dep.tp,
+                    dep.pp,
+                    m.batch,
+                    m.per_gpu_throughput,
+                    m.tpot * 1e3
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let m = args.usize_or("micro-batches", 2)?;
+    let n = args.usize_or("requests", 16)?;
+    let seed = args.u64_or("seed", 42)?;
+    let mut engine = ServingEngine::load(&artifacts, m)?;
+    let spec = WorkloadSpec {
+        median_input: 12.0,
+        median_output: 16.0,
+        sigma: 0.4,
+        arrival_rate: None,
+        max_len: engine.model().max_seq,
+    };
+    let reqs = spec.generate(n, seed);
+    let rep = engine.serve(&reqs)?;
+    println!(
+        "served {} requests, {} tokens in {:.2}s  ({:.1} tok/s)",
+        rep.completed, rep.output_tokens, rep.elapsed, rep.throughput
+    );
+    println!(
+        "TPOT p50 {:.1} ms p99 {:.1} ms | attention {:.2}s expert {:.2}s coordinator {:.2}s",
+        rep.tpot.median() * 1e3,
+        rep.tpot.p99() * 1e3,
+        rep.attn_time,
+        rep.expert_time,
+        rep.coord_time
+    );
+    Ok(())
+}
+
+fn cmd_m2n(args: &Args) -> Result<()> {
+    let kind = match args.str_or("library", "megascale").to_lowercase().as_str() {
+        "megascale" | "ours" => LibraryKind::MegaScale,
+        "nccl" => LibraryKind::Nccl,
+        "perftest" => LibraryKind::Perftest,
+        other => bail!("unknown library {other}"),
+    };
+    let senders = args.usize_or("senders", 8)?;
+    let receivers = args.usize_or("receivers", 8)?;
+    let size_kib = args.usize_or("size-kib", 256)?;
+    let stats = simulate_m2n(&M2nScenario {
+        profile: LibraryProfile::of(kind),
+        senders,
+        receivers,
+        msg_bytes: size_kib * 1024,
+        rounds: args.usize_or("rounds", 1000)?,
+        bidirectional: false,
+        seed: args.u64_or("seed", 42)?,
+    });
+    println!(
+        "{:?} M={senders} N={receivers} size={size_kib}KiB: \
+         median {:.1} us  p99 {:.1} us  throughput {:.2} GB/s",
+        kind,
+        stats.latency.median() * 1e6,
+        stats.latency.p99() * 1e6,
+        stats.throughput / 1e9
+    );
+    Ok(())
+}
+
+fn cmd_hardware() -> Result<()> {
+    println!(
+        "{:<12} {:>6} {:>6} {:>9} {:>9} | {:>7} {:>9} {:>9}",
+        "GPU", "price", "GB", "GB/s", "TFLOPS", "GB/$", "GB/s/$", "TFLOPS/$"
+    );
+    for g in gpu_catalog() {
+        println!(
+            "{:<12} {:>6.2} {:>6.0} {:>9.1} {:>9.1} | {:>7.1} {:>9.1} {:>9.1}",
+            g.name,
+            g.price,
+            g.mem_gb,
+            g.mem_bw_gbps,
+            g.tflops,
+            g.gb_per_cost(),
+            g.bw_per_cost(),
+            g.tflops_per_cost()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let out = PathBuf::from(
+        args.get("out")
+            .ok_or_else(|| anyhow::anyhow!("--out is required"))?,
+    );
+    let trace = Trace::new(
+        WorkloadSpec::default().generate(args.usize_or("requests", 1000)?, args.u64_or("seed", 42)?),
+    );
+    trace.save(&out)?;
+    let s = trace.stats();
+    println!(
+        "wrote {} requests to {} (median in/out {}/{})",
+        s.count,
+        out.display(),
+        s.median_input,
+        s.median_output
+    );
+    Ok(())
+}

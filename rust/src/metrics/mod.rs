@@ -1,0 +1,113 @@
+//! Lightweight metrics: streaming histograms with percentile queries,
+//! throughput counters, and utilization gauges.
+//!
+//! Used by both the discrete-event simulators (latency distributions for the
+//! M2N figures) and the real PJRT serving path (TPOT / throughput report).
+
+mod histogram;
+
+pub use histogram::Histogram;
+
+/// Simple wall-or-virtual-clock throughput counter.
+#[derive(Debug, Default, Clone)]
+pub struct Throughput {
+    events: u64,
+    /// Weighted units (e.g. tokens, bytes).
+    units: f64,
+    start: Option<f64>,
+    end: f64,
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `units` of work completed at time `now` (seconds).
+    pub fn record(&mut self, now: f64, units: f64) {
+        if self.start.is_none() {
+            self.start = Some(now);
+        }
+        self.end = self.end.max(now);
+        self.events += 1;
+        self.units += units;
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    pub fn units(&self) -> f64 {
+        self.units
+    }
+
+    /// Units per second over the observed window; 0 if the window is empty.
+    pub fn rate(&self) -> f64 {
+        match self.start {
+            Some(s) if self.end > s => self.units / (self.end - s),
+            _ => 0.0,
+        }
+    }
+}
+
+/// Busy-time tracker for a resource: accumulates busy intervals and reports
+/// utilization over a horizon. Used for per-node GPU utilization reports.
+#[derive(Debug, Default, Clone)]
+pub struct Utilization {
+    busy: f64,
+    horizon: f64,
+}
+
+impl Utilization {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_busy(&mut self, dur: f64) {
+        self.busy += dur;
+    }
+
+    pub fn set_horizon(&mut self, t: f64) {
+        self.horizon = self.horizon.max(t);
+    }
+
+    /// Fraction of the horizon spent busy, clamped to [0, 1].
+    pub fn fraction(&self) -> f64 {
+        if self.horizon <= 0.0 {
+            0.0
+        } else {
+            (self.busy / self.horizon).clamp(0.0, 1.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_rate() {
+        let mut t = Throughput::new();
+        t.record(0.0, 10.0);
+        t.record(1.0, 10.0);
+        t.record(2.0, 10.0);
+        assert_eq!(t.events(), 3);
+        assert!((t.rate() - 15.0).abs() < 1e-9); // 30 units over 2 s
+    }
+
+    #[test]
+    fn throughput_empty() {
+        let t = Throughput::new();
+        assert_eq!(t.rate(), 0.0);
+    }
+
+    #[test]
+    fn utilization_clamps() {
+        let mut u = Utilization::new();
+        u.add_busy(5.0);
+        u.set_horizon(4.0);
+        assert_eq!(u.fraction(), 1.0);
+        u.set_horizon(10.0);
+        assert_eq!(u.fraction(), 0.5);
+    }
+}

@@ -1,0 +1,137 @@
+//! Attention-node time model: `T_a = k1·b_a + k2` (paper §4.2).
+//!
+//! Per MoE layer, an attention node runs (Table 2): the QKV projection, the
+//! attention core (which streams the KV cache of every request — the
+//! memory-intensive part), the output projection, gating (negligible), and a
+//! TP all-reduce. Every term is linear in the micro-batch size `b_a` except
+//! the weight-load floor, which is constant — hence the affine fit the paper
+//! obtains by profiling.
+
+use crate::config::{GpuSpec, ModelConfig, DTYPE_BYTES};
+
+use super::gemm::{table2_gemms, GpuPerf};
+
+/// Affine per-layer attention time model.
+#[derive(Debug, Clone)]
+pub struct AttentionModel {
+    /// Marginal seconds per token (`k1`).
+    pub k1: f64,
+    /// Fixed seconds per layer (`k2`): weight loads + launches + TP latency.
+    pub k2: f64,
+    /// TP degree this model was built for.
+    pub tp: usize,
+}
+
+impl AttentionModel {
+    /// Derive `k1`, `k2` from hardware specs and model shapes.
+    ///
+    /// `avg_seq` is the average sequence length `s`: the KV-cache scan per
+    /// token of batch is proportional to `s` (paper: "KV cache access time
+    /// is nearly proportional to `b_a·s`").
+    pub fn new(model: &ModelConfig, gpu: &GpuSpec, tp: usize, avg_seq: f64) -> Self {
+        let perf = GpuPerf::from_spec(gpu);
+        let h = model.hidden as f64;
+        let g = model.gqa_group() as f64;
+        let tpf = tp as f64;
+
+        // --- marginal (per-token) cost k1 ---
+        // GEMM activations: the projections add m·(k+n) bytes and 2·m·k·n
+        // flops per token; in the decode regime these GEMMs are
+        // memory-bound, so the marginal cost is the activation traffic plus
+        // the compute time per token, whichever roofline arm dominates.
+        // We evaluate the exact roofline at two batch sizes to extract the
+        // slope (affine by construction).
+        let t = |b: f64| {
+            let (qkv, out, _, _) = table2_gemms(model, b, 1.0, tp, 1);
+            perf.gemm_time(&qkv) + perf.gemm_time(&out)
+        };
+        let gemm_slope = (t(512.0) - t(256.0)) / 256.0;
+
+        // KV-cache scan: each token of the batch reads its whole cache,
+        // `kv_bytes_per_token · s / L` bytes per layer, sharded over TP.
+        let kv_bytes_per_layer_token =
+            model.kv_bytes_per_token() / model.layers as f64 * avg_seq / tpf;
+        let kv_slope = perf.mem_time(kv_bytes_per_layer_token);
+
+        // Attention-core flops (QK^T + PV): 4·s·h per token, rarely binding
+        // during decode but included for completeness.
+        let core_flops_slope = 4.0 * avg_seq * h / tpf / (perf.flops * perf.mfu_cap);
+
+        // TP all-reduce on the output: b_a·h·2 bytes of wire (paper:
+        // O(b_a·h·(tp-1)/tp)); the fused all-gather+GEMM kernel (§6)
+        // overlaps ~50%. Only the per-byte wire cost scales with the batch;
+        // the per-step latency is fixed per layer and lands in k2.
+        let ar_slope = if tp > 1 {
+            2.0 * (tpf - 1.0) / tpf * h * DTYPE_BYTES / perf.intra_bw * 0.5
+        } else {
+            0.0
+        };
+
+        // Gating GEMM (h × E) is ~E/h' the size of an FFN GEMM — noise, but
+        // the fused gating kernel (§6) makes it one launch.
+        let gate_slope = 2.0 * h * model.experts as f64 / (perf.flops * perf.mfu_cap);
+
+        let k1 = gemm_slope + kv_slope + core_flops_slope + ar_slope + gate_slope;
+
+        // --- fixed cost k2 ---
+        // Weight panels streamed once per layer per micro-batch:
+        // QKV h·h(1+2/g)/tp + output h·h/tp, plus kernel launches.
+        let weight_bytes = (h * h * (1.0 + 2.0 / g) + h * h) / tpf * DTYPE_BYTES;
+        let launches = 4.0 * perf.launch_overhead; // qkv, core, out, gating (fused)
+        let ar_lat = if tp > 1 { 2.0 * (tpf - 1.0) * 1.5e-6 * 0.5 } else { 0.0 };
+        let k2 = perf.mem_time(weight_bytes) + launches + ar_lat;
+
+        Self { k1, k2, tp }
+    }
+
+    /// `T_a` for a micro-batch of `b_a` tokens (one layer, seconds).
+    pub fn time(&self, b_a: f64) -> f64 {
+        self.k1 * b_a + self.k2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuKind;
+
+    fn mk(tp: usize, s: f64) -> AttentionModel {
+        AttentionModel::new(
+            &ModelConfig::mixtral_8x22b(),
+            &GpuSpec::of(GpuKind::Ampere80G),
+            tp,
+            s,
+        )
+    }
+
+    #[test]
+    fn affine() {
+        let m = mk(4, 730.0);
+        let d1 = m.time(100.0) - m.time(50.0);
+        let d2 = m.time(150.0) - m.time(100.0);
+        assert!((d1 - d2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn longer_sequences_cost_more() {
+        assert!(mk(4, 2000.0).k1 > mk(4, 500.0).k1);
+    }
+
+    #[test]
+    fn tp_shards_fixed_cost() {
+        // More TP => less weight per GPU => smaller k2.
+        assert!(mk(8, 730.0).k2 < mk(1, 730.0).k2);
+    }
+
+    #[test]
+    fn decode_iteration_latency_plausible() {
+        // One full decode step (all 56 layers) for a 128-token micro-batch
+        // on tp=8 Ampere should land in the single-digit-millisecond to
+        // tens-of-ms range — the regime that makes a 150 ms TPOT SLO
+        // meaningful for m~3 micro-batches.
+        let m = mk(8, 730.0);
+        let per_layer = m.time(128.0);
+        let step = per_layer * 56.0;
+        assert!(step > 1e-3 && step < 0.15, "step {step}s out of range");
+    }
+}

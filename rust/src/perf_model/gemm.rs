@@ -1,0 +1,172 @@
+//! Roofline GEMM timing and the GEMM inventory of paper Table 2.
+
+use crate::config::{GpuSpec, ModelConfig, DTYPE_BYTES};
+
+/// An `m × k` by `k × n` GEMM.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GemmShape {
+    pub m: f64,
+    pub k: f64,
+    pub n: f64,
+}
+
+impl GemmShape {
+    pub fn new(m: f64, k: f64, n: f64) -> Self {
+        Self { m, k, n }
+    }
+
+    /// Floating-point operations: `2·m·k·n`.
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m * self.k * self.n
+    }
+
+    /// Bytes moved from HBM: weights `k·n` (the dominant term during
+    /// decoding, §2.3) plus activations in/out `m·(k+n)`.
+    pub fn bytes(&self) -> f64 {
+        (self.k * self.n + self.m * (self.k + self.n)) * DTYPE_BYTES
+    }
+
+    /// Arithmetic intensity in flops/byte.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops() / self.bytes()
+    }
+}
+
+/// Effective GPU rates used by the roofline timing.
+///
+/// `mfu_cap` and `mem_eff` account for achievable (rather than peak) rates:
+/// well-tuned decode GEMM kernels reach ~75-85% of peak on both axes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuPerf {
+    /// Peak dense bf16 flops/s.
+    pub flops: f64,
+    /// Peak HBM bytes/s.
+    pub mem_bw: f64,
+    /// Fraction of peak compute achievable (MFU ceiling).
+    pub mfu_cap: f64,
+    /// Fraction of peak bandwidth achievable.
+    pub mem_eff: f64,
+    /// Fixed per-kernel launch overhead (seconds).
+    pub launch_overhead: f64,
+    /// Intra-node interconnect bytes/s (NVLink / PCIe) for TP collectives.
+    pub intra_bw: f64,
+}
+
+impl GpuPerf {
+    pub fn from_spec(spec: &GpuSpec) -> Self {
+        Self {
+            flops: spec.tflops * 1e12,
+            mem_bw: spec.mem_bw_gbps * 1e9,
+            mfu_cap: 0.80,
+            mem_eff: 0.85,
+            launch_overhead: 4e-6,
+            intra_bw: spec.intra_node_gbps * 1e9,
+        }
+    }
+
+    /// Roofline time for one GEMM: `max(compute, memory)` + launch.
+    pub fn gemm_time(&self, g: &GemmShape) -> f64 {
+        let compute = g.flops() / (self.flops * self.mfu_cap);
+        let memory = g.bytes() / (self.mem_bw * self.mem_eff);
+        compute.max(memory) + self.launch_overhead
+    }
+
+    /// Time to stream `bytes` from HBM (e.g. the KV cache scan).
+    pub fn mem_time(&self, bytes: f64) -> f64 {
+        bytes / (self.mem_bw * self.mem_eff)
+    }
+
+    /// Ring all-reduce time for `bytes` per GPU across `tp` GPUs over the
+    /// intra-node interconnect: `2·(tp-1)/tp · bytes / bw` plus a small
+    /// per-step latency. The paper's fused all-gather+GEMM kernels (§6)
+    /// partially overlap this; `overlap` is the hidden fraction.
+    pub fn allreduce_time(&self, bytes: f64, tp: usize, overlap: f64) -> f64 {
+        if tp <= 1 {
+            return 0.0;
+        }
+        let steps = 2.0 * (tp as f64 - 1.0);
+        let wire = steps / tp as f64 * bytes / self.intra_bw;
+        let lat = steps * 1.5e-6;
+        (wire + lat) * (1.0 - overlap)
+    }
+}
+
+/// The four GEMMs of paper Table 2 for given micro-batch sizes and TP.
+///
+/// Returns `(qkv_project, attn_output, ffn_input, ffn_output)`.
+pub fn table2_gemms(
+    model: &ModelConfig,
+    b_a: f64,
+    b_e: f64,
+    tp_a: usize,
+    tp_e: usize,
+) -> (GemmShape, GemmShape, GemmShape, GemmShape) {
+    let h = model.hidden as f64;
+    let h2 = model.intermediate as f64;
+    let g = model.gqa_group() as f64;
+    let tpa = tp_a as f64;
+    let tpe = tp_e as f64;
+    (
+        // QKV Project: (b_a, h) x (h, h(1 + 2/g)/tp_a)
+        GemmShape::new(b_a, h, h * (1.0 + 2.0 / g) / tpa),
+        // Attn Output: (b_a, h/tp_a) x (h/tp_a, h)
+        GemmShape::new(b_a, h / tpa, h),
+        // FFN Input: (b_e, h) x (h, h'/tp_e)
+        GemmShape::new(b_e, h, h2 / tpe),
+        // FFN Output: (b_e, h'/tp_e) x (h'/tp_e, h)
+        GemmShape::new(b_e, h2 / tpe, h),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuKind, GpuSpec};
+
+    #[test]
+    fn flops_and_bytes() {
+        let g = GemmShape::new(4.0, 8.0, 16.0);
+        assert_eq!(g.flops(), 2.0 * 4.0 * 8.0 * 16.0);
+        assert_eq!(g.bytes(), (8.0 * 16.0 + 4.0 * (8.0 + 16.0)) * 2.0);
+    }
+
+    #[test]
+    fn roofline_crossover_near_spec_ratio() {
+        // A GEMM with m >> F/B must be compute-bound; m << F/B memory-bound.
+        let perf = GpuPerf::from_spec(&GpuSpec::of(GpuKind::Ampere80G));
+        let big = GemmShape::new(4096.0, 8192.0, 8192.0);
+        let small = GemmShape::new(4.0, 8192.0, 8192.0);
+        let t_big = perf.gemm_time(&big) - perf.launch_overhead;
+        let t_small = perf.gemm_time(&small) - perf.launch_overhead;
+        // big: dominated by compute term
+        assert!((t_big - big.flops() / (perf.flops * perf.mfu_cap)).abs() / t_big < 1e-6);
+        // small: dominated by memory term
+        assert!((t_small - small.bytes() / (perf.mem_bw * perf.mem_eff)).abs() / t_small < 1e-6);
+    }
+
+    #[test]
+    fn table2_shapes_match_paper() {
+        let m = ModelConfig::mixtral_8x22b();
+        let (qkv, out, fin, fout) = table2_gemms(&m, 128.0, 256.0, 2, 4);
+        // QKV: (128, 6144) x (6144, 6144*(1+2/6)/2)
+        assert_eq!(qkv.m, 128.0);
+        assert_eq!(qkv.k, 6144.0);
+        assert!((qkv.n - 6144.0 * (1.0 + 2.0 / 6.0) / 2.0).abs() < 1e-9);
+        assert_eq!(out.k, 6144.0 / 2.0);
+        assert_eq!(fin.n, 16384.0 / 4.0);
+        assert_eq!(fout.m, 256.0);
+        assert_eq!(fout.k, 16384.0 / 4.0);
+        assert_eq!(fout.n, 6144.0);
+    }
+
+    #[test]
+    fn allreduce_zero_for_tp1() {
+        let perf = GpuPerf::from_spec(&GpuSpec::of(GpuKind::H20));
+        assert_eq!(perf.allreduce_time(1e6, 1, 0.0), 0.0);
+        assert!(perf.allreduce_time(1e6, 8, 0.0) > 0.0);
+        // Overlap reduces the cost.
+        assert!(
+            perf.allreduce_time(1e6, 8, 0.5) < perf.allreduce_time(1e6, 8, 0.0)
+        );
+    }
+}

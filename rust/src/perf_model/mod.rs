@@ -1,0 +1,105 @@
+//! Analytical performance model for disaggregated MoE serving (paper §4.2).
+//!
+//! The paper models per-micro-batch times as affine functions obtained by
+//! profiling: `T_a = k1·b_a + k2`, `T_e = k3·b_e + k4`, and the M2N
+//! communication time `T_c` from a bandwidth-utilization curve (Eq. 6).
+//! Since we have no GPUs to profile, the `k_i` are *derived* from hardware
+//! specifications (Table 3) and the GEMM shapes of Table 2 via the roofline
+//! model — the same structure the paper fits empirically.
+//!
+//! All times are in seconds, per **one MoE layer** unless stated otherwise.
+
+mod attention;
+mod comm;
+mod expert;
+mod gemm;
+mod iteration;
+mod roofline;
+
+pub use attention::AttentionModel;
+pub use comm::{CommModel, bandwidth_util};
+pub use expert::ExpertModel;
+pub use gemm::{GemmShape, GpuPerf, table2_gemms};
+pub use iteration::{IterationModel, LatencyBreakdown};
+pub use roofline::{attention_utilization, ffn_utilization_dense, ffn_utilization_moe};
+
+use crate::config::{ClusterSpec, ModelConfig};
+
+/// Bundle of the per-module models for one deployment configuration.
+///
+/// This is the `SIMULATE` substrate of Algorithm 1 and also drives the
+/// virtual-time coordinator backend.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    pub attention: AttentionModel,
+    pub expert: ExpertModel,
+    pub comm: CommModel,
+    pub model: ModelConfig,
+}
+
+impl PerfModel {
+    /// Build the model for a given cluster + parallelism choice.
+    ///
+    /// * `tp_a`, `tp_e` — tensor-parallel degree inside attention / expert
+    ///   nodes.
+    /// * `avg_seq` — average sequence length `s` of the workload.
+    pub fn new(
+        model: &ModelConfig,
+        cluster: &ClusterSpec,
+        tp_a: usize,
+        tp_e: usize,
+        avg_seq: f64,
+    ) -> Self {
+        let attn_gpu = cluster.attention_gpu();
+        let exp_gpu = cluster.expert_gpu();
+        Self {
+            attention: AttentionModel::new(model, &attn_gpu, tp_a, avg_seq),
+            expert: ExpertModel::new(model, &exp_gpu, tp_e),
+            comm: CommModel::new(model, &attn_gpu, &exp_gpu, tp_a, tp_e),
+            model: model.clone(),
+        }
+    }
+
+    /// `T_a`: attention-node time for a micro-batch of `b_a` tokens (one layer).
+    pub fn t_a(&self, b_a: f64) -> f64 {
+        self.attention.time(b_a)
+    }
+
+    /// `T_e`: expert-node time for a micro-batch of `b_e` tokens (one layer).
+    pub fn t_e(&self, b_e: f64) -> f64 {
+        self.expert.time(b_e)
+    }
+
+    /// `T_c`: one-direction M2N communication time (Eq. 6).
+    pub fn t_c(&self, b_a: f64, b_e: f64) -> f64 {
+        self.comm.time(b_a, b_e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, GpuKind};
+
+    #[test]
+    fn times_monotone_in_batch() {
+        let model = ModelConfig::mixtral_8x22b();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        let pm = PerfModel::new(&model, &cluster, 4, 2, 730.0);
+        assert!(pm.t_a(64.0) < pm.t_a(256.0));
+        assert!(pm.t_e(64.0) < pm.t_e(256.0));
+        assert!(pm.t_c(64.0, 128.0) < pm.t_c(512.0, 1024.0));
+    }
+
+    #[test]
+    fn affine_structure() {
+        // T_a must be affine in b_a in the memory-bound regime the paper
+        // fits: T(2b) - T(b) == T(3b) - T(2b).
+        let model = ModelConfig::dbrx();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        let pm = PerfModel::new(&model, &cluster, 8, 2, 730.0);
+        let d1 = pm.t_a(64.0) - pm.t_a(32.0);
+        let d2 = pm.t_a(96.0) - pm.t_a(64.0);
+        assert!((d1 - d2).abs() < 1e-9, "attention time not affine");
+    }
+}

@@ -1,0 +1,79 @@
+//! GPU-utilization curves of paper Figure 1 and the closed forms of §2.3.
+//!
+//! * dense FFN:          `util = min(B/F · b, 1)`
+//! * MoE FFN:            `util = min(topk/#experts · B/F · b, 1)`
+//! * MegaScale-Infer FFN: the MoE curve with `b` replaced by the aggregated
+//!   batch `b · n_a · K / E` — disaggregation restores the dense slope.
+//! * decode attention:   pinned at the memory roofline regardless of batch
+//!   (each request scans its own KV cache, so batching does not increase
+//!   arithmetic intensity).
+
+use crate::config::GpuSpec;
+
+/// Dense-model FFN utilization at decode batch `b` (Fig 1a).
+pub fn ffn_utilization_dense(gpu: &GpuSpec, b: f64) -> f64 {
+    (b / gpu.roofline_batch()).min(1.0)
+}
+
+/// MoE FFN utilization at decode batch `b` with `top_k` of `experts`
+/// selected (Fig 1b): each expert sees only `b·K/E` tokens.
+pub fn ffn_utilization_moe(gpu: &GpuSpec, b: f64, top_k: usize, experts: usize) -> f64 {
+    let frac = top_k as f64 / experts as f64;
+    (frac * b / gpu.roofline_batch()).min(1.0)
+}
+
+/// Decode-attention utilization: the attention core is a batched GEMV over
+/// per-request KV caches, arithmetic intensity ~O(1) flops/byte, so the MFU
+/// ceiling is `AI · B / F` independent of the batch size. `ai` defaults to
+/// 1 flop/byte for bf16 GEMV (2 flops per 2-byte element).
+pub fn attention_utilization(gpu: &GpuSpec, ai: f64) -> f64 {
+    (ai * gpu.mem_bw_gbps * 1e9 / (gpu.tflops * 1e12)).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuKind;
+
+    fn a100() -> GpuSpec {
+        GpuSpec::of(GpuKind::Ampere80G)
+    }
+
+    #[test]
+    fn dense_saturates_at_roofline_batch() {
+        let g = a100();
+        let b = g.roofline_batch();
+        assert!(ffn_utilization_dense(&g, b * 0.5) < 1.0);
+        assert_eq!(ffn_utilization_dense(&g, b * 2.0), 1.0);
+    }
+
+    #[test]
+    fn moe_needs_e_over_k_larger_batch() {
+        // §2.3: Mixtral (K=2, E=8) at b=156 gives theoretical MFU 25%.
+        let g = a100();
+        let u = ffn_utilization_moe(&g, g.roofline_batch(), 2, 8);
+        assert!((u - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregation_restores_dense_curve() {
+        // MegaScale-Infer: n_a attention replicas aggregate to
+        // b_e = b·n_a·K/E; with n_a = E/K the dense curve is recovered.
+        let g = a100();
+        let b = 100.0;
+        let n_a = 4.0; // E/K = 8/2
+        let agg = b * n_a * 2.0 / 8.0;
+        assert_eq!(
+            ffn_utilization_dense(&g, agg),
+            ffn_utilization_dense(&g, b)
+        );
+    }
+
+    #[test]
+    fn attention_is_batch_independent_and_low() {
+        let g = a100();
+        let u = attention_utilization(&g, 1.0);
+        // 2039 GB/s / 312 TFLOPS ~ 0.65%.
+        assert!(u < 0.05, "attention util {u}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Heterogeneous deployment search (paper §4.3): enumerate GPU types for
+//! attention and expert pools, run Algorithm 1 for each pairing, and rank
+//! by throughput per normalized dollar.
+
+use crate::config::{gpu_catalog, ClusterSpec, GpuKind, ModelConfig, NodeSpec};
+
+use super::{DeploymentPlan, PlanSearcher, SearchLimits};
+
+/// Result of one hardware pairing.
+#[derive(Debug, Clone)]
+pub struct HeteroResult {
+    pub attention_gpu: GpuKind,
+    pub expert_gpu: GpuKind,
+    pub plan: DeploymentPlan,
+}
+
+/// Enumerate all (attention GPU, expert GPU) pairings from `kinds` and run
+/// the plan search for each. Results are sorted by throughput/$ descending.
+pub fn search_heterogeneous(
+    model: &ModelConfig,
+    kinds: &[GpuKind],
+    avg_seq: f64,
+    limits: &SearchLimits,
+) -> Vec<HeteroResult> {
+    let mut out = Vec::new();
+    for &a in kinds {
+        for &e in kinds {
+            let cluster = ClusterSpec {
+                attention: NodeSpec {
+                    gpu: a,
+                    gpus_per_node: 8,
+                    nodes: None,
+                },
+                expert: NodeSpec {
+                    gpu: e,
+                    gpus_per_node: 8,
+                    nodes: None,
+                },
+            };
+            let mut searcher = PlanSearcher::new(model.clone(), cluster, avg_seq);
+            searcher.limits = limits.clone();
+            if let Some(plan) = searcher.search() {
+                out.push(HeteroResult {
+                    attention_gpu: a,
+                    expert_gpu: e,
+                    plan,
+                });
+            }
+        }
+    }
+    out.sort_by(|x, y| {
+        y.plan
+            .metrics
+            .throughput_per_dollar
+            .total_cmp(&x.plan.metrics.throughput_per_dollar)
+    });
+    out
+}
+
+/// All Table 3 GPU kinds.
+pub fn table3_kinds() -> Vec<GpuKind> {
+    gpu_catalog()
+        .into_iter()
+        .map(|g| g.kind)
+        .filter(|k| *k != GpuKind::Ampere80G)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h20_l40s_pairing_beats_homogeneous_h20_or_l40s() {
+        // §4.3 intuition: H20 attention + L40S experts should beat both
+        // homogeneous options on throughput per dollar.
+        let model = ModelConfig::mixtral_8x22b();
+        let results = search_heterogeneous(
+            &model,
+            &[GpuKind::H20, GpuKind::L40S],
+            730.0,
+            &SearchLimits::default(),
+        );
+        assert!(!results.is_empty());
+        let tpd = |a: GpuKind, e: GpuKind| {
+            results
+                .iter()
+                .find(|r| r.attention_gpu == a && r.expert_gpu == e)
+                .map(|r| r.plan.metrics.throughput_per_dollar)
+        };
+        let hetero = tpd(GpuKind::H20, GpuKind::L40S).expect("hetero pairing feasible");
+        if let Some(h20) = tpd(GpuKind::H20, GpuKind::H20) {
+            assert!(hetero > h20, "hetero {hetero} vs H20 homo {h20}");
+        }
+        if let Some(l40s) = tpd(GpuKind::L40S, GpuKind::L40S) {
+            assert!(hetero > l40s, "hetero {hetero} vs L40S homo {l40s}");
+        }
+    }
+
+    #[test]
+    fn results_sorted_descending() {
+        let model = ModelConfig::dbrx();
+        let results = search_heterogeneous(
+            &model,
+            &[GpuKind::H20, GpuKind::L40S, GpuKind::A800],
+            730.0,
+            &SearchLimits::default(),
+        );
+        for w in results.windows(2) {
+            assert!(
+                w[0].plan.metrics.throughput_per_dollar
+                    >= w[1].plan.metrics.throughput_per_dollar
+            );
+        }
+    }
+}

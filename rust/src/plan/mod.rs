@@ -1,0 +1,284 @@
+//! Deployment plan search — paper Algorithm 1 (§4.2) plus the heterogeneous
+//! hardware enumeration of §4.3.
+//!
+//! Given the MoE model, workload characteristics (average sequence length),
+//! available hardware, and the TPOT SLO, the search picks:
+//!
+//! 1. tensor-parallel sizes `tp_a`, `tp_e` for attention / expert nodes,
+//! 2. the number of attention nodes `n_a` (BALANCE step, constraint 1),
+//! 3. the number of micro-batches `m` for the ping-pong pipeline,
+//! 4. the maximum global batch size `B` that meets the SLO (binary search
+//!    inside SIMULATE),
+//!
+//! and maximizes **throughput per unit cost**.
+
+mod heterogeneous;
+mod simulate;
+
+pub use heterogeneous::{search_heterogeneous, table3_kinds, HeteroResult};
+pub use simulate::{simulate_plan, PlanMetrics};
+
+use crate::config::{ClusterSpec, ModelConfig};
+use crate::perf_model::PerfModel;
+
+/// Search-space limits (paper: `N_m = 4`, GPUs per node in {1,2,4,8}).
+#[derive(Debug, Clone)]
+pub struct SearchLimits {
+    /// Max micro-batches per instance (`N_m`).
+    pub max_micro_batches: usize,
+    /// Min micro-batches considered (Algorithm 1 starts at 3; ablations use 1).
+    pub min_micro_batches: usize,
+    /// TPOT SLO in seconds (paper: 150 ms).
+    pub slo: f64,
+    /// Candidate TP degrees (subset of {1, 2, 4, 8} that divides node size).
+    pub tp_choices: Vec<usize>,
+    /// Upper bound on attention nodes to consider.
+    pub max_attention_nodes: usize,
+}
+
+impl Default for SearchLimits {
+    fn default() -> Self {
+        Self {
+            max_micro_batches: 4,
+            min_micro_batches: 3,
+            slo: 0.150,
+            tp_choices: vec![1, 2, 4, 8],
+            max_attention_nodes: 64,
+        }
+    }
+}
+
+/// A fully-specified deployment plan with its simulated metrics.
+#[derive(Debug, Clone)]
+pub struct DeploymentPlan {
+    pub model: String,
+    /// TP inside each attention node.
+    pub tp_a: usize,
+    /// TP inside each expert node.
+    pub tp_e: usize,
+    /// Number of attention (data-parallel) nodes.
+    pub n_a: usize,
+    /// Number of expert nodes (= number of experts `E`).
+    pub n_e: usize,
+    /// Micro-batches in the ping-pong pipeline.
+    pub m: usize,
+    /// Global batch size per instance.
+    pub global_batch: usize,
+    pub metrics: PlanMetrics,
+}
+
+impl DeploymentPlan {
+    pub fn total_gpus(&self) -> usize {
+        self.tp_a * self.n_a + self.tp_e * self.n_e
+    }
+
+    /// Micro-batch size per attention node (`b_a`).
+    pub fn b_a(&self) -> f64 {
+        self.global_batch as f64 / (self.m * self.n_a) as f64
+    }
+
+    /// Micro-batch size per expert node (`b_e`), from
+    /// `b_a·m·n_a = b_e·m·E/K = B`.
+    pub fn b_e(&self, model: &ModelConfig) -> f64 {
+        self.global_batch as f64 * model.top_k as f64
+            / (self.m * model.experts) as f64
+    }
+
+    /// JSON rendering for the CLI and experiment logs.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("model", self.model.as_str())
+            .set("tp_a", self.tp_a)
+            .set("tp_e", self.tp_e)
+            .set("n_a", self.n_a)
+            .set("n_e", self.n_e)
+            .set("m", self.m)
+            .set("global_batch", self.global_batch)
+            .set("total_gpus", self.total_gpus())
+            .set("metrics", self.metrics.to_json())
+    }
+}
+
+/// Algorithm 1 driver.
+pub struct PlanSearcher {
+    pub model: ModelConfig,
+    pub cluster: ClusterSpec,
+    pub limits: SearchLimits,
+    /// Average sequence length of the workload (`s`).
+    pub avg_seq: f64,
+}
+
+impl PlanSearcher {
+    pub fn new(model: ModelConfig, cluster: ClusterSpec, avg_seq: f64) -> Self {
+        Self {
+            model,
+            cluster,
+            limits: SearchLimits::default(),
+            avg_seq,
+        }
+    }
+
+    /// BALANCE (Algorithm 1 line 5): choose `n_a` so that `T_a ≈ T_e`.
+    ///
+    /// Paper: `n_a = (k1·E)/(k3·K)` from the affine slopes. We evaluate the
+    /// integer neighbours of the analytic optimum and keep the one with the
+    /// smallest imbalance at a reference batch.
+    pub fn balance(&self, tp_a: usize, tp_e: usize) -> usize {
+        let pm = PerfModel::new(&self.model, &self.cluster, tp_a, tp_e, self.avg_seq);
+        let e = self.model.experts as f64;
+        let k = self.model.top_k as f64;
+        let raw = (pm.attention.k1 * e) / (pm.expert.k3 * k);
+        let cand = [raw.floor().max(1.0) as usize, raw.ceil().max(1.0) as usize];
+        let b_a_ref = 512.0;
+        let imbalance = |n_a: usize| {
+            let b_e = b_a_ref * n_a as f64 * k / e;
+            (pm.t_a(b_a_ref) - pm.t_e(b_e)).abs()
+        };
+        let n_a = *cand
+            .iter()
+            .min_by(|a, b| imbalance(**a).total_cmp(&imbalance(**b)))
+            .unwrap();
+        n_a.min(self.limits.max_attention_nodes)
+    }
+
+    /// Feasibility (Algorithm 1 line 4): parameters must fit in GPU memory
+    /// with headroom for activations and (on attention nodes) the KV cache.
+    fn feasible(&self, tp_a: usize, tp_e: usize) -> bool {
+        let attn_gpu = self.cluster.attention_gpu();
+        let exp_gpu = self.cluster.expert_gpu();
+        let p_a = self.model.attn_param_bytes();
+        let p_e = self.model.expert_param_bytes();
+        tp_a as f64 * attn_gpu.mem_bytes() > p_a * 1.2
+            && tp_e as f64 * exp_gpu.mem_bytes() > p_e * 1.2
+            && tp_a <= attn_gpu.max_per_node
+            && tp_e <= exp_gpu.max_per_node
+    }
+
+    /// Run the full search; returns the best plan (max throughput/$) and
+    /// optionally all evaluated plans.
+    pub fn search(&self) -> Option<DeploymentPlan> {
+        self.search_all().into_iter().max_by(|a, b| {
+            a.metrics
+                .throughput_per_dollar
+                .total_cmp(&b.metrics.throughput_per_dollar)
+        })
+    }
+
+    /// All feasible plans with their metrics (for ablation studies).
+    pub fn search_all(&self) -> Vec<DeploymentPlan> {
+        let mut plans = Vec::new();
+        for &tp_e in &self.limits.tp_choices {
+            for &tp_a in &self.limits.tp_choices {
+                if !self.feasible(tp_a, tp_e) {
+                    continue;
+                }
+                let n_a = self.balance(tp_a, tp_e);
+                for m in self.limits.min_micro_batches..=self.limits.max_micro_batches {
+                    if let Some(plan) = self.evaluate(tp_a, tp_e, n_a, m) {
+                        plans.push(plan);
+                    }
+                }
+            }
+        }
+        plans
+    }
+
+    /// Evaluate one (tp_a, tp_e, n_a, m) point: binary-search the max global
+    /// batch under the SLO and return the plan with its metrics.
+    pub fn evaluate(
+        &self,
+        tp_a: usize,
+        tp_e: usize,
+        n_a: usize,
+        m: usize,
+    ) -> Option<DeploymentPlan> {
+        let pm = PerfModel::new(&self.model, &self.cluster, tp_a, tp_e, self.avg_seq);
+        let (global_batch, metrics) = simulate::max_batch_under_slo(
+            &pm,
+            &self.model,
+            &self.cluster,
+            tp_a,
+            tp_e,
+            n_a,
+            m,
+            self.avg_seq,
+            self.limits.slo,
+        )?;
+        Some(DeploymentPlan {
+            model: self.model.name.clone(),
+            tp_a,
+            tp_e,
+            n_a,
+            n_e: self.model.experts,
+            m,
+            global_batch,
+            metrics,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuKind;
+
+    fn searcher(model: ModelConfig) -> PlanSearcher {
+        PlanSearcher::new(
+            model,
+            ClusterSpec::homogeneous(GpuKind::Ampere80G),
+            730.0,
+        )
+    }
+
+    #[test]
+    fn finds_a_plan_for_each_paper_model() {
+        for model in ModelConfig::paper_models() {
+            let s = searcher(model.clone());
+            let plan = s.search().unwrap_or_else(|| panic!("no plan for {}", model.name));
+            assert!(plan.metrics.tpot <= 0.150 + 1e-9);
+            assert!(plan.metrics.throughput > 0.0);
+            assert!(plan.n_a >= 1);
+            assert!(plan.global_batch > 0);
+        }
+    }
+
+    #[test]
+    fn balance_equalizes_compute_times() {
+        let s = searcher(ModelConfig::mixtral_8x22b());
+        let n_a = s.balance(4, 2);
+        let pm = PerfModel::new(&s.model, &s.cluster, 4, 2, s.avg_seq);
+        // Evaluate in the compute-bound operating regime the plan search
+        // lands in (slope balance; the weight-load floors dominate only at
+        // small batches).
+        let b_a = 512.0;
+        let b_e = b_a * n_a as f64 * s.model.top_k as f64 / s.model.experts as f64;
+        let (ta, te) = (pm.t_a(b_a), pm.t_e(b_e));
+        let ratio = ta.max(te) / ta.min(te);
+        assert!(ratio < 1.5, "T_a={ta} T_e={te} imbalance {ratio}");
+    }
+
+    #[test]
+    fn infeasible_tp_rejected() {
+        // Mixtral attention params (~3.4 GB bf16 incl. all layers) fit on
+        // one 80GB GPU, but Scaled-MoE's expert on a 48GB L40S at tp=1 needs
+        // checking; construct an artificial failure: tiny GPU memory.
+        let s = searcher(ModelConfig::scaled_moe());
+        assert!(s.feasible(1, 1)); // 80GB fits both modules
+        let plans = s.search_all();
+        assert!(!plans.is_empty());
+        for p in &plans {
+            assert!(p.m >= 3 && p.m <= 4);
+        }
+    }
+
+    #[test]
+    fn best_plan_dominates_all_evaluated() {
+        let s = searcher(ModelConfig::dbrx());
+        let best = s.search().unwrap();
+        for p in s.search_all() {
+            assert!(
+                best.metrics.throughput_per_dollar >= p.metrics.throughput_per_dollar - 1e-12
+            );
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! SIMULATE (Algorithm 1 line 8): evaluate a candidate plan's iteration
+//! latency and throughput-per-dollar at a given global batch, and
+//! binary-search the maximum batch under the SLO and the KV-memory
+//! constraint (Eq. 7 and Eq. 8).
+
+use crate::config::{ClusterSpec, ModelConfig, DTYPE_BYTES};
+use crate::perf_model::{IterationModel, PerfModel};
+
+/// Simulated steady-state metrics of a deployment plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanMetrics {
+    /// Decode-iteration latency of the global batch == time per output
+    /// token, seconds (Eq. 5).
+    pub tpot: f64,
+    /// Tokens generated per second per instance (`B / T_total`).
+    pub throughput: f64,
+    /// Tokens/s per GPU — the homogeneous-deployment headline metric.
+    pub per_gpu_throughput: f64,
+    /// Tokens/s per normalized dollar — the heterogeneous headline metric.
+    pub throughput_per_dollar: f64,
+    /// Normalized cost of the instance (Table 3 prices).
+    pub cost: f64,
+    /// Per-micro-batch times for one layer (diagnostics).
+    pub t_a: f64,
+    pub t_e: f64,
+    pub t_c: f64,
+    /// Whether the ping-pong pipeline fully hides communication.
+    pub pipeline_full: bool,
+    /// Attention / expert busy fractions.
+    pub attn_busy: f64,
+    pub expert_busy: f64,
+}
+
+impl PlanMetrics {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("tpot_ms", self.tpot * 1e3)
+            .set("throughput", self.throughput)
+            .set("per_gpu_throughput", self.per_gpu_throughput)
+            .set("throughput_per_dollar", self.throughput_per_dollar)
+            .set("cost", self.cost)
+            .set("t_a_us", self.t_a * 1e6)
+            .set("t_e_us", self.t_e * 1e6)
+            .set("t_c_us", self.t_c * 1e6)
+            .set("pipeline_full", self.pipeline_full)
+            .set("attn_busy", self.attn_busy)
+            .set("expert_busy", self.expert_busy)
+    }
+}
+
+/// Evaluate a plan at a specific global batch size `b` (tokens).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_plan(
+    pm: &PerfModel,
+    model: &ModelConfig,
+    cluster: &ClusterSpec,
+    tp_a: usize,
+    tp_e: usize,
+    n_a: usize,
+    m: usize,
+    global_batch: usize,
+) -> PlanMetrics {
+    let b = global_batch as f64;
+    let b_a = b / (m * n_a) as f64;
+    let b_e = b * model.top_k as f64 / (m * model.experts) as f64;
+
+    let it = IterationModel {
+        t_a: pm.t_a(b_a),
+        t_e: pm.t_e(b_e),
+        t_c: pm.t_c(b_a, b_e),
+        m,
+        layers: model.layers,
+    };
+    let breakdown = it.breakdown();
+    let t_total = breakdown.t_total;
+
+    let cost_a = cluster.attention_gpu().price * (tp_a * n_a) as f64;
+    let cost_e = cluster.expert_gpu().price * (tp_e * model.experts) as f64;
+    let cost = cost_a + cost_e;
+    let throughput = b / t_total;
+    let gpus = (tp_a * n_a + tp_e * model.experts) as f64;
+
+    PlanMetrics {
+        tpot: t_total,
+        throughput,
+        per_gpu_throughput: throughput / gpus,
+        throughput_per_dollar: throughput / cost,
+        cost,
+        t_a: it.t_a,
+        t_e: it.t_e,
+        t_c: it.t_c,
+        pipeline_full: it.pipeline_full(),
+        attn_busy: breakdown.attn_busy,
+        expert_busy: breakdown.expert_busy,
+    }
+}
+
+/// KV-cache memory feasibility (Eq. 8):
+/// `4·m·b_a·s·h·L/g + 2·P_a < tp_a·C_a` (bytes, bf16).
+pub fn kv_memory_ok(
+    model: &ModelConfig,
+    cluster: &ClusterSpec,
+    tp_a: usize,
+    m: usize,
+    b_a: f64,
+    avg_seq: f64,
+) -> bool {
+    let kv_bytes = DTYPE_BYTES
+        * 2.0
+        * m as f64
+        * b_a
+        * avg_seq
+        * model.hidden as f64
+        * model.layers as f64
+        / model.gqa_group() as f64;
+    let p_a = model.attn_param_bytes();
+    kv_bytes + p_a < tp_a as f64 * cluster.attention_gpu().mem_bytes()
+}
+
+/// Binary-search the largest global batch satisfying the SLO (Eq. 7) and the
+/// KV-memory limit (Eq. 8). Returns `(B, metrics)` or `None` if even the
+/// smallest batch violates a constraint.
+#[allow(clippy::too_many_arguments)]
+pub fn max_batch_under_slo(
+    pm: &PerfModel,
+    model: &ModelConfig,
+    cluster: &ClusterSpec,
+    tp_a: usize,
+    tp_e: usize,
+    n_a: usize,
+    m: usize,
+    avg_seq: f64,
+    slo: f64,
+) -> Option<(usize, PlanMetrics)> {
+    // B must be a multiple of m·n_a so micro-batches are integral per node.
+    let unit = m * n_a;
+    let ok = |mult: usize| -> Option<PlanMetrics> {
+        let b = mult * unit;
+        let b_a = b as f64 / unit as f64;
+        if !kv_memory_ok(model, cluster, tp_a, m, b_a, avg_seq) {
+            return None;
+        }
+        let metrics = simulate_plan(pm, model, cluster, tp_a, tp_e, n_a, m, b);
+        (metrics.tpot <= slo).then_some(metrics)
+    };
+
+    ok(1)?;
+    // Exponential probe then binary search on the multiplier.
+    let mut lo = 1usize;
+    let mut hi = 2usize;
+    while ok(hi).is_some() {
+        lo = hi;
+        hi *= 2;
+        if hi > 1 << 22 {
+            break;
+        }
+    }
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if ok(mid).is_some() {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let metrics = ok(lo)?;
+    Some((lo * unit, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuKind;
+
+    fn setup() -> (ModelConfig, ClusterSpec, PerfModel) {
+        let model = ModelConfig::mixtral_8x22b();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        let pm = PerfModel::new(&model, &cluster, 4, 2, 730.0);
+        (model, cluster, pm)
+    }
+
+    #[test]
+    fn tpot_monotone_in_batch() {
+        let (model, cluster, pm) = setup();
+        let m1 = simulate_plan(&pm, &model, &cluster, 4, 2, 4, 3, 1200);
+        let m2 = simulate_plan(&pm, &model, &cluster, 4, 2, 4, 3, 2400);
+        assert!(m2.tpot > m1.tpot);
+    }
+
+    #[test]
+    fn binary_search_is_maximal() {
+        let (model, cluster, pm) = setup();
+        let (b, metrics) =
+            max_batch_under_slo(&pm, &model, &cluster, 4, 2, 4, 3, 730.0, 0.150).unwrap();
+        assert!(metrics.tpot <= 0.150);
+        // One more multiplier must violate a constraint.
+        let unit = 3 * 4;
+        let next = b + unit;
+        let m_next =
+            simulate_plan(&pm, &model, &cluster, 4, 2, 4, 3, next);
+        let b_a_next = next as f64 / unit as f64;
+        let mem_next = kv_memory_ok(&model, &cluster, 4, 3, b_a_next, 730.0);
+        assert!(
+            m_next.tpot > 0.150 || !mem_next,
+            "larger batch should violate SLO or memory"
+        );
+    }
+
+    #[test]
+    fn kv_memory_constraint_binds_eventually() {
+        let (model, cluster, _) = setup();
+        assert!(kv_memory_ok(&model, &cluster, 4, 3, 8.0, 730.0));
+        assert!(!kv_memory_ok(&model, &cluster, 1, 4, 100_000.0, 730.0));
+    }
+
+    #[test]
+    fn throughput_per_dollar_uses_table3_prices() {
+        let (model, cluster, pm) = setup();
+        let m = simulate_plan(&pm, &model, &cluster, 4, 2, 4, 3, 1200);
+        let expected_cost = 2.26 * (4.0 * 4.0) + 2.26 * (2.0 * 8.0);
+        assert!((m.cost - expected_cost).abs() < 1e-9);
+        assert!((m.throughput_per_dollar - m.throughput / m.cost).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,318 @@
+//! Artifact manifest: the contract between the Python compile path and the
+//! Rust serving path.
+//!
+//! `python/compile/aot.py` writes into `artifacts/`:
+//!
+//! * `<name>.hlo.txt` — one HLO-text module per disaggregated function
+//!   (attention step, gating, expert FFN, embed, lm head);
+//! * `weights.bin` — all model weights as little-endian f32, concatenated;
+//! * `manifest.json` — model config, executable names, tensor table
+//!   (name/shape/offset into `weights.bin`), and test vectors for the
+//!   numerics integration test.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::HostTensor;
+
+/// Model geometry of the compiled artifacts (the tiny MoE by default).
+#[derive(Debug, Clone)]
+pub struct ArtifactModel {
+    pub layers: usize,
+    pub hidden: usize,
+    pub intermediate: usize,
+    pub experts: usize,
+    pub top_k: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    /// KV-cache capacity per slot (max sequence length).
+    pub max_seq: usize,
+    /// The fixed micro-batch size the executables were compiled for.
+    pub micro_batch: usize,
+}
+
+impl ArtifactModel {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            layers: v.get("layers")?.as_usize()?,
+            hidden: v.get("hidden")?.as_usize()?,
+            intermediate: v.get("intermediate")?.as_usize()?,
+            experts: v.get("experts")?.as_usize()?,
+            top_k: v.get("top_k")?.as_usize()?,
+            q_heads: v.get("q_heads")?.as_usize()?,
+            kv_heads: v.get("kv_heads")?.as_usize()?,
+            head_dim: v.get("head_dim")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            max_seq: v.get("max_seq")?.as_usize()?,
+            micro_batch: v.get("micro_batch")?.as_usize()?,
+        })
+    }
+}
+
+/// One tensor in the weight blob.
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Element offset (f32 units) into `weights.bin`.
+    pub offset: usize,
+}
+
+/// A named array in a test vector: either inline data or a reference to a
+/// tensor in the weight blob (keeps the manifest small).
+#[derive(Debug, Clone)]
+pub struct NamedArray {
+    pub name: String,
+    /// Inline payload (shape + data), or None when `weight` is set.
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+    /// Name of a tensor in `weights.bin` to use instead of inline data.
+    pub weight: Option<String>,
+}
+
+impl NamedArray {
+    fn from_json(v: &Json) -> Result<Self> {
+        if let Some(w) = v.opt("weight") {
+            return Ok(Self {
+                name: v.get("name")?.as_str()?.to_string(),
+                shape: Vec::new(),
+                data: Vec::new(),
+                weight: Some(w.as_str()?.to_string()),
+            });
+        }
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v.get("shape")?.as_usize_vec()?,
+            data: v
+                .get("data")?
+                .as_f64_vec()?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect(),
+            weight: None,
+        })
+    }
+
+    /// Materialize: inline data, or the referenced weight from `store`.
+    pub fn to_tensor(&self, store: &WeightStore) -> Result<HostTensor> {
+        match &self.weight {
+            Some(w) => Ok(store.get(w)?.clone()),
+            None => HostTensor::new(self.shape.clone(), self.data.clone()),
+        }
+    }
+}
+
+/// Reference input/output pair for the numerics integration test: executing
+/// `name` on `inputs` must reproduce `outputs` (computed by JAX at AOT time).
+#[derive(Debug, Clone)]
+pub struct TestVector {
+    pub name: String,
+    pub inputs: Vec<NamedArray>,
+    pub outputs: Vec<NamedArray>,
+}
+
+/// `manifest.json` root.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub model: ArtifactModel,
+    /// Logical executable name -> HLO text file (relative to the dir).
+    pub executables: HashMap<String, String>,
+    pub weights_file: String,
+    pub tensors: Vec<TensorEntry>,
+    pub test_vectors: Vec<TestVector>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+        let model = ArtifactModel::from_json(v.get("model")?)?;
+
+        let mut executables = HashMap::new();
+        if let Json::Obj(m) = v.get("executables")? {
+            for (k, f) in m {
+                executables.insert(k.clone(), f.as_str()?.to_string());
+            }
+        } else {
+            bail!("executables must be an object");
+        }
+
+        let tensors = v
+            .get("tensors")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(TensorEntry {
+                    name: e.get("name")?.as_str()?.to_string(),
+                    shape: e.get("shape")?.as_usize_vec()?,
+                    offset: e.get("offset")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let test_vectors = match v.opt("test_vectors") {
+            Some(tv) => tv
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(TestVector {
+                        name: e.get("name")?.as_str()?.to_string(),
+                        inputs: e
+                            .get("inputs")?
+                            .as_arr()?
+                            .iter()
+                            .map(NamedArray::from_json)
+                            .collect::<Result<Vec<_>>>()?,
+                        outputs: e
+                            .get("outputs")?
+                            .as_arr()?
+                            .iter()
+                            .map(NamedArray::from_json)
+                            .collect::<Result<Vec<_>>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+
+        Ok(Self {
+            model,
+            executables,
+            weights_file: v.get("weights_file")?.as_str()?.to_string(),
+            tensors,
+            test_vectors,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Absolute path of an executable's HLO text.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        match self.executables.get(name) {
+            Some(f) => Ok(self.dir.join(f)),
+            None => bail!("no executable named {name} in manifest"),
+        }
+    }
+}
+
+/// All weights, loaded into host memory and indexed by name.
+#[derive(Debug)]
+pub struct WeightStore {
+    tensors: HashMap<String, HostTensor>,
+}
+
+impl WeightStore {
+    pub fn load(manifest: &ArtifactManifest) -> Result<Self> {
+        let path = manifest.dir.join(&manifest.weights_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading weights {}", path.display()))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "weight blob not f32-aligned");
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut tensors = HashMap::new();
+        for e in &manifest.tensors {
+            let n: usize = e.shape.iter().product();
+            anyhow::ensure!(
+                e.offset + n <= floats.len(),
+                "tensor {} out of bounds ({} + {} > {})",
+                e.name,
+                e.offset,
+                n,
+                floats.len()
+            );
+            tensors.insert(
+                e.name.clone(),
+                HostTensor::new(e.shape.clone(), floats[e.offset..e.offset + n].to_vec())?,
+            );
+        }
+        Ok(Self { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("weight {name} missing from store"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+        "model": {"layers": 2, "hidden": 8, "intermediate": 16, "experts": 4,
+                  "top_k": 2, "q_heads": 2, "kv_heads": 1, "head_dim": 4,
+                  "vocab": 32, "max_seq": 16, "micro_batch": 2},
+        "executables": {"attention": "attention.hlo.txt"},
+        "weights_file": "weights.bin",
+        "tensors": [{"name": "l0.wq", "shape": [8, 8], "offset": 0}],
+        "test_vectors": [
+            {"name": "expert",
+             "inputs":  [{"name": "x", "shape": [1, 2], "data": [1.0, 2.0]}],
+             "outputs": [{"name": "y", "shape": [1, 2], "data": [3.0, 4.0]}]}
+        ]
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = ArtifactManifest::parse(MANIFEST, Path::new("/tmp")).unwrap();
+        assert_eq!(m.model.hidden, 8);
+        assert_eq!(m.executables["attention"], "attention.hlo.txt");
+        assert_eq!(m.tensors[0].shape, vec![8, 8]);
+        assert_eq!(m.test_vectors.len(), 1);
+        assert_eq!(m.test_vectors[0].outputs[0].data, vec![3.0, 4.0]);
+        assert_eq!(
+            m.hlo_path("attention").unwrap(),
+            PathBuf::from("/tmp/attention.hlo.txt")
+        );
+        assert!(m.hlo_path("nope").is_err());
+    }
+
+    #[test]
+    fn weight_store_from_blob() {
+        let dir = std::env::temp_dir().join("msi_ws_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let floats: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("weights.bin"), &bytes).unwrap();
+        let m = ArtifactManifest::parse(MANIFEST, &dir).unwrap();
+        let ws = WeightStore::load(&m).unwrap();
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws.get("l0.wq").unwrap().data[..3], [0.0, 1.0, 2.0]);
+        assert!(ws.get("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn weight_store_rejects_out_of_bounds() {
+        let dir = std::env::temp_dir().join("msi_ws_oob");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("weights.bin"), [0u8; 8]).unwrap(); // 2 floats
+        let m = ArtifactManifest::parse(MANIFEST, &dir).unwrap(); // wants 64
+        assert!(WeightStore::load(&m).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,122 @@
+//! PJRT engine: a CPU client plus a cache of compiled executables.
+//!
+//! HLO **text** is the interchange format (see `/opt/xla-example/README.md`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::ArtifactManifest;
+
+/// A PJRT client with named, cached executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text file under `name`.
+    pub fn load_hlo(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Compile every executable listed in the manifest.
+    pub fn load_manifest(&mut self, manifest: &ArtifactManifest) -> Result<()> {
+        for name in manifest.executables.keys() {
+            let path = manifest.hlo_path(name)?;
+            self.load_hlo(name, &path)?;
+        }
+        Ok(())
+    }
+
+    /// Execute executable `name` with the given arguments; returns the
+    /// elements of the output tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        name: &str,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("executable {name} not loaded"))?;
+        let out = exe
+            .execute::<L>(args)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {name} output"))?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with pre-uploaded device buffers (no host->device copy of
+    /// the arguments — the §Perf fast path for weight operands).
+    pub fn run_b<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        name: &str,
+        args: &[B],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("executable {name} not loaded"))?;
+        let out = exe
+            .execute_b::<B>(args)
+            .with_context(|| format!("executing {name} (buffers)"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {name} output"))?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Upload a host literal to a device buffer (done once per weight).
+    ///
+    /// Goes through the raw host-buffer path: `buffer_from_host_literal` in
+    /// xla_extension 0.5.1 mis-sizes the destination for reshaped literals.
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>()?;
+                Ok(self.client.buffer_from_host_buffer(&data, &dims, None)?)
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>()?;
+                Ok(self.client.buffer_from_host_buffer(&data, &dims, None)?)
+            }
+            other => anyhow::bail!("upload: unsupported element type {other:?}"),
+        }
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+// Engine is exercised by rust/tests/e2e_pjrt.rs against real artifacts;
+// no PJRT client is constructed in unit tests (slow, global state).

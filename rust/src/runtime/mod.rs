@@ -1,0 +1,24 @@
+//! PJRT runtime: loads the HLO artifacts produced by the JAX/Pallas compile
+//! path (`python/compile/aot.py`) and executes them on the request path.
+//!
+//! Python never runs at serving time: `make artifacts` lowers the L2 model
+//! (which calls the L1 Pallas kernels) to HLO **text** once, and this module
+//! compiles + executes it through the `xla` crate's PJRT CPU client.
+//!
+//! * [`artifacts`] — the artifact manifest (executables, tensor shapes,
+//!   weight blobs) written at compile time.
+//! * [`tensor`] — minimal host tensor type and Literal conversions.
+//! * [`engine`] — PJRT client with an executable cache.
+//! * [`serving`] — the real disaggregated decode loop: attention step,
+//!   gating, expert dispatch (the same [`crate::coordinator`] logic that the
+//!   virtual-time simulator uses), expert FFN, combine, sampling.
+
+pub mod artifacts;
+pub mod engine;
+pub mod serving;
+pub mod tensor;
+
+pub use artifacts::{ArtifactManifest, WeightStore};
+pub use engine::Engine;
+pub use serving::{ServingEngine, ServingReport};
+pub use tensor::HostTensor;

@@ -1,0 +1,487 @@
+//! The real disaggregated serving loop over PJRT.
+//!
+//! This is the executable counterpart of the virtual-time instance: the same
+//! gating / dispatch / combine / continuous-batching logic from
+//! [`crate::coordinator`], driving the AOT-compiled JAX+Pallas artifacts.
+//! Attention executables and expert executables are separate compiled
+//! modules — the disaggregation boundary of the paper — and micro-batches
+//! shuttle between them in ping-pong order within each layer.
+//!
+//! Slot model: the engine owns `m` micro-batches of `b` slots each
+//! (`b = manifest.model.micro_batch`, fixed at AOT time). Requests are
+//! admitted into free slots; prefill replays the prompt through the decode
+//! step (passive slots re-write their last KV entry, which is idempotent).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::dispatch::{build_dispatch, combine_expert_outputs};
+use crate::coordinator::gating::softmax_topk;
+use crate::metrics::Histogram;
+use crate::workload::Request;
+
+use super::artifacts::{ArtifactManifest, WeightStore};
+use super::engine::Engine;
+use super::tensor::{argmax_rows, i32_literal, HostTensor};
+
+/// One serving slot.
+#[derive(Debug, Clone, Default)]
+struct Slot {
+    /// Request occupying this slot, if any.
+    request: Option<u64>,
+    /// Tokens currently in the KV cache for this slot.
+    position: usize,
+    /// Last token id fed (re-fed while the slot is passive).
+    last_token: usize,
+    /// Output tokens still to produce.
+    remaining: usize,
+    /// Generated token count (for reporting).
+    generated: usize,
+}
+
+/// Aggregate report of a serving run.
+#[derive(Debug)]
+pub struct ServingReport {
+    pub completed: u64,
+    pub output_tokens: u64,
+    pub elapsed: f64,
+    /// Output tokens per second.
+    pub throughput: f64,
+    /// Per-decode-iteration latency (TPOT) distribution.
+    pub tpot: Histogram,
+    /// Wall time spent in attention(+gating) vs expert executables.
+    pub attn_time: f64,
+    pub expert_time: f64,
+    /// Wall time in dispatch/combine/sampling on the coordinator.
+    pub coord_time: f64,
+    pub decode_iterations: u64,
+}
+
+/// The PJRT-backed serving engine.
+pub struct ServingEngine {
+    engine: Engine,
+    manifest: ArtifactManifest,
+    /// Weight device-buffers uploaded once at load time (no host→device
+    /// copy on the hot path — §Perf).
+    wbuf: HashMap<String, xla::PjRtBuffer>,
+    /// Stacked per-layer expert weights `[E,h,f]/[E,f,h]` for the grouped
+    /// expert executable (one PJRT call per layer instead of up to E —
+    /// §Perf). None when the artifacts predate the grouped kernel.
+    grouped_w: Option<Vec<(xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)>>,
+    /// KV caches: `[micro_batch][layer] -> (k, v)` device buffers, threaded
+    /// through attention calls.
+    kv: Vec<Vec<(xla::PjRtBuffer, xla::PjRtBuffer)>>,
+    slots: Vec<Vec<Slot>>, // [micro_batch][slot]
+    m: usize,
+}
+
+impl ServingEngine {
+    /// Load artifacts from `dir` and compile all executables. `m` is the
+    /// number of micro-batches for the ping-pong schedule.
+    pub fn load(dir: &Path, m: usize) -> Result<Self> {
+        ensure!(m >= 1, "need at least one micro-batch");
+        let manifest = ArtifactManifest::load(dir)?;
+        let weights = WeightStore::load(&manifest)?;
+        let mut engine = Engine::cpu()?;
+        engine.load_manifest(&manifest)?;
+
+        // Upload all weights to device buffers once.
+        let mut wbuf = HashMap::new();
+        for e in &manifest.tensors {
+            let lit = weights.get(&e.name)?.to_literal()?;
+            wbuf.insert(e.name.clone(), engine.upload(&lit)?);
+        }
+
+        // Stack expert weights per layer for the grouped executable.
+        let grouped_w = if manifest.executables.contains_key("experts_grouped") {
+            let md = &manifest.model;
+            let mut per_layer = Vec::with_capacity(md.layers);
+            for l in 0..md.layers {
+                let stack = |part: &str, d1: usize, d2: usize| -> Result<xla::PjRtBuffer> {
+                    let mut data = Vec::with_capacity(md.experts * d1 * d2);
+                    for e in 0..md.experts {
+                        data.extend_from_slice(
+                            &weights.get(&format!("l{l}.e{e}.{part}"))?.data,
+                        );
+                    }
+                    let lit = HostTensor::new(vec![md.experts, d1, d2], data)?.to_literal()?;
+                    engine.upload(&lit)
+                };
+                per_layer.push((
+                    stack("w1", md.hidden, md.intermediate)?,
+                    stack("w3", md.hidden, md.intermediate)?,
+                    stack("w2", md.intermediate, md.hidden)?,
+                ));
+            }
+            Some(per_layer)
+        } else {
+            None
+        };
+
+        let md = &manifest.model;
+        let kv_shape = vec![md.micro_batch, md.max_seq, md.kv_heads, md.head_dim];
+        let kv = (0..m)
+            .map(|_| {
+                (0..md.layers)
+                    .map(|_| {
+                        let k = engine.upload(&HostTensor::zeros(kv_shape.clone()).to_literal()?)?;
+                        let v = engine.upload(&HostTensor::zeros(kv_shape.clone()).to_literal()?)?;
+                        Ok((k, v))
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let slots = vec![vec![Slot::default(); md.micro_batch]; m];
+        Ok(Self {
+            engine,
+            manifest,
+            wbuf,
+            grouped_w,
+            kv,
+            slots,
+            m,
+        })
+    }
+
+    pub fn model(&self) -> &super::artifacts::ArtifactModel {
+        &self.manifest.model
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.m * self.manifest.model.micro_batch
+    }
+
+    /// Disable the grouped expert fast path (falls back to one PJRT call
+    /// per expert). Used by tests to prove both paths produce identical
+    /// tokens.
+    pub fn disable_grouped_experts(&mut self) {
+        self.grouped_w = None;
+    }
+
+    fn w(&self, name: &str) -> Result<&xla::PjRtBuffer> {
+        self.wbuf
+            .get(name)
+            .with_context(|| format!("weight buffer {name} missing"))
+    }
+
+    /// Run one decode step for micro-batch `mb`.
+    ///
+    /// `ids[i]` is the token fed to slot `i`; `advance[i]` marks slots whose
+    /// position moves forward (active this step). Returns the next-token
+    /// argmax for every slot plus (attention, expert, coordinator) times.
+    pub fn step_micro_batch(
+        &mut self,
+        mb: usize,
+        ids: &[usize],
+        advance: &[bool],
+    ) -> Result<(Vec<usize>, f64, f64, f64)> {
+        let md = self.manifest.model.clone();
+        let b = md.micro_batch;
+        ensure!(ids.len() == b && advance.len() == b, "slot arity mismatch");
+        let mut t_attn = 0.0;
+        let mut t_expert = 0.0;
+        let mut t_coord = 0.0;
+
+        let ids_i32: Vec<i32> = ids.iter().map(|&t| t as i32).collect();
+        let positions: Vec<i32> = self.slots[mb].iter().map(|s| s.position as i32).collect();
+
+        // Embed.
+        let t0 = Instant::now();
+        let ids_buf = self.engine.upload(&i32_literal(&ids_i32, &[b])?)?;
+        let x = self
+            .engine
+            .run_b("embed", &[&ids_buf, self.w("emb")?])
+            .context("embed")?
+            .remove(0);
+        let mut x = self.engine.upload(&x)?;
+        t_coord += t0.elapsed().as_secs_f64();
+
+        let pos_buf = self.engine.upload(&i32_literal(&positions, &[b])?)?;
+        for layer in 0..md.layers {
+            // --- attention node ---
+            let t0 = Instant::now();
+            let mut outs = {
+                let (k, v) = {
+                    let p = &self.kv[mb][layer];
+                    (&p.0, &p.1)
+                };
+                self.engine.run_b(
+                    "attention",
+                    &[
+                        &x,
+                        k,
+                        v,
+                        &pos_buf,
+                        self.w(&format!("l{layer}.attn_norm"))?,
+                        self.w(&format!("l{layer}.wq"))?,
+                        self.w(&format!("l{layer}.wk"))?,
+                        self.w(&format!("l{layer}.wv"))?,
+                        self.w(&format!("l{layer}.wo"))?,
+                    ],
+                )?
+            };
+            let new_v = outs.pop().unwrap();
+            let new_k = outs.pop().unwrap();
+            let h1 = outs.pop().unwrap();
+            self.kv[mb][layer] = (self.engine.upload(&new_k)?, self.engine.upload(&new_v)?);
+            let h1_buf = self.engine.upload(&h1)?;
+            t_attn += t0.elapsed().as_secs_f64();
+
+            // --- gating (runs on the attention node, §6 fused kernels) ---
+            let t0 = Instant::now();
+            let mut outs = self.engine.run_b(
+                "gating",
+                &[
+                    &h1_buf,
+                    self.w(&format!("l{layer}.ffn_norm"))?,
+                    self.w(&format!("l{layer}.wg"))?,
+                ],
+            )?;
+            let logits = HostTensor::from_literal(&outs.pop().unwrap())?;
+            let normed = HostTensor::from_literal(&outs.pop().unwrap())?;
+            let gating = softmax_topk(&logits.data, md.experts, md.top_k);
+            let plan = build_dispatch(&gating, md.experts);
+            t_attn += t0.elapsed().as_secs_f64();
+
+            // --- dispatch -> expert nodes (M2N) -> combine ---
+            let mut expert_outputs: Vec<Vec<f32>> = vec![Vec::new(); md.experts];
+            if self.grouped_w.is_some() {
+                // Grouped path (§Perf): one executable call computes all
+                // experts' (padded) token blocks.
+                let tc = Instant::now();
+                let mut xall = vec![0f32; md.experts * b * md.hidden];
+                for e in 0..md.experts {
+                    let (tokens, _) = plan.expert_slice(e);
+                    let base = e * b * md.hidden;
+                    for (row, &t) in tokens.iter().enumerate() {
+                        xall[base + row * md.hidden..base + (row + 1) * md.hidden]
+                            .copy_from_slice(normed.row(t as usize));
+                    }
+                }
+                let xall = HostTensor::new(vec![md.experts, b, md.hidden], xall)?;
+                t_coord += tc.elapsed().as_secs_f64();
+
+                let te = Instant::now();
+                let xall_buf = self.engine.upload(&xall.to_literal()?)?;
+                let (w1, w3, w2) = &self.grouped_w.as_ref().unwrap()[layer];
+                let yall = self
+                    .engine
+                    .run_b("experts_grouped", &[&xall_buf, w1, w3, w2])?
+                    .remove(0);
+                t_expert += te.elapsed().as_secs_f64();
+
+                let tc = Instant::now();
+                let yall = HostTensor::from_literal(&yall)?;
+                for e in 0..md.experts {
+                    let load = plan.expert_load(e);
+                    if load == 0 {
+                        continue;
+                    }
+                    let base = e * b * md.hidden;
+                    expert_outputs[e] =
+                        yall.data[base..base + load * md.hidden].to_vec();
+                }
+                t_coord += tc.elapsed().as_secs_f64();
+            } else {
+                for e in 0..md.experts {
+                    let (tokens, _) = plan.expert_slice(e);
+                    if tokens.is_empty() {
+                        continue;
+                    }
+                    // Gather + pad to the compiled batch size.
+                    let tc = Instant::now();
+                    let mut xe = vec![0f32; b * md.hidden];
+                    for (row, &t) in tokens.iter().enumerate() {
+                        xe[row * md.hidden..(row + 1) * md.hidden]
+                            .copy_from_slice(normed.row(t as usize));
+                    }
+                    let xe = HostTensor::new(vec![b, md.hidden], xe)?;
+                    t_coord += tc.elapsed().as_secs_f64();
+
+                    let te = Instant::now();
+                    let xe_buf = self.engine.upload(&xe.to_literal()?)?;
+                    let ye = self
+                        .engine
+                        .run_b(
+                            "expert",
+                            &[
+                                &xe_buf,
+                                self.w(&format!("l{layer}.e{e}.w1"))?,
+                                self.w(&format!("l{layer}.e{e}.w3"))?,
+                                self.w(&format!("l{layer}.e{e}.w2"))?,
+                            ],
+                        )?
+                        .remove(0);
+                    t_expert += te.elapsed().as_secs_f64();
+
+                    let tc = Instant::now();
+                    let ye = HostTensor::from_literal(&ye)?;
+                    expert_outputs[e] = ye.data[..tokens.len() * md.hidden].to_vec();
+                    t_coord += tc.elapsed().as_secs_f64();
+                }
+            }
+
+            let tc = Instant::now();
+            let combined = combine_expert_outputs(&plan, &expert_outputs, b, md.hidden);
+            // Residual add on the coordinator (trivially small).
+            let mut h1 = HostTensor::from_literal(&h1)?;
+            for (a, c) in h1.data.iter_mut().zip(&combined) {
+                *a += c;
+            }
+            x = self.engine.upload(&h1.to_literal()?)?;
+            t_coord += tc.elapsed().as_secs_f64();
+        }
+
+        // LM head + sampling.
+        let t0 = Instant::now();
+        let logits = self
+            .engine
+            .run_b("lm_head", &[&x, self.w("final_norm")?, self.w("emb")?])?
+            .remove(0);
+        let next = argmax_rows(&HostTensor::from_literal(&logits)?);
+        t_coord += t0.elapsed().as_secs_f64();
+
+        // Advance slot state.
+        for i in 0..b {
+            if advance[i] {
+                self.slots[mb][i].position += 1;
+                self.slots[mb][i].last_token = ids[i];
+            }
+        }
+        Ok((next, t_attn, t_expert, t_coord))
+    }
+
+    /// Prefill a request's prompt into `slot` of micro-batch `mb`. Returns
+    /// the model's predicted continuation token.
+    fn prefill(&mut self, mb: usize, slot: usize, prompt: &[usize]) -> Result<usize> {
+        let b = self.manifest.model.micro_batch;
+        let mut last = 0usize;
+        for &tok in prompt {
+            let mut ids: Vec<usize> =
+                (0..b).map(|i| self.slots[mb][i].last_token).collect();
+            let mut advance = vec![false; b];
+            ids[slot] = tok;
+            advance[slot] = true;
+            let (next, _, _, _) = self.step_micro_batch(mb, &ids, &advance)?;
+            last = next[slot];
+        }
+        Ok(last)
+    }
+
+    /// Serve a set of requests to completion (closed loop). Token ids are
+    /// derived from the request id (synthetic vocabulary).
+    pub fn serve(&mut self, requests: &[Request]) -> Result<ServingReport> {
+        let md = self.manifest.model.clone();
+        let b = md.micro_batch;
+        let mut waiting: Vec<Request> = requests.to_vec();
+        waiting.reverse(); // pop from the back = FIFO
+
+        let mut completed = 0u64;
+        let mut output_tokens = 0u64;
+        let mut tpot = Histogram::new();
+        let (mut attn_time, mut expert_time, mut coord_time) = (0.0, 0.0, 0.0);
+        let mut decode_iterations = 0u64;
+        let start = Instant::now();
+
+        // Pending next-token per (mb, slot) produced by prefill/decode.
+        let mut pending: Vec<Vec<Option<usize>>> = vec![vec![None; b]; self.m];
+
+        loop {
+            // Admission: fill free slots, run prefill.
+            for mb in 0..self.m {
+                for s in 0..b {
+                    if self.slots[mb][s].request.is_none() && !waiting.is_empty() {
+                        let r = waiting.pop().unwrap();
+                        // Cap prompt + output to the KV capacity.
+                        let output_len = r.output_len.clamp(1, md.max_seq / 2);
+                        let max_prompt = md.max_seq - output_len - 1;
+                        let plen = r.input_len.clamp(1, max_prompt);
+                        let prompt: Vec<usize> = (0..plen)
+                            .map(|i| (r.id as usize * 131 + i * 7) % md.vocab)
+                            .collect();
+                        self.slots[mb][s] = Slot {
+                            request: Some(r.id),
+                            position: 0,
+                            last_token: prompt[0],
+                            remaining: output_len,
+                            generated: 0,
+                        };
+                        let first = self.prefill(mb, s, &prompt)?;
+                        pending[mb][s] = Some(first);
+                    }
+                }
+            }
+
+            let any_active = self.slots.iter().flatten().any(|s| s.request.is_some());
+            if !any_active && waiting.is_empty() {
+                break;
+            }
+
+            // One decode iteration: ping-pong order over micro-batches.
+            let iter_start = Instant::now();
+            for mb in 0..self.m {
+                let mut ids = vec![0usize; b];
+                let mut advance = vec![false; b];
+                let mut any = false;
+                for s in 0..b {
+                    if self.slots[mb][s].request.is_some() {
+                        ids[s] = pending[mb][s].unwrap_or(self.slots[mb][s].last_token);
+                        advance[s] = true;
+                        any = true;
+                    } else {
+                        ids[s] = self.slots[mb][s].last_token;
+                    }
+                }
+                if !any {
+                    continue;
+                }
+                let (next, ta, te, tc) = self.step_micro_batch(mb, &ids, &advance)?;
+                attn_time += ta;
+                expert_time += te;
+                coord_time += tc;
+
+                for s in 0..b {
+                    if !advance[s] {
+                        continue;
+                    }
+                    let slot = &mut self.slots[mb][s];
+                    slot.generated += 1;
+                    output_tokens += 1;
+                    slot.remaining -= 1;
+                    pending[mb][s] = Some(next[s]);
+                    let full = slot.position >= md.max_seq - 1;
+                    if slot.remaining == 0 || full {
+                        completed += 1;
+                        *slot = Slot::default();
+                        pending[mb][s] = None;
+                    }
+                }
+            }
+            decode_iterations += 1;
+            tpot.record(iter_start.elapsed().as_secs_f64());
+        }
+
+        let elapsed = start.elapsed().as_secs_f64();
+        Ok(ServingReport {
+            completed,
+            output_tokens,
+            elapsed,
+            throughput: if elapsed > 0.0 {
+                output_tokens as f64 / elapsed
+            } else {
+                0.0
+            },
+            tpot,
+            attn_time,
+            expert_time,
+            coord_time,
+            decode_iterations,
+        })
+    }
+}
+
+// Exercised end-to-end by rust/tests/e2e_pjrt.rs and examples/serve_e2e.rs
+// against real artifacts.

@@ -1,0 +1,108 @@
+//! Minimal host tensor: row-major `f32`/`i32` data + shape, with conversions
+//! to/from `xla::Literal` for PJRT execution.
+
+use anyhow::{ensure, Result};
+
+/// A row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        ensure!(
+            n == data.len(),
+            "shape {shape:?} wants {n} elements, got {}",
+            data.len()
+        );
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Convert to an XLA literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Self::new(dims, data)?)
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.shape[self.shape.len() - 1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let w = self.shape[self.shape.len() - 1];
+        &mut self.data[i * w..(i + 1) * w]
+    }
+}
+
+/// Build an i32 literal of the given shape.
+pub fn i32_literal(values: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(values).reshape(&dims)?)
+}
+
+/// Argmax along the last axis of a `[rows, cols]` tensor.
+pub fn argmax_rows(t: &HostTensor) -> Vec<usize> {
+    let cols = *t.shape.last().unwrap();
+    let rows = t.numel() / cols;
+    (0..rows)
+        .map(|r| {
+            let row = &t.data[r * cols..(r + 1) * cols];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn rows() {
+        let t = HostTensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn argmax() {
+        let t = HostTensor::new(vec![2, 3], vec![1., 9., 3., 7., 5., 6.]).unwrap();
+        assert_eq!(argmax_rows(&t), vec![1, 0]);
+    }
+
+    // Literal round-trips are covered by the e2e_pjrt integration test,
+    // which requires the PJRT client.
+}

@@ -1,0 +1,207 @@
+//! Deterministic random source for the simulators — self-contained
+//! (the `rand`/`rand_distr` crates are unavailable offline).
+//!
+//! Core generator: xoshiro256++ seeded via SplitMix64. Distributions: the
+//! draws the network and workload models need — exponential inter-arrivals,
+//! log-normal message jitter and length distributions (Box–Muller), Pareto
+//! tails for GPU-sync/OS-noise stalls (inverse transform).
+
+/// Seeded RNG with named draws for every stochastic element of the sims.
+pub struct SimRng {
+    s: [u64; 4],
+    /// Cached second Box–Muller variate.
+    spare_normal: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+impl SimRng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+            spare_normal: None,
+        }
+    }
+
+    /// Next raw 64-bit value (xoshiro256++).
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] — safe for log().
+    fn uniform_pos(&mut self) -> f64 {
+        1.0 - self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free for our purposes (bias < 2^-53·n).
+        (self.uniform() * n as f64) as usize % n
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let u1 = self.uniform_pos();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Exponential with the given mean (inter-arrival times).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        debug_assert!(mean > 0.0);
+        -mean * self.uniform_pos().ln()
+    }
+
+    /// Log-normal parameterized by the *median* and sigma: median of
+    /// LogNormal(mu, sigma) is exp(mu).
+    pub fn lognormal_median(&mut self, median: f64, sigma: f64) -> f64 {
+        debug_assert!(median > 0.0);
+        (median.ln() + sigma * self.normal()).exp()
+    }
+
+    /// Pareto tail: minimum `scale`, shape `alpha` (heavy-tailed stalls;
+    /// smaller alpha = heavier tail).
+    pub fn pareto(&mut self, scale: f64, alpha: f64) -> f64 {
+        debug_assert!(scale > 0.0 && alpha > 0.0);
+        scale * self.uniform_pos().powf(-1.0 / alpha)
+    }
+
+    /// Bernoulli draw.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.uniform() < p.clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = SimRng::new(7);
+        let mut b = SimRng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = SimRng::new(1);
+        let mut b = SimRng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut r = SimRng::new(3);
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SimRng::new(4);
+        let n = 100_000;
+        let v: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = SimRng::new(1);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn lognormal_median_close() {
+        let mut r = SimRng::new(2);
+        let n = 20_001;
+        let mut v: Vec<f64> = (0..n).map(|_| r.lognormal_median(571.0, 0.8)).collect();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let med = v[n / 2];
+        assert!((med - 571.0).abs() / 571.0 < 0.05, "median {med}");
+    }
+
+    #[test]
+    fn pareto_min_and_tail() {
+        let mut r = SimRng::new(3);
+        let mut over10 = 0;
+        for _ in 0..20_000 {
+            let p = r.pareto(1.5, 2.0);
+            assert!(p >= 1.5);
+            if p > 15.0 {
+                over10 += 1;
+            }
+        }
+        // P(X > 15) = (1.5/15)^2 = 1% — heavy tail present.
+        assert!(over10 > 100, "tail draws {over10}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = SimRng::new(9);
+        for _ in 0..10_000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn chance_extremes() {
+        let mut r = SimRng::new(5);
+        assert!(!r.chance(0.0));
+        assert!(r.chance(1.0));
+    }
+}

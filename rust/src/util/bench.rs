@@ -1,0 +1,127 @@
+//! Micro-benchmark harness for the `cargo bench` targets (criterion is not
+//! available offline): warmup, timed repetitions, robust statistics.
+
+use std::time::Instant;
+
+/// Timing result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration: median, p10, p90 across samples.
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>12} /iter   [{} .. {}]  ({} samples x {} iters)",
+            self.name,
+            fmt_duration(self.median),
+            fmt_duration(self.p10),
+            fmt_duration(self.p90),
+            self.samples,
+            self.iters_per_sample,
+        );
+    }
+
+    /// Iterations per second at the median.
+    pub fn rate(&self) -> f64 {
+        if self.median > 0.0 {
+            1.0 / self.median
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Format seconds human-readably (ns/us/ms/s).
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Run `f` repeatedly and report per-iteration timing. Auto-calibrates the
+/// iteration count to make each sample take ~20 ms, collects 12 samples.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // Calibrate.
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt > 0.02 || iters > 1 << 24 {
+            break;
+        }
+        iters = (iters * 4).min(1 << 25);
+    }
+
+    // Sample.
+    const SAMPLES: usize = 12;
+    let mut per_iter = Vec::with_capacity(SAMPLES);
+    for _ in 0..SAMPLES {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    per_iter.sort_by(|a, b| a.total_cmp(b));
+    BenchResult {
+        name: name.to_string(),
+        median: per_iter[SAMPLES / 2],
+        p10: per_iter[SAMPLES / 10],
+        p90: per_iter[SAMPLES * 9 / 10],
+        iters_per_sample: iters,
+        samples: SAMPLES,
+    }
+}
+
+/// Prevent the optimizer from discarding a value (stable-Rust black box).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a section header for a figure/table reproduction.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print one row of a result table.
+pub fn row(cols: &[String]) {
+    println!("{}", cols.join("  "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.median > 0.0);
+        assert!(r.p10 <= r.median && r.median <= r.p90 * 1.0001);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(5e-9).contains("ns"));
+        assert!(fmt_duration(5e-6).contains("us"));
+        assert!(fmt_duration(5e-3).contains("ms"));
+        assert!(fmt_duration(5.0).ends_with("s"));
+    }
+}

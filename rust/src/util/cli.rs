@@ -1,0 +1,119 @@
+//! Tiny command-line argument parser for the `msi` launcher:
+//! `msi <subcommand> [--key value]... [--flag]...`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments: a subcommand plus `--key value` pairs and bare flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, flag_names: &[&str]) -> Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut out = Args {
+            subcommand,
+            ..Default::default()
+        };
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a:?}");
+            };
+            // Support --key=value.
+            if let Some((k, v)) = key.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+            } else if flag_names.contains(&key) {
+                out.flags.push(key.to_string());
+            } else {
+                let v = it
+                    .next()
+                    .with_context(|| format!("--{key} expects a value"))?;
+                out.options.insert(key.to_string(), v);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name}={v} not an integer")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name}={v} not an integer")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name}={v} not a number")),
+            None => Ok(default),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["all", "baselines"]).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("plan --model dbrx --slo-ms 150");
+        assert_eq!(a.subcommand, "plan");
+        assert_eq!(a.get("model"), Some("dbrx"));
+        assert_eq!(a.f64_or("slo-ms", 0.0).unwrap(), 150.0);
+    }
+
+    #[test]
+    fn flags_and_equals() {
+        let a = parse("plan --all --model=tiny");
+        assert!(a.flag("all"));
+        assert!(!a.flag("baselines"));
+        assert_eq!(a.get("model"), Some("tiny"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("simulate");
+        assert_eq!(a.usize_or("requests", 512).unwrap(), 512);
+        assert_eq!(a.str_or("gpu", "ampere"), "ampere");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(
+            ["plan".into(), "positional".into()].into_iter(),
+            &[]
+        )
+        .is_err());
+        assert!(Args::parse(["plan".into(), "--model".into()].into_iter(), &[]).is_err());
+    }
+}

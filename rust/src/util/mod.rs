@@ -1,0 +1,18 @@
+//! In-tree substrates for an offline build environment.
+//!
+//! The vendored crate set contains only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (serde/serde_json, clap, rand,
+//! criterion, proptest) are unavailable. The pieces of them this project
+//! needs are small and well-specified, so we implement them here:
+//!
+//! * [`json`] — a complete JSON value model, parser and writer (RFC 8259
+//!   subset: no surrogate-pair escapes beyond BMP handling).
+//! * [`cli`] — `--flag value` argument parsing for the `msi` launcher.
+//! * [`bench`] — a timing harness with warmup, repetition and robust
+//!   statistics for the `cargo bench` targets.
+//!
+//! (Random-number generation lives in [`crate::sim::SimRng`].)
+
+pub mod bench;
+pub mod cli;
+pub mod json;

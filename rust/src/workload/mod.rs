@@ -1,0 +1,163 @@
+//! Workload generation: synthetic request traces matched to the paper's
+//! production dataset statistics (§7.1: median input 571 tokens, median
+//! output 159 tokens), with log-normal length distributions and Poisson
+//! arrivals.
+
+mod trace;
+
+pub use trace::{Trace, TraceStats};
+
+use crate::sim::SimRng;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in seconds (0 for closed-loop benchmarks).
+    pub arrival: f64,
+    /// Prompt length in tokens.
+    pub input_len: usize,
+    /// Number of tokens to decode.
+    pub output_len: usize,
+}
+
+impl Request {
+    /// Sequence length after `decoded` output tokens have been produced.
+    pub fn seq_len_at(&self, decoded: usize) -> usize {
+        self.input_len + decoded.min(self.output_len)
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("id", self.id)
+            .set("arrival", self.arrival)
+            .set("input_len", self.input_len)
+            .set("output_len", self.output_len)
+    }
+
+    pub fn from_json(v: &crate::util::json::Json) -> anyhow::Result<Self> {
+        Ok(Self {
+            id: v.get("id")?.as_u64()?,
+            arrival: v.get("arrival")?.as_f64()?,
+            input_len: v.get("input_len")?.as_usize()?,
+            output_len: v.get("output_len")?.as_usize()?,
+        })
+    }
+}
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Median prompt length (paper: 571).
+    pub median_input: f64,
+    /// Median output length (paper: 159).
+    pub median_output: f64,
+    /// Log-normal sigma for both lengths.
+    pub sigma: f64,
+    /// Mean request arrival rate, requests/second (None = closed loop).
+    pub arrival_rate: Option<f64>,
+    /// Clamp lengths into [1, max_len].
+    pub max_len: usize,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        Self {
+            median_input: 571.0,
+            median_output: 159.0,
+            sigma: 0.7,
+            arrival_rate: None,
+            max_len: 8192,
+        }
+    }
+}
+
+impl WorkloadSpec {
+    /// Expected steady-state average sequence length during decoding: the
+    /// prompt plus half the output on average.
+    pub fn avg_seq_len(&self) -> f64 {
+        // E[lognormal] = median * exp(sigma^2/2)
+        let mean_in = self.median_input * (self.sigma * self.sigma / 2.0).exp();
+        let mean_out = self.median_output * (self.sigma * self.sigma / 2.0).exp();
+        mean_in + mean_out / 2.0
+    }
+
+    /// Generate `n` requests.
+    pub fn generate(&self, n: usize, seed: u64) -> Vec<Request> {
+        let mut rng = SimRng::new(seed);
+        let mut t = 0.0;
+        (0..n as u64)
+            .map(|id| {
+                if let Some(rate) = self.arrival_rate {
+                    t += rng.exponential(1.0 / rate);
+                }
+                Request {
+                    id,
+                    arrival: t,
+                    input_len: (rng.lognormal_median(self.median_input, self.sigma) as usize)
+                        .clamp(1, self.max_len),
+                    output_len: (rng.lognormal_median(self.median_output, self.sigma) as usize)
+                        .clamp(1, self.max_len),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn medians_match_paper() {
+        let spec = WorkloadSpec::default();
+        let reqs = spec.generate(20_001, 3);
+        let mut ins: Vec<usize> = reqs.iter().map(|r| r.input_len).collect();
+        ins.sort_unstable();
+        let med_in = ins[ins.len() / 2] as f64;
+        assert!(
+            (med_in - 571.0).abs() / 571.0 < 0.08,
+            "median input {med_in}"
+        );
+        let mut outs: Vec<usize> = reqs.iter().map(|r| r.output_len).collect();
+        outs.sort_unstable();
+        let med_out = outs[outs.len() / 2] as f64;
+        assert!(
+            (med_out - 159.0).abs() / 159.0 < 0.08,
+            "median output {med_out}"
+        );
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone() {
+        let spec = WorkloadSpec {
+            arrival_rate: Some(10.0),
+            ..Default::default()
+        };
+        let reqs = spec.generate(100, 1);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let duration = reqs.last().unwrap().arrival;
+        assert!((duration - 10.0).abs() < 4.0, "~100 reqs at 10/s => ~10s");
+    }
+
+    #[test]
+    fn closed_loop_all_at_zero() {
+        let reqs = WorkloadSpec::default().generate(10, 1);
+        assert!(reqs.iter().all(|r| r.arrival == 0.0));
+    }
+
+    #[test]
+    fn seq_len_progression() {
+        let r = Request {
+            id: 0,
+            arrival: 0.0,
+            input_len: 100,
+            output_len: 10,
+        };
+        assert_eq!(r.seq_len_at(0), 100);
+        assert_eq!(r.seq_len_at(5), 105);
+        assert_eq!(r.seq_len_at(50), 110); // capped at output_len
+    }
+}

@@ -1,0 +1,126 @@
+//! Trace container: save/load request traces as JSON lines, compute summary
+//! statistics. Lets experiments be replayed bit-identically and lets users
+//! substitute their own production traces for the synthetic generator.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::Request;
+
+/// A replayable request trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+/// Summary statistics of a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceStats {
+    pub count: usize,
+    pub median_input: usize,
+    pub median_output: usize,
+    pub mean_input: f64,
+    pub mean_output: f64,
+    /// Steady-state average sequence length (input + output/2).
+    pub avg_seq: f64,
+}
+
+impl Trace {
+    pub fn new(requests: Vec<Request>) -> Self {
+        Self { requests }
+    }
+
+    /// Write as JSON lines.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        for r in &self.requests {
+            writeln!(f, "{}", r.to_json())?;
+        }
+        Ok(())
+    }
+
+    /// Load from JSON lines.
+    pub fn load(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut requests = Vec::new();
+        for line in std::io::BufReader::new(f).lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            requests.push(Request::from_json(&Json::parse(&line)?)?);
+        }
+        Ok(Self { requests })
+    }
+
+    pub fn stats(&self) -> TraceStats {
+        let n = self.requests.len();
+        if n == 0 {
+            return TraceStats {
+                count: 0,
+                median_input: 0,
+                median_output: 0,
+                mean_input: 0.0,
+                mean_output: 0.0,
+                avg_seq: 0.0,
+            };
+        }
+        let mut ins: Vec<usize> = self.requests.iter().map(|r| r.input_len).collect();
+        let mut outs: Vec<usize> = self.requests.iter().map(|r| r.output_len).collect();
+        ins.sort_unstable();
+        outs.sort_unstable();
+        let mean_in = ins.iter().sum::<usize>() as f64 / n as f64;
+        let mean_out = outs.iter().sum::<usize>() as f64 / n as f64;
+        TraceStats {
+            count: n,
+            median_input: ins[n / 2],
+            median_output: outs[n / 2],
+            mean_input: mean_in,
+            mean_output: mean_out,
+            avg_seq: mean_in + mean_out / 2.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadSpec;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let trace = Trace::new(WorkloadSpec::default().generate(50, 9));
+        let dir = std::env::temp_dir().join("msi_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        trace.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(trace.requests, back.requests);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stats_basic() {
+        let t = Trace::new(vec![
+            Request { id: 0, arrival: 0.0, input_len: 100, output_len: 10 },
+            Request { id: 1, arrival: 0.0, input_len: 200, output_len: 30 },
+            Request { id: 2, arrival: 0.0, input_len: 300, output_len: 20 },
+        ]);
+        let s = t.stats();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.median_input, 200);
+        assert_eq!(s.median_output, 20);
+        assert!((s.mean_input - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats() {
+        assert_eq!(Trace::default().stats().count, 0);
+    }
+}

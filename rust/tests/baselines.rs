@@ -1,0 +1,155 @@
+//! Integration tests for the baseline serving simulators (vLLM-like and
+//! TensorRT-LLM-like) and the Figure 9 heterogeneous comparison.
+
+use megascale_infer::baselines::{
+    best_under_slo, evaluate_at_batch, kv_fits, minimal_deployment, BaselineDeployment,
+    BaselineKind,
+};
+use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig, NodeSpec};
+use megascale_infer::plan::{search_heterogeneous, PlanSearcher, SearchLimits};
+
+fn cluster(gpu: GpuKind) -> ClusterSpec {
+    ClusterSpec::homogeneous(gpu)
+}
+
+#[test]
+fn baselines_feasible_for_all_models() {
+    for model in ModelConfig::paper_models() {
+        for kind in [BaselineKind::Vllm, BaselineKind::TrtLlm] {
+            let c = cluster(GpuKind::Ampere80G);
+            let dep = minimal_deployment(kind, &model, &c);
+            let m = best_under_slo(&dep, &model, &c, 730.0, 0.150)
+                .unwrap_or_else(|| panic!("{:?} infeasible for {}", kind, model.name));
+            assert!(m.tpot <= 0.150);
+            assert!(m.batch >= 1);
+        }
+    }
+}
+
+#[test]
+fn ep_beats_tp_for_moe_layers() {
+    // TRT-LLM's expert parallelism avoids re-streaming every expert's
+    // sharded panels; at equal kernel efficiency EP should win for sparse
+    // MoE. Compare the two MoE strategies at the same efficiency by using
+    // TrtLlm vs a hypothetical TP deployment of the same kind.
+    let model = ModelConfig::scaled_moe();
+    let c = cluster(GpuKind::Ampere80G);
+    let b = 256;
+    let ep = evaluate_at_batch(
+        &BaselineDeployment {
+            kind: BaselineKind::TrtLlm,
+            tp: 8,
+            pp: 2,
+        },
+        &model,
+        &c,
+        730.0,
+        b,
+    );
+    let tp = evaluate_at_batch(
+        &BaselineDeployment {
+            kind: BaselineKind::Vllm,
+            tp: 8,
+            pp: 2,
+        },
+        &model,
+        &c,
+        730.0,
+        b,
+    );
+    assert!(ep.tpot < tp.tpot, "EP {} vs TP {}", ep.tpot, tp.tpot);
+}
+
+#[test]
+fn kv_budget_caps_batch() {
+    let model = ModelConfig::mixtral_8x22b();
+    let c = cluster(GpuKind::Ampere80G);
+    let dep = minimal_deployment(BaselineKind::Vllm, &model, &c);
+    assert!(kv_fits(&dep, &model, &c, 730.0, 16));
+    assert!(!kv_fits(&dep, &model, &c, 730.0, 4_000_000));
+}
+
+#[test]
+fn fig9_heterogeneous_per_cost_shape() {
+    // Figure 9: MSI on H20(attention)+L40S(experts) beats both baselines'
+    // best homogeneous per-cost throughput, with the paper-reported band
+    // (up to 3.24x vs vLLM, 1.86x vs TRT-LLM on H20).
+    let model = ModelConfig::mixtral_8x22b();
+    let hetero = search_heterogeneous(
+        &model,
+        &[GpuKind::H20, GpuKind::L40S],
+        730.0,
+        &SearchLimits::default(),
+    );
+    let msi_tpd = hetero
+        .iter()
+        .find(|r| r.attention_gpu == GpuKind::H20 && r.expert_gpu == GpuKind::L40S)
+        .expect("hetero pairing")
+        .plan
+        .metrics
+        .throughput_per_dollar;
+
+    let mut best_baseline = 0.0f64;
+    for gpu in [GpuKind::H20, GpuKind::L40S] {
+        let c = cluster(gpu);
+        for kind in [BaselineKind::Vllm, BaselineKind::TrtLlm] {
+            let dep = minimal_deployment(kind, &model, &c);
+            if let Some(m) = best_under_slo(&dep, &model, &c, 730.0, 0.150) {
+                best_baseline = best_baseline.max(m.throughput_per_dollar);
+            }
+        }
+    }
+    assert!(best_baseline > 0.0, "no baseline point");
+    let gain = msi_tpd / best_baseline;
+    assert!(
+        (1.05..5.0).contains(&gain),
+        "per-cost gain {gain:.2} (paper up to 1.86x vs best baseline)"
+    );
+}
+
+#[test]
+fn h20_beats_l40s_for_baselines() {
+    // §7.2: "vLLM and TensorRT-LLM achieve higher decoding throughput on
+    // H20" (per cost) because L40S chokes on memory capacity + interconnect.
+    let model = ModelConfig::mixtral_8x22b();
+    for kind in [BaselineKind::Vllm, BaselineKind::TrtLlm] {
+        let tpd = |gpu| {
+            let c = cluster(gpu);
+            let dep = minimal_deployment(kind, &model, &c);
+            best_under_slo(&dep, &model, &c, 730.0, 0.150).map(|m| m.throughput_per_dollar)
+        };
+        let h20 = tpd(GpuKind::H20);
+        let l40s = tpd(GpuKind::L40S);
+        if let (Some(h), Some(l)) = (h20, l40s) {
+            assert!(h > l, "{kind:?}: H20 {h:.2} should beat L40S {l:.2}");
+        }
+    }
+}
+
+#[test]
+fn msi_supports_arbitrary_gpu_pairings() {
+    // The plan search runs for every Table 3 pairing without panicking and
+    // returns internally-consistent metrics.
+    let model = ModelConfig::dbrx();
+    for a in [GpuKind::H20, GpuKind::A800, GpuKind::L40S] {
+        for e in [GpuKind::H20, GpuKind::A800, GpuKind::L40S] {
+            let cluster = ClusterSpec {
+                attention: NodeSpec {
+                    gpu: a,
+                    gpus_per_node: 8,
+                    nodes: None,
+                },
+                expert: NodeSpec {
+                    gpu: e,
+                    gpus_per_node: 8,
+                    nodes: None,
+                },
+            };
+            if let Some(plan) = PlanSearcher::new(model.clone(), cluster, 730.0).search() {
+                let m = &plan.metrics;
+                assert!(m.tpot > 0.0 && m.tpot <= 0.150);
+                assert!((m.throughput_per_dollar - m.throughput / m.cost).abs() < 1e-9);
+            }
+        }
+    }
+}

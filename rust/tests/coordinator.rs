@@ -1,0 +1,159 @@
+//! Integration tests for the coordinator: virtual-time instance end-to-end,
+//! dispatch/combine over real gating, load balancer under skewed traffic,
+//! scheduler + KV allocator interplay.
+
+use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
+use megascale_infer::coordinator::{
+    balance_experts, build_dispatch, combine_expert_outputs, softmax_topk, BlockAllocator,
+    ContinuousBatcher, KvCacheConfig, RuntimeInstance, SchedulerConfig,
+};
+use megascale_infer::plan::PlanSearcher;
+use megascale_infer::sim::SimRng;
+use megascale_infer::workload::WorkloadSpec;
+
+#[test]
+fn instance_serves_open_loop_workload() {
+    let model = ModelConfig::dbrx();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let spec = WorkloadSpec {
+        arrival_rate: Some(50.0),
+        median_output: 25.0,
+        ..Default::default()
+    };
+    let plan = PlanSearcher::new(model.clone(), cluster.clone(), spec.avg_seq_len())
+        .search()
+        .unwrap();
+    let reqs = spec.generate(200, 17);
+    let rep = RuntimeInstance::new(model, cluster, plan).simulate(&reqs);
+    assert_eq!(rep.completed, 200);
+    assert!(rep.tpot.median() <= 0.150 * 1.2, "{}", rep.tpot.median());
+    assert!(rep.throughput > 0.0);
+}
+
+#[test]
+fn dispatch_combine_identity_under_random_gating() {
+    // With identity experts and weights summing to 1, dispatch->combine is
+    // the identity over any gating decision.
+    let mut rng = SimRng::new(5);
+    for _ in 0..20 {
+        let batch = 1 + rng.below(64);
+        let experts = 2 + rng.below(30);
+        let k = 1 + rng.below(experts.min(4));
+        let hidden = 4;
+        let logits: Vec<f32> = (0..batch * experts)
+            .map(|_| rng.uniform() as f32)
+            .collect();
+        let g = softmax_topk(&logits, experts, k);
+        let plan = build_dispatch(&g, experts);
+        assert_eq!(plan.total_dispatched(), batch * k);
+
+        let x: Vec<f32> = (0..batch * hidden).map(|i| i as f32).collect();
+        let outs: Vec<Vec<f32>> = (0..experts)
+            .map(|e| {
+                let (tokens, _) = plan.expert_slice(e);
+                let mut o = Vec::with_capacity(tokens.len() * hidden);
+                for &t in tokens {
+                    o.extend_from_slice(&x[t as usize * hidden..(t as usize + 1) * hidden]);
+                }
+                o
+            })
+            .collect();
+        let combined = combine_expert_outputs(&plan, &outs, batch, hidden);
+        for (a, b) in combined.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-4 * b.abs().max(1.0));
+        }
+    }
+}
+
+#[test]
+fn load_balancer_handles_production_skew() {
+    // Zipf-ish expert popularity, as in real MoE traffic.
+    let mut rng = SimRng::new(11);
+    let experts = 32;
+    let mut costs = vec![0.0f64; experts];
+    for _ in 0..100_000 {
+        // Zipf via inverse-power of uniform.
+        let z = (rng.uniform().powf(2.0) * experts as f64) as usize;
+        costs[z.min(experts - 1)] += 1.0;
+    }
+    let nodes = 8;
+    let placement = balance_experts(&costs, nodes, 50.0);
+    let total: f64 = costs.iter().map(|c| c.max(50.0)).sum();
+    let ideal = total / nodes as f64;
+    assert!(
+        placement.makespan <= ideal * 1.01,
+        "makespan {} vs ideal {}",
+        placement.makespan,
+        ideal
+    );
+    // Hot experts replicated, cold not split gratuitously.
+    let hottest = costs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .unwrap()
+        .0;
+    assert!(placement.replicas(hottest) >= 1);
+    let replicas_total: usize = (0..experts).map(|i| placement.replicas(i)).sum();
+    assert!(replicas_total < experts + nodes, "bounded splitting");
+}
+
+#[test]
+fn scheduler_respects_kv_budget_under_churn() {
+    let mut batcher = ContinuousBatcher::new(SchedulerConfig { max_batch: 64 });
+    let mut kv = BlockAllocator::new(KvCacheConfig {
+        block_size: 16,
+        num_blocks: 256, // 4096 tokens
+    });
+    let reqs = WorkloadSpec {
+        median_input: 300.0,
+        median_output: 10.0,
+        sigma: 0.4,
+        arrival_rate: None,
+        max_len: 1024,
+    }
+    .generate(60, 3);
+    for r in reqs {
+        batcher.submit(r);
+    }
+    let mut now = 0.0;
+    let mut completed = 0usize;
+    let mut max_alloc = 0usize;
+    while batcher.has_work() {
+        batcher.admit(&mut kv, now);
+        assert!(!batcher.batch.is_empty(), "deadlock: nothing admitted");
+        completed += batcher.complete_iteration(&mut kv).len();
+        max_alloc = max_alloc.max(kv.allocated_blocks());
+        now += 0.05;
+    }
+    assert_eq!(completed, 60);
+    assert_eq!(kv.allocated_blocks(), 0, "all KV returned");
+    assert!(max_alloc <= 256);
+}
+
+#[test]
+fn report_metrics_are_consistent() {
+    let model = ModelConfig::mixtral_8x22b();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let plan = PlanSearcher::new(model.clone(), cluster.clone(), 730.0)
+        .search()
+        .unwrap();
+    let gpus = plan.total_gpus() as f64;
+    let reqs = WorkloadSpec {
+        median_output: 15.0,
+        ..Default::default()
+    }
+    .generate(128, 1);
+    let rep = RuntimeInstance::new(model, cluster, plan).simulate(&reqs);
+    assert!((rep.per_gpu_throughput - rep.throughput / gpus).abs() < 1e-9);
+    assert!(rep.elapsed > 0.0);
+    assert_eq!(
+        rep.tokens,
+        reqs_tokens(&reqs),
+        "every requested token decoded"
+    );
+}
+
+fn reqs_tokens(reqs: &[megascale_infer::workload::Request]) -> u64 {
+    reqs.iter().map(|r| r.output_len as u64).sum()
+}

@@ -1,0 +1,162 @@
+//! End-to-end PJRT integration: load the JAX/Pallas-AOT artifacts, execute
+//! them through the `xla` crate, and check numerics against JAX golden
+//! outputs recorded at compile time (manifest `test_vectors`).
+//!
+//! Requires `make artifacts` to have been run; tests skip (with a notice)
+//! when the artifacts directory is absent so `cargo test` works standalone.
+
+use std::path::{Path, PathBuf};
+
+use megascale_infer::runtime::{
+    artifacts::{ArtifactManifest, WeightStore},
+    tensor::{i32_literal, HostTensor},
+    Engine, ServingEngine,
+};
+use megascale_infer::workload::WorkloadSpec;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+fn allclose(name: &str, got: &[f32], want: &[f32], atol: f32) {
+    assert_eq!(got.len(), want.len(), "{name}: length mismatch");
+    let mut worst = 0f32;
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let diff = (g - w).abs();
+        let tol = atol + 1e-3 * w.abs();
+        assert!(
+            diff <= tol.max(atol),
+            "{name}[{i}]: got {g}, want {w} (diff {diff})"
+        );
+        worst = worst.max(diff);
+    }
+    eprintln!("  {name}: max abs diff {worst:.2e} over {} elems", got.len());
+}
+
+/// Every manifest test vector must reproduce through the PJRT executables.
+#[test]
+fn golden_vectors_reproduce_through_pjrt() {
+    let dir = require_artifacts!();
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let store = WeightStore::load(&manifest).unwrap();
+    let mut engine = Engine::cpu().unwrap();
+    engine.load_manifest(&manifest).unwrap();
+    assert!(!manifest.test_vectors.is_empty(), "no test vectors recorded");
+
+    for tv in &manifest.test_vectors {
+        eprintln!("vector {}", tv.name);
+        let args: Vec<xla::Literal> = tv
+            .inputs
+            .iter()
+            .map(|na| {
+                if na.name == "positions" || na.name == "ids" {
+                    let vals: Vec<i32> = na.data.iter().map(|&f| f as i32).collect();
+                    i32_literal(&vals, &na.shape).unwrap()
+                } else {
+                    na.to_tensor(&store).unwrap().to_literal().unwrap()
+                }
+            })
+            .collect();
+        let outs = engine.run(&tv.name, &args).unwrap();
+        assert_eq!(outs.len(), tv.outputs.len(), "{}: output arity", tv.name);
+        for (lit, want) in outs.iter().zip(&tv.outputs) {
+            let got = HostTensor::from_literal(lit).unwrap();
+            let want_t = want.to_tensor(&store).unwrap();
+            assert_eq!(got.shape, want_t.shape, "{}:{}", tv.name, want.name);
+            allclose(
+                &format!("{}:{}", tv.name, want.name),
+                &got.data,
+                &want_t.data,
+                1e-3,
+            );
+        }
+    }
+}
+
+/// The serving engine decodes a batch of requests to completion and the
+/// decomposition (attention/expert/coordinator time) is reported.
+#[test]
+fn serving_engine_decodes_requests() {
+    let dir = require_artifacts!();
+    let mut engine = ServingEngine::load(&dir, 2).unwrap();
+    let spec = WorkloadSpec {
+        median_input: 6.0,
+        median_output: 5.0,
+        sigma: 0.3,
+        arrival_rate: None,
+        max_len: engine.model().max_seq,
+    };
+    let reqs = spec.generate(6, 7);
+    let expected_tokens: u64 = reqs
+        .iter()
+        .map(|r| r.output_len.clamp(1, engine.model().max_seq / 2) as u64)
+        .sum();
+    let rep = engine.serve(&reqs).unwrap();
+    assert_eq!(rep.completed, 6, "all requests complete");
+    assert_eq!(rep.output_tokens, expected_tokens);
+    assert!(rep.throughput > 0.0);
+    assert!(rep.attn_time > 0.0 && rep.expert_time > 0.0);
+    assert!(rep.decode_iterations > 0);
+    eprintln!(
+        "served 6 reqs: {} tokens, {:.1} tok/s, attn {:.2}s expert {:.2}s coord {:.2}s",
+        rep.output_tokens, rep.throughput, rep.attn_time, rep.expert_time, rep.coord_time
+    );
+}
+
+/// Decoding is deterministic: two engines fed the same requests produce the
+/// same iteration and token counts.
+#[test]
+fn serving_is_deterministic() {
+    let dir = require_artifacts!();
+    let spec = WorkloadSpec {
+        median_input: 4.0,
+        median_output: 4.0,
+        sigma: 0.2,
+        arrival_rate: None,
+        max_len: 64,
+    };
+    let reqs = spec.generate(3, 99);
+    let run = || {
+        let mut e = ServingEngine::load(&dir, 1).unwrap();
+        let r = e.serve(&reqs).unwrap();
+        (r.completed, r.output_tokens, r.decode_iterations)
+    };
+    assert_eq!(run(), run());
+}
+
+/// The grouped-expert fast path (§Perf) and the per-expert path produce
+/// byte-identical decoding: same iteration count, same token totals.
+#[test]
+fn grouped_and_per_expert_paths_agree() {
+    let dir = require_artifacts!();
+    let spec = WorkloadSpec {
+        median_input: 5.0,
+        median_output: 4.0,
+        sigma: 0.2,
+        arrival_rate: None,
+        max_len: 64,
+    };
+    let reqs = spec.generate(4, 123);
+    let run = |grouped: bool| {
+        let mut e = ServingEngine::load(&dir, 1).unwrap();
+        if !grouped {
+            e.disable_grouped_experts();
+        }
+        let r = e.serve(&reqs).unwrap();
+        (r.completed, r.output_tokens, r.decode_iterations)
+    };
+    assert_eq!(run(true), run(false));
+}

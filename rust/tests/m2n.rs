@@ -1,0 +1,130 @@
+//! Integration tests for the M2N communication study (paper §5, §7.3):
+//! the headline comparisons of Figures 5, 10 and 11 in shape.
+
+use megascale_infer::m2n::{simulate_m2n, LibraryKind, LibraryProfile, M2nScenario, M2nStats};
+
+fn run(kind: LibraryKind, m: usize, n: usize, kib: usize, rounds: usize) -> M2nStats {
+    simulate_m2n(&M2nScenario {
+        profile: LibraryProfile::of(kind),
+        senders: m,
+        receivers: n,
+        msg_bytes: kib * 1024,
+        rounds,
+        bidirectional: false,
+        seed: 1234,
+    })
+}
+
+/// Figure 10 @256KB (paper headline): >=50% median latency reduction,
+/// >=80% P99 reduction, >=3x throughput vs NCCL.
+#[test]
+fn fig10_headline_256kb() {
+    let ours = run(LibraryKind::MegaScale, 8, 8, 256, 600);
+    let nccl = run(LibraryKind::Nccl, 8, 8, 256, 600);
+
+    let med_red = 1.0 - ours.latency.median() / nccl.latency.median();
+    assert!(med_red > 0.5, "median reduction {med_red:.2} (paper 68.2%)");
+
+    let p99_red = 1.0 - ours.latency.p99() / nccl.latency.p99();
+    assert!(p99_red > 0.6, "p99 reduction {p99_red:.2} (paper 92.9%)");
+
+    let speedup = ours.throughput / nccl.throughput;
+    assert!(
+        (3.0..8.0).contains(&speedup),
+        "throughput speedup {speedup:.2} (paper 4.2x)"
+    );
+}
+
+/// Figure 10 across sizes: MegaScale wins median latency and throughput at
+/// every size; the small-message regime shows the largest reductions
+/// (paper: up to 80.8% median reduction).
+#[test]
+fn fig10_all_sizes() {
+    let mut best_small_reduction = 0.0f64;
+    for kib in [8usize, 32, 128, 256, 512, 1024] {
+        let ours = run(LibraryKind::MegaScale, 8, 8, kib, 300);
+        let nccl = run(LibraryKind::Nccl, 8, 8, kib, 300);
+        assert!(
+            ours.latency.median() < nccl.latency.median(),
+            "median at {kib}KiB"
+        );
+        assert!(ours.throughput > nccl.throughput, "throughput at {kib}KiB");
+        if kib <= 32 {
+            best_small_reduction = best_small_reduction
+                .max(1.0 - ours.latency.median() / nccl.latency.median());
+        }
+    }
+    assert!(
+        best_small_reduction > 0.6,
+        "small-message reduction {best_small_reduction:.2}"
+    );
+}
+
+/// Figure 11: scaling M=N with 256KB messages — MegaScale wins throughput
+/// 3-8x and cuts tail latency everywhere.
+#[test]
+fn fig11_mn_scaling() {
+    for mn in [8usize, 16, 32] {
+        let ours = run(LibraryKind::MegaScale, mn, mn, 256, 200);
+        let nccl = run(LibraryKind::Nccl, mn, mn, 256, 200);
+        let tput = ours.throughput / nccl.throughput;
+        assert!(
+            tput > 2.5,
+            "M=N={mn}: throughput ratio {tput:.2} (paper 3.3-5.8x)"
+        );
+        let tail_red = 1.0 - ours.latency.p99() / nccl.latency.p99();
+        assert!(
+            tail_red > 0.5,
+            "M=N={mn}: tail reduction {tail_red:.2} (paper 54.7-96.9%)"
+        );
+    }
+}
+
+/// Figure 5: one-to-N — NCCL above the perftest floor at every N, with a
+/// growing tail ratio; perftest stays tight.
+#[test]
+fn fig5_one_to_n() {
+    let mut last_gap = 0.0;
+    for n in [8usize, 16, 32] {
+        let nccl = run(LibraryKind::Nccl, 1, n, 128, 800);
+        let pt = run(LibraryKind::Perftest, 1, n, 128, 800);
+        let gap = nccl.latency.median() / pt.latency.median();
+        assert!(gap > 1.3, "N={n}: NCCL/perftest median gap {gap:.2}");
+        last_gap = gap;
+        // perftest tail stays tight (paper: "only a slight increase").
+        let pt_tail = pt.latency.p99() / pt.latency.median();
+        assert!(pt_tail < 1.3, "N={n}: perftest tail ratio {pt_tail:.2}");
+    }
+    assert!(last_gap > 1.3);
+}
+
+/// Bidirectional ping-pong traffic: the high-priority-ACK design keeps
+/// MegaScale flat while NCCL degrades (the §5 traffic-oriented fix).
+#[test]
+fn bidirectional_ack_priority() {
+    let bi = |kind| {
+        let uni = simulate_m2n(&M2nScenario {
+            profile: LibraryProfile::of(kind),
+            senders: 8,
+            receivers: 8,
+            msg_bytes: 256 * 1024,
+            rounds: 300,
+            bidirectional: false,
+            seed: 7,
+        });
+        let bid = simulate_m2n(&M2nScenario {
+            profile: LibraryProfile::of(kind),
+            senders: 8,
+            receivers: 8,
+            msg_bytes: 256 * 1024,
+            rounds: 300,
+            bidirectional: true,
+            seed: 7,
+        });
+        bid.latency.median() / uni.latency.median()
+    };
+    let ours = bi(LibraryKind::MegaScale);
+    let nccl = bi(LibraryKind::Nccl);
+    assert!(ours < 1.05, "MegaScale bidirectional penalty {ours:.3}");
+    assert!(nccl > ours, "NCCL penalty {nccl:.3} should exceed ours {ours:.3}");
+}

