@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
         median_output: 16.0,
         sigma: 0.4,
         arrival_rate: None,
+        burst_sigma: 0.0,
         max_len: md.max_seq,
     };
     let requests = spec.generate(24, 42);

@@ -8,7 +8,8 @@
 //! * the **virtual-time** driver ([`pingpong`], [`instance`]) advances a
 //!   discrete-event clock using the analytical [`crate::perf_model`] — this
 //!   regenerates every end-to-end figure of the paper at cluster scale;
-//! * the **real** driver ([`crate::runtime::ServingEngine`]) executes the
+//! * the **real** driver (`crate::runtime::ServingEngine`, behind the
+//!   `pjrt` feature) executes the
 //!   AOT-compiled JAX/Pallas artifacts through PJRT using the *same*
 //!   dispatch, gating, KV-cache and batching code.
 
@@ -28,6 +29,6 @@ pub use gating::{softmax_topk, GatingOutput};
 pub use instance::{ExpertTraffic, InstanceReport, RuntimeInstance};
 pub use kv_cache::{BlockAllocator, KvCacheConfig};
 pub use load_balance::{balance_experts, ExpertPlacement};
-pub use pingpong::{PingPongSim, PipelineStats};
+pub use pingpong::{PingPongEngine, PingPongSim, PipelineStats, StageTimes};
 pub use router::{RoutePolicy, Router};
 pub use scheduler::{ContinuousBatcher, SchedulerConfig};

@@ -8,6 +8,17 @@
 //! Eq. 5 exactly when the pipeline is full and exhibits the idle bubbles of
 //! `m < 2·(1 + T_c/T_f)` otherwise — this is the engine behind Figures 12
 //! and 13.
+//!
+//! Two entry points share one event loop:
+//!
+//! * [`PingPongSim`] — constant stage times, the closed-form ablation
+//!   driver (Figures 12/13);
+//! * [`PingPongEngine`] — a *stepwise* engine taking a per-(micro-batch,
+//!   layer) [`StageTimes`] provider, so callers like
+//!   [`crate::sim::cluster`] can drive the pipeline with times that vary
+//!   with the actual routed expert loads and transfer sizes of each hop.
+
+use std::collections::VecDeque;
 
 use crate::sim::EventQueue;
 
@@ -24,15 +35,24 @@ pub struct PipelineStats {
     pub mb_done: Vec<f64>,
 }
 
-/// One decode iteration through `layers` MoE layers with `m` micro-batches.
-#[derive(Debug, Clone)]
-pub struct PingPongSim {
-    /// Attention compute time per micro-batch per layer.
+/// Stage times for one (micro-batch, layer) traversal.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageTimes {
+    /// Attention compute time for this micro-batch at this layer.
     pub t_a: f64,
-    /// Expert compute time per micro-batch per layer.
+    /// Expert compute time for this micro-batch at this layer.
     pub t_e: f64,
-    /// One-direction communication time per micro-batch.
+    /// One-direction communication time (applies to both the dispatch to
+    /// the expert pool and the combine back to the attention pool).
     pub t_c: f64,
+}
+
+/// Stepwise ping-pong pipeline engine over `m` micro-batches and `layers`
+/// MoE layers. Stage times come from a caller-supplied provider, consulted
+/// exactly once per (micro-batch, layer) and memoized, so stateful
+/// providers (RNG-backed gating draws) stay deterministic.
+#[derive(Debug, Clone)]
+pub struct PingPongEngine {
     pub m: usize,
     pub layers: usize,
 }
@@ -51,17 +71,30 @@ enum Ev {
     BackAtAttn { mb: usize, layer: usize },
 }
 
-impl PingPongSim {
-    /// Run the simulation and return stage utilizations + makespan.
-    pub fn run(&self) -> PipelineStats {
+impl PingPongEngine {
+    /// Run the pipeline; `times(mb, layer)` supplies the stage times of
+    /// each hop. Returns stage utilizations + makespan.
+    pub fn run<F: FnMut(usize, usize) -> StageTimes>(&self, mut times: F) -> PipelineStats {
         assert!(self.m >= 1 && self.layers >= 1);
         let mut q: EventQueue<Ev> = EventQueue::new();
+
+        // Memoized per-(mb, layer) stage times: the provider is consulted
+        // once, in deterministic event order.
+        let mut cache: Vec<Option<StageTimes>> = vec![None; self.m * self.layers];
+        let layers = self.layers;
+        let mut t = move |mb: usize, layer: usize| -> StageTimes {
+            let idx = mb * layers + layer;
+            if cache[idx].is_none() {
+                cache[idx] = Some(times(mb, layer));
+            }
+            cache[idx].unwrap()
+        };
 
         // Stage state: busy-until + FIFO of ready micro-batches.
         let mut attn_free_at = 0.0f64;
         let mut expert_free_at = 0.0f64;
-        let mut attn_queue: Vec<(usize, usize)> = Vec::new();
-        let mut expert_queue: Vec<(usize, usize)> = Vec::new();
+        let mut attn_queue: VecDeque<(usize, usize)> = VecDeque::new();
+        let mut expert_queue: VecDeque<(usize, usize)> = VecDeque::new();
         let mut attn_busy = 0.0f64;
         let mut expert_busy = 0.0f64;
         let mut mb_done = vec![0.0f64; self.m];
@@ -75,12 +108,14 @@ impl PingPongSim {
         // a ready event share a timestamp).
         macro_rules! try_start {
             ($now:expr, $q:expr, $queue:ident, $free_at:ident, $busy:ident,
-             $dur:expr, $done:ident) => {
-                if $free_at <= $now && !$queue.is_empty() {
-                    let (mb, layer) = $queue.remove(0);
-                    $free_at = $now + $dur;
-                    $busy += $dur;
-                    $q.schedule_at($free_at, Ev::$done { mb, layer });
+             $stage:ident, $done:ident) => {
+                if $free_at <= $now {
+                    if let Some((mb, layer)) = $queue.pop_front() {
+                        let dur = t(mb, layer).$stage;
+                        $free_at = $now + dur;
+                        $busy += dur;
+                        $q.schedule_at($free_at, Ev::$done { mb, layer });
+                    }
                 }
             };
         }
@@ -88,24 +123,24 @@ impl PingPongSim {
         while let Some((now, ev)) = q.pop() {
             match ev {
                 Ev::AttnReady { mb, layer } => {
-                    attn_queue.push((mb, layer));
-                    try_start!(now, q, attn_queue, attn_free_at, attn_busy, self.t_a, AttnDone);
+                    attn_queue.push_back((mb, layer));
+                    try_start!(now, q, attn_queue, attn_free_at, attn_busy, t_a, AttnDone);
                 }
                 Ev::AttnDone { mb, layer } => {
                     // Dispatch tokens to experts (M2N), arrive after t_c.
-                    q.schedule_at(now + self.t_c, Ev::ExpertReady { mb, layer });
-                    try_start!(now, q, attn_queue, attn_free_at, attn_busy, self.t_a, AttnDone);
+                    q.schedule_at(now + t(mb, layer).t_c, Ev::ExpertReady { mb, layer });
+                    try_start!(now, q, attn_queue, attn_free_at, attn_busy, t_a, AttnDone);
                 }
                 Ev::ExpertReady { mb, layer } => {
-                    expert_queue.push((mb, layer));
+                    expert_queue.push_back((mb, layer));
                     try_start!(
-                        now, q, expert_queue, expert_free_at, expert_busy, self.t_e, ExpertDone
+                        now, q, expert_queue, expert_free_at, expert_busy, t_e, ExpertDone
                     );
                 }
                 Ev::ExpertDone { mb, layer } => {
-                    q.schedule_at(now + self.t_c, Ev::BackAtAttn { mb, layer });
+                    q.schedule_at(now + t(mb, layer).t_c, Ev::BackAtAttn { mb, layer });
                     try_start!(
-                        now, q, expert_queue, expert_free_at, expert_busy, self.t_e, ExpertDone
+                        now, q, expert_queue, expert_free_at, expert_busy, t_e, ExpertDone
                     );
                 }
                 Ev::BackAtAttn { mb, layer } => {
@@ -125,6 +160,36 @@ impl PingPongSim {
             expert_utilization: expert_busy / total_time,
             mb_done,
         }
+    }
+}
+
+/// One decode iteration through `layers` MoE layers with `m` micro-batches
+/// and constant stage times (the paper's analytical setting).
+#[derive(Debug, Clone)]
+pub struct PingPongSim {
+    /// Attention compute time per micro-batch per layer.
+    pub t_a: f64,
+    /// Expert compute time per micro-batch per layer.
+    pub t_e: f64,
+    /// One-direction communication time per micro-batch.
+    pub t_c: f64,
+    pub m: usize,
+    pub layers: usize,
+}
+
+impl PingPongSim {
+    /// Run the simulation and return stage utilizations + makespan.
+    pub fn run(&self) -> PipelineStats {
+        let st = StageTimes {
+            t_a: self.t_a,
+            t_e: self.t_e,
+            t_c: self.t_c,
+        };
+        PingPongEngine {
+            m: self.m,
+            layers: self.layers,
+        }
+        .run(|_, _| st)
     }
 }
 
@@ -231,7 +296,54 @@ mod tests {
         }
         .run();
         // m=2, T_c=0 satisfies constraint 3 with equality: full overlap,
-        // makespan = Eq.5 = 2 + 1*(2*4-1) = 9... Eq.5: (1+1+0)+(8-1) = 9.
+        // makespan = Eq.5 = 2 + 1*(2*4-1) = 9... Eq.5: (1+1+0) + (8-1) = 9.
         assert!((stats.total_time - 9.0).abs() < 1e-9, "{}", stats.total_time);
+    }
+
+    #[test]
+    fn engine_with_constant_provider_matches_sim() {
+        let sim = PingPongSim {
+            t_a: 0.9,
+            t_e: 1.1,
+            t_c: 0.25,
+            m: 3,
+            layers: 12,
+        };
+        let a = sim.run();
+        let b = PingPongEngine { m: 3, layers: 12 }.run(|_, _| StageTimes {
+            t_a: 0.9,
+            t_e: 1.1,
+            t_c: 0.25,
+        });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn engine_provider_called_once_per_hop() {
+        use std::cell::Cell;
+        let calls = Cell::new(0usize);
+        let (m, layers) = (3usize, 5usize);
+        PingPongEngine { m, layers }.run(|_, _| {
+            calls.set(calls.get() + 1);
+            StageTimes {
+                t_a: 1.0,
+                t_e: 1.0,
+                t_c: 0.1,
+            }
+        });
+        assert_eq!(calls.get(), m * layers, "memoization consults each hop once");
+    }
+
+    #[test]
+    fn engine_varying_times_accumulate() {
+        // One micro-batch, no comm: makespan is the sum of all per-layer
+        // stage times.
+        let stats = PingPongEngine { m: 1, layers: 4 }.run(|_, layer| StageTimes {
+            t_a: 1.0 + layer as f64,
+            t_e: 0.5,
+            t_c: 0.0,
+        });
+        let expect: f64 = (0..4).map(|l| 1.0 + l as f64 + 0.5).sum();
+        assert!((stats.total_time - expect).abs() < 1e-9, "{}", stats.total_time);
     }
 }

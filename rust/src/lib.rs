@@ -22,7 +22,12 @@
 //! * **Baselines** — vLLM-like and TensorRT-LLM-like monolithic serving
 //!   simulators sharing the same substrate ([`baselines`]).
 //! * **PJRT runtime** — loads JAX/Pallas-AOT-compiled HLO artifacts and runs
-//!   the same coordinator logic against real compute ([`runtime`]).
+//!   the same coordinator logic against real compute (`runtime`, behind the
+//!   `pjrt` cargo feature: it needs a locally-provided `xla` binding crate,
+//!   see DESIGN.md).
+//! * **Cluster simulator** — a deterministic trace-driven end-to-end serving
+//!   loop composing router → attention pool → gating/dispatch → M2N →
+//!   expert pool → ping-pong pipelining on virtual time ([`sim::cluster`]).
 //!
 //! See `DESIGN.md` for the experiment index and substitution notes, and
 //! `EXPERIMENTS.md` for measured results.
@@ -34,6 +39,7 @@ pub mod m2n;
 pub mod metrics;
 pub mod perf_model;
 pub mod plan;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod util;

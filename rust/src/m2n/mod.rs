@@ -14,9 +14,11 @@
 
 mod profiles;
 mod simnet;
+mod transfer;
 
 pub use profiles::{LibraryKind, LibraryProfile};
 pub use simnet::{simulate_m2n, M2nScenario, M2nStats};
+pub use transfer::TransferModel;
 
 #[cfg(test)]
 mod tests {

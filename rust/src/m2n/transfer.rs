@@ -1,0 +1,124 @@
+//! Calibrated per-transfer latency model: the bridge from the message-level
+//! simnet microbenchmark ([`super::simulate_m2n`]) to the cluster
+//! simulator's per-micro-batch M2N hops.
+//!
+//! Running the full message-level DES inside every pipeline hop of an
+//! end-to-end serving simulation would dominate its cost; instead we probe
+//! the simnet once per (library, M, N) configuration at two message sizes
+//! and fit the affine `latency(bytes) = base + per_byte · bytes` the LogP
+//! family predicts (and the simnet exhibits away from its stall tail).
+//! Calibration is fully deterministic given the seed, so cluster runs stay
+//! bit-replayable.
+
+use super::profiles::LibraryProfile;
+use super::simnet::{simulate_m2n, M2nScenario};
+
+/// Affine per-dispatch latency model for an M-to-N token transfer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferModel {
+    pub senders: usize,
+    pub receivers: usize,
+    /// Fixed per-dispatch latency (seconds): setup, posts, propagation.
+    pub base: f64,
+    /// Marginal seconds per byte of per-(sender, receiver) message size.
+    pub per_byte: f64,
+}
+
+impl TransferModel {
+    /// Probe the simnet at two message sizes and fit the affine model.
+    pub fn calibrate(
+        profile: &LibraryProfile,
+        senders: usize,
+        receivers: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(senders >= 1 && receivers >= 1);
+        let probe = |msg_bytes: usize| {
+            simulate_m2n(&M2nScenario {
+                profile: profile.clone(),
+                senders,
+                receivers,
+                msg_bytes,
+                rounds: 64,
+                bidirectional: true,
+                seed,
+            })
+            .latency
+            .median()
+        };
+        let (s0, s1) = (32 * 1024usize, 512 * 1024usize);
+        let (t0, t1) = (probe(s0), probe(s1));
+        let per_byte = ((t1 - t0) / (s1 - s0) as f64).max(0.0);
+        let base = (t0 - per_byte * s0 as f64).max(0.0);
+        Self {
+            senders,
+            receivers,
+            base,
+            per_byte,
+        }
+    }
+
+    /// Latency of one dispatch in which every (sender, receiver) pair
+    /// carries `pair_bytes` bytes.
+    pub fn latency(&self, pair_bytes: f64) -> f64 {
+        self.base + self.per_byte * pair_bytes.max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::m2n::LibraryKind;
+
+    #[test]
+    fn calibration_is_deterministic() {
+        let p = LibraryProfile::of(LibraryKind::MegaScale);
+        let a = TransferModel::calibrate(&p, 8, 8, 7);
+        let b = TransferModel::calibrate(&p, 8, 8, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn latency_monotone_in_bytes() {
+        let p = LibraryProfile::of(LibraryKind::MegaScale);
+        let t = TransferModel::calibrate(&p, 8, 8, 1);
+        assert!(t.base >= 0.0 && t.per_byte >= 0.0);
+        assert!(t.latency(64.0 * 1024.0) <= t.latency(1024.0 * 1024.0));
+        assert!(t.latency(0.0) >= 0.0);
+    }
+
+    #[test]
+    fn nccl_costs_more_than_megascale() {
+        let ours = TransferModel::calibrate(&LibraryProfile::of(LibraryKind::MegaScale), 8, 8, 3);
+        let nccl = TransferModel::calibrate(&LibraryProfile::of(LibraryKind::Nccl), 8, 8, 3);
+        let sz = 256.0 * 1024.0;
+        assert!(
+            nccl.latency(sz) > ours.latency(sz),
+            "NCCL {} vs MegaScale {}",
+            nccl.latency(sz),
+            ours.latency(sz)
+        );
+    }
+
+    #[test]
+    fn fit_tracks_simnet_between_probe_points() {
+        // The affine fit should land within a factor-ish band of a direct
+        // simnet run at an intermediate size.
+        let p = LibraryProfile::of(LibraryKind::MegaScale);
+        let t = TransferModel::calibrate(&p, 4, 8, 5);
+        let direct = simulate_m2n(&M2nScenario {
+            profile: p.clone(),
+            senders: 4,
+            receivers: 8,
+            msg_bytes: 128 * 1024,
+            rounds: 64,
+            bidirectional: true,
+            seed: 5,
+        })
+        .latency
+        .median();
+        let fit = t.latency(128.0 * 1024.0);
+        let rel = (fit - direct).abs() / direct;
+        assert!(rel < 0.35, "fit {fit} vs direct {direct} (rel {rel})");
+    }
+}

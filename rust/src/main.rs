@@ -4,7 +4,12 @@
 //! msi plan      --model mixtral --attention-gpu ampere [--expert-gpu l40s]
 //!               [--slo-ms 150] [--avg-seq 730] [--all]
 //! msi simulate  --model mixtral --gpu ampere [--requests 512] [--baselines]
+//! msi replay    [--trace t.jsonl | --requests 1000] --model mixtral
+//!               --attention-gpu ampere [--expert-gpu l40s] [--rate 0]
+//!               [--burst 0.0] [--skew 0] [--balance] [--simnet]
+//!               [--micro-batches m] [--seed 42]
 //! msi serve     --artifacts artifacts [--micro-batches 2] [--requests 16]
+//!               (requires the `pjrt` feature)
 //! msi m2n       --library megascale|nccl|perftest [--senders 8]
 //!               [--receivers 8] [--size-kib 256] [--rounds 1000]
 //! msi hardware
@@ -17,14 +22,16 @@ use anyhow::{bail, Result};
 
 use megascale_infer::baselines::{best_under_slo, minimal_deployment, BaselineKind};
 use megascale_infer::config::{gpu_catalog, ClusterSpec, GpuKind, ModelConfig, NodeSpec};
-use megascale_infer::coordinator::RuntimeInstance;
+use megascale_infer::coordinator::{RoutePolicy, RuntimeInstance};
 use megascale_infer::m2n::{simulate_m2n, LibraryKind, LibraryProfile, M2nScenario};
 use megascale_infer::plan::PlanSearcher;
+#[cfg(feature = "pjrt")]
 use megascale_infer::runtime::ServingEngine;
+use megascale_infer::sim::cluster::{ClusterSim, ClusterSimConfig, ExpertPopularity, Transport};
 use megascale_infer::util::cli::Args;
 use megascale_infer::workload::{Trace, WorkloadSpec};
 
-const USAGE: &str = "usage: msi <plan|simulate|serve|m2n|hardware|trace> [--options]
+const USAGE: &str = "usage: msi <plan|simulate|replay|serve|m2n|hardware|trace> [--options]
 run `msi help` or see README.md for details";
 
 fn parse_model(name: &str) -> Result<ModelConfig> {
@@ -50,11 +57,21 @@ fn parse_gpu(name: &str) -> Result<GpuKind> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["all", "baselines"])?;
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["all", "baselines", "balance", "simnet"],
+    )?;
     match args.subcommand.as_str() {
         "plan" => cmd_plan(&args),
         "simulate" => cmd_simulate(&args),
+        "replay" => cmd_replay(&args),
+        #[cfg(feature = "pjrt")]
         "serve" => cmd_serve(&args),
+        #[cfg(not(feature = "pjrt"))]
+        "serve" => bail!(
+            "`msi serve` needs the real-compute path: rebuild with \
+             `--features pjrt` (see DESIGN.md § PJRT runtime)"
+        ),
         "m2n" => cmd_m2n(&args),
         "hardware" => cmd_hardware(),
         "trace" => cmd_trace(&args),
@@ -143,6 +160,98 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Replay a trace (or a synthetic workload) through the end-to-end cluster
+/// simulator: router → attention pool → gating/dispatch → M2N → expert
+/// pool → ping-pong pipeline, on virtual time.
+fn cmd_replay(args: &Args) -> Result<()> {
+    let model = parse_model(&args.str_or("model", "mixtral"))?;
+    let a = parse_gpu(&args.str_or("attention-gpu", "ampere"))?;
+    let e = match args.get("expert-gpu") {
+        Some(g) => parse_gpu(g)?,
+        None => a,
+    };
+    let cluster = ClusterSpec {
+        attention: NodeSpec {
+            gpu: a,
+            gpus_per_node: 8,
+            nodes: None,
+        },
+        expert: NodeSpec {
+            gpu: e,
+            gpus_per_node: 8,
+            nodes: None,
+        },
+    };
+    let seed = args.u64_or("seed", 42)?;
+    let rate = args.f64_or("rate", 0.0)?;
+    let spec = WorkloadSpec {
+        arrival_rate: (rate > 0.0).then_some(rate),
+        burst_sigma: args.f64_or("burst", 0.0)?,
+        ..Default::default()
+    };
+    let requests = match args.get("trace") {
+        Some(path) => Trace::load(&PathBuf::from(path))?.requests,
+        None => spec.generate(args.usize_or("requests", 1000)?, seed),
+    };
+
+    // Size the plan for the workload actually being replayed, not the
+    // synthetic defaults.
+    let avg_seq = {
+        let s = Trace::new(requests.clone()).stats();
+        if s.count == 0 {
+            spec.avg_seq_len()
+        } else {
+            s.avg_seq
+        }
+    };
+    let searcher = PlanSearcher::new(model.clone(), cluster.clone(), avg_seq);
+    let mut plan = searcher
+        .search()
+        .ok_or_else(|| anyhow::anyhow!("no feasible plan"))?;
+    if let Some(m) = args.get("micro-batches") {
+        plan.m = m.parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--micro-batches={m} not an integer"))?
+            .max(1);
+    }
+
+    let skew = args.f64_or("skew", 0.0)?;
+    let popularity = if skew <= 0.0 {
+        ExpertPopularity::Uniform
+    } else if args.flag("balance") {
+        ExpertPopularity::ZipfBalanced(skew)
+    } else {
+        ExpertPopularity::Zipf(skew)
+    };
+    let transport = if args.flag("simnet") {
+        Transport::Simnet(LibraryKind::MegaScale)
+    } else {
+        Transport::Analytic
+    };
+
+    println!(
+        "replay: {} requests | plan tp_a={} tp_e={} n_a={} m={} B={}",
+        requests.len(),
+        plan.tp_a,
+        plan.tp_e,
+        plan.n_a,
+        plan.m,
+        plan.global_batch
+    );
+    let report = ClusterSim::new(ClusterSimConfig {
+        model,
+        cluster,
+        plan,
+        route: RoutePolicy::LeastLoaded,
+        popularity,
+        transport,
+        seed,
+    })
+    .run(&requests);
+    println!("{}", report.summary());
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let m = args.usize_or("micro-batches", 2)?;
@@ -154,6 +263,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         median_output: 16.0,
         sigma: 0.4,
         arrival_rate: None,
+        burst_sigma: 0.0,
         max_len: engine.model().max_seq,
     };
     let reqs = spec.generate(n, seed);

@@ -16,7 +16,7 @@ mod heterogeneous;
 mod simulate;
 
 pub use heterogeneous::{search_heterogeneous, table3_kinds, HeteroResult};
-pub use simulate::{simulate_plan, PlanMetrics};
+pub use simulate::{simulate_plan, simulate_plan_des, PlanMetrics};
 
 use crate::config::{ClusterSpec, ModelConfig};
 use crate::perf_model::PerfModel;

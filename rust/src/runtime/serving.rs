@@ -12,7 +12,7 @@
 //! admitted into free slots; prefill replays the prompt through the decode
 //! step (passive slots re-write their last KV entry, which is idempotent).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
 use std::time::Instant;
 
@@ -58,6 +58,14 @@ pub struct ServingReport {
     /// Wall time in dispatch/combine/sampling on the coordinator.
     pub coord_time: f64,
     pub decode_iterations: u64,
+}
+
+/// Take the first element of an executable's output tuple by value
+/// (front-first drain; the outputs vec is consumed either way).
+fn pop_first(outs: Vec<xla::Literal>) -> xla::Literal {
+    VecDeque::from(outs)
+        .pop_front()
+        .expect("executable returned no outputs")
 }
 
 /// The PJRT-backed serving engine.
@@ -191,11 +199,11 @@ impl ServingEngine {
         // Embed.
         let t0 = Instant::now();
         let ids_buf = self.engine.upload(&i32_literal(&ids_i32, &[b])?)?;
-        let x = self
-            .engine
-            .run_b("embed", &[&ids_buf, self.w("emb")?])
-            .context("embed")?
-            .remove(0);
+        let x = pop_first(
+            self.engine
+                .run_b("embed", &[&ids_buf, self.w("emb")?])
+                .context("embed")?,
+        );
         let mut x = self.engine.upload(&x)?;
         t_coord += t0.elapsed().as_secs_f64();
 
@@ -267,10 +275,8 @@ impl ServingEngine {
                 let te = Instant::now();
                 let xall_buf = self.engine.upload(&xall.to_literal()?)?;
                 let (w1, w3, w2) = &self.grouped_w.as_ref().unwrap()[layer];
-                let yall = self
-                    .engine
-                    .run_b("experts_grouped", &[&xall_buf, w1, w3, w2])?
-                    .remove(0);
+                let yall =
+                    pop_first(self.engine.run_b("experts_grouped", &[&xall_buf, w1, w3, w2])?);
                 t_expert += te.elapsed().as_secs_f64();
 
                 let tc = Instant::now();
@@ -303,18 +309,15 @@ impl ServingEngine {
 
                     let te = Instant::now();
                     let xe_buf = self.engine.upload(&xe.to_literal()?)?;
-                    let ye = self
-                        .engine
-                        .run_b(
-                            "expert",
-                            &[
-                                &xe_buf,
-                                self.w(&format!("l{layer}.e{e}.w1"))?,
-                                self.w(&format!("l{layer}.e{e}.w3"))?,
-                                self.w(&format!("l{layer}.e{e}.w2"))?,
-                            ],
-                        )?
-                        .remove(0);
+                    let ye = pop_first(self.engine.run_b(
+                        "expert",
+                        &[
+                            &xe_buf,
+                            self.w(&format!("l{layer}.e{e}.w1"))?,
+                            self.w(&format!("l{layer}.e{e}.w3"))?,
+                            self.w(&format!("l{layer}.e{e}.w2"))?,
+                        ],
+                    )?);
                     t_expert += te.elapsed().as_secs_f64();
 
                     let tc = Instant::now();
@@ -337,10 +340,10 @@ impl ServingEngine {
 
         // LM head + sampling.
         let t0 = Instant::now();
-        let logits = self
-            .engine
-            .run_b("lm_head", &[&x, self.w("final_norm")?, self.w("emb")?])?
-            .remove(0);
+        let logits = pop_first(
+            self.engine
+                .run_b("lm_head", &[&x, self.w("final_norm")?, self.w("emb")?])?,
+        );
         let next = argmax_rows(&HostTensor::from_literal(&logits)?);
         t_coord += t0.elapsed().as_secs_f64();
 

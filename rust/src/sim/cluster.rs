@@ -1,0 +1,691 @@
+//! Trace-driven end-to-end cluster simulator: the whole MegaScale-Infer
+//! serving loop on deterministic virtual time.
+//!
+//! The seed grew each subsystem in isolation — router, continuous batcher,
+//! KV allocator, gating/dispatch, M2N network model, ping-pong pipeline
+//! DES, analytical perf model. This module composes them into ONE loop, the
+//! engine behind the end-to-end figures (8, 9, 12, 13) and the substrate
+//! the regression suite drives:
+//!
+//! ```text
+//!            workload::Trace (Poisson/bursty/replayed JSONL)
+//!                 │ arrivals
+//!                 ▼
+//!       coordinator::Router  (least-loaded / round-robin, KV-aware)
+//!                 │ per-attention-node queues
+//!                 ▼
+//!   attention pool: n_a nodes × ContinuousBatcher + BlockAllocator
+//!                 │ decode batch split into m micro-batches
+//!                 ▼
+//!   per (micro-batch, layer):  gating softmax_topk → build_dispatch
+//!                 │ per-expert token loads
+//!                 ▼
+//!   M2N transfer (Eq. 6 analytic or simnet-calibrated TransferModel)
+//!                 ▼
+//!   expert pool: n_e nodes (hottest node paces the stage; optional §6
+//!                greedy redundancy re-balancing)
+//!                 ▼
+//!   coordinator::PingPongEngine — stepwise ping-pong DES over all layers
+//!                 │ iteration latency
+//!                 ▼
+//!   metrics: TTFT / TPOT / E2E histograms, per-pool utilization,
+//!            tokens/s/GPU
+//! ```
+//!
+//! Everything is seeded through [`SimRng`]; two runs with the same
+//! configuration and seed produce bit-identical reports.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::{ClusterSpec, ModelConfig};
+use crate::coordinator::{
+    balance_experts, build_dispatch, softmax_topk, BlockAllocator, ContinuousBatcher,
+    GatingOutput, KvCacheConfig, PingPongEngine, RoutePolicy, Router, SchedulerConfig,
+    StageTimes,
+};
+use crate::m2n::{LibraryKind, LibraryProfile, TransferModel};
+use crate::metrics::{Histogram, Utilization};
+use crate::perf_model::PerfModel;
+use crate::plan::DeploymentPlan;
+use crate::sim::SimRng;
+use crate::workload::Request;
+
+/// Expert-popularity model driving the synthetic gating logits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ExpertPopularity {
+    /// Deterministic round-robin token placement: expert loads are exactly
+    /// balanced every micro-batch. This is the perf-model assumption and
+    /// the right setting for validating the DES against Eq. 4–6.
+    Ideal,
+    /// IID uniform routing through the real gating path (multinomial load
+    /// noise included).
+    Uniform,
+    /// Zipf(alpha) popularity over a seed-derived expert permutation with
+    /// static one-expert-per-node placement: the expert stage runs at the
+    /// pace of the hottest node (paper §6 motivation).
+    Zipf(f64),
+    /// Same skew, but the §6 greedy redundancy balancer re-places experts
+    /// every micro-batch from the observed loads.
+    ZipfBalanced(f64),
+}
+
+/// How M2N transfer time is obtained.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Transport {
+    /// Eq. 6 bandwidth-utilization model ([`crate::perf_model::CommModel`]).
+    Analytic,
+    /// Affine latency calibrated from the message-level simnet for the
+    /// given library ([`TransferModel`]).
+    Simnet(LibraryKind),
+}
+
+/// Full scenario description.
+#[derive(Debug, Clone)]
+pub struct ClusterSimConfig {
+    pub model: ModelConfig,
+    /// Possibly heterogeneous hardware (attention vs expert GPU kinds).
+    pub cluster: ClusterSpec,
+    /// Deployment shape: `tp_a`, `tp_e`, `n_a` (attention:expert pool-size
+    /// ratio), `m` (micro-batch count), `global_batch`. Override fields to
+    /// sweep scenarios the plan search would not pick.
+    pub plan: DeploymentPlan,
+    pub route: RoutePolicy,
+    pub popularity: ExpertPopularity,
+    pub transport: Transport,
+    pub seed: u64,
+}
+
+/// Aggregate report of one simulated run.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// Requests fully decoded.
+    pub completed: u64,
+    /// Output tokens generated.
+    pub tokens: u64,
+    /// Virtual time elapsed (seconds).
+    pub elapsed: f64,
+    /// Decode iterations executed.
+    pub iterations: u64,
+    /// Output tokens per second.
+    pub throughput: f64,
+    /// Output tokens per second per GPU.
+    pub per_gpu_throughput: f64,
+    /// Time to first token (admission wait + first decode iteration).
+    pub ttft: Histogram,
+    /// Per-decode-iteration latency (time per output token).
+    pub tpot: Histogram,
+    /// Request end-to-end latency (arrival → last token).
+    pub e2e: Histogram,
+    /// Attention-pool busy fraction over the whole run (idle gaps count).
+    pub attn_utilization: f64,
+    /// Expert-pool busy fraction over the whole run.
+    pub expert_utilization: f64,
+    /// Output tokens produced by each attention node (router spread).
+    pub per_node_tokens: Vec<u64>,
+    /// Requests left unserved (KV capacity could never admit them).
+    pub rejected: u64,
+    /// Mean effective per-(micro-batch, layer) stage times actually fed to
+    /// the pipeline engine — the DES-vs-Eq.5 cross-check anchors here.
+    pub mean_t_a: f64,
+    pub mean_t_e: f64,
+    pub mean_t_c: f64,
+}
+
+impl ClusterReport {
+    /// Deterministic multi-line rendering (diffable across runs).
+    pub fn summary(&self) -> String {
+        format!(
+            "completed {} requests | {} output tokens in {:.3}s over {} iterations\n\
+             throughput {:.1} tok/s | {:.3} tok/s/GPU\n\
+             TTFT  p50 {:.1} ms  p99 {:.1} ms\n\
+             TPOT  p50 {:.1} ms  p99 {:.1} ms\n\
+             E2E   p50 {:.2} s   p99 {:.2} s\n\
+             utilization: attention {:.1}%  expert {:.1}%\n\
+             stage times: T_a {:.3} ms  T_e {:.3} ms  T_c {:.3} ms | rejected {}",
+            self.completed,
+            self.tokens,
+            self.elapsed,
+            self.iterations,
+            self.throughput,
+            self.per_gpu_throughput,
+            self.ttft.median() * 1e3,
+            self.ttft.p99() * 1e3,
+            self.tpot.median() * 1e3,
+            self.tpot.p99() * 1e3,
+            self.e2e.median(),
+            self.e2e.p99(),
+            self.attn_utilization * 100.0,
+            self.expert_utilization * 100.0,
+            self.mean_t_a * 1e3,
+            self.mean_t_e * 1e3,
+            self.mean_t_c * 1e3,
+            self.rejected,
+        )
+    }
+}
+
+/// Normalized Zipf(alpha) popularity over a randomly-rotated expert order.
+/// `alpha = 0` degenerates to uniform.
+pub fn popularity_weights(experts: usize, alpha: f64, rng: &mut SimRng) -> Vec<f64> {
+    assert!(experts >= 1);
+    let mut w: Vec<f64> = (0..experts)
+        .map(|i| ((i + 1) as f64).powf(-alpha))
+        .collect();
+    let rot = rng.below(experts);
+    w.rotate_left(rot);
+    let sum: f64 = w.iter().sum();
+    for x in &mut w {
+        *x /= sum;
+    }
+    w
+}
+
+/// Draw a gating decision for `tokens` tokens whose expert preference
+/// follows `weights`: Gumbel-top-k perturbed log-weights run through the
+/// REAL `softmax_topk` kernel, so dispatch-table construction, weight
+/// renormalization and load accounting all exercise the production path.
+pub fn draw_gating(rng: &mut SimRng, tokens: usize, weights: &[f64], k: usize) -> GatingOutput {
+    let e = weights.len();
+    let k = k.clamp(1, e);
+    let mut logits = vec![0f32; tokens * e];
+    for t in 0..tokens {
+        for (i, &w) in weights.iter().enumerate() {
+            let u = rng.uniform().clamp(1e-12, 1.0 - 1e-12);
+            let gumbel = -(-(u.ln())).ln();
+            logits[t * e + i] = (w.max(1e-300).ln() + gumbel) as f32;
+        }
+    }
+    softmax_topk(&logits, e, k)
+}
+
+/// Per-attention-node serving state.
+struct AttnNode {
+    batcher: ContinuousBatcher,
+    kv: BlockAllocator,
+}
+
+/// The end-to-end cluster simulator.
+pub struct ClusterSim {
+    pub cfg: ClusterSimConfig,
+}
+
+impl ClusterSim {
+    pub fn new(cfg: ClusterSimConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// KV-token capacity of one attention node (Eq. 8 budget).
+    fn node_kv_tokens(&self) -> u64 {
+        let gpu = self.cfg.cluster.attention_gpu();
+        let budget =
+            self.cfg.plan.tp_a as f64 * gpu.mem_bytes() - self.cfg.model.attn_param_bytes();
+        (budget.max(0.0) / self.cfg.model.kv_bytes_per_token()).floor() as u64
+    }
+
+    /// Simulate serving `requests` to completion. Closed loop when every
+    /// arrival is 0, open loop (trace replay) otherwise.
+    pub fn run(&self, requests: &[Request]) -> ClusterReport {
+        let cfg = &self.cfg;
+        let model = &cfg.model;
+        let plan = &cfg.plan;
+        let n_a = plan.n_a.max(1);
+        let n_e = plan.n_e.max(1);
+        let m = plan.m.max(1);
+        let layers = model.layers.max(1);
+        let experts = model.experts.max(1);
+        let top_k = model.top_k.clamp(1, experts);
+
+        // --- deterministic random streams -------------------------------
+        let mut perm_rng = SimRng::new(cfg.seed ^ 0x5bd1_e995_u64);
+        let mut rng = SimRng::new(cfg.seed);
+        let (pop, balanced) = match cfg.popularity {
+            ExpertPopularity::Ideal => (None, false),
+            ExpertPopularity::Uniform => {
+                (Some(popularity_weights(experts, 0.0, &mut perm_rng)), false)
+            }
+            ExpertPopularity::Zipf(a) => {
+                (Some(popularity_weights(experts, a, &mut perm_rng)), false)
+            }
+            ExpertPopularity::ZipfBalanced(a) => {
+                (Some(popularity_weights(experts, a, &mut perm_rng)), true)
+            }
+        };
+
+        // --- transport --------------------------------------------------
+        let transfer = match cfg.transport {
+            Transport::Analytic => None,
+            Transport::Simnet(kind) => Some(TransferModel::calibrate(
+                &LibraryProfile::of(kind),
+                (n_a * plan.tp_a).max(1),
+                (n_e * plan.tp_e).max(1),
+                cfg.seed,
+            )),
+        };
+        // --- attention pool + router ------------------------------------
+        // Eq. 8 capacity, capped at the trace's total demand (plus one
+        // block per request for partial-block rounding): capacity beyond
+        // what the whole workload can ever occupy is unreachable, and not
+        // materializing it keeps the block allocator small.
+        let demand: u64 = requests
+            .iter()
+            .map(|r| (r.input_len + r.output_len + 16) as u64)
+            .sum();
+        let kv_tokens = self.node_kv_tokens().min(demand.max(16));
+        let mut router = Router::new(cfg.route, &vec![kv_tokens; n_a]);
+        let node_batch = plan.global_batch.div_ceil(n_a).max(1);
+        let mut nodes: Vec<AttnNode> = (0..n_a)
+            .map(|_| AttnNode {
+                batcher: ContinuousBatcher::new(SchedulerConfig {
+                    max_batch: node_batch,
+                }),
+                kv: BlockAllocator::new(KvCacheConfig {
+                    block_size: 16,
+                    num_blocks: (kv_tokens / 16) as usize,
+                }),
+            })
+            .collect();
+
+        // --- arrival stream ----------------------------------------------
+        let mut arrivals: Vec<Request> = requests.to_vec();
+        arrivals.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        let by_id: HashMap<u64, Request> =
+            arrivals.iter().map(|r| (r.id, r.clone())).collect();
+        let mut next_arrival = 0usize;
+        // Requests the router could not place yet (fleet KV full).
+        let mut overflow: VecDeque<Request> = VecDeque::new();
+        // request id -> attention node (for completion accounting).
+        let mut placed_on: HashMap<u64, usize> = HashMap::new();
+
+        // --- metrics ------------------------------------------------------
+        let mut ttft = Histogram::new();
+        let mut tpot = Histogram::new();
+        let mut e2e = Histogram::new();
+        let mut attn_util = Utilization::new();
+        let mut expert_util = Utilization::new();
+        let mut per_node_tokens = vec![0u64; n_a];
+        let mut tokens = 0u64;
+        let mut completed = 0u64;
+        let mut iterations = 0u64;
+        let (mut sum_t_a, mut sum_t_e, mut sum_t_c) = (0.0f64, 0.0f64, 0.0f64);
+        let mut stage_samples = 0u64;
+
+        let mut now = 0.0f64;
+        loop {
+            // 1. Route arrivals due by `now`, strictly FIFO: drain the
+            //    overflow queue head-first and stop at the first request
+            //    that still does not fit — later arrivals queue behind it
+            //    rather than jumping into freed capacity.
+            loop {
+                let Some(r) = overflow.front() else { break };
+                let Some(nid) = router.route(r) else { break };
+                let r = overflow.pop_front().unwrap();
+                placed_on.insert(r.id, nid);
+                nodes[nid].batcher.submit(r);
+            }
+            while next_arrival < arrivals.len() && arrivals[next_arrival].arrival <= now {
+                let r = arrivals[next_arrival].clone();
+                next_arrival += 1;
+                if !overflow.is_empty() {
+                    overflow.push_back(r);
+                    continue;
+                }
+                match router.route(&r) {
+                    Some(nid) => {
+                        placed_on.insert(r.id, nid);
+                        nodes[nid].batcher.submit(r);
+                    }
+                    None => overflow.push_back(r),
+                }
+            }
+
+            // 2. Iteration-boundary admission on every node.
+            for node in nodes.iter_mut() {
+                node.batcher.admit(&mut node.kv, now);
+            }
+
+            // 3. Idle handling: jump to the next arrival, or stop.
+            let batch_total: usize = nodes.iter().map(|n| n.batcher.batch.len()).sum();
+            if batch_total == 0 {
+                if next_arrival < arrivals.len() {
+                    now = arrivals[next_arrival].arrival.max(now);
+                    continue;
+                }
+                // No active work and no future arrivals: anything still
+                // waiting can never be admitted (nothing will free KV).
+                break;
+            }
+
+            // 4. Build the per-(micro-batch, layer) stage-time matrix from
+            //    the live batch composition.
+            let avg_seq = {
+                let sum: f64 = nodes
+                    .iter()
+                    .map(|n| n.batcher.batch.avg_seq_len() * n.batcher.batch.len() as f64)
+                    .sum();
+                (sum / batch_total as f64).max(1.0)
+            };
+            let pm = PerfModel::new(model, &cfg.cluster, plan.tp_a, plan.tp_e, avg_seq);
+            let splits: Vec<Vec<usize>> = nodes
+                .iter()
+                .map(|n| n.batcher.batch.micro_batch_sizes(m))
+                .collect();
+
+            let mut times = vec![
+                vec![
+                    StageTimes {
+                        t_a: 0.0,
+                        t_e: 0.0,
+                        t_c: 0.0
+                    };
+                    layers
+                ];
+                m
+            ];
+            // The T_e model (k3·b_e + k4) is calibrated per *expert*; a node
+            // hosting several experts streams each one's weight panels, so
+            // charge the extra k4 floors when n_e < experts.
+            let extra_weight_loads =
+                (experts.div_ceil(n_e).saturating_sub(1)) as f64 * pm.expert.k4;
+            for (j, times_j) in times.iter_mut().enumerate() {
+                // Slowest attention node paces the attention stage.
+                let b_a = splits.iter().map(|s| s[j]).max().unwrap_or(0) as f64;
+                let tok_j: usize = splits.iter().map(|s| s[j]).sum();
+                for times_jl in times_j.iter_mut() {
+                    // Gating + dispatch for this hop: per-expert-node loads.
+                    let hot_tokens = match &pop {
+                        None => {
+                            // Ideal: exact round-robin balance.
+                            let dispatched = tok_j * top_k;
+                            dispatched.div_ceil(n_e) as f64
+                        }
+                        Some(weights) => {
+                            let g = draw_gating(&mut rng, tok_j, weights, top_k);
+                            let dp = build_dispatch(&g, experts);
+                            let mut node_load = vec![0.0f64; n_e];
+                            for e in 0..experts {
+                                node_load[e % n_e] += dp.expert_load(e) as f64;
+                            }
+                            if balanced {
+                                let mean =
+                                    node_load.iter().sum::<f64>() / n_e as f64;
+                                balance_experts(&node_load, n_e, 0.1 * mean).makespan
+                            } else {
+                                node_load.iter().copied().fold(0.0, f64::max)
+                            }
+                        }
+                    };
+                    let t_a = pm.t_a(b_a);
+                    let t_e = pm.t_e(hot_tokens) + extra_weight_loads;
+                    let t_c = match &transfer {
+                        None => pm.t_c(b_a, hot_tokens),
+                        Some(tm) => {
+                            let pair_bytes =
+                                pm.comm.send_bytes(b_a) / tm.receivers as f64;
+                            tm.latency(pair_bytes)
+                        }
+                    };
+                    sum_t_a += t_a;
+                    sum_t_e += t_e;
+                    sum_t_c += t_c;
+                    stage_samples += 1;
+                    *times_jl = StageTimes { t_a, t_e, t_c };
+                }
+            }
+
+            // 5. Shuttle the micro-batches through all layers.
+            let stats =
+                PingPongEngine { m, layers }.run(|mb, layer| times[mb][layer]);
+            let t_iter = stats.total_time;
+            let end = now + t_iter;
+            attn_util.add_busy(stats.attn_utilization * t_iter);
+            expert_util.add_busy(stats.expert_utilization * t_iter);
+            tpot.record(t_iter);
+            iterations += 1;
+
+            // 6. Account the iteration: one token per active request.
+            for (nid, node) in nodes.iter_mut().enumerate() {
+                let b = node.batcher.batch.len() as u64;
+                tokens += b;
+                per_node_tokens[nid] += b;
+                // Requests decoding their FIRST token this iteration.
+                for r in &node.batcher.batch.requests {
+                    if r.decoded == 0 {
+                        if let Some(q) = by_id.get(&r.id) {
+                            ttft.record(end - q.arrival);
+                        }
+                    }
+                }
+                for id in node.batcher.complete_iteration(&mut node.kv) {
+                    completed += 1;
+                    if let Some(q) = by_id.get(&id) {
+                        e2e.record(end - q.arrival);
+                        if let Some(nid2) = placed_on.remove(&id) {
+                            router.complete(nid2, q);
+                        }
+                    }
+                }
+            }
+            now = end;
+        }
+
+        attn_util.set_horizon(now);
+        expert_util.set_horizon(now);
+        let gpus = (plan.tp_a * n_a + plan.tp_e * n_e) as f64;
+        let throughput = if now > 0.0 { tokens as f64 / now } else { 0.0 };
+        let rejected =
+            (overflow.len() + nodes.iter().map(|n| n.batcher.waiting.len()).sum::<usize>())
+                as u64;
+        let samples = stage_samples.max(1) as f64;
+        ClusterReport {
+            completed,
+            tokens,
+            elapsed: now,
+            iterations,
+            throughput,
+            per_gpu_throughput: throughput / gpus.max(1.0),
+            ttft,
+            tpot,
+            e2e,
+            attn_utilization: attn_util.fraction(),
+            expert_utilization: expert_util.fraction(),
+            per_node_tokens,
+            rejected,
+            mean_t_a: sum_t_a / samples,
+            mean_t_e: sum_t_e / samples,
+            mean_t_c: sum_t_c / samples,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuKind;
+    use crate::plan::PlanSearcher;
+    use crate::workload::WorkloadSpec;
+
+    fn tiny_setup() -> ClusterSimConfig {
+        let model = ModelConfig::tiny();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        let plan = PlanSearcher::new(model.clone(), cluster.clone(), 200.0)
+            .search()
+            .expect("tiny plan");
+        ClusterSimConfig {
+            model,
+            cluster,
+            plan,
+            route: RoutePolicy::LeastLoaded,
+            popularity: ExpertPopularity::Uniform,
+            transport: Transport::Analytic,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn closed_loop_completes_everything() {
+        let cfg = tiny_setup();
+        let reqs = WorkloadSpec {
+            median_input: 64.0,
+            median_output: 8.0,
+            sigma: 0.3,
+            ..Default::default()
+        }
+        .generate(48, 5);
+        let rep = ClusterSim::new(cfg).run(&reqs);
+        assert_eq!(rep.completed, 48);
+        let want: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
+        assert_eq!(rep.tokens, want, "every output token accounted once");
+        assert_eq!(rep.rejected, 0);
+        assert!(rep.throughput > 0.0);
+        assert_eq!(rep.ttft.count(), 48, "one TTFT sample per request");
+        assert_eq!(rep.e2e.count(), 48);
+    }
+
+    #[test]
+    fn open_loop_ttft_includes_queueing() {
+        let cfg = tiny_setup();
+        let reqs = WorkloadSpec {
+            median_input: 64.0,
+            median_output: 8.0,
+            sigma: 0.3,
+            arrival_rate: Some(50.0),
+            ..Default::default()
+        }
+        .generate(64, 9);
+        let rep = ClusterSim::new(cfg).run(&reqs);
+        assert_eq!(rep.completed, 64);
+        assert!(rep.ttft.min() > 0.0, "TTFT strictly positive");
+        // E2E of any request is at least its decode time ≥ TTFT sample min.
+        assert!(rep.e2e.min() >= rep.ttft.min());
+        assert!(rep.elapsed >= reqs.last().unwrap().arrival);
+    }
+
+    #[test]
+    fn router_spreads_tokens_across_nodes() {
+        let mut cfg = tiny_setup();
+        cfg.plan.n_a = 4;
+        let reqs = WorkloadSpec {
+            median_input: 64.0,
+            median_output: 12.0,
+            sigma: 0.2,
+            ..Default::default()
+        }
+        .generate(160, 3);
+        let rep = ClusterSim::new(cfg).run(&reqs);
+        let max = *rep.per_node_tokens.iter().max().unwrap() as f64;
+        let mean = rep.per_node_tokens.iter().sum::<u64>() as f64
+            / rep.per_node_tokens.len() as f64;
+        assert!(mean > 0.0);
+        assert!(max / mean < 1.35, "per-node tokens {:?}", rep.per_node_tokens);
+    }
+
+    #[test]
+    fn skew_hurts_and_balancing_recovers() {
+        // Needs a compute-bound expert stage: at tiny scale the weight-load
+        // floor (k4) hides imbalance entirely, so use the Mixtral operating
+        // point with a saturated planned batch (paper §6 setting).
+        let model = ModelConfig::mixtral_8x22b();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        let plan = PlanSearcher::new(model.clone(), cluster.clone(), 730.0)
+            .search()
+            .expect("mixtral plan");
+        let reqs = WorkloadSpec {
+            median_output: 12.0,
+            sigma: 0.1,
+            ..Default::default()
+        }
+        .generate(plan.global_batch.min(8192), 7);
+        let run = |pop| {
+            ClusterSim::new(ClusterSimConfig {
+                model: model.clone(),
+                cluster: cluster.clone(),
+                plan: plan.clone(),
+                route: RoutePolicy::LeastLoaded,
+                popularity: pop,
+                transport: Transport::Analytic,
+                seed: 9,
+            })
+            .run(&reqs)
+            .throughput
+        };
+        let uniform = run(ExpertPopularity::Uniform);
+        let skewed = run(ExpertPopularity::Zipf(1.2));
+        let balanced = run(ExpertPopularity::ZipfBalanced(1.2));
+        assert!(
+            skewed < uniform * 0.9,
+            "skew should hurt: {skewed} vs {uniform}"
+        );
+        assert!(
+            balanced > skewed * 1.05,
+            "balancing should recover: {balanced} vs {skewed}"
+        );
+        // Fractional balancing can slightly beat uniform-with-noise (whose
+        // hottest expert sits ~2σ above the mean), but not by much.
+        assert!(balanced <= uniform * 1.15, "cannot beat uniform by much");
+    }
+
+    #[test]
+    fn heterogeneous_pools_run() {
+        let model = ModelConfig::tiny();
+        let cluster = ClusterSpec::heterogeneous_h20_l40s();
+        let plan = PlanSearcher::new(model.clone(), cluster.clone(), 200.0)
+            .search()
+            .expect("hetero plan");
+        let reqs = WorkloadSpec {
+            median_input: 64.0,
+            median_output: 8.0,
+            sigma: 0.2,
+            ..Default::default()
+        }
+        .generate(32, 2);
+        let rep = ClusterSim::new(ClusterSimConfig {
+            model,
+            cluster,
+            plan,
+            route: RoutePolicy::RoundRobin,
+            popularity: ExpertPopularity::Uniform,
+            transport: Transport::Analytic,
+            seed: 4,
+        })
+        .run(&reqs);
+        assert_eq!(rep.completed, 32);
+        assert!(rep.attn_utilization > 0.0 && rep.attn_utilization <= 1.0);
+        assert!(rep.expert_utilization > 0.0 && rep.expert_utilization <= 1.0);
+    }
+
+    #[test]
+    fn simnet_transport_slower_than_free_wire_but_finite() {
+        let mut cfg = tiny_setup();
+        let reqs = WorkloadSpec {
+            median_input: 64.0,
+            median_output: 8.0,
+            sigma: 0.2,
+            ..Default::default()
+        }
+        .generate(32, 6);
+        cfg.transport = Transport::Simnet(LibraryKind::MegaScale);
+        let rep = ClusterSim::new(cfg).run(&reqs);
+        assert_eq!(rep.completed, 32);
+        assert!(rep.mean_t_c > 0.0);
+    }
+
+    #[test]
+    fn gating_draw_follows_popularity() {
+        let mut rng = SimRng::new(1);
+        let mut perm = SimRng::new(2);
+        let w = popularity_weights(8, 1.5, &mut perm);
+        let g = draw_gating(&mut rng, 4000, &w, 2);
+        let loads = g.expert_loads(8);
+        assert_eq!(loads.iter().sum::<usize>(), 8000);
+        // The most popular expert receives more top-k traffic than the
+        // least popular one.
+        let hot = (0..8).max_by(|&a, &b| w[a].total_cmp(&w[b])).unwrap();
+        let cold = (0..8).min_by(|&a, &b| w[a].total_cmp(&w[b])).unwrap();
+        assert!(
+            loads[hot] > loads[cold] * 2,
+            "hot {} cold {}",
+            loads[hot],
+            loads[cold]
+        );
+    }
+}

@@ -1,12 +1,15 @@
 //! Discrete-event simulation core shared by the M2N network simulator and
-//! the coordinator's virtual-time backend.
+//! the coordinator's virtual-time backend, plus the trace-driven end-to-end
+//! cluster simulator ([`cluster`]).
 //!
 //! A minimal, fast event queue: virtual clock in f64 seconds, binary-heap
 //! scheduling, deterministic tie-breaking by insertion sequence so repeated
 //! runs are bit-identical.
 
+pub mod cluster;
 mod rng;
 
+pub use cluster::{ClusterReport, ClusterSim, ClusterSimConfig, ExpertPopularity, Transport};
 pub use rng::SimRng;
 
 use std::cmp::Ordering;

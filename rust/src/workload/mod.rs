@@ -56,6 +56,11 @@ pub struct WorkloadSpec {
     pub sigma: f64,
     /// Mean request arrival rate, requests/second (None = closed loop).
     pub arrival_rate: Option<f64>,
+    /// Arrival burstiness: 0.0 keeps pure Poisson arrivals; larger values
+    /// modulate each inter-arrival gap by a unit-mean log-normal with this
+    /// sigma, producing the clustered bursts + lulls of production traffic
+    /// while preserving the mean rate.
+    pub burst_sigma: f64,
     /// Clamp lengths into [1, max_len].
     pub max_len: usize,
 }
@@ -67,6 +72,7 @@ impl Default for WorkloadSpec {
             median_output: 159.0,
             sigma: 0.7,
             arrival_rate: None,
+            burst_sigma: 0.0,
             max_len: 8192,
         }
     }
@@ -89,7 +95,15 @@ impl WorkloadSpec {
         (0..n as u64)
             .map(|id| {
                 if let Some(rate) = self.arrival_rate {
-                    t += rng.exponential(1.0 / rate);
+                    let mut gap = rng.exponential(1.0 / rate);
+                    if self.burst_sigma > 0.0 {
+                        // Unit-mean log-normal modulation: median exp(-σ²/2)
+                        // has mean 1, so the arrival rate is preserved while
+                        // the inter-arrival CV grows.
+                        let s = self.burst_sigma;
+                        gap *= rng.lognormal_median((-s * s / 2.0).exp(), s);
+                    }
+                    t += gap;
                 }
                 Request {
                     id,
@@ -140,6 +154,33 @@ mod tests {
         }
         let duration = reqs.last().unwrap().arrival;
         assert!((duration - 10.0).abs() < 4.0, "~100 reqs at 10/s => ~10s");
+    }
+
+    #[test]
+    fn bursty_preserves_rate_and_raises_variance() {
+        let n = 20_000;
+        let gaps = |burst_sigma: f64| -> Vec<f64> {
+            let reqs = WorkloadSpec {
+                arrival_rate: Some(10.0),
+                burst_sigma,
+                ..Default::default()
+            }
+            .generate(n, 17);
+            reqs.windows(2).map(|w| w[1].arrival - w[0].arrival).collect()
+        };
+        let stats = |v: &[f64]| {
+            let mean = v.iter().sum::<f64>() / v.len() as f64;
+            let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / v.len() as f64;
+            (mean, var.sqrt() / mean) // (mean, CV)
+        };
+        let (mean_p, cv_p) = stats(&gaps(0.0));
+        let (mean_b, cv_b) = stats(&gaps(1.0));
+        // Mean rate preserved within 5%.
+        assert!((mean_p - 0.1).abs() / 0.1 < 0.05, "poisson mean {mean_p}");
+        assert!((mean_b - 0.1).abs() / 0.1 < 0.10, "bursty mean {mean_b}");
+        // Poisson CV ≈ 1; bursty CV well above it.
+        assert!((cv_p - 1.0).abs() < 0.1, "poisson cv {cv_p}");
+        assert!(cv_b > 1.3, "bursty cv {cv_b} should exceed Poisson");
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! End-to-end tests for the trace-driven cluster simulator
+//! (`sim::cluster`): golden agreement with the paper's closed forms in the
+//! pipeline-full regime, the utilization gap below constraint 3, and
+//! bit-exact determinism under a fixed seed.
+
+use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
+use megascale_infer::coordinator::RoutePolicy;
+use megascale_infer::m2n::LibraryKind;
+use megascale_infer::perf_model::{IterationModel, PerfModel};
+use megascale_infer::plan::{simulate_plan, DeploymentPlan};
+use megascale_infer::sim::cluster::{
+    ClusterSim, ClusterSimConfig, ExpertPopularity, Transport,
+};
+use megascale_infer::workload::{Request, WorkloadSpec};
+
+/// A hand-specified Mixtral deployment point (same region the seed's plan
+/// tests exercise) with an exactly divisible batch: `b_a = B/(m·n_a)` and
+/// `b_e = B·K/(m·E)` are integral, so the Ideal-popularity run feeds the
+/// pipeline the very same stage times the closed forms use.
+fn fixed_plan(m: usize, global_batch: usize) -> (ModelConfig, ClusterSpec, DeploymentPlan) {
+    let model = ModelConfig::mixtral_8x22b();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let (tp_a, tp_e, n_a) = (4, 2, 4);
+    // Constant-composition workload below: prompt 512, short outputs.
+    let avg_seq = 514.0;
+    let pm = PerfModel::new(&model, &cluster, tp_a, tp_e, avg_seq);
+    let metrics = simulate_plan(&pm, &model, &cluster, tp_a, tp_e, n_a, m, global_batch);
+    let plan = DeploymentPlan {
+        model: model.name.clone(),
+        tp_a,
+        tp_e,
+        n_a,
+        n_e: model.experts,
+        m,
+        global_batch,
+        metrics,
+    };
+    (model, cluster, plan)
+}
+
+/// `n` identical closed-loop requests: constant batch composition while
+/// decoding, so every iteration runs at the same operating point.
+fn constant_requests(n: usize, input: usize, output: usize) -> Vec<Request> {
+    (0..n as u64)
+        .map(|id| Request {
+            id,
+            arrival: 0.0,
+            input_len: input,
+            output_len: output,
+        })
+        .collect()
+}
+
+fn run_fixed(
+    m: usize,
+    global_batch: usize,
+    popularity: ExpertPopularity,
+    seed: u64,
+) -> (DeploymentPlan, ModelConfig, megascale_infer::sim::ClusterReport) {
+    let (model, cluster, plan) = fixed_plan(m, global_batch);
+    let reqs = constant_requests(global_batch, 512, 4);
+    let rep = ClusterSim::new(ClusterSimConfig {
+        model: model.clone(),
+        cluster,
+        plan: plan.clone(),
+        route: RoutePolicy::LeastLoaded,
+        popularity,
+        transport: Transport::Analytic,
+        seed,
+    })
+    .run(&reqs);
+    (plan, model, rep)
+}
+
+/// Acceptance: with `m ≥ 2·(1 + T_c/T_f)` the end-to-end simulator's
+/// decode-iteration latency matches Eq. 5 within 2%, using the stage times
+/// the simulator itself derived from the live batch.
+#[test]
+fn pipeline_full_matches_eq5_within_2pct() {
+    let (plan, model, rep) = run_fixed(3, 1200, ExpertPopularity::Ideal, 42);
+    assert_eq!(rep.completed, 1200);
+
+    let it = IterationModel {
+        t_a: rep.mean_t_a,
+        t_e: rep.mean_t_e,
+        t_c: rep.mean_t_c,
+        m: plan.m,
+        layers: model.layers,
+    };
+    assert!(
+        it.pipeline_full(),
+        "test premise: constraint 3 holds (m={} needs >= {})",
+        plan.m,
+        it.min_micro_batches()
+    );
+    let eq5 = it.t_total_eq5();
+    let measured = rep.tpot.median();
+    let rel = (measured - eq5).abs() / eq5;
+    assert!(
+        rel < 0.02,
+        "simulated TPOT {measured} vs Eq.5 {eq5} (rel {rel})"
+    );
+
+    // Throughput follows: B tokens per iteration.
+    let predicted_tput = plan.global_batch as f64 / eq5;
+    let rel_tput = (rep.throughput - predicted_tput).abs() / predicted_tput;
+    assert!(
+        rel_tput < 0.02,
+        "throughput {} vs Eq.5 prediction {predicted_tput} (rel {rel_tput})",
+        rep.throughput
+    );
+}
+
+/// Acceptance: below constraint 3 (m = 1) the pipeline cannot hide the
+/// round trips — both pools idle while the closed form's assumptions break.
+#[test]
+fn utilization_gap_when_pipeline_not_full() {
+    // Same per-micro-batch operating point: b_a and b_e identical across
+    // the two runs (B scales with m).
+    let (_, _, full) = run_fixed(3, 1200, ExpertPopularity::Ideal, 42);
+    let (_, _, single) = run_fixed(1, 400, ExpertPopularity::Ideal, 42);
+
+    // At this operating point (b_e = 100, tp_e = 2) the expert stage is
+    // weight-load dominated and is the bottleneck pool: with the pipeline
+    // full it saturates; with m = 1 it idles during attention + transfers.
+    assert!(
+        full.expert_utilization > 0.85,
+        "full pipeline expert utilization {}",
+        full.expert_utilization
+    );
+    assert!(
+        single.expert_utilization < 0.75,
+        "m=1 expert utilization {}",
+        single.expert_utilization
+    );
+    assert!(
+        single.expert_utilization < full.expert_utilization - 0.15,
+        "expected a utilization gap: m=1 {} vs m=3 {}",
+        single.expert_utilization,
+        full.expert_utilization
+    );
+    // Per-token latency degrades without the overlap (both runs decode the
+    // same per-micro-batch sizes; normalize by tokens per iteration).
+    let per_token_single = single.tpot.median() / 400.0;
+    let per_token_full = full.tpot.median() / 1200.0;
+    assert!(
+        per_token_single > 1.3 * per_token_full,
+        "m=1 {per_token_single} vs m=3 {per_token_full} per-token latency"
+    );
+}
+
+/// Determinism: identical config + seed ⇒ bit-identical metrics, through
+/// the full router → batcher → gating → M2N → ping-pong composition,
+/// including the simnet-calibrated transport and skewed gating draws.
+#[test]
+fn same_seed_is_bit_identical() {
+    let run = || {
+        let (model, cluster, plan) = fixed_plan(3, 240);
+        let reqs = WorkloadSpec {
+            median_input: 256.0,
+            median_output: 8.0,
+            sigma: 0.4,
+            arrival_rate: Some(2000.0),
+            burst_sigma: 0.8,
+            ..Default::default()
+        }
+        .generate(300, 77);
+        ClusterSim::new(ClusterSimConfig {
+            model,
+            cluster,
+            plan,
+            route: RoutePolicy::LeastLoaded,
+            popularity: ExpertPopularity::Zipf(1.0),
+            transport: Transport::Simnet(LibraryKind::MegaScale),
+            seed: 1234,
+        })
+        .run(&reqs)
+    };
+    let a = run();
+    let b = run();
+
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.iterations, b.iterations);
+    assert_eq!(a.elapsed.to_bits(), b.elapsed.to_bits(), "virtual time");
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+    assert_eq!(a.mean_t_a.to_bits(), b.mean_t_a.to_bits());
+    assert_eq!(a.mean_t_e.to_bits(), b.mean_t_e.to_bits());
+    assert_eq!(a.mean_t_c.to_bits(), b.mean_t_c.to_bits());
+    assert_eq!(
+        a.attn_utilization.to_bits(),
+        b.attn_utilization.to_bits()
+    );
+    for p in [1.0, 50.0, 90.0, 99.0] {
+        assert_eq!(a.ttft.percentile(p).to_bits(), b.ttft.percentile(p).to_bits());
+        assert_eq!(a.tpot.percentile(p).to_bits(), b.tpot.percentile(p).to_bits());
+        assert_eq!(a.e2e.percentile(p).to_bits(), b.e2e.percentile(p).to_bits());
+    }
+    assert_eq!(a.per_node_tokens, b.per_node_tokens);
+    assert_eq!(a.summary(), b.summary(), "rendered summaries identical");
+}
+
+/// Different seeds must actually change stochastic outcomes (guards against
+/// the RNG being plumbed to a constant).
+#[test]
+fn different_seed_changes_skewed_runs() {
+    let run = |seed| {
+        let (model, cluster, plan) = fixed_plan(3, 240);
+        let reqs = constant_requests(240, 256, 6);
+        ClusterSim::new(ClusterSimConfig {
+            model,
+            cluster,
+            plan,
+            route: RoutePolicy::LeastLoaded,
+            popularity: ExpertPopularity::Zipf(1.0),
+            transport: Transport::Analytic,
+            seed,
+        })
+        .run(&reqs)
+    };
+    let a = run(1);
+    let b = run(2);
+    assert_ne!(
+        a.mean_t_e.to_bits(),
+        b.mean_t_e.to_bits(),
+        "skewed expert loads should differ across seeds"
+    );
+}
+
+/// Micro-batch sweep: throughput improves m=1 → m=2 by ~2x and m=3 adds a
+/// smaller gain (Figure 12 shape) at a fixed per-micro-batch size.
+#[test]
+fn micro_batch_sweep_reproduces_figure12_shape() {
+    let tput = |m: usize| {
+        let (_, _, rep) = run_fixed(m, 400 * m, ExpertPopularity::Ideal, 3);
+        rep.throughput
+    };
+    let t1 = tput(1);
+    let t2 = tput(2);
+    let t3 = tput(3);
+    let g12 = t2 / t1;
+    let g23 = t3 / t2;
+    assert!((1.4..2.3).contains(&g12), "m1->m2 gain {g12}");
+    // At this point m=2 already nearly saturates the bottleneck stage, so
+    // the m=3 gain is marginal-to-modest (Figure 12's flattening tail).
+    assert!((0.95..1.6).contains(&g23), "m2->m3 gain {g23}");
+}

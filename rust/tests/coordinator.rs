@@ -110,6 +110,7 @@ fn scheduler_respects_kv_budget_under_churn() {
         median_output: 10.0,
         sigma: 0.4,
         arrival_rate: None,
+        burst_sigma: 0.0,
         max_len: 1024,
     }
     .generate(60, 3);

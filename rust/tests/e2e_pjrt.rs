@@ -97,6 +97,7 @@ fn serving_engine_decodes_requests() {
         median_output: 5.0,
         sigma: 0.3,
         arrival_rate: None,
+        burst_sigma: 0.0,
         max_len: engine.model().max_seq,
     };
     let reqs = spec.generate(6, 7);
@@ -126,6 +127,7 @@ fn serving_is_deterministic() {
         median_output: 4.0,
         sigma: 0.2,
         arrival_rate: None,
+        burst_sigma: 0.0,
         max_len: 64,
     };
     let reqs = spec.generate(3, 99);
@@ -147,6 +149,7 @@ fn grouped_and_per_expert_paths_agree() {
         median_output: 4.0,
         sigma: 0.2,
         arrival_rate: None,
+        burst_sigma: 0.0,
         max_len: 64,
     };
     let reqs = spec.generate(4, 123);

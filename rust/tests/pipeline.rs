@@ -1,9 +1,10 @@
 //! Integration tests for ping-pong pipeline parallelism: the DES against
-//! the paper's closed forms (Eq. 1-5) and the Figure 12 ablation shape.
+//! the paper's closed forms (Eq. 1-6, golden values pinned by hand) and the
+//! Figure 12 ablation shape.
 
 use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
 use megascale_infer::coordinator::PingPongSim;
-use megascale_infer::perf_model::{IterationModel, PerfModel};
+use megascale_infer::perf_model::{bandwidth_util, CommModel, IterationModel, PerfModel};
 
 /// DES and Eq. 5 agree within 2% across a parameter sweep whenever the
 /// pipeline-full condition (constraint 3) holds.
@@ -124,6 +125,122 @@ fn m3_gain_ordering_follows_comm_share() {
     assert!(
         scaled >= mixtral * 0.98,
         "Scaled-MoE m3 gain {scaled:.3} should be >= Mixtral {mixtral:.3}"
+    );
+}
+
+/// Golden values: Eq. 5 pinned to hand-computed literals, with the DES
+/// landing within 2% (and exactly, for the zero-comm alternation case).
+#[test]
+fn golden_eq5_values() {
+    // (t_a, t_e, t_c, m, L, hand-computed Eq.5 = (t_a+t_e+2t_c) + T_f(mL-1))
+    let cases = [
+        (1.0, 1.0, 0.3, 3usize, 8usize, 25.6),
+        (2.0, 1.0, 0.4, 3, 10, 61.8),
+        (0.5, 1.0, 0.2, 4, 16, 64.9),
+        (1.0, 1.0, 0.0, 2, 4, 9.0),
+    ];
+    for &(t_a, t_e, t_c, m, layers, golden) in &cases {
+        let it = IterationModel {
+            t_a,
+            t_e,
+            t_c,
+            m,
+            layers,
+        };
+        assert!(it.pipeline_full(), "premise at {t_a},{t_e},{t_c},m={m}");
+        let eq5 = it.t_total_eq5();
+        assert!(
+            (eq5 - golden).abs() < 1e-9,
+            "Eq.5 formula drifted: {eq5} vs golden {golden}"
+        );
+        let des = PingPongSim {
+            t_a,
+            t_e,
+            t_c,
+            m,
+            layers,
+        }
+        .run()
+        .total_time;
+        let rel = (des - golden).abs() / golden;
+        assert!(rel < 0.02, "DES {des} vs golden {golden} (rel {rel})");
+    }
+    // Zero-comm balanced alternation is exact.
+    let exact = PingPongSim {
+        t_a: 1.0,
+        t_e: 1.0,
+        t_c: 0.0,
+        m: 2,
+        layers: 4,
+    }
+    .run()
+    .total_time;
+    assert!((exact - 9.0).abs() < 1e-12, "{exact}");
+}
+
+/// Golden Eq. 4: the DES respects the per-iteration bounds
+/// `m·T_f·(L−1) < T_total < (T_a+T_e+2T_c) + m·T_f·L` in the full regime.
+#[test]
+fn golden_eq4_bounds_des() {
+    for &(t_a, t_e, t_c, m, layers) in &[
+        (1.0, 1.0, 0.3, 3usize, 8usize),
+        (1.5, 1.0, 0.5, 4, 12),
+        (1.0, 2.0, 0.9, 3, 24),
+    ] {
+        let it = IterationModel {
+            t_a,
+            t_e,
+            t_c,
+            m,
+            layers,
+        };
+        if !it.pipeline_full() {
+            continue;
+        }
+        let des = PingPongSim {
+            t_a,
+            t_e,
+            t_c,
+            m,
+            layers,
+        }
+        .run()
+        .total_time;
+        let lower = m as f64 * it.t_f() * (layers as f64 - 1.0);
+        let upper = (t_a + t_e + 2.0 * t_c) + m as f64 * it.t_f() * layers as f64;
+        assert!(
+            des > lower && des < upper,
+            "DES {des} outside Eq.4 bounds ({lower}, {upper})"
+        );
+    }
+}
+
+/// Golden Eq. 6: the half-saturation utilization curve makes
+/// `T = s / (W·Util(s))` algebraically equal to the LogP cost `s/W + o`,
+/// and the Mixtral §7.3 dispatch example lands on the hand value.
+#[test]
+fn golden_eq6_comm_model() {
+    let (bw, oh) = (25e9, 6e-6);
+    for s in [1e3, 64e3, 256e3, 1e6, 16e6] {
+        let t = s / (bw * bandwidth_util(s, bw, oh));
+        let logp = s / bw + oh;
+        assert!(
+            (t - logp).abs() < 1e-12 * logp.max(1.0),
+            "Util identity broken at {s}: {t} vs {logp}"
+        );
+    }
+
+    // Mixtral 8x22B, b_a = 128, tp_a = 2, tp_e = 1 on 200 Gbps NICs:
+    // send = recv = 128·6144·K/tp_a·2 = 1,572,864 bytes
+    // T_c = 1,572,864/25e9 + 6e-6 = 68.91456 µs.
+    let model = ModelConfig::mixtral_8x22b();
+    let gpu = megascale_infer::config::GpuSpec::of(GpuKind::Ampere80G);
+    let c = CommModel::new(&model, &gpu, &gpu, 2, 1);
+    assert!((c.send_bytes(128.0) - 1_572_864.0).abs() < 1e-6);
+    let t_c = c.time(128.0, 128.0);
+    assert!(
+        (t_c - 68.91456e-6).abs() < 1e-10,
+        "Eq.6 golden drifted: {t_c}"
     );
 }
 

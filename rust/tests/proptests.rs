@@ -4,10 +4,12 @@
 //! printed on assert so cases replay deterministically.
 
 use megascale_infer::coordinator::{
-    balance_experts, build_dispatch, softmax_topk, BlockAllocator, KvCacheConfig,
+    balance_experts, build_dispatch, combine_expert_outputs, gather_expert_input, softmax_topk,
+    BlockAllocator, KvCacheConfig,
 };
 use megascale_infer::metrics::Histogram;
 use megascale_infer::perf_model::IterationModel;
+use megascale_infer::sim::cluster::{draw_gating, popularity_weights};
 use megascale_infer::sim::{EventQueue, SimRng};
 
 fn cases(n: usize) -> impl Iterator<Item = (u64, SimRng)> {
@@ -53,6 +55,51 @@ fn prop_dispatch_conserves_tokens() {
         }
         for (t, s) in per_token.iter().enumerate() {
             assert!((s - 1.0).abs() < 1e-4, "seed {seed} token {t}: {s}");
+        }
+    }
+}
+
+/// Cluster-simulator gating: for arbitrary (tokens, experts, top-k, skew),
+/// the popularity-biased draw conserves token-copies end to end across the
+/// M2N boundary — every dispatched copy lands on exactly one expert, the
+/// per-expert loads sum to `tokens·k`, and the identity-expert combine
+/// reconstructs each token with weight exactly 1.
+#[test]
+fn prop_cluster_gating_conserves_tokens_across_m2n() {
+    for (seed, mut rng) in cases(200) {
+        let tokens = 1 + rng.below(300);
+        let experts = 2 + rng.below(62);
+        let k = 1 + rng.below(experts.min(8));
+        let alpha = rng.uniform() * 2.0;
+        let mut perm_rng = SimRng::new(seed.wrapping_add(1));
+        let weights = popularity_weights(experts, alpha, &mut perm_rng);
+        let s: f64 = weights.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9, "seed {seed}: popularity normalized");
+
+        let g = draw_gating(&mut rng, tokens, &weights, k);
+        let plan = build_dispatch(&g, experts);
+
+        // Conservation of dispatched copies.
+        assert_eq!(plan.total_dispatched(), tokens * k, "seed {seed}");
+        let loads = g.expert_loads(experts);
+        assert_eq!(loads.iter().sum::<usize>(), tokens * k, "seed {seed}");
+        for e in 0..experts {
+            assert_eq!(plan.expert_load(e), loads[e], "seed {seed} expert {e}");
+        }
+
+        // Simulated M2N round trip with identity experts: gather each
+        // expert's rows, send them back, combine — recovers every token.
+        let hidden = 4;
+        let x: Vec<f32> = (0..tokens * hidden).map(|i| i as f32).collect();
+        let outs: Vec<Vec<f32>> = (0..experts)
+            .map(|e| gather_expert_input(&plan, e, &x, hidden))
+            .collect();
+        let combined = combine_expert_outputs(&plan, &outs, tokens, hidden);
+        for (i, (a, b)) in combined.iter().zip(&x).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3 * b.abs().max(1.0),
+                "seed {seed} elem {i}: {a} vs {b}"
+            );
         }
     }
 }
@@ -187,6 +234,55 @@ fn prop_event_queue_ordering() {
         while let Some((t, _)) = q.pop() {
             assert!(t >= last.0, "seed {seed}");
             last.0 = t;
+        }
+    }
+}
+
+/// Event queue: under arbitrary interleavings of absolute and relative
+/// scheduling — including bursts of identical timestamps — pops never go
+/// back in time and events sharing a timestamp come out in insertion order.
+#[test]
+fn prop_event_queue_fifo_at_equal_timestamps() {
+    for (seed, mut rng) in cases(200) {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut id = 0u64;
+        // Quantize times to a handful of values to force many ties.
+        let mut last_time = f64::NEG_INFINITY;
+        let mut last_id_at: std::collections::HashMap<u64, u64> =
+            std::collections::HashMap::new();
+        for _ in 0..300 {
+            let n_push = 1 + rng.below(4);
+            for _ in 0..n_push {
+                let slot = rng.below(5) as f64;
+                let at = q.now() + slot * 0.25;
+                if rng.chance(0.5) {
+                    q.schedule_at(at, id);
+                } else {
+                    q.schedule_in(at - q.now(), id);
+                }
+                id += 1;
+            }
+            let n_pop = rng.below(n_push + 1);
+            for _ in 0..n_pop {
+                let Some((t, e)) = q.pop() else { break };
+                assert!(t >= last_time, "seed {seed}: time regressed");
+                let key = t.to_bits();
+                if let Some(&prev) = last_id_at.get(&key) {
+                    if t == last_time {
+                        assert!(
+                            e > prev,
+                            "seed {seed}: FIFO violated at t={t}: {prev} before {e}"
+                        );
+                    }
+                }
+                last_id_at.insert(key, e);
+                last_time = t;
+            }
+        }
+        let mut prev = last_time;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= prev, "seed {seed}");
+            prev = t;
         }
     }
 }

@@ -1,0 +1,199 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment has no access to a crates.io registry, so this
+//! vendored shim provides the (small) surface the repository actually uses:
+//!
+//! * [`Error`] — an opaque, `Display`-able error value,
+//! * [`Result<T>`] — `Result<T, Error>`,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`,
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`: that is what makes the blanket
+//! `impl<E: std::error::Error> From<E> for Error` coherent.
+
+use std::fmt;
+
+/// An opaque error: a rendered message chain.
+///
+/// The real `anyhow::Error` keeps the source chain alive; for this
+/// repository's purposes (CLI + test diagnostics) the flattened
+/// `"context: source"` rendering carries the same information.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Wrap an existing std error (mirrors `anyhow::Error::new`).
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Self {
+            msg: render_chain(&error),
+        }
+    }
+
+    /// Add a context line in front of this error (used by [`Context`]).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+/// Render an error and its source chain as `"a: b: c"`.
+fn render_chain(error: &(dyn std::error::Error)) -> String {
+    let mut out = error.to_string();
+    let mut src = error.source();
+    while let Some(s) = src {
+        out.push_str(": ");
+        out.push_str(&s.to_string());
+        src = s.source();
+    }
+    out
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints the Debug form on exit;
+        // show the human-readable message.
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors, on both `Result` and `Option`.
+pub trait Context<T>: Sized {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening file").unwrap_err();
+        assert_eq!(e.to_string(), "opening file: missing");
+
+        let n: Option<u32> = None;
+        let e = n.with_context(|| format!("key {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "key 7");
+    }
+
+    #[test]
+    fn context_chains_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("inner {}", 1);
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 1");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 5);
+            Ok(x)
+        }
+        assert!(check(3).is_ok());
+        assert_eq!(check(12).unwrap_err().to_string(), "x too big: 12");
+        assert!(check(5).unwrap_err().to_string().contains("x != 5"));
+    }
+}
