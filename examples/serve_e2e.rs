@@ -39,9 +39,8 @@ fn main() -> anyhow::Result<()> {
         median_input: 12.0,
         median_output: 16.0,
         sigma: 0.4,
-        arrival_rate: None,
-        burst_sigma: 0.0,
         max_len: md.max_seq,
+        ..Default::default()
     };
     let requests = spec.generate(24, 42);
     println!("serving {} requests (closed loop)...", requests.len());

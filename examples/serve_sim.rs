@@ -12,10 +12,9 @@
 //! ```
 
 use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
-use megascale_infer::coordinator::RoutePolicy;
 use megascale_infer::plan::PlanSearcher;
-use megascale_infer::sim::cluster::{ClusterSim, ClusterSimConfig, ExpertPopularity, Transport};
-use megascale_infer::workload::{Trace, WorkloadSpec};
+use megascale_infer::sim::cluster::{ClusterSim, ClusterSimConfig, ExpertPopularity};
+use megascale_infer::workload::{TenantClass, Trace, WorkloadSpec};
 
 fn main() {
     // 1. The model + hardware of the paper's homogeneous testbed.
@@ -23,11 +22,25 @@ fn main() {
     let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
 
     // 2. A 1000-request synthetic trace: production length distributions
-    //    (§7.1 medians) with bursty open-loop arrivals.
+    //    (§7.1 medians) with bursty open-loop arrivals, split across two
+    //    traffic classes with their own end-to-end SLOs.
+    let tenants = vec![
+        TenantClass {
+            name: "interactive".into(),
+            weight: 0.7,
+            slo_e2e: 5.0,
+        },
+        TenantClass {
+            name: "batch".into(),
+            weight: 0.3,
+            slo_e2e: 60.0,
+        },
+    ];
     let spec = WorkloadSpec {
         median_output: 64.0,
         arrival_rate: Some(400.0),
         burst_sigma: 0.6,
+        tenants: tenants.clone(),
         ..Default::default()
     };
     let seed = 42;
@@ -50,16 +63,14 @@ fn main() {
         plan.n_a, plan.tp_a, plan.n_e, plan.tp_e, plan.m, plan.global_batch
     );
 
-    // 4. Run the end-to-end cluster simulation (skewed expert popularity —
-    //    the realistic case — with the §6 balancer active).
+    // 4. Run the end-to-end event-driven cluster engine (skewed expert
+    //    popularity — the realistic case — with the §6 balancer active and
+    //    per-tenant SLO reporting).
     let cfg = ClusterSimConfig {
-        model,
-        cluster,
-        plan,
-        route: RoutePolicy::LeastLoaded,
         popularity: ExpertPopularity::ZipfBalanced(1.0),
-        transport: Transport::Analytic,
         seed,
+        tenants,
+        ..ClusterSimConfig::new(model, cluster, plan)
     };
     let report = ClusterSim::new(cfg.clone()).run(&trace.requests);
     println!("\n=== cluster simulation ===\n{}", report.summary());

@@ -31,6 +31,21 @@ impl ExpertPlacement {
     pub fn replicas(&self, i: usize) -> usize {
         self.assignments[i].len()
     }
+
+    /// Apply the placement to a NEW per-expert cost vector: each node's
+    /// load is the fraction-weighted sum of the experts it serves. This is
+    /// how the periodic online re-balancer scores a stale placement against
+    /// traffic that has drifted since it was computed.
+    pub fn node_loads(&self, costs: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(costs.len(), self.assignments.len());
+        let mut out = vec![0.0f64; self.node_cost.len()];
+        for (i, asg) in self.assignments.iter().enumerate() {
+            for &(node, frac) in asg {
+                out[node] += costs[i] * frac;
+            }
+        }
+        out
+    }
 }
 
 /// Greedy fractional balancing of `costs.len()` experts over `nodes` nodes.
@@ -125,6 +140,22 @@ mod tests {
         // All experts idle: each still costs K.
         let p = balance_experts(&[0.0; 4], 2, 5.0);
         assert!((p.makespan - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn node_loads_reapplies_fractions() {
+        let costs = [40.0, 5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 10.0];
+        let p = balance_experts(&costs, 4, 1.0);
+        // Same traffic: per-node loads match the placement's own costs.
+        let same = p.node_loads(&costs);
+        for (a, b) in same.iter().zip(&p.node_cost) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        // Drifted traffic: loads redistribute but conserve the total.
+        let drifted = [5.0, 40.0, 5.0, 5.0, 5.0, 5.0, 5.0, 10.0];
+        let loads = p.node_loads(&drifted);
+        let total: f64 = loads.iter().sum();
+        assert!((total - drifted.iter().sum::<f64>()).abs() < 1e-9);
     }
 
     #[test]

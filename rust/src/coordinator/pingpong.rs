@@ -1,51 +1,27 @@
-//! Ping-pong pipeline parallelism — discrete-event simulation (paper §4.1,
-//! Figure 4).
+//! Ping-pong pipeline parallelism — thin scheduling-policy layers over the
+//! shared event core (paper §4.1, Figure 4).
 //!
-//! `m` micro-batches shuttle between the attention stage and the expert
-//! stage for `L` layers. Each stage processes one micro-batch at a time
-//! (the node's GPUs are a single serially-reused resource); transfers take
-//! `T_c` each way and overlap with compute. The simulation reproduces
-//! Eq. 5 exactly when the pipeline is full and exhibits the idle bubbles of
-//! `m < 2·(1 + T_c/T_f)` otherwise — this is the engine behind Figures 12
-//! and 13.
-//!
-//! Two entry points share one event loop:
+//! The actual event machine lives in [`crate::sim::pipeline`]: ONE
+//! implementation of the micro-batch shuttle, also embedded by the
+//! trace-driven [`crate::sim::engine::ClusterEngine`] on its global event
+//! queue. This module keeps the two historical entry points as thin layers
+//! over that core:
 //!
 //! * [`PingPongSim`] — constant stage times, the closed-form ablation
 //!   driver (Figures 12/13);
-//! * [`PingPongEngine`] — a *stepwise* engine taking a per-(micro-batch,
+//! * [`PingPongEngine`] — a *stepwise* policy taking a per-(micro-batch,
 //!   layer) [`StageTimes`] provider, so callers like
-//!   [`crate::sim::cluster`] can drive the pipeline with times that vary
-//!   with the actual routed expert loads and transfer sizes of each hop.
+//!   [`crate::plan::simulate_plan_des`] can drive the pipeline with times
+//!   that vary per hop.
+//!
+//! The simulation reproduces Eq. 5 exactly when the pipeline is full and
+//! exhibits the idle bubbles of `m < 2·(1 + T_c/T_f)` otherwise — this is
+//! the engine behind Figures 12 and 13.
 
-use std::collections::VecDeque;
-
+use crate::sim::pipeline::{PipeEvent, PipelineCore};
 use crate::sim::EventQueue;
 
-/// Per-stage/per-run statistics.
-#[derive(Debug, Clone, PartialEq)]
-pub struct PipelineStats {
-    /// Completion time of the last micro-batch (seconds).
-    pub total_time: f64,
-    /// Attention-stage busy time / total time.
-    pub attn_utilization: f64,
-    /// Expert-stage busy time / total time.
-    pub expert_utilization: f64,
-    /// Per-micro-batch completion times.
-    pub mb_done: Vec<f64>,
-}
-
-/// Stage times for one (micro-batch, layer) traversal.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct StageTimes {
-    /// Attention compute time for this micro-batch at this layer.
-    pub t_a: f64,
-    /// Expert compute time for this micro-batch at this layer.
-    pub t_e: f64,
-    /// One-direction communication time (applies to both the dispatch to
-    /// the expert pool and the combine back to the attention pool).
-    pub t_c: f64,
-}
+pub use crate::sim::pipeline::{PipelineStats, StageTimes};
 
 /// Stepwise ping-pong pipeline engine over `m` micro-batches and `layers`
 /// MoE layers. Stage times come from a caller-supplied provider, consulted
@@ -57,109 +33,27 @@ pub struct PingPongEngine {
     pub layers: usize,
 }
 
-#[derive(Debug, Clone, Copy)]
-enum Ev {
-    /// Micro-batch ready to start attention of layer `layer`.
-    AttnReady { mb: usize, layer: usize },
-    /// Attention of (mb, layer) finished computing.
-    AttnDone { mb: usize, layer: usize },
-    /// Micro-batch arrived at the expert stage for `layer`.
-    ExpertReady { mb: usize, layer: usize },
-    /// Expert compute finished.
-    ExpertDone { mb: usize, layer: usize },
-    /// Aggregated tokens arrived back at attention nodes after `layer`.
-    BackAtAttn { mb: usize, layer: usize },
-}
-
 impl PingPongEngine {
-    /// Run the pipeline; `times(mb, layer)` supplies the stage times of
-    /// each hop. Returns stage utilizations + makespan.
+    /// Run the pipeline standalone; `times(mb, layer)` supplies the stage
+    /// times of each hop. Returns stage utilizations + makespan.
     pub fn run<F: FnMut(usize, usize) -> StageTimes>(&self, mut times: F) -> PipelineStats {
-        assert!(self.m >= 1 && self.layers >= 1);
-        let mut q: EventQueue<Ev> = EventQueue::new();
-
-        // Memoized per-(mb, layer) stage times: the provider is consulted
-        // once, in deterministic event order.
-        let mut cache: Vec<Option<StageTimes>> = vec![None; self.m * self.layers];
-        let layers = self.layers;
-        let mut t = move |mb: usize, layer: usize| -> StageTimes {
-            let idx = mb * layers + layer;
-            if cache[idx].is_none() {
-                cache[idx] = Some(times(mb, layer));
-            }
-            cache[idx].unwrap()
-        };
-
-        // Stage state: busy-until + FIFO of ready micro-batches.
-        let mut attn_free_at = 0.0f64;
-        let mut expert_free_at = 0.0f64;
-        let mut attn_queue: VecDeque<(usize, usize)> = VecDeque::new();
-        let mut expert_queue: VecDeque<(usize, usize)> = VecDeque::new();
-        let mut attn_busy = 0.0f64;
-        let mut expert_busy = 0.0f64;
-        let mut mb_done = vec![0.0f64; self.m];
-
-        for mb in 0..self.m {
-            q.schedule_at(0.0, Ev::AttnReady { mb, layer: 0 });
+        let mut core = PipelineCore::new(self.m, self.layers);
+        let mut q: EventQueue<PipeEvent> = EventQueue::new();
+        let mut out: Vec<(f64, PipeEvent)> = Vec::new();
+        core.start(0.0, &mut out);
+        for (at, e) in out.drain(..) {
+            q.schedule_at(at, e);
         }
-
-        // Start the next queued item on a stage iff the stage is actually
-        // idle at `now` (guards against double-booking when a completion and
-        // a ready event share a timestamp).
-        macro_rules! try_start {
-            ($now:expr, $q:expr, $queue:ident, $free_at:ident, $busy:ident,
-             $stage:ident, $done:ident) => {
-                if $free_at <= $now {
-                    if let Some((mb, layer)) = $queue.pop_front() {
-                        let dur = t(mb, layer).$stage;
-                        $free_at = $now + dur;
-                        $busy += dur;
-                        $q.schedule_at($free_at, Ev::$done { mb, layer });
-                    }
-                }
-            };
-        }
-
         while let Some((now, ev)) = q.pop() {
-            match ev {
-                Ev::AttnReady { mb, layer } => {
-                    attn_queue.push_back((mb, layer));
-                    try_start!(now, q, attn_queue, attn_free_at, attn_busy, t_a, AttnDone);
-                }
-                Ev::AttnDone { mb, layer } => {
-                    // Dispatch tokens to experts (M2N), arrive after t_c.
-                    q.schedule_at(now + t(mb, layer).t_c, Ev::ExpertReady { mb, layer });
-                    try_start!(now, q, attn_queue, attn_free_at, attn_busy, t_a, AttnDone);
-                }
-                Ev::ExpertReady { mb, layer } => {
-                    expert_queue.push_back((mb, layer));
-                    try_start!(
-                        now, q, expert_queue, expert_free_at, expert_busy, t_e, ExpertDone
-                    );
-                }
-                Ev::ExpertDone { mb, layer } => {
-                    q.schedule_at(now + t(mb, layer).t_c, Ev::BackAtAttn { mb, layer });
-                    try_start!(
-                        now, q, expert_queue, expert_free_at, expert_busy, t_e, ExpertDone
-                    );
-                }
-                Ev::BackAtAttn { mb, layer } => {
-                    if layer + 1 < self.layers {
-                        q.schedule_at(now, Ev::AttnReady { mb, layer: layer + 1 });
-                    } else {
-                        mb_done[mb] = now;
-                    }
-                }
+            let stats = core.on_event(now, ev, &mut |_, mb, layer| times(mb, layer), &mut out);
+            for (at, e) in out.drain(..) {
+                q.schedule_at(at, e);
+            }
+            if let Some(stats) = stats {
+                return stats;
             }
         }
-
-        let total_time = mb_done.iter().copied().fold(0.0, f64::max);
-        PipelineStats {
-            total_time,
-            attn_utilization: attn_busy / total_time,
-            expert_utilization: expert_busy / total_time,
-            mb_done,
-        }
+        unreachable!("pipeline event queue drained before all micro-batches completed");
     }
 }
 

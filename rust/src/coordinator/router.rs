@@ -123,6 +123,7 @@ mod tests {
             arrival: 0.0,
             input_len: input,
             output_len: output,
+            tenant: 0,
         }
     }
 

@@ -115,6 +115,7 @@ mod tests {
             arrival: 0.0,
             input_len: input,
             output_len: output,
+            tenant: 0,
         }
     }
 
@@ -170,6 +171,7 @@ mod tests {
             arrival: 5.0,
             input_len: 16,
             output_len: 1,
+            tenant: 0,
         });
         assert_eq!(s.admit(&mut kv, 0.0).admitted, 0);
         assert_eq!(s.admit(&mut kv, 5.0).admitted, 1);

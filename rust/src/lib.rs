@@ -25,9 +25,11 @@
 //!   the same coordinator logic against real compute (`runtime`, behind the
 //!   `pjrt` cargo feature: it needs a locally-provided `xla` binding crate,
 //!   see DESIGN.md).
-//! * **Cluster simulator** — a deterministic trace-driven end-to-end serving
-//!   loop composing router → attention pool → gating/dispatch → M2N →
-//!   expert pool → ping-pong pipelining on virtual time ([`sim::cluster`]).
+//! * **Cluster engine** — a deterministic trace-driven end-to-end serving
+//!   simulation as an event-driven engine: router, attention pool, M2N
+//!   link and expert pool as pluggable components on one virtual clock,
+//!   sharing a single ping-pong pipeline machine with every other
+//!   simulation path ([`sim::engine`], [`sim::pipeline`], [`sim::cluster`]).
 //!
 //! See `DESIGN.md` for the experiment index and substitution notes, and
 //! `EXPERIMENTS.md` for measured results.

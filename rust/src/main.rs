@@ -5,9 +5,11 @@
 //!               [--slo-ms 150] [--avg-seq 730] [--all]
 //! msi simulate  --model mixtral --gpu ampere [--requests 512] [--baselines]
 //! msi replay    [--trace t.jsonl | --requests 1000] --model mixtral
-//!               --attention-gpu ampere [--expert-gpu l40s] [--rate 0]
-//!               [--burst 0.0] [--skew 0] [--balance] [--simnet]
-//!               [--micro-batches m] [--seed 42]
+//!               --attention-gpu ampere [--expert-gpu l40s]
+//!               [--hetero h20:l40s] [--rate 0] [--burst 0.0] [--skew 0]
+//!               [--popularity-drift <s>] [--rebalance <s>] [--balance]
+//!               [--tenants name:weight:slo_s,...] [--simnet]
+//!               [--micro-batches m] [--seed 42] [--json report.json]
 //! msi serve     --artifacts artifacts [--micro-batches 2] [--requests 16]
 //!               (requires the `pjrt` feature)
 //! msi m2n       --library megascale|nccl|perftest [--senders 8]
@@ -18,7 +20,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use megascale_infer::baselines::{best_under_slo, minimal_deployment, BaselineKind};
 use megascale_infer::config::{gpu_catalog, ClusterSpec, GpuKind, ModelConfig, NodeSpec};
@@ -29,7 +31,7 @@ use megascale_infer::plan::PlanSearcher;
 use megascale_infer::runtime::ServingEngine;
 use megascale_infer::sim::cluster::{ClusterSim, ClusterSimConfig, ExpertPopularity, Transport};
 use megascale_infer::util::cli::Args;
-use megascale_infer::workload::{Trace, WorkloadSpec};
+use megascale_infer::workload::{TenantClass, Trace, WorkloadSpec};
 
 const USAGE: &str = "usage: msi <plan|simulate|replay|serve|m2n|hardware|trace> [--options]
 run `msi help` or see README.md for details";
@@ -160,15 +162,30 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Replay a trace (or a synthetic workload) through the end-to-end cluster
-/// simulator: router → attention pool → gating/dispatch → M2N → expert
-/// pool → ping-pong pipeline, on virtual time.
+/// Replay a trace (or a synthetic workload) through the event-driven
+/// cluster engine: router → attention pool → gating/dispatch → M2N →
+/// expert pool → ping-pong pipeline, on one virtual clock. Scenario knobs
+/// cover heterogeneous pools (`--hetero`), multi-tenant traffic classes
+/// with per-class SLOs (`--tenants`), and time-varying expert popularity
+/// with periodic online re-balancing (`--popularity-drift`/`--rebalance`).
 fn cmd_replay(args: &Args) -> Result<()> {
     let model = parse_model(&args.str_or("model", "mixtral"))?;
-    let a = parse_gpu(&args.str_or("attention-gpu", "ampere"))?;
-    let e = match args.get("expert-gpu") {
-        Some(g) => parse_gpu(g)?,
-        None => a,
+    // `--hetero attn:expert` is shorthand for the per-pool GPU flags.
+    let (a, e) = match args.get("hetero") {
+        Some(pair) => {
+            let (a, e) = pair
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("--hetero expects <attn-gpu>:<expert-gpu>"))?;
+            (parse_gpu(a)?, parse_gpu(e)?)
+        }
+        None => {
+            let a = parse_gpu(&args.str_or("attention-gpu", "ampere"))?;
+            let e = match args.get("expert-gpu") {
+                Some(g) => parse_gpu(g)?,
+                None => a,
+            };
+            (a, e)
+        }
     };
     let cluster = ClusterSpec {
         attention: NodeSpec {
@@ -184,9 +201,14 @@ fn cmd_replay(args: &Args) -> Result<()> {
     };
     let seed = args.u64_or("seed", 42)?;
     let rate = args.f64_or("rate", 0.0)?;
+    let tenants = match args.get("tenants") {
+        Some(spec) => TenantClass::parse_list(spec)?,
+        None => Vec::new(),
+    };
     let spec = WorkloadSpec {
         arrival_rate: (rate > 0.0).then_some(rate),
         burst_sigma: args.f64_or("burst", 0.0)?,
+        tenants: tenants.clone(),
         ..Default::default()
     };
     let requests = match args.get("trace") {
@@ -215,12 +237,30 @@ fn cmd_replay(args: &Args) -> Result<()> {
     }
 
     let skew = args.f64_or("skew", 0.0)?;
+    let drift = args.f64_or("popularity-drift", 0.0)?;
+    if drift > 0.0 && skew <= 0.0 {
+        bail!("--popularity-drift needs a skewed popularity: add --skew <alpha>");
+    }
     let popularity = if skew <= 0.0 {
         ExpertPopularity::Uniform
+    } else if drift > 0.0 {
+        ExpertPopularity::ZipfDrifting {
+            alpha: skew,
+            period: drift,
+        }
     } else if args.flag("balance") {
         ExpertPopularity::ZipfBalanced(skew)
     } else {
         ExpertPopularity::Zipf(skew)
+    };
+    // Periodic online re-balancing: explicit interval, or a quarter of the
+    // drift period when `--balance` rides along with drifting popularity.
+    let rebalance_period = match args.get("rebalance") {
+        Some(v) => Some(
+            v.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--rebalance={v} not a number"))?,
+        ),
+        None => (drift > 0.0 && args.flag("balance")).then_some(drift / 4.0),
     };
     let transport = if args.flag("simnet") {
         Transport::Simnet(LibraryKind::MegaScale)
@@ -237,7 +277,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
         plan.m,
         plan.global_batch
     );
-    let report = ClusterSim::new(ClusterSimConfig {
+    let cfg = ClusterSimConfig {
         model,
         cluster,
         plan,
@@ -245,9 +285,20 @@ fn cmd_replay(args: &Args) -> Result<()> {
         popularity,
         transport,
         seed,
-    })
-    .run(&requests);
+        tenants,
+        rebalance_period,
+    };
+    let plan_json = cfg.plan.to_json();
+    let report = ClusterSim::new(cfg).run(&requests);
     println!("{}", report.summary());
+    if let Some(path) = args.get("json") {
+        let payload = megascale_infer::util::json::Json::obj()
+            .set("plan", plan_json)
+            .set("report", report.to_json());
+        std::fs::write(path, format!("{payload}\n"))
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote JSON report to {path}");
+    }
     Ok(())
 }
 
@@ -262,9 +313,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         median_input: 12.0,
         median_output: 16.0,
         sigma: 0.4,
-        arrival_rate: None,
-        burst_sigma: 0.0,
         max_len: engine.model().max_seq,
+        ..Default::default()
     };
     let reqs = spec.generate(n, seed);
     let rep = engine.serve(&reqs)?;

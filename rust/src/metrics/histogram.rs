@@ -124,6 +124,22 @@ impl Histogram {
         self.percentile(99.0)
     }
 
+    /// Fraction of recorded observations at or below `threshold` — the SLO
+    /// attainment query. Exact while the sample count is small, bucketed
+    /// (≤ ~2.4% relative threshold error) beyond that.
+    pub fn fraction_below(&self, threshold: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if self.count as usize <= EXACT_LIMIT {
+            let n = self.exact.iter().filter(|&&v| v <= threshold).count();
+            return n as f64 / self.count as f64;
+        }
+        let idx = Self::bucket_index(threshold);
+        let below: u64 = self.buckets[..=idx].iter().sum();
+        below as f64 / self.count as f64
+    }
+
     /// Merge another histogram into this one.
     pub fn merge(&mut self, other: &Histogram) {
         self.count += other.count;
@@ -174,6 +190,24 @@ mod tests {
             (p99 - 0.099).abs() / 0.099 < 0.03,
             "p99 {p99} should be ~0.099 within 3%"
         );
+    }
+
+    #[test]
+    fn fraction_below_exact_and_bucketed() {
+        let mut h = Histogram::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            h.record(v);
+        }
+        assert_eq!(h.fraction_below(0.5), 0.0);
+        assert_eq!(h.fraction_below(2.0), 0.5);
+        assert_eq!(h.fraction_below(10.0), 1.0);
+        // Bucketed regime: uniform 1..10_000 ms, threshold at the median.
+        let mut big = Histogram::new();
+        for i in 1..=10_000u64 {
+            big.record(i as f64 * 1e-3);
+        }
+        let f = big.fraction_below(5.0);
+        assert!((f - 0.5).abs() < 0.03, "fraction {f}");
     }
 
     #[test]

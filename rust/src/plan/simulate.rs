@@ -4,7 +4,7 @@
 //! constraint (Eq. 7 and Eq. 8).
 
 use crate::config::{ClusterSpec, ModelConfig, DTYPE_BYTES};
-use crate::coordinator::PingPongSim;
+use crate::coordinator::{PingPongEngine, StageTimes};
 use crate::perf_model::{IterationModel, PerfModel};
 
 /// Simulated steady-state metrics of a deployment plan.
@@ -117,13 +117,18 @@ pub fn simulate_plan(
     })
 }
 
-/// Evaluate a plan point by *running* the ping-pong discrete-event engine
+/// Evaluate a plan point by *running* the shared event-driven pipeline core
 /// instead of the Eq. 4–5 closed forms — the cross-check used by the test
 /// suite and available to callers who sweep regimes where the pipeline-full
 /// assumption breaks (m below constraint 3, extreme T_c).
 ///
-/// In the pipeline-full regime this agrees with [`simulate_plan`] to within
-/// 2%; outside it, the DES is the ground truth the closed form approximates.
+/// This is a degenerate-workload wrapper over the same
+/// [`crate::sim::pipeline::PipelineCore`] that drives the full trace-driven
+/// [`crate::sim::engine::ClusterEngine`]: one steady-state iteration with
+/// constant per-hop stage times, scheduled through the identical ping-pong
+/// event machine. In the pipeline-full regime this agrees with
+/// [`simulate_plan`] to within 2%; outside it, the DES is the ground truth
+/// the closed form approximates.
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_plan_des(
     pm: &PerfModel,
@@ -136,14 +141,16 @@ pub fn simulate_plan_des(
     global_batch: usize,
 ) -> PlanMetrics {
     assemble_metrics(pm, model, cluster, tp_a, tp_e, n_a, m, global_batch, |it| {
-        let stats = PingPongSim {
+        let st = StageTimes {
             t_a: it.t_a,
             t_e: it.t_e,
             t_c: it.t_c,
+        };
+        let stats = PingPongEngine {
             m: it.m,
             layers: it.layers,
         }
-        .run();
+        .run(|_, _| st);
         (
             stats.total_time,
             stats.attn_utilization,

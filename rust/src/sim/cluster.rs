@@ -1,54 +1,50 @@
-//! Trace-driven end-to-end cluster simulator: the whole MegaScale-Infer
-//! serving loop on deterministic virtual time.
+//! Trace-driven end-to-end cluster simulation: scenario configuration and
+//! reporting for the event-driven [`crate::sim::engine::ClusterEngine`].
 //!
 //! The seed grew each subsystem in isolation — router, continuous batcher,
 //! KV allocator, gating/dispatch, M2N network model, ping-pong pipeline
-//! DES, analytical perf model. This module composes them into ONE loop, the
-//! engine behind the end-to-end figures (8, 9, 12, 13) and the substrate
-//! the regression suite drives:
+//! DES, analytical perf model. The engine composes them as pluggable
+//! [`crate::sim::engine::Component`]s on ONE event queue — the substrate
+//! behind the end-to-end figures (8, 9, 12, 13) and the regression suite:
 //!
 //! ```text
-//!            workload::Trace (Poisson/bursty/replayed JSONL)
-//!                 │ arrivals
+//!            workload::Trace (Poisson/bursty/replayed JSONL,
+//!                             optional multi-tenant classes)
+//!                 │ Arrive events
 //!                 ▼
-//!       coordinator::Router  (least-loaded / round-robin, KV-aware)
-//!                 │ per-attention-node queues
+//!       RouterFront (least-loaded / round-robin, KV-aware, FIFO overflow)
+//!                 │ Place events
 //!                 ▼
-//!   attention pool: n_a nodes × ContinuousBatcher + BlockAllocator
-//!                 │ decode batch split into m micro-batches
+//!   AttentionPool: n_a nodes × ContinuousBatcher + BlockAllocator,
+//!                  per-node clocks; decode batch split into m micro-batches
+//!                 │ Pipe events (shared ping-pong core)
 //!                 ▼
 //!   per (micro-batch, layer):  gating softmax_topk → build_dispatch
 //!                 │ per-expert token loads
 //!                 ▼
-//!   M2N transfer (Eq. 6 analytic or simnet-calibrated TransferModel)
+//!   M2nLink (Eq. 6 analytic or simnet-calibrated TransferModel,
+//!            token-copy conservation counters)
 //!                 ▼
-//!   expert pool: n_e nodes (hottest node paces the stage; optional §6
-//!                greedy redundancy re-balancing)
+//!   ExpertPool: n_e nodes, per-rank clocks (hottest node paces the
+//!               stage); §6 balancing — per-hop oracle, or periodic online
+//!               re-placement under drifting popularity (Rebalance events)
 //!                 ▼
-//!   coordinator::PingPongEngine — stepwise ping-pong DES over all layers
-//!                 │ iteration latency
-//!                 ▼
-//!   metrics: TTFT / TPOT / E2E histograms, per-pool utilization,
-//!            tokens/s/GPU
+//!   metrics: TTFT / TPOT / E2E histograms, per-pool + per-node
+//!            utilization, per-tenant SLO attainment, tokens/s/GPU
 //! ```
 //!
 //! Everything is seeded through [`SimRng`]; two runs with the same
 //! configuration and seed produce bit-identical reports.
 
-use std::collections::{HashMap, VecDeque};
-
 use crate::config::{ClusterSpec, ModelConfig};
-use crate::coordinator::{
-    balance_experts, build_dispatch, softmax_topk, BlockAllocator, ContinuousBatcher,
-    GatingOutput, KvCacheConfig, PingPongEngine, RoutePolicy, Router, SchedulerConfig,
-    StageTimes,
-};
-use crate::m2n::{LibraryKind, LibraryProfile, TransferModel};
-use crate::metrics::{Histogram, Utilization};
-use crate::perf_model::PerfModel;
+use crate::coordinator::{softmax_topk, GatingOutput, RoutePolicy};
+use crate::m2n::LibraryKind;
+use crate::metrics::Histogram;
 use crate::plan::DeploymentPlan;
+use crate::sim::engine::ClusterEngine;
 use crate::sim::SimRng;
-use crate::workload::Request;
+use crate::util::json::Json;
+use crate::workload::{Request, TenantClass};
 
 /// Expert-popularity model driving the synthetic gating logits.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -65,8 +61,13 @@ pub enum ExpertPopularity {
     /// pace of the hottest node (paper §6 motivation).
     Zipf(f64),
     /// Same skew, but the §6 greedy redundancy balancer re-places experts
-    /// every micro-batch from the observed loads.
+    /// every micro-batch from the observed loads (an oracle upper bound).
     ZipfBalanced(f64),
+    /// Time-varying skew: Zipf(alpha) whose hot experts rotate through the
+    /// expert set every `period` virtual seconds. Pair with
+    /// [`ClusterSimConfig::rebalance_period`] for periodic §6 online
+    /// re-placement from observed loads.
+    ZipfDrifting { alpha: f64, period: f64 },
 }
 
 /// How M2N transfer time is obtained.
@@ -75,7 +76,7 @@ pub enum Transport {
     /// Eq. 6 bandwidth-utilization model ([`crate::perf_model::CommModel`]).
     Analytic,
     /// Affine latency calibrated from the message-level simnet for the
-    /// given library ([`TransferModel`]).
+    /// given library ([`crate::m2n::TransferModel`]).
     Simnet(LibraryKind),
 }
 
@@ -93,6 +94,51 @@ pub struct ClusterSimConfig {
     pub popularity: ExpertPopularity,
     pub transport: Transport,
     pub seed: u64,
+    /// Traffic classes for per-tenant SLO reporting (empty = single
+    /// tenant). `Request::tenant` indexes into this list.
+    pub tenants: Vec<TenantClass>,
+    /// Interval (virtual seconds) of periodic §6 online re-balancing from
+    /// observed expert loads (None = static placement unless the
+    /// popularity model is the per-micro-batch oracle).
+    pub rebalance_period: Option<f64>,
+}
+
+impl ClusterSimConfig {
+    /// A scenario with the default knobs: least-loaded routing, uniform
+    /// popularity, analytic transport, single tenant, no re-balancing.
+    pub fn new(model: ModelConfig, cluster: ClusterSpec, plan: DeploymentPlan) -> Self {
+        Self {
+            model,
+            cluster,
+            plan,
+            route: RoutePolicy::LeastLoaded,
+            popularity: ExpertPopularity::Uniform,
+            transport: Transport::Analytic,
+            seed: 0,
+            tenants: Vec::new(),
+            rebalance_period: None,
+        }
+    }
+}
+
+/// Per-tenant slice of the report.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub name: String,
+    /// The class's end-to-end SLO (seconds).
+    pub slo_e2e: f64,
+    /// Requests of this class fully decoded.
+    pub completed: u64,
+    pub ttft: Histogram,
+    pub e2e: Histogram,
+}
+
+impl TenantReport {
+    /// Fraction of completed requests that met the class SLO (the
+    /// [`Histogram::fraction_below`] query against the E2E distribution).
+    pub fn attainment(&self) -> f64 {
+        self.e2e.fraction_below(self.slo_e2e)
+    }
 }
 
 /// Aggregate report of one simulated run.
@@ -122,6 +168,10 @@ pub struct ClusterReport {
     pub expert_utilization: f64,
     /// Output tokens produced by each attention node (router spread).
     pub per_node_tokens: Vec<u64>,
+    /// Per-attention-node busy fraction (per-node clocks).
+    pub per_node_attn_busy: Vec<f64>,
+    /// Per-expert-node busy fraction (per-rank clocks).
+    pub per_node_expert_busy: Vec<f64>,
     /// Requests left unserved (KV capacity could never admit them).
     pub rejected: u64,
     /// Mean effective per-(micro-batch, layer) stage times actually fed to
@@ -129,12 +179,22 @@ pub struct ClusterReport {
     pub mean_t_a: f64,
     pub mean_t_e: f64,
     pub mean_t_c: f64,
+    /// Token copies handed to the M2N link toward the expert pool.
+    pub dispatched_copies: u64,
+    /// Token copies handed back toward the attention pool.
+    pub combined_copies: u64,
+    /// Token copies that completed expert compute.
+    pub processed_copies: u64,
+    /// Periodic §6 re-placements applied during the run.
+    pub rebalances: u64,
+    /// Per-tenant SLO slices (empty when single-tenant).
+    pub tenants: Vec<TenantReport>,
 }
 
 impl ClusterReport {
     /// Deterministic multi-line rendering (diffable across runs).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "completed {} requests | {} output tokens in {:.3}s over {} iterations\n\
              throughput {:.1} tok/s | {:.3} tok/s/GPU\n\
              TTFT  p50 {:.1} ms  p99 {:.1} ms\n\
@@ -160,7 +220,74 @@ impl ClusterReport {
             self.mean_t_e * 1e3,
             self.mean_t_c * 1e3,
             self.rejected,
-        )
+        );
+        if self.rebalances > 0 {
+            s.push_str(&format!("\nonline re-balances: {}", self.rebalances));
+        }
+        for t in &self.tenants {
+            s.push_str(&format!(
+                "\ntenant {:<12} {} done | E2E p50 {:.2} s  p99 {:.2} s | \
+                 SLO {:.2} s attained {:.1}%",
+                t.name,
+                t.completed,
+                t.e2e.median(),
+                t.e2e.p99(),
+                t.slo_e2e,
+                t.attainment() * 100.0,
+            ));
+        }
+        s
+    }
+
+    /// Machine-readable report (the `msi replay --json` payload).
+    pub fn to_json(&self) -> Json {
+        let hist = |h: &Histogram| {
+            Json::obj()
+                .set("count", h.count())
+                .set("mean", h.mean())
+                .set("p50", h.median())
+                .set("p90", h.percentile(90.0))
+                .set("p99", h.p99())
+        };
+        let tenants: Vec<Json> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                Json::obj()
+                    .set("name", t.name.as_str())
+                    .set("slo_e2e_s", t.slo_e2e)
+                    .set("completed", t.completed)
+                    .set("attainment", t.attainment())
+                    .set("ttft", hist(&t.ttft))
+                    .set("e2e", hist(&t.e2e))
+            })
+            .collect();
+        Json::obj()
+            .set("completed", self.completed)
+            .set("tokens", self.tokens)
+            .set("elapsed_s", self.elapsed)
+            .set("iterations", self.iterations)
+            .set("throughput", self.throughput)
+            .set("per_gpu_throughput", self.per_gpu_throughput)
+            .set("ttft", hist(&self.ttft))
+            .set("tpot", hist(&self.tpot))
+            .set("e2e", hist(&self.e2e))
+            .set("attn_utilization", self.attn_utilization)
+            .set("expert_utilization", self.expert_utilization)
+            .set("per_node_tokens", Json::Arr(
+                self.per_node_tokens.iter().map(|&t| Json::from(t)).collect(),
+            ))
+            .set("per_node_attn_busy", self.per_node_attn_busy.clone())
+            .set("per_node_expert_busy", self.per_node_expert_busy.clone())
+            .set("rejected", self.rejected)
+            .set("mean_t_a_ms", self.mean_t_a * 1e3)
+            .set("mean_t_e_ms", self.mean_t_e * 1e3)
+            .set("mean_t_c_ms", self.mean_t_c * 1e3)
+            .set("dispatched_copies", self.dispatched_copies)
+            .set("combined_copies", self.combined_copies)
+            .set("processed_copies", self.processed_copies)
+            .set("rebalances", self.rebalances)
+            .set("tenants", Json::Arr(tenants))
     }
 }
 
@@ -198,13 +325,8 @@ pub fn draw_gating(rng: &mut SimRng, tokens: usize, weights: &[f64], k: usize) -
     softmax_topk(&logits, e, k)
 }
 
-/// Per-attention-node serving state.
-struct AttnNode {
-    batcher: ContinuousBatcher,
-    kv: BlockAllocator,
-}
-
-/// The end-to-end cluster simulator.
+/// The end-to-end cluster simulator: a thin facade that wires the scenario
+/// into the event-driven [`ClusterEngine`].
 pub struct ClusterSim {
     pub cfg: ClusterSimConfig,
 }
@@ -214,286 +336,10 @@ impl ClusterSim {
         Self { cfg }
     }
 
-    /// KV-token capacity of one attention node (Eq. 8 budget).
-    fn node_kv_tokens(&self) -> u64 {
-        let gpu = self.cfg.cluster.attention_gpu();
-        let budget =
-            self.cfg.plan.tp_a as f64 * gpu.mem_bytes() - self.cfg.model.attn_param_bytes();
-        (budget.max(0.0) / self.cfg.model.kv_bytes_per_token()).floor() as u64
-    }
-
     /// Simulate serving `requests` to completion. Closed loop when every
     /// arrival is 0, open loop (trace replay) otherwise.
     pub fn run(&self, requests: &[Request]) -> ClusterReport {
-        let cfg = &self.cfg;
-        let model = &cfg.model;
-        let plan = &cfg.plan;
-        let n_a = plan.n_a.max(1);
-        let n_e = plan.n_e.max(1);
-        let m = plan.m.max(1);
-        let layers = model.layers.max(1);
-        let experts = model.experts.max(1);
-        let top_k = model.top_k.clamp(1, experts);
-
-        // --- deterministic random streams -------------------------------
-        let mut perm_rng = SimRng::new(cfg.seed ^ 0x5bd1_e995_u64);
-        let mut rng = SimRng::new(cfg.seed);
-        let (pop, balanced) = match cfg.popularity {
-            ExpertPopularity::Ideal => (None, false),
-            ExpertPopularity::Uniform => {
-                (Some(popularity_weights(experts, 0.0, &mut perm_rng)), false)
-            }
-            ExpertPopularity::Zipf(a) => {
-                (Some(popularity_weights(experts, a, &mut perm_rng)), false)
-            }
-            ExpertPopularity::ZipfBalanced(a) => {
-                (Some(popularity_weights(experts, a, &mut perm_rng)), true)
-            }
-        };
-
-        // --- transport --------------------------------------------------
-        let transfer = match cfg.transport {
-            Transport::Analytic => None,
-            Transport::Simnet(kind) => Some(TransferModel::calibrate(
-                &LibraryProfile::of(kind),
-                (n_a * plan.tp_a).max(1),
-                (n_e * plan.tp_e).max(1),
-                cfg.seed,
-            )),
-        };
-        // --- attention pool + router ------------------------------------
-        // Eq. 8 capacity, capped at the trace's total demand (plus one
-        // block per request for partial-block rounding): capacity beyond
-        // what the whole workload can ever occupy is unreachable, and not
-        // materializing it keeps the block allocator small.
-        let demand: u64 = requests
-            .iter()
-            .map(|r| (r.input_len + r.output_len + 16) as u64)
-            .sum();
-        let kv_tokens = self.node_kv_tokens().min(demand.max(16));
-        let mut router = Router::new(cfg.route, &vec![kv_tokens; n_a]);
-        let node_batch = plan.global_batch.div_ceil(n_a).max(1);
-        let mut nodes: Vec<AttnNode> = (0..n_a)
-            .map(|_| AttnNode {
-                batcher: ContinuousBatcher::new(SchedulerConfig {
-                    max_batch: node_batch,
-                }),
-                kv: BlockAllocator::new(KvCacheConfig {
-                    block_size: 16,
-                    num_blocks: (kv_tokens / 16) as usize,
-                }),
-            })
-            .collect();
-
-        // --- arrival stream ----------------------------------------------
-        let mut arrivals: Vec<Request> = requests.to_vec();
-        arrivals.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
-        let by_id: HashMap<u64, Request> =
-            arrivals.iter().map(|r| (r.id, r.clone())).collect();
-        let mut next_arrival = 0usize;
-        // Requests the router could not place yet (fleet KV full).
-        let mut overflow: VecDeque<Request> = VecDeque::new();
-        // request id -> attention node (for completion accounting).
-        let mut placed_on: HashMap<u64, usize> = HashMap::new();
-
-        // --- metrics ------------------------------------------------------
-        let mut ttft = Histogram::new();
-        let mut tpot = Histogram::new();
-        let mut e2e = Histogram::new();
-        let mut attn_util = Utilization::new();
-        let mut expert_util = Utilization::new();
-        let mut per_node_tokens = vec![0u64; n_a];
-        let mut tokens = 0u64;
-        let mut completed = 0u64;
-        let mut iterations = 0u64;
-        let (mut sum_t_a, mut sum_t_e, mut sum_t_c) = (0.0f64, 0.0f64, 0.0f64);
-        let mut stage_samples = 0u64;
-
-        let mut now = 0.0f64;
-        loop {
-            // 1. Route arrivals due by `now`, strictly FIFO: drain the
-            //    overflow queue head-first and stop at the first request
-            //    that still does not fit — later arrivals queue behind it
-            //    rather than jumping into freed capacity.
-            loop {
-                let Some(r) = overflow.front() else { break };
-                let Some(nid) = router.route(r) else { break };
-                let r = overflow.pop_front().unwrap();
-                placed_on.insert(r.id, nid);
-                nodes[nid].batcher.submit(r);
-            }
-            while next_arrival < arrivals.len() && arrivals[next_arrival].arrival <= now {
-                let r = arrivals[next_arrival].clone();
-                next_arrival += 1;
-                if !overflow.is_empty() {
-                    overflow.push_back(r);
-                    continue;
-                }
-                match router.route(&r) {
-                    Some(nid) => {
-                        placed_on.insert(r.id, nid);
-                        nodes[nid].batcher.submit(r);
-                    }
-                    None => overflow.push_back(r),
-                }
-            }
-
-            // 2. Iteration-boundary admission on every node.
-            for node in nodes.iter_mut() {
-                node.batcher.admit(&mut node.kv, now);
-            }
-
-            // 3. Idle handling: jump to the next arrival, or stop.
-            let batch_total: usize = nodes.iter().map(|n| n.batcher.batch.len()).sum();
-            if batch_total == 0 {
-                if next_arrival < arrivals.len() {
-                    now = arrivals[next_arrival].arrival.max(now);
-                    continue;
-                }
-                // No active work and no future arrivals: anything still
-                // waiting can never be admitted (nothing will free KV).
-                break;
-            }
-
-            // 4. Build the per-(micro-batch, layer) stage-time matrix from
-            //    the live batch composition.
-            let avg_seq = {
-                let sum: f64 = nodes
-                    .iter()
-                    .map(|n| n.batcher.batch.avg_seq_len() * n.batcher.batch.len() as f64)
-                    .sum();
-                (sum / batch_total as f64).max(1.0)
-            };
-            let pm = PerfModel::new(model, &cfg.cluster, plan.tp_a, plan.tp_e, avg_seq);
-            let splits: Vec<Vec<usize>> = nodes
-                .iter()
-                .map(|n| n.batcher.batch.micro_batch_sizes(m))
-                .collect();
-
-            let mut times = vec![
-                vec![
-                    StageTimes {
-                        t_a: 0.0,
-                        t_e: 0.0,
-                        t_c: 0.0
-                    };
-                    layers
-                ];
-                m
-            ];
-            // The T_e model (k3·b_e + k4) is calibrated per *expert*; a node
-            // hosting several experts streams each one's weight panels, so
-            // charge the extra k4 floors when n_e < experts.
-            let extra_weight_loads =
-                (experts.div_ceil(n_e).saturating_sub(1)) as f64 * pm.expert.k4;
-            for (j, times_j) in times.iter_mut().enumerate() {
-                // Slowest attention node paces the attention stage.
-                let b_a = splits.iter().map(|s| s[j]).max().unwrap_or(0) as f64;
-                let tok_j: usize = splits.iter().map(|s| s[j]).sum();
-                for times_jl in times_j.iter_mut() {
-                    // Gating + dispatch for this hop: per-expert-node loads.
-                    let hot_tokens = match &pop {
-                        None => {
-                            // Ideal: exact round-robin balance.
-                            let dispatched = tok_j * top_k;
-                            dispatched.div_ceil(n_e) as f64
-                        }
-                        Some(weights) => {
-                            let g = draw_gating(&mut rng, tok_j, weights, top_k);
-                            let dp = build_dispatch(&g, experts);
-                            let mut node_load = vec![0.0f64; n_e];
-                            for e in 0..experts {
-                                node_load[e % n_e] += dp.expert_load(e) as f64;
-                            }
-                            if balanced {
-                                let mean =
-                                    node_load.iter().sum::<f64>() / n_e as f64;
-                                balance_experts(&node_load, n_e, 0.1 * mean).makespan
-                            } else {
-                                node_load.iter().copied().fold(0.0, f64::max)
-                            }
-                        }
-                    };
-                    let t_a = pm.t_a(b_a);
-                    let t_e = pm.t_e(hot_tokens) + extra_weight_loads;
-                    let t_c = match &transfer {
-                        None => pm.t_c(b_a, hot_tokens),
-                        Some(tm) => {
-                            let pair_bytes =
-                                pm.comm.send_bytes(b_a) / tm.receivers as f64;
-                            tm.latency(pair_bytes)
-                        }
-                    };
-                    sum_t_a += t_a;
-                    sum_t_e += t_e;
-                    sum_t_c += t_c;
-                    stage_samples += 1;
-                    *times_jl = StageTimes { t_a, t_e, t_c };
-                }
-            }
-
-            // 5. Shuttle the micro-batches through all layers.
-            let stats =
-                PingPongEngine { m, layers }.run(|mb, layer| times[mb][layer]);
-            let t_iter = stats.total_time;
-            let end = now + t_iter;
-            attn_util.add_busy(stats.attn_utilization * t_iter);
-            expert_util.add_busy(stats.expert_utilization * t_iter);
-            tpot.record(t_iter);
-            iterations += 1;
-
-            // 6. Account the iteration: one token per active request.
-            for (nid, node) in nodes.iter_mut().enumerate() {
-                let b = node.batcher.batch.len() as u64;
-                tokens += b;
-                per_node_tokens[nid] += b;
-                // Requests decoding their FIRST token this iteration.
-                for r in &node.batcher.batch.requests {
-                    if r.decoded == 0 {
-                        if let Some(q) = by_id.get(&r.id) {
-                            ttft.record(end - q.arrival);
-                        }
-                    }
-                }
-                for id in node.batcher.complete_iteration(&mut node.kv) {
-                    completed += 1;
-                    if let Some(q) = by_id.get(&id) {
-                        e2e.record(end - q.arrival);
-                        if let Some(nid2) = placed_on.remove(&id) {
-                            router.complete(nid2, q);
-                        }
-                    }
-                }
-            }
-            now = end;
-        }
-
-        attn_util.set_horizon(now);
-        expert_util.set_horizon(now);
-        let gpus = (plan.tp_a * n_a + plan.tp_e * n_e) as f64;
-        let throughput = if now > 0.0 { tokens as f64 / now } else { 0.0 };
-        let rejected =
-            (overflow.len() + nodes.iter().map(|n| n.batcher.waiting.len()).sum::<usize>())
-                as u64;
-        let samples = stage_samples.max(1) as f64;
-        ClusterReport {
-            completed,
-            tokens,
-            elapsed: now,
-            iterations,
-            throughput,
-            per_gpu_throughput: throughput / gpus.max(1.0),
-            ttft,
-            tpot,
-            e2e,
-            attn_utilization: attn_util.fraction(),
-            expert_utilization: expert_util.fraction(),
-            per_node_tokens,
-            rejected,
-            mean_t_a: sum_t_a / samples,
-            mean_t_e: sum_t_e / samples,
-            mean_t_c: sum_t_c / samples,
-        }
+        ClusterEngine::new(self.cfg.clone(), requests).run()
     }
 }
 
@@ -511,13 +357,8 @@ mod tests {
             .search()
             .expect("tiny plan");
         ClusterSimConfig {
-            model,
-            cluster,
-            plan,
-            route: RoutePolicy::LeastLoaded,
-            popularity: ExpertPopularity::Uniform,
-            transport: Transport::Analytic,
             seed: 11,
+            ..ClusterSimConfig::new(model, cluster, plan)
         }
     }
 
@@ -597,13 +438,9 @@ mod tests {
         .generate(plan.global_batch.min(8192), 7);
         let run = |pop| {
             ClusterSim::new(ClusterSimConfig {
-                model: model.clone(),
-                cluster: cluster.clone(),
-                plan: plan.clone(),
-                route: RoutePolicy::LeastLoaded,
                 popularity: pop,
-                transport: Transport::Analytic,
                 seed: 9,
+                ..ClusterSimConfig::new(model.clone(), cluster.clone(), plan.clone())
             })
             .run(&reqs)
             .throughput
@@ -639,13 +476,9 @@ mod tests {
         }
         .generate(32, 2);
         let rep = ClusterSim::new(ClusterSimConfig {
-            model,
-            cluster,
-            plan,
             route: RoutePolicy::RoundRobin,
-            popularity: ExpertPopularity::Uniform,
-            transport: Transport::Analytic,
             seed: 4,
+            ..ClusterSimConfig::new(model, cluster, plan)
         })
         .run(&reqs);
         assert_eq!(rep.completed, 32);
@@ -687,5 +520,26 @@ mod tests {
             loads[hot],
             loads[cold]
         );
+    }
+
+    #[test]
+    fn token_copies_conserved_across_the_link() {
+        let cfg = tiny_setup();
+        let layers = cfg.model.layers.max(1) as u64;
+        let top_k = cfg.model.top_k.max(1) as u64;
+        let reqs = WorkloadSpec {
+            median_input: 64.0,
+            median_output: 8.0,
+            sigma: 0.3,
+            ..Default::default()
+        }
+        .generate(40, 13);
+        let rep = ClusterSim::new(cfg).run(&reqs);
+        assert_eq!(rep.completed, 40);
+        // Every decoded token traverses every layer as top_k copies, and
+        // every copy that crosses the link comes back.
+        assert_eq!(rep.dispatched_copies, rep.tokens * layers * top_k);
+        assert_eq!(rep.dispatched_copies, rep.processed_copies);
+        assert_eq!(rep.dispatched_copies, rep.combined_copies);
     }
 }

@@ -1,0 +1,916 @@
+//! The event-driven cluster engine: pluggable components on one virtual
+//! clock.
+//!
+//! The previous generation of the end-to-end simulator
+//! (`ClusterSim::run`) was a single lockstep loop with one global `now` —
+//! every scenario it modeled was artificially synchronized, and neither
+//! per-component timing nor mid-iteration behavior was expressible. This
+//! module decomposes it into an event-driven engine built on
+//! [`crate::sim::EventQueue`]:
+//!
+//! ```text
+//!   Event::Arrive ──► RouterFront ──Event::Place──► AttentionPool
+//!                                                        │ admission at
+//!   Event::IterBegin ◄── (armed by placements /          ▼ IterBegin
+//!                          end-of-iteration)      continuous batching
+//!                                                     + paged KV
+//!        │ kicks off the shared ping-pong core
+//!        ▼
+//!   Event::Pipe(PipeEvent::*) — the per-(micro-batch, layer) shuttle:
+//!     AttnReady/AttnDone        → AttentionPool   (per-node clocks)
+//!     Dispatch/Combine          → M2nLink         (Eq. 6 or simnet,
+//!                                                  token conservation)
+//!     ExpertReady/ExpertDone    → ExpertPool      (per-rank clocks,
+//!                                                  gating + §6 balance)
+//!   Event::Rebalance ──► ExpertPool  (periodic §6 re-placement from
+//!                                     observed loads, drifting Zipf)
+//! ```
+//!
+//! Each component implements [`Component`]: handle an event addressed to
+//! it, mutate local state, and emit future `(time, event)` pairs. All
+//! cross-component interaction flows through events and the shared
+//! [`SimCtx`], so arrivals, pipeline hops and re-balancing interleave on a
+//! single deterministic queue. The ping-pong scheduling itself is the
+//! shared [`PipelineCore`] state machine — the same code that backs
+//! [`crate::coordinator::PingPongEngine`] and
+//! [`crate::plan::simulate_plan_des`], which are thin layers over it.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::coordinator::{
+    balance_experts, build_dispatch, BlockAllocator, ContinuousBatcher, ExpertPlacement,
+    KvCacheConfig, Router, SchedulerConfig,
+};
+use crate::m2n::{LibraryProfile, TransferModel};
+use crate::metrics::{Histogram, Utilization};
+use crate::perf_model::PerfModel;
+use crate::sim::cluster::{
+    draw_gating, popularity_weights, ClusterReport, ClusterSimConfig, ExpertPopularity,
+    TenantReport, Transport,
+};
+use crate::sim::pipeline::{PipeEvent, PipelineCore, PipelineStats, StageTimes};
+use crate::sim::{EventQueue, SimRng};
+use crate::workload::Request;
+
+/// Engine event. Each variant is owned by exactly one component (plus the
+/// engine itself for `IterBegin`); `Pipe` events additionally pass through
+/// the link/expert conservation observers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event {
+    /// Request `arrivals[i]` reaches the front door.
+    Arrive(usize),
+    /// Router decision: place request `req` on attention node `node`.
+    Place { req: usize, node: usize },
+    /// Begin a decode iteration: admission + pipeline kickoff.
+    IterBegin,
+    /// Periodic §6 online re-balancing from observed expert loads.
+    Rebalance,
+    /// One ping-pong pipeline hop (shared core).
+    Pipe(PipeEvent),
+}
+
+/// Cross-component shared state: the workload, the random stream, and the
+/// per-iteration stage context.
+pub struct SimCtx {
+    /// Arrival-ordered owned copy of the trace — the only full clone the
+    /// engine keeps; everything else indexes into it by position.
+    pub arrivals: Vec<Request>,
+    /// Request id -> index into `arrivals` (ids need not be dense).
+    pub idx_of: HashMap<u64, usize>,
+    /// Gating / popularity random stream.
+    pub rng: SimRng,
+    /// Stage-time context of the in-flight iteration (None while idle).
+    pub stage: Option<StageCtx>,
+    /// A decode iteration is in flight.
+    pub in_iteration: bool,
+    /// An `IterBegin` event is already scheduled.
+    pub iter_pending: bool,
+    // Running sums of the effective stage times fed to the pipeline (the
+    // DES-vs-Eq.5 cross-check anchors here).
+    pub sum_t_a: f64,
+    pub sum_t_e: f64,
+    pub sum_t_c: f64,
+    pub stage_samples: u64,
+}
+
+/// Per-iteration stage-time inputs derived from the live batch composition.
+pub struct StageCtx {
+    pub pm: PerfModel,
+    /// Per-node micro-batch token shares: `share[node][mb]`.
+    pub share: Vec<Vec<usize>>,
+    /// Paced attention micro-batch size (max share across nodes).
+    pub b_a: Vec<f64>,
+    /// Total tokens per micro-batch across the pool.
+    pub tok: Vec<usize>,
+    /// Extra k4 weight-load floors when a node hosts several experts.
+    pub extra_weight_loads: f64,
+}
+
+/// A simulation component: consumes an event addressed to it, mutates its
+/// local state, and emits scheduled `(time, event)` follow-ups.
+pub trait Component {
+    fn handle(&mut self, now: f64, ev: &Event, ctx: &mut SimCtx, out: &mut Vec<(f64, Event)>);
+}
+
+// ---------------------------------------------------------------- router --
+
+/// Front-door router component: KV-aware request placement with a strictly
+/// FIFO overflow queue (a request that does not fit blocks later arrivals
+/// from jumping into freed capacity).
+pub struct RouterFront {
+    router: Router,
+    /// FIFO of request indices the fleet could not place yet.
+    overflow: VecDeque<usize>,
+    /// Request index -> attention node, set at placement.
+    placed_on: Vec<Option<usize>>,
+}
+
+impl RouterFront {
+    fn new(router: Router, n_requests: usize) -> Self {
+        Self {
+            router,
+            overflow: VecDeque::new(),
+            placed_on: vec![None; n_requests],
+        }
+    }
+
+    /// Completion callback: release the request's routing accounting.
+    fn complete(&mut self, req: usize, r: &Request) {
+        if let Some(node) = self.placed_on[req].take() {
+            self.router.complete(node, r);
+        }
+    }
+
+    /// FIFO-drain the overflow queue into placements, stopping at the first
+    /// request that still does not fit.
+    fn drain_overflow(&mut self, now: f64, ctx: &SimCtx, out: &mut Vec<(f64, Event)>) {
+        while let Some(&req) = self.overflow.front() {
+            let Some(node) = self.router.route(&ctx.arrivals[req]) else {
+                break;
+            };
+            self.overflow.pop_front();
+            self.placed_on[req] = Some(node);
+            out.push((now, Event::Place { req, node }));
+        }
+    }
+
+    fn pending(&self) -> usize {
+        self.overflow.len()
+    }
+}
+
+impl Component for RouterFront {
+    fn handle(&mut self, now: f64, ev: &Event, ctx: &mut SimCtx, out: &mut Vec<(f64, Event)>) {
+        let Event::Arrive(req) = *ev else { return };
+        if !self.overflow.is_empty() {
+            // Preserve FIFO admission behind an unplaceable head-of-line.
+            self.overflow.push_back(req);
+            return;
+        }
+        match self.router.route(&ctx.arrivals[req]) {
+            Some(node) => {
+                self.placed_on[req] = Some(node);
+                out.push((now, Event::Place { req, node }));
+            }
+            None => self.overflow.push_back(req),
+        }
+    }
+}
+
+// ------------------------------------------------------- attention pool --
+
+/// Per-attention-node serving state.
+struct AttnNode {
+    batcher: ContinuousBatcher,
+    kv: BlockAllocator,
+}
+
+/// What one attention node produced in one decode iteration.
+struct NodeIterOutcome {
+    /// Requests that decoded their FIRST token this iteration.
+    first: Vec<u64>,
+    /// Requests that finished.
+    done: Vec<u64>,
+}
+
+/// The attention pool: `n_a` nodes with continuous batching + paged KV,
+/// each with its own busy clock (the pool stage is paced by the slowest
+/// node of each micro-batch).
+pub struct AttentionPool {
+    nodes: Vec<AttnNode>,
+    /// Per-node cumulative busy seconds (per-node clocks).
+    node_busy: Vec<f64>,
+    /// Output tokens produced by each node (router spread).
+    node_tokens: Vec<u64>,
+    /// Total output tokens decoded by the pool.
+    decoded_tokens: u64,
+}
+
+impl AttentionPool {
+    fn new(n_a: usize, node_batch: usize, kv_tokens: u64) -> Self {
+        let nodes = (0..n_a)
+            .map(|_| AttnNode {
+                batcher: ContinuousBatcher::new(SchedulerConfig {
+                    max_batch: node_batch,
+                }),
+                kv: BlockAllocator::new(KvCacheConfig {
+                    block_size: 16,
+                    num_blocks: (kv_tokens / 16) as usize,
+                }),
+            })
+            .collect();
+        Self {
+            nodes,
+            node_busy: vec![0.0; n_a],
+            node_tokens: vec![0u64; n_a],
+            decoded_tokens: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Iteration-boundary admission on every node.
+    fn admit_all(&mut self, now: f64) {
+        for n in &mut self.nodes {
+            n.batcher.admit(&mut n.kv, now);
+        }
+    }
+
+    fn batch_total(&self) -> usize {
+        self.nodes.iter().map(|n| n.batcher.batch.len()).sum()
+    }
+
+    fn waiting_total(&self) -> usize {
+        self.nodes.iter().map(|n| n.batcher.waiting.len()).sum()
+    }
+
+    fn has_work(&self) -> bool {
+        self.nodes.iter().any(|n| n.batcher.has_work())
+    }
+
+    /// Live-batch mean sequence length, weighted by per-node batch size.
+    fn avg_seq(&self) -> f64 {
+        let total = self.batch_total();
+        if total == 0 {
+            return 1.0;
+        }
+        let sum: f64 = self
+            .nodes
+            .iter()
+            .map(|n| n.batcher.batch.avg_seq_len() * n.batcher.batch.len() as f64)
+            .sum();
+        (sum / total as f64).max(1.0)
+    }
+
+    /// Per-node micro-batch splits for this iteration.
+    fn splits(&self, m: usize) -> Vec<Vec<usize>> {
+        self.nodes
+            .iter()
+            .map(|n| n.batcher.batch.micro_batch_sizes(m))
+            .collect()
+    }
+
+    /// Attention stage time for hop `mb`: the slowest node paces the pool;
+    /// each node's own clock is charged its actual share.
+    fn hop_t_a(&mut self, stage: &StageCtx, mb: usize) -> f64 {
+        for (n, busy) in self.node_busy.iter_mut().enumerate() {
+            let share = stage.share[n][mb];
+            if share > 0 {
+                *busy += stage.pm.t_a(share as f64);
+            }
+        }
+        stage.pm.t_a(stage.b_a[mb])
+    }
+
+    /// End-of-iteration bookkeeping for one node: extend KV, retire
+    /// finished requests, report first-token and completion ids.
+    fn finish_node_iteration(&mut self, nid: usize) -> NodeIterOutcome {
+        let node = &mut self.nodes[nid];
+        let tokens = node.batcher.batch.len() as u64;
+        let first: Vec<u64> = node
+            .batcher
+            .batch
+            .requests
+            .iter()
+            .filter(|r| r.decoded == 0)
+            .map(|r| r.id)
+            .collect();
+        let done = node.batcher.complete_iteration(&mut node.kv);
+        self.node_tokens[nid] += tokens;
+        self.decoded_tokens += tokens;
+        NodeIterOutcome { first, done }
+    }
+}
+
+impl Component for AttentionPool {
+    fn handle(&mut self, now: f64, ev: &Event, ctx: &mut SimCtx, out: &mut Vec<(f64, Event)>) {
+        let Event::Place { req, node } = *ev else { return };
+        self.nodes[node].batcher.submit(ctx.arrivals[req].clone());
+        // A placement while the pool is idle re-arms the iteration clock.
+        if !ctx.in_iteration && !ctx.iter_pending {
+            ctx.iter_pending = true;
+            out.push((now, Event::IterBegin));
+        }
+    }
+}
+
+// ------------------------------------------------------------- M2N link --
+
+/// The M2N transfer component: analytic Eq. 6 bandwidth model or the
+/// simnet-calibrated affine [`TransferModel`], plus end-to-end token-copy
+/// conservation counters (every dispatched copy must come back).
+pub struct M2nLink {
+    transfer: Option<TransferModel>,
+    top_k: usize,
+    /// Token copies handed to the link on the dispatch direction.
+    pub dispatched_copies: u64,
+    /// Token copies handed back on the combine direction.
+    pub combined_copies: u64,
+}
+
+impl M2nLink {
+    fn new(transfer: Option<TransferModel>, top_k: usize) -> Self {
+        Self {
+            transfer,
+            top_k,
+            dispatched_copies: 0,
+            combined_copies: 0,
+        }
+    }
+
+    /// One-direction transfer time for hop `mb` given the hottest expert
+    /// node's token load.
+    fn hop_t_c(&self, stage: &StageCtx, mb: usize, hot_tokens: f64) -> f64 {
+        match &self.transfer {
+            None => stage.pm.t_c(stage.b_a[mb], hot_tokens),
+            Some(tm) => {
+                let pair_bytes = stage.pm.comm.send_bytes(stage.b_a[mb]) / tm.receivers as f64;
+                tm.latency(pair_bytes)
+            }
+        }
+    }
+}
+
+impl Component for M2nLink {
+    fn handle(&mut self, _now: f64, ev: &Event, ctx: &mut SimCtx, _out: &mut Vec<(f64, Event)>) {
+        let Event::Pipe(pe) = ev else { return };
+        let Some(stage) = ctx.stage.as_ref() else {
+            return;
+        };
+        match *pe {
+            PipeEvent::Dispatch { mb, .. } => {
+                self.dispatched_copies += (stage.tok[mb] * self.top_k) as u64;
+            }
+            PipeEvent::Combine { mb, .. } => {
+                self.combined_copies += (stage.tok[mb] * self.top_k) as u64;
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------- expert pool --
+
+/// The expert pool: per-rank clocks, popularity-driven gating draws
+/// through the production `softmax_topk`/`build_dispatch` path, static or
+/// re-balanced expert placement, and §6 greedy redundancy balancing.
+pub struct ExpertPool {
+    experts: usize,
+    n_e: usize,
+    top_k: usize,
+    popularity: ExpertPopularity,
+    /// Base popularity weights (None for `Ideal` round-robin placement).
+    weights: Option<Vec<f64>>,
+    /// Scratch for the (possibly drifted) weights of the current draw.
+    scratch: Vec<f64>,
+    /// §6 oracle: re-balance every micro-batch from the observed loads.
+    oracle_balance: bool,
+    /// Periodic re-balancing placement (None = static expert->node map).
+    placement: Option<ExpertPlacement>,
+    /// Observed per-expert token loads since the last rebalance.
+    observed: Vec<f64>,
+    /// Per-expert-node cumulative busy seconds (per-rank clocks).
+    node_busy: Vec<f64>,
+    /// Token copies that completed expert compute.
+    pub processed_copies: u64,
+    /// Number of `Rebalance` events applied.
+    pub rebalances: u64,
+}
+
+impl ExpertPool {
+    fn new(
+        experts: usize,
+        n_e: usize,
+        top_k: usize,
+        popularity: ExpertPopularity,
+        weights: Option<Vec<f64>>,
+        oracle_balance: bool,
+    ) -> Self {
+        Self {
+            experts,
+            n_e,
+            top_k,
+            popularity,
+            weights,
+            scratch: Vec::with_capacity(experts),
+            oracle_balance,
+            placement: None,
+            observed: vec![0.0; experts],
+            node_busy: vec![0.0; n_e],
+            processed_copies: 0,
+            rebalances: 0,
+        }
+    }
+
+    /// Fill `scratch` with the popularity weights in effect at virtual time
+    /// `now` (drifting Zipf rotates which experts are hot as time passes).
+    fn refresh_weights(&mut self, now: f64) {
+        let w = self.weights.as_ref().expect("weighted popularity");
+        let rot = match self.popularity {
+            ExpertPopularity::ZipfDrifting { period, .. } if period > 0.0 => {
+                (now / period) as usize % self.experts
+            }
+            _ => 0,
+        };
+        self.scratch.clear();
+        self.scratch
+            .extend((0..self.experts).map(|i| w[(i + rot) % self.experts]));
+    }
+
+    /// Expert stage time for hop `mb`: the hottest expert node paces the
+    /// stage; per-rank clocks charge each node its own share. Returns
+    /// `(stage_time, hot_tokens)` — the latter also feeds the M2N model.
+    fn hop_t_e(
+        &mut self,
+        stage: &StageCtx,
+        rng: &mut SimRng,
+        now: f64,
+        mb: usize,
+    ) -> (f64, f64) {
+        let tok = stage.tok[mb];
+        let dispatched = tok * self.top_k;
+        if self.weights.is_none() {
+            // Ideal: exact round-robin balance across expert nodes.
+            let hot = dispatched.div_ceil(self.n_e) as f64;
+            let dur = stage.pm.t_e(hot) + stage.extra_weight_loads;
+            for busy in &mut self.node_busy {
+                *busy += dur;
+            }
+            return (dur, hot);
+        }
+        self.refresh_weights(now);
+        let g = draw_gating(rng, tok, &self.scratch, self.top_k);
+        let dp = build_dispatch(&g, self.experts);
+        let loads: Vec<f64> = (0..self.experts)
+            .map(|e| dp.expert_load(e) as f64)
+            .collect();
+        for (o, l) in self.observed.iter_mut().zip(&loads) {
+            *o += *l;
+        }
+        let node_load: Vec<f64> = match &self.placement {
+            Some(p) => p.node_loads(&loads),
+            None => {
+                let mut nl = vec![0.0f64; self.n_e];
+                for (e, l) in loads.iter().enumerate() {
+                    nl[e % self.n_e] += *l;
+                }
+                nl
+            }
+        };
+        let hot = if self.oracle_balance {
+            let mean = node_load.iter().sum::<f64>() / self.n_e as f64;
+            balance_experts(&node_load, self.n_e, 0.1 * mean).makespan
+        } else {
+            node_load.iter().copied().fold(0.0, f64::max)
+        };
+        for (j, busy) in self.node_busy.iter_mut().enumerate() {
+            if node_load[j] > 0.0 {
+                *busy += stage.pm.t_e(node_load[j]) + stage.extra_weight_loads;
+            }
+        }
+        (stage.pm.t_e(hot) + stage.extra_weight_loads, hot)
+    }
+}
+
+impl Component for ExpertPool {
+    fn handle(&mut self, _now: f64, ev: &Event, ctx: &mut SimCtx, _out: &mut Vec<(f64, Event)>) {
+        match ev {
+            Event::Rebalance => {
+                // §6 greedy redundancy re-placement from the loads observed
+                // since the previous rebalance (the online analogue of the
+                // per-micro-batch oracle).
+                let total: f64 = self.observed.iter().sum();
+                if total > 0.0 {
+                    let cold = 0.1 * total / self.experts as f64;
+                    self.placement = Some(balance_experts(&self.observed, self.n_e, cold));
+                    self.rebalances += 1;
+                    for o in &mut self.observed {
+                        *o = 0.0;
+                    }
+                }
+            }
+            Event::Pipe(PipeEvent::ExpertDone { mb, .. }) => {
+                if let Some(stage) = ctx.stage.as_ref() {
+                    self.processed_copies += (stage.tok[*mb] * self.top_k) as u64;
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------- engine --
+
+/// Per-tenant accumulator.
+struct TenantAcc {
+    completed: u64,
+    ttft: Histogram,
+    e2e: Histogram,
+}
+
+/// The end-to-end cluster engine: components wired onto one event queue.
+pub struct ClusterEngine {
+    cfg: ClusterSimConfig,
+    q: EventQueue<Event>,
+    ctx: SimCtx,
+    router: RouterFront,
+    attention: AttentionPool,
+    link: M2nLink,
+    experts: ExpertPool,
+    pipeline: Option<PipelineCore>,
+    // metrics
+    ttft: Histogram,
+    tpot: Histogram,
+    e2e: Histogram,
+    attn_util: Utilization,
+    expert_util: Utilization,
+    tenant_stats: Vec<TenantAcc>,
+    completed: u64,
+    iterations: u64,
+    next_rebalance: f64,
+    elapsed: f64,
+}
+
+impl ClusterEngine {
+    /// KV-token capacity of one attention node (Eq. 8 budget).
+    fn node_kv_tokens(cfg: &ClusterSimConfig) -> u64 {
+        let gpu = cfg.cluster.attention_gpu();
+        let budget = cfg.plan.tp_a as f64 * gpu.mem_bytes() - cfg.model.attn_param_bytes();
+        (budget.max(0.0) / cfg.model.kv_bytes_per_token()).floor() as u64
+    }
+
+    pub fn new(mut cfg: ClusterSimConfig, requests: &[Request]) -> Self {
+        // A non-positive interval would never advance the rebalance clock.
+        cfg.rebalance_period = cfg.rebalance_period.filter(|p| *p > 0.0);
+        let n_a = cfg.plan.n_a.max(1);
+        let n_e = cfg.plan.n_e.max(1);
+        let experts = cfg.model.experts.max(1);
+        let top_k = cfg.model.top_k.clamp(1, experts);
+
+        // --- deterministic random streams -------------------------------
+        let mut perm_rng = SimRng::new(cfg.seed ^ 0x5bd1_e995_u64);
+        let rng = SimRng::new(cfg.seed);
+        let (weights, oracle_balance) = match cfg.popularity {
+            ExpertPopularity::Ideal => (None, false),
+            ExpertPopularity::Uniform => {
+                (Some(popularity_weights(experts, 0.0, &mut perm_rng)), false)
+            }
+            ExpertPopularity::Zipf(a) => {
+                (Some(popularity_weights(experts, a, &mut perm_rng)), false)
+            }
+            ExpertPopularity::ZipfBalanced(a) => {
+                (Some(popularity_weights(experts, a, &mut perm_rng)), true)
+            }
+            ExpertPopularity::ZipfDrifting { alpha, .. } => {
+                (Some(popularity_weights(experts, alpha, &mut perm_rng)), false)
+            }
+        };
+
+        // --- transport --------------------------------------------------
+        let transfer = match cfg.transport {
+            Transport::Analytic => None,
+            Transport::Simnet(kind) => Some(TransferModel::calibrate(
+                &LibraryProfile::of(kind),
+                (n_a * cfg.plan.tp_a).max(1),
+                (n_e * cfg.plan.tp_e).max(1),
+                cfg.seed,
+            )),
+        };
+
+        // --- attention pool + router ------------------------------------
+        // Eq. 8 capacity, capped at the trace's total demand (plus one
+        // block per request for partial-block rounding): capacity beyond
+        // what the whole workload can ever occupy is unreachable, and not
+        // materializing it keeps the block allocator small.
+        let demand: u64 = requests
+            .iter()
+            .map(|r| (r.input_len + r.output_len + 16) as u64)
+            .sum();
+        let kv_tokens = Self::node_kv_tokens(&cfg).min(demand.max(16));
+        let router = Router::new(cfg.route, &vec![kv_tokens; n_a]);
+        let node_batch = cfg.plan.global_batch.div_ceil(n_a).max(1);
+
+        // --- arrival stream: one sorted owned vec, indexed by position ---
+        let mut arrivals: Vec<Request> = requests.to_vec();
+        arrivals.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        let idx_of: HashMap<u64, usize> =
+            arrivals.iter().enumerate().map(|(i, r)| (r.id, i)).collect();
+
+        let tenant_stats = cfg
+            .tenants
+            .iter()
+            .map(|_| TenantAcc {
+                completed: 0,
+                ttft: Histogram::new(),
+                e2e: Histogram::new(),
+            })
+            .collect();
+
+        let n_requests = arrivals.len();
+        Self {
+            router: RouterFront::new(router, n_requests),
+            attention: AttentionPool::new(n_a, node_batch, kv_tokens),
+            link: M2nLink::new(transfer, top_k),
+            experts: ExpertPool::new(experts, n_e, top_k, cfg.popularity, weights, oracle_balance),
+            ctx: SimCtx {
+                arrivals,
+                idx_of,
+                rng,
+                stage: None,
+                in_iteration: false,
+                iter_pending: false,
+                sum_t_a: 0.0,
+                sum_t_e: 0.0,
+                sum_t_c: 0.0,
+                stage_samples: 0,
+            },
+            q: EventQueue::new(),
+            pipeline: None,
+            ttft: Histogram::new(),
+            tpot: Histogram::new(),
+            e2e: Histogram::new(),
+            attn_util: Utilization::new(),
+            expert_util: Utilization::new(),
+            tenant_stats,
+            completed: 0,
+            iterations: 0,
+            next_rebalance: cfg.rebalance_period.unwrap_or(f64::INFINITY),
+            elapsed: 0.0,
+            cfg,
+        }
+    }
+
+    /// Run the engine to quiescence and report.
+    pub fn run(mut self) -> ClusterReport {
+        for (i, r) in self.ctx.arrivals.iter().enumerate() {
+            self.q.schedule_at(r.arrival.max(0.0), Event::Arrive(i));
+        }
+        let mut out: Vec<(f64, Event)> = Vec::new();
+        while let Some((now, ev)) = self.q.pop() {
+            self.elapsed = self.elapsed.max(now);
+            match ev {
+                Event::Arrive(_) => self.router.handle(now, &ev, &mut self.ctx, &mut out),
+                Event::Place { .. } => self.attention.handle(now, &ev, &mut self.ctx, &mut out),
+                Event::Rebalance => self.experts.handle(now, &ev, &mut self.ctx, &mut out),
+                Event::IterBegin => self.begin_iteration(now, &mut out),
+                Event::Pipe(pe) => self.on_pipe(now, pe, &mut out),
+            }
+            for (at, e) in out.drain(..) {
+                self.q.schedule_at(at, e);
+            }
+        }
+        self.finalize()
+    }
+
+    /// Iteration boundary: admission on every node, stage-context build,
+    /// pipeline kickoff. A boundary with an empty batch simply goes idle —
+    /// the next placement re-arms the clock.
+    fn begin_iteration(&mut self, now: f64, out: &mut Vec<(f64, Event)>) {
+        self.ctx.iter_pending = false;
+        self.attention.admit_all(now);
+        if self.attention.batch_total() == 0 {
+            return;
+        }
+        // Periodic §6 online re-balancing, applied before this iteration's
+        // hops draw their expert loads.
+        if let Some(period) = self.cfg.rebalance_period {
+            if now >= self.next_rebalance {
+                out.push((now, Event::Rebalance));
+                while self.next_rebalance <= now {
+                    self.next_rebalance += period;
+                }
+            }
+        }
+
+        let plan = &self.cfg.plan;
+        let m = plan.m.max(1);
+        let layers = self.cfg.model.layers.max(1);
+        let n_e = plan.n_e.max(1);
+        let experts = self.cfg.model.experts.max(1);
+
+        let avg_seq = self.attention.avg_seq();
+        let pm = PerfModel::new(&self.cfg.model, &self.cfg.cluster, plan.tp_a, plan.tp_e, avg_seq);
+        let share = self.attention.splits(m);
+        let b_a: Vec<f64> = (0..m)
+            .map(|j| share.iter().map(|s| s[j]).max().unwrap_or(0) as f64)
+            .collect();
+        let tok: Vec<usize> = (0..m).map(|j| share.iter().map(|s| s[j]).sum()).collect();
+        // The T_e model (k3·b_e + k4) is calibrated per *expert*; a node
+        // hosting several experts streams each one's weight panels, so
+        // charge the extra k4 floors when n_e < experts.
+        let extra_weight_loads =
+            (experts.div_ceil(n_e).saturating_sub(1)) as f64 * pm.expert.k4;
+        self.ctx.stage = Some(StageCtx {
+            pm,
+            share,
+            b_a,
+            tok,
+            extra_weight_loads,
+        });
+        self.ctx.in_iteration = true;
+
+        let mut core = PipelineCore::new(m, layers);
+        let mut pipe_out: Vec<(f64, PipeEvent)> = Vec::new();
+        core.start(now, &mut pipe_out);
+        for (at, pe) in pipe_out {
+            out.push((at, Event::Pipe(pe)));
+        }
+        self.pipeline = Some(core);
+    }
+
+    /// One pipeline hop: conservation observers first, then the shared
+    /// scheduling core with the components as the stage-time providers.
+    fn on_pipe(&mut self, now: f64, pe: PipeEvent, out: &mut Vec<(f64, Event)>) {
+        let ev = Event::Pipe(pe);
+        self.link.handle(now, &ev, &mut self.ctx, out);
+        self.experts.handle(now, &ev, &mut self.ctx, out);
+
+        let Some(mut core) = self.pipeline.take() else {
+            return;
+        };
+        let mut pipe_out: Vec<(f64, PipeEvent)> = Vec::new();
+        let stats = {
+            let ctx = &mut self.ctx;
+            let attention = &mut self.attention;
+            let experts = &mut self.experts;
+            let link = &mut self.link;
+            core.on_event(
+                now,
+                pe,
+                &mut |t, mb, layer| hop_times(attention, experts, link, ctx, t, mb, layer),
+                &mut pipe_out,
+            )
+        };
+        for (at, e) in pipe_out {
+            out.push((at, Event::Pipe(e)));
+        }
+        match stats {
+            None => self.pipeline = Some(core),
+            Some(stats) => self.end_iteration(now, stats, out),
+        }
+    }
+
+    /// End of a decode iteration: latency/utilization metrics, per-node
+    /// token accounting, completions back to the router, FIFO overflow
+    /// drain into the freed capacity, and the next iteration boundary.
+    fn end_iteration(&mut self, now: f64, stats: PipelineStats, out: &mut Vec<(f64, Event)>) {
+        let t_iter = stats.total_time;
+        self.attn_util.add_busy(stats.attn_utilization * t_iter);
+        self.expert_util.add_busy(stats.expert_utilization * t_iter);
+        self.tpot.record(t_iter);
+        self.iterations += 1;
+        self.ctx.in_iteration = false;
+        self.ctx.stage = None;
+
+        for nid in 0..self.attention.len() {
+            let outcome = self.attention.finish_node_iteration(nid);
+            for id in outcome.first {
+                if let Some(&i) = self.ctx.idx_of.get(&id) {
+                    let r = &self.ctx.arrivals[i];
+                    let wait = now - r.arrival;
+                    self.ttft.record(wait);
+                    if !self.cfg.tenants.is_empty() {
+                        let t = r.tenant.min(self.cfg.tenants.len() - 1);
+                        self.tenant_stats[t].ttft.record(wait);
+                    }
+                }
+            }
+            for id in outcome.done {
+                self.completed += 1;
+                if let Some(&i) = self.ctx.idx_of.get(&id) {
+                    let r = &self.ctx.arrivals[i];
+                    let latency = now - r.arrival;
+                    self.e2e.record(latency);
+                    if !self.cfg.tenants.is_empty() {
+                        let t = r.tenant.min(self.cfg.tenants.len() - 1);
+                        let acc = &mut self.tenant_stats[t];
+                        acc.completed += 1;
+                        acc.e2e.record(latency);
+                    }
+                    self.router.complete(i, r);
+                }
+            }
+        }
+
+        // Freed KV first, then strictly-FIFO admission of queued arrivals.
+        self.router.drain_overflow(now, &self.ctx, out);
+        if self.attention.has_work() && !self.ctx.iter_pending {
+            self.ctx.iter_pending = true;
+            out.push((now, Event::IterBegin));
+        }
+    }
+
+    fn finalize(mut self) -> ClusterReport {
+        let now = self.elapsed;
+        self.attn_util.set_horizon(now);
+        self.expert_util.set_horizon(now);
+        let plan = &self.cfg.plan;
+        let gpus = (plan.tp_a * plan.n_a.max(1) + plan.tp_e * plan.n_e.max(1)) as f64;
+        let tokens = self.attention.decoded_tokens;
+        let throughput = if now > 0.0 { tokens as f64 / now } else { 0.0 };
+        let rejected = (self.router.pending() + self.attention.waiting_total()) as u64;
+        let samples = self.ctx.stage_samples.max(1) as f64;
+        let frac = |busy: &f64| {
+            if now > 0.0 {
+                (busy / now).clamp(0.0, 1.0)
+            } else {
+                0.0
+            }
+        };
+        let per_node_attn_busy: Vec<f64> = self.attention.node_busy.iter().map(frac).collect();
+        let per_node_expert_busy: Vec<f64> = self.experts.node_busy.iter().map(frac).collect();
+        let tenants: Vec<TenantReport> = self
+            .cfg
+            .tenants
+            .iter()
+            .zip(self.tenant_stats)
+            .map(|(tc, acc)| TenantReport {
+                name: tc.name.clone(),
+                slo_e2e: tc.slo_e2e,
+                completed: acc.completed,
+                ttft: acc.ttft,
+                e2e: acc.e2e,
+            })
+            .collect();
+        ClusterReport {
+            completed: self.completed,
+            tokens,
+            elapsed: now,
+            iterations: self.iterations,
+            throughput,
+            per_gpu_throughput: throughput / gpus.max(1.0),
+            ttft: self.ttft,
+            tpot: self.tpot,
+            e2e: self.e2e,
+            attn_utilization: self.attn_util.fraction(),
+            expert_utilization: self.expert_util.fraction(),
+            per_node_tokens: self.attention.node_tokens.clone(),
+            per_node_attn_busy,
+            per_node_expert_busy,
+            rejected,
+            mean_t_a: self.ctx.sum_t_a / samples,
+            mean_t_e: self.ctx.sum_t_e / samples,
+            mean_t_c: self.ctx.sum_t_c / samples,
+            dispatched_copies: self.link.dispatched_copies,
+            combined_copies: self.link.combined_copies,
+            processed_copies: self.experts.processed_copies,
+            rebalances: self.experts.rebalances,
+            tenants,
+        }
+    }
+}
+
+/// Compose the components' duration models into the per-hop stage times the
+/// pipeline core memoizes. Consulted exactly once per (micro-batch, layer),
+/// in deterministic event order.
+fn hop_times(
+    attention: &mut AttentionPool,
+    experts: &mut ExpertPool,
+    link: &mut M2nLink,
+    ctx: &mut SimCtx,
+    now: f64,
+    mb: usize,
+    layer: usize,
+) -> StageTimes {
+    let _ = layer; // hops differ per layer only through the stochastic draw
+    let SimCtx {
+        stage,
+        rng,
+        sum_t_a,
+        sum_t_e,
+        sum_t_c,
+        stage_samples,
+        ..
+    } = ctx;
+    let stage = stage.as_ref().expect("pipeline hop outside an iteration");
+    let t_a = attention.hop_t_a(stage, mb);
+    let (t_e, hot_tokens) = experts.hop_t_e(stage, rng, now, mb);
+    let t_c = link.hop_t_c(stage, mb, hot_tokens);
+    *sum_t_a += t_a;
+    *sum_t_e += t_e;
+    *sum_t_c += t_c;
+    *stage_samples += 1;
+    StageTimes { t_a, t_e, t_c }
+}

@@ -1,15 +1,29 @@
 //! Discrete-event simulation core shared by the M2N network simulator and
 //! the coordinator's virtual-time backend, plus the trace-driven end-to-end
-//! cluster simulator ([`cluster`]).
+//! cluster simulator.
 //!
-//! A minimal, fast event queue: virtual clock in f64 seconds, binary-heap
-//! scheduling, deterministic tie-breaking by insertion sequence so repeated
-//! runs are bit-identical.
+//! Layers:
+//!
+//! * [`EventQueue`] — the kernel: virtual clock in f64 seconds, binary-heap
+//!   scheduling, deterministic tie-breaking by insertion sequence so
+//!   repeated runs are bit-identical;
+//! * [`pipeline`] — the shared ping-pong scheduling state machine (one
+//!   implementation for every simulation path);
+//! * [`engine`] — the event-driven cluster engine: pluggable components
+//!   (router front, attention pool, M2N link, expert pool) wired onto one
+//!   queue;
+//! * [`cluster`] — scenario configuration + reporting, the public facade.
 
 pub mod cluster;
+pub mod engine;
+pub mod pipeline;
 mod rng;
 
-pub use cluster::{ClusterReport, ClusterSim, ClusterSimConfig, ExpertPopularity, Transport};
+pub use cluster::{
+    ClusterReport, ClusterSim, ClusterSimConfig, ExpertPopularity, TenantReport, Transport,
+};
+pub use engine::{ClusterEngine, Component, Event};
+pub use pipeline::{PipeEvent, PipelineCore, PipelineStats, StageTimes};
 pub use rng::SimRng;
 
 use std::cmp::Ordering;

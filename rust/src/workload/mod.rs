@@ -1,11 +1,13 @@
 //! Workload generation: synthetic request traces matched to the paper's
 //! production dataset statistics (§7.1: median input 571 tokens, median
-//! output 159 tokens), with log-normal length distributions and Poisson
-//! arrivals.
+//! output 159 tokens), with log-normal length distributions, Poisson
+//! arrivals, and optional multi-tenant traffic classes with per-class SLOs.
 
 mod trace;
 
 pub use trace::{Trace, TraceStats};
+
+use anyhow::bail;
 
 use crate::sim::SimRng;
 
@@ -19,6 +21,9 @@ pub struct Request {
     pub input_len: usize,
     /// Number of tokens to decode.
     pub output_len: usize,
+    /// Traffic-class index into the workload's tenant list (0 when the
+    /// workload is single-tenant).
+    pub tenant: usize,
 }
 
 impl Request {
@@ -33,6 +38,7 @@ impl Request {
             .set("arrival", self.arrival)
             .set("input_len", self.input_len)
             .set("output_len", self.output_len)
+            .set("tenant", self.tenant)
     }
 
     pub fn from_json(v: &crate::util::json::Json) -> anyhow::Result<Self> {
@@ -41,7 +47,55 @@ impl Request {
             arrival: v.get("arrival")?.as_f64()?,
             input_len: v.get("input_len")?.as_usize()?,
             output_len: v.get("output_len")?.as_usize()?,
+            // Absent in traces written before multi-tenancy existed.
+            tenant: match v.opt("tenant") {
+                Some(t) => t.as_usize()?,
+                None => 0,
+            },
         })
+    }
+}
+
+/// A traffic class in a multi-tenant workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantClass {
+    pub name: String,
+    /// Relative traffic share (normalized over the mix).
+    pub weight: f64,
+    /// End-to-end SLO for the class (seconds, arrival → last token).
+    pub slo_e2e: f64,
+}
+
+impl TenantClass {
+    /// Parse a CLI tenant mix: comma-separated `name:weight:slo_seconds`
+    /// triples, e.g. `interactive:0.7:2.5,batch:0.3:60`.
+    pub fn parse_list(spec: &str) -> anyhow::Result<Vec<TenantClass>> {
+        let mut out = Vec::new();
+        for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let fields: Vec<&str> = part.trim().split(':').collect();
+            if fields.len() != 3 {
+                bail!("tenant {part:?} is not name:weight:slo_seconds");
+            }
+            let weight: f64 = fields[1]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("tenant weight {:?} not a number", fields[1]))?;
+            let slo_e2e: f64 = fields[2]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("tenant SLO {:?} not a number", fields[2]))?;
+            // `> 0.0` (not `!(<= 0.0)`) so NaN is rejected too.
+            if !(weight > 0.0 && weight.is_finite()) || !(slo_e2e > 0.0) {
+                bail!("tenant {part:?}: weight and SLO must be positive");
+            }
+            out.push(TenantClass {
+                name: fields[0].to_string(),
+                weight,
+                slo_e2e,
+            });
+        }
+        if out.is_empty() {
+            bail!("empty tenant spec");
+        }
+        Ok(out)
     }
 }
 
@@ -63,6 +117,9 @@ pub struct WorkloadSpec {
     pub burst_sigma: f64,
     /// Clamp lengths into [1, max_len].
     pub max_len: usize,
+    /// Traffic classes: each request draws a class by weight (empty = all
+    /// requests belong to tenant 0).
+    pub tenants: Vec<TenantClass>,
 }
 
 impl Default for WorkloadSpec {
@@ -74,6 +131,7 @@ impl Default for WorkloadSpec {
             arrival_rate: None,
             burst_sigma: 0.0,
             max_len: 8192,
+            tenants: Vec::new(),
         }
     }
 }
@@ -86,6 +144,22 @@ impl WorkloadSpec {
         let mean_in = self.median_input * (self.sigma * self.sigma / 2.0).exp();
         let mean_out = self.median_output * (self.sigma * self.sigma / 2.0).exp();
         mean_in + mean_out / 2.0
+    }
+
+    /// Weighted tenant draw (0 when the workload is single-tenant).
+    fn draw_tenant(&self, rng: &mut SimRng) -> usize {
+        if self.tenants.is_empty() {
+            return 0;
+        }
+        let total: f64 = self.tenants.iter().map(|t| t.weight).sum();
+        let mut x = rng.uniform() * total;
+        for (i, t) in self.tenants.iter().enumerate() {
+            if x < t.weight {
+                return i;
+            }
+            x -= t.weight;
+        }
+        self.tenants.len() - 1
     }
 
     /// Generate `n` requests.
@@ -112,6 +186,7 @@ impl WorkloadSpec {
                         .clamp(1, self.max_len),
                     output_len: (rng.lognormal_median(self.median_output, self.sigma) as usize)
                         .clamp(1, self.max_len),
+                    tenant: self.draw_tenant(&mut rng),
                 }
             })
             .collect()
@@ -187,6 +262,7 @@ mod tests {
     fn closed_loop_all_at_zero() {
         let reqs = WorkloadSpec::default().generate(10, 1);
         assert!(reqs.iter().all(|r| r.arrival == 0.0));
+        assert!(reqs.iter().all(|r| r.tenant == 0), "single-tenant default");
     }
 
     #[test]
@@ -196,9 +272,68 @@ mod tests {
             arrival: 0.0,
             input_len: 100,
             output_len: 10,
+            tenant: 0,
         };
         assert_eq!(r.seq_len_at(0), 100);
         assert_eq!(r.seq_len_at(5), 105);
         assert_eq!(r.seq_len_at(50), 110); // capped at output_len
+    }
+
+    #[test]
+    fn tenant_shares_follow_weights() {
+        let spec = WorkloadSpec {
+            tenants: vec![
+                TenantClass {
+                    name: "interactive".into(),
+                    weight: 3.0,
+                    slo_e2e: 2.0,
+                },
+                TenantClass {
+                    name: "batch".into(),
+                    weight: 1.0,
+                    slo_e2e: 60.0,
+                },
+            ],
+            ..Default::default()
+        };
+        let reqs = spec.generate(20_000, 5);
+        let interactive = reqs.iter().filter(|r| r.tenant == 0).count() as f64;
+        let share = interactive / reqs.len() as f64;
+        assert!((share - 0.75).abs() < 0.02, "interactive share {share}");
+        assert!(reqs.iter().all(|r| r.tenant < 2));
+    }
+
+    #[test]
+    fn tenant_spec_parses() {
+        let ts = TenantClass::parse_list("interactive:0.7:2.5,batch:0.3:60").unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "interactive");
+        assert!((ts[0].weight - 0.7).abs() < 1e-12);
+        assert!((ts[1].slo_e2e - 60.0).abs() < 1e-12);
+        assert!(TenantClass::parse_list("").is_err());
+        assert!(TenantClass::parse_list("a:b:c").is_err());
+        assert!(TenantClass::parse_list("a:1").is_err());
+        assert!(TenantClass::parse_list("a:-1:5").is_err());
+        assert!(TenantClass::parse_list("a:NaN:5").is_err());
+        assert!(TenantClass::parse_list("a:1:NaN").is_err());
+    }
+
+    #[test]
+    fn tenant_survives_json_roundtrip_and_defaults_to_zero() {
+        let r = Request {
+            id: 7,
+            arrival: 1.5,
+            input_len: 10,
+            output_len: 3,
+            tenant: 1,
+        };
+        let back = Request::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        // Pre-multi-tenancy trace lines still load.
+        let legacy = crate::util::json::Json::parse(
+            r#"{"id":1,"arrival":0,"input_len":8,"output_len":2}"#,
+        )
+        .unwrap();
+        assert_eq!(Request::from_json(&legacy).unwrap().tenant, 0);
     }
 }

@@ -108,9 +108,9 @@ mod tests {
     #[test]
     fn stats_basic() {
         let t = Trace::new(vec![
-            Request { id: 0, arrival: 0.0, input_len: 100, output_len: 10 },
-            Request { id: 1, arrival: 0.0, input_len: 200, output_len: 30 },
-            Request { id: 2, arrival: 0.0, input_len: 300, output_len: 20 },
+            Request { id: 0, arrival: 0.0, input_len: 100, output_len: 10, tenant: 0 },
+            Request { id: 1, arrival: 0.0, input_len: 200, output_len: 30, tenant: 0 },
+            Request { id: 2, arrival: 0.0, input_len: 300, output_len: 20, tenant: 0 },
         ]);
         let s = t.stats();
         assert_eq!(s.count, 3);

@@ -1,17 +1,18 @@
-//! End-to-end tests for the trace-driven cluster simulator
-//! (`sim::cluster`): golden agreement with the paper's closed forms in the
-//! pipeline-full regime, the utilization gap below constraint 3, and
-//! bit-exact determinism under a fixed seed.
+//! End-to-end tests for the event-driven cluster engine (`sim::engine`
+//! behind the `sim::cluster` facade): golden agreement with the paper's
+//! closed forms in the pipeline-full regime, the utilization gap below
+//! constraint 3, bit-exact determinism under a fixed seed, and the
+//! scenario-diversity knobs (multi-tenant SLOs, drifting popularity with
+//! periodic online re-balancing).
 
 use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
-use megascale_infer::coordinator::RoutePolicy;
 use megascale_infer::m2n::LibraryKind;
 use megascale_infer::perf_model::{IterationModel, PerfModel};
 use megascale_infer::plan::{simulate_plan, DeploymentPlan};
 use megascale_infer::sim::cluster::{
     ClusterSim, ClusterSimConfig, ExpertPopularity, Transport,
 };
-use megascale_infer::workload::{Request, WorkloadSpec};
+use megascale_infer::workload::{Request, TenantClass, WorkloadSpec};
 
 /// A hand-specified Mixtral deployment point (same region the seed's plan
 /// tests exercise) with an exactly divisible batch: `b_a = B/(m·n_a)` and
@@ -47,6 +48,7 @@ fn constant_requests(n: usize, input: usize, output: usize) -> Vec<Request> {
             arrival: 0.0,
             input_len: input,
             output_len: output,
+            tenant: 0,
         })
         .collect()
 }
@@ -60,13 +62,9 @@ fn run_fixed(
     let (model, cluster, plan) = fixed_plan(m, global_batch);
     let reqs = constant_requests(global_batch, 512, 4);
     let rep = ClusterSim::new(ClusterSimConfig {
-        model: model.clone(),
-        cluster,
-        plan: plan.clone(),
-        route: RoutePolicy::LeastLoaded,
         popularity,
-        transport: Transport::Analytic,
         seed,
+        ..ClusterSimConfig::new(model.clone(), cluster, plan.clone())
     })
     .run(&reqs);
     (plan, model, rep)
@@ -166,13 +164,10 @@ fn same_seed_is_bit_identical() {
         }
         .generate(300, 77);
         ClusterSim::new(ClusterSimConfig {
-            model,
-            cluster,
-            plan,
-            route: RoutePolicy::LeastLoaded,
             popularity: ExpertPopularity::Zipf(1.0),
             transport: Transport::Simnet(LibraryKind::MegaScale),
             seed: 1234,
+            ..ClusterSimConfig::new(model, cluster, plan)
         })
         .run(&reqs)
     };
@@ -197,7 +192,9 @@ fn same_seed_is_bit_identical() {
         assert_eq!(a.e2e.percentile(p).to_bits(), b.e2e.percentile(p).to_bits());
     }
     assert_eq!(a.per_node_tokens, b.per_node_tokens);
+    assert_eq!(a.dispatched_copies, b.dispatched_copies);
     assert_eq!(a.summary(), b.summary(), "rendered summaries identical");
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
 }
 
 /// Different seeds must actually change stochastic outcomes (guards against
@@ -208,13 +205,9 @@ fn different_seed_changes_skewed_runs() {
         let (model, cluster, plan) = fixed_plan(3, 240);
         let reqs = constant_requests(240, 256, 6);
         ClusterSim::new(ClusterSimConfig {
-            model,
-            cluster,
-            plan,
-            route: RoutePolicy::LeastLoaded,
             popularity: ExpertPopularity::Zipf(1.0),
-            transport: Transport::Analytic,
             seed,
+            ..ClusterSimConfig::new(model, cluster, plan)
         })
         .run(&reqs)
     };
@@ -244,4 +237,144 @@ fn micro_batch_sweep_reproduces_figure12_shape() {
     // At this point m=2 already nearly saturates the bottleneck stage, so
     // the m=3 gain is marginal-to-modest (Figure 12's flattening tail).
     assert!((0.95..1.6).contains(&g23), "m2->m3 gain {g23}");
+}
+
+/// Token-copy conservation through the event graph: every copy the link
+/// dispatches is processed by the expert pool and combined back, and the
+/// totals equal tokens × layers × top_k.
+#[test]
+fn token_copies_conserved_end_to_end() {
+    for pop in [
+        ExpertPopularity::Ideal,
+        ExpertPopularity::Zipf(1.0),
+        ExpertPopularity::ZipfBalanced(1.0),
+    ] {
+        let (plan, model, rep) = run_fixed(3, 240, pop, 5);
+        assert_eq!(rep.completed, plan.global_batch as u64);
+        let expect = rep.tokens * model.layers as u64 * model.top_k as u64;
+        assert_eq!(rep.dispatched_copies, expect, "{pop:?}");
+        assert_eq!(rep.processed_copies, expect, "{pop:?}");
+        assert_eq!(rep.combined_copies, expect, "{pop:?}");
+    }
+}
+
+/// Multi-tenant traffic classes: per-class completions partition the total,
+/// per-class SLO attainment is reported, and a lax SLO attains ~100%.
+#[test]
+fn tenant_classes_report_slo_attainment() {
+    let (model, cluster, plan) = fixed_plan(3, 240);
+    let tenants = vec![
+        TenantClass {
+            name: "interactive".into(),
+            weight: 0.7,
+            slo_e2e: 1e-6, // impossible: every request misses
+        },
+        TenantClass {
+            name: "batch".into(),
+            weight: 0.3,
+            slo_e2e: 1e9, // trivially met
+        },
+    ];
+    let reqs = WorkloadSpec {
+        median_input: 256.0,
+        median_output: 8.0,
+        sigma: 0.3,
+        tenants: tenants.clone(),
+        ..Default::default()
+    }
+    .generate(240, 21);
+    let rep = ClusterSim::new(ClusterSimConfig {
+        seed: 21,
+        tenants,
+        ..ClusterSimConfig::new(model, cluster, plan)
+    })
+    .run(&reqs);
+    assert_eq!(rep.completed, 240);
+    assert_eq!(rep.tenants.len(), 2);
+    let total: u64 = rep.tenants.iter().map(|t| t.completed).sum();
+    assert_eq!(total, rep.completed, "classes partition completions");
+    for t in &rep.tenants {
+        assert!(t.completed > 0, "both classes saw traffic");
+        assert_eq!(t.e2e.count(), t.completed);
+    }
+    assert_eq!(rep.tenants[0].attainment(), 0.0, "impossible SLO");
+    assert_eq!(rep.tenants[1].attainment(), 1.0, "lax SLO");
+    assert!(rep.summary().contains("tenant"), "summary lists classes");
+}
+
+/// Drifting popularity: with static placement the hot expert moves away
+/// from wherever it was, so throughput stays depressed; periodic §6 online
+/// re-balancing tracks the drift and recovers most of the loss.
+#[test]
+fn popularity_drift_hurts_and_periodic_rebalance_recovers() {
+    // Needs a compute-bound expert stage (same reasoning as the §6 skew
+    // test): use the searched Mixtral plan with a saturated batch.
+    let model = ModelConfig::mixtral_8x22b();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let plan = megascale_infer::plan::PlanSearcher::new(model.clone(), cluster.clone(), 730.0)
+        .search()
+        .expect("mixtral plan");
+    let n = plan.global_batch.min(8192);
+    let reqs = WorkloadSpec {
+        median_output: 12.0,
+        sigma: 0.1,
+        ..Default::default()
+    }
+    .generate(n, 7);
+    let run = |pop, rebalance: Option<f64>| {
+        ClusterSim::new(ClusterSimConfig {
+            popularity: pop,
+            seed: 9,
+            rebalance_period: rebalance,
+            ..ClusterSimConfig::new(model.clone(), cluster.clone(), plan.clone())
+        })
+        .run(&reqs)
+    };
+    let uniform = run(ExpertPopularity::Uniform, None);
+    let drift = ExpertPopularity::ZipfDrifting {
+        alpha: 1.2,
+        period: 0.5,
+    };
+    let static_placement = run(drift, None);
+    let rebalanced = run(drift, Some(0.125));
+    assert_eq!(rebalanced.completed, n as u64);
+    assert!(rebalanced.rebalances > 0, "re-balancing actually ran");
+    assert_eq!(static_placement.rebalances, 0);
+    assert!(
+        static_placement.throughput < uniform.throughput * 0.9,
+        "drifting skew should hurt: {} vs {}",
+        static_placement.throughput,
+        uniform.throughput
+    );
+    assert!(
+        rebalanced.throughput > static_placement.throughput * 1.05,
+        "online re-balancing should recover: {} vs {}",
+        rebalanced.throughput,
+        static_placement.throughput
+    );
+}
+
+/// The heterogeneous H20 (attention) + L40S (expert) pairing of §4.3 runs
+/// end to end through the engine with per-pool GpuSpecs and reports
+/// per-node clocks for both pools.
+#[test]
+fn heterogeneous_pairing_reports_per_node_clocks() {
+    let model = ModelConfig::mixtral_8x22b();
+    let cluster = ClusterSpec::heterogeneous_h20_l40s();
+    let plan = megascale_infer::plan::PlanSearcher::new(model.clone(), cluster.clone(), 514.0)
+        .search()
+        .expect("hetero plan");
+    let n = plan.global_batch.min(512);
+    let reqs = constant_requests(n, 512, 6);
+    let rep = ClusterSim::new(ClusterSimConfig {
+        seed: 3,
+        ..ClusterSimConfig::new(model, cluster, plan.clone())
+    })
+    .run(&reqs);
+    assert_eq!(rep.completed, n as u64);
+    assert_eq!(rep.per_node_attn_busy.len(), plan.n_a.max(1));
+    assert_eq!(rep.per_node_expert_busy.len(), plan.n_e.max(1));
+    assert!(rep.per_node_attn_busy.iter().all(|&b| (0.0..=1.0).contains(&b)));
+    assert!(rep.per_node_attn_busy.iter().any(|&b| b > 0.0));
+    assert!(rep.per_node_expert_busy.iter().any(|&b| b > 0.0));
 }

@@ -96,9 +96,8 @@ fn serving_engine_decodes_requests() {
         median_input: 6.0,
         median_output: 5.0,
         sigma: 0.3,
-        arrival_rate: None,
-        burst_sigma: 0.0,
         max_len: engine.model().max_seq,
+        ..Default::default()
     };
     let reqs = spec.generate(6, 7);
     let expected_tokens: u64 = reqs
@@ -126,9 +125,8 @@ fn serving_is_deterministic() {
         median_input: 4.0,
         median_output: 4.0,
         sigma: 0.2,
-        arrival_rate: None,
-        burst_sigma: 0.0,
         max_len: 64,
+        ..Default::default()
     };
     let reqs = spec.generate(3, 99);
     let run = || {
@@ -148,9 +146,8 @@ fn grouped_and_per_expert_paths_agree() {
         median_input: 5.0,
         median_output: 4.0,
         sigma: 0.2,
-        arrival_rate: None,
-        burst_sigma: 0.0,
         max_len: 64,
+        ..Default::default()
     };
     let reqs = spec.generate(4, 123);
     let run = |grouped: bool| {

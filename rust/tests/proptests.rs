@@ -3,14 +3,19 @@
 //! case generation (1000+ cases per property), with the failing seed
 //! printed on assert so cases replay deterministically.
 
+use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
 use megascale_infer::coordinator::{
     balance_experts, build_dispatch, combine_expert_outputs, gather_expert_input, softmax_topk,
     BlockAllocator, KvCacheConfig,
 };
 use megascale_infer::metrics::Histogram;
 use megascale_infer::perf_model::IterationModel;
-use megascale_infer::sim::cluster::{draw_gating, popularity_weights};
+use megascale_infer::plan::PlanSearcher;
+use megascale_infer::sim::cluster::{
+    draw_gating, popularity_weights, ClusterSim, ClusterSimConfig, ExpertPopularity,
+};
 use megascale_infer::sim::{EventQueue, SimRng};
+use megascale_infer::workload::WorkloadSpec;
 
 fn cases(n: usize) -> impl Iterator<Item = (u64, SimRng)> {
     (0..n as u64).map(|seed| (seed, SimRng::new(seed.wrapping_mul(0x9e3779b9))))
@@ -328,6 +333,79 @@ fn prop_eq5_bounds_des() {
             "seed {seed}: DES {} far above Eq5 {eq5}",
             sim.total_time
         );
+    }
+}
+
+/// End-to-end token conservation across the event-driven engine's
+/// components, for arbitrary event interleavings: random workloads (closed
+/// and open loop, bursty, skewed/drifting popularity, varying micro-batch
+/// counts) produce arbitrary interleavings of Arrive/Place/IterBegin/Pipe/
+/// Rebalance events, and in every one of them
+///
+/// * every generated output token is decoded exactly once
+///   (`tokens == Σ output_len` when all requests complete),
+/// * every token crosses the M2N link as exactly `top_k` copies per layer
+///   (`dispatched == tokens·L·K`), and
+/// * every dispatched copy is processed by the expert pool and combined
+///   back (`dispatched == processed == combined`).
+#[test]
+fn prop_engine_conserves_tokens_across_components() {
+    let model = ModelConfig::tiny();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let plan = PlanSearcher::new(model.clone(), cluster.clone(), 200.0)
+        .search()
+        .expect("tiny plan");
+    let layers = model.layers as u64;
+    let top_k = model.top_k as u64;
+    for (seed, mut rng) in cases(60) {
+        let n = 1 + rng.below(48);
+        let open_loop = rng.chance(0.5);
+        let spec = WorkloadSpec {
+            median_input: 32.0 + rng.uniform() * 64.0,
+            median_output: 2.0 + rng.uniform() * 10.0,
+            sigma: 0.2 + rng.uniform() * 0.4,
+            arrival_rate: open_loop.then(|| 20.0 + rng.uniform() * 200.0),
+            burst_sigma: if open_loop { rng.uniform() } else { 0.0 },
+            ..Default::default()
+        };
+        let reqs = spec.generate(n, seed.wrapping_add(100));
+        let popularity = match rng.below(4) {
+            0 => ExpertPopularity::Uniform,
+            1 => ExpertPopularity::Zipf(0.5 + rng.uniform()),
+            2 => ExpertPopularity::ZipfBalanced(0.5 + rng.uniform()),
+            _ => ExpertPopularity::ZipfDrifting {
+                alpha: 0.5 + rng.uniform(),
+                period: 0.01 + rng.uniform() * 0.1,
+            },
+        };
+        let mut plan = plan.clone();
+        plan.m = 1 + rng.below(4);
+        let rep = ClusterSim::new(ClusterSimConfig {
+            popularity,
+            seed: seed.wrapping_mul(31),
+            rebalance_period: rng.chance(0.5).then(|| 0.005 + rng.uniform() * 0.05),
+            ..ClusterSimConfig::new(model.clone(), cluster.clone(), plan)
+        })
+        .run(&reqs);
+
+        assert_eq!(rep.completed, n as u64, "seed {seed}: all requests complete");
+        let want: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
+        assert_eq!(rep.tokens, want, "seed {seed}: every output token decoded once");
+        assert_eq!(
+            rep.dispatched_copies,
+            rep.tokens * layers * top_k,
+            "seed {seed}: top_k copies per token per layer cross the link"
+        );
+        assert_eq!(
+            rep.dispatched_copies, rep.processed_copies,
+            "seed {seed}: every dispatched copy reaches an expert"
+        );
+        assert_eq!(
+            rep.dispatched_copies, rep.combined_copies,
+            "seed {seed}: every dispatched copy is combined back"
+        );
+        let per_node: u64 = rep.per_node_tokens.iter().sum();
+        assert_eq!(per_node, rep.tokens, "seed {seed}: per-node tokens partition");
     }
 }
 
