@@ -14,7 +14,7 @@
 use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
 use megascale_infer::plan::PlanSearcher;
 use megascale_infer::sim::cluster::{ClusterSim, ClusterSimConfig, ExpertPopularity};
-use megascale_infer::workload::{TenantClass, Trace, WorkloadSpec};
+use megascale_infer::workload::{RequestStream, TenantClass, Trace, WorkloadSpec};
 
 fn main() {
     // 1. The model + hardware of the paper's homogeneous testbed.
@@ -75,13 +75,20 @@ fn main() {
     let report = ClusterSim::new(cfg.clone()).run(&trace.requests);
     println!("\n=== cluster simulation ===\n{}", report.summary());
 
-    // 5. Determinism check: the same seed must reproduce the run bit-exactly.
-    let replay = ClusterSim::new(cfg).run(&trace.requests);
+    // 5. Determinism check: replay the SAME workload through the pull-based
+    //    streaming generator (no preloaded trace — the engine only ever
+    //    holds in-flight requests) and require a bit-identical report.
+    let replay = ClusterSim::new(cfg)
+        .run_streaming(Box::new(RequestStream::new(spec, 1000, seed)));
     assert_eq!(
         report.summary(),
         replay.summary(),
-        "same-seed replay diverged"
+        "same-seed streaming replay diverged"
     );
     assert_eq!(report.elapsed.to_bits(), replay.elapsed.to_bits());
-    println!("\nreplay with seed {seed}: identical report (deterministic)");
+    println!(
+        "\nstreaming replay with seed {seed}: identical report \
+         (deterministic; peak in-flight {} of 1000 requests)",
+        replay.peak_in_flight
+    );
 }

@@ -30,6 +30,11 @@
 //!   link and expert pool as pluggable components on one virtual clock,
 //!   sharing a single ping-pong pipeline machine with every other
 //!   simulation path ([`sim::engine`], [`sim::pipeline`], [`sim::cluster`]).
+//!   Arrivals stream through a pull-based [`workload::ArrivalSource`]
+//!   (trace- or generator-backed), so memory stays bounded by in-flight
+//!   requests at million-request scale; [`sim::sweep`] fans scenario grids
+//!   (rate × skew × micro-batches × tenant mix) across worker threads with
+//!   deterministic per-cell seeds.
 //!
 //! See `DESIGN.md` for the experiment index and substitution notes, and
 //! `EXPERIMENTS.md` for measured results.

@@ -9,9 +9,17 @@
 //!               [--hetero h20:l40s] [--rate 0] [--burst 0.0] [--skew 0]
 //!               [--popularity-drift <s>] [--rebalance <s>] [--balance]
 //!               [--tenants name:weight:slo_s,...] [--simnet]
-//!               [--micro-batches m] [--seed 42] [--json report.json]
+//!               [--micro-batches m] [--max-seconds <s>] [--seed 42]
+//!               [--json report.json]
 //! msi serve     --artifacts artifacts [--micro-batches 2] [--requests 16]
 //!               (requires the `pjrt` feature)
+//! msi sweep     [--model tiny] [--gpu ampere] [--requests 2000]
+//!               [--rates 0,200,400] [--skews 0,1.2] [--micro-batches 1,2,3]
+//!               [--tenant-mixes "none;interactive:0.7:2.5,batch:0.3:60"]
+//!               [--workers N] [--seed 42] [--json sweep.json]
+//!               [--csv sweep.csv] [--smoke]
+//! msi sweep     --bench [--bench-requests 1000000] [--seed 42]
+//!               [--bench-out BENCH_sim.json]
 //! msi m2n       --library megascale|nccl|perftest [--senders 8]
 //!               [--receivers 8] [--size-kib 256] [--rounds 1000]
 //! msi hardware
@@ -30,10 +38,13 @@ use megascale_infer::plan::PlanSearcher;
 #[cfg(feature = "pjrt")]
 use megascale_infer::runtime::ServingEngine;
 use megascale_infer::sim::cluster::{ClusterSim, ClusterSimConfig, ExpertPopularity, Transport};
+use megascale_infer::sim::sweep::{
+    run_sim_bench, run_sweep, sweep_to_csv, sweep_to_json, SweepGrid,
+};
 use megascale_infer::util::cli::Args;
 use megascale_infer::workload::{TenantClass, Trace, WorkloadSpec};
 
-const USAGE: &str = "usage: msi <plan|simulate|replay|serve|m2n|hardware|trace> [--options]
+const USAGE: &str = "usage: msi <plan|simulate|replay|sweep|serve|m2n|hardware|trace> [--options]
 run `msi help` or see README.md for details";
 
 fn parse_model(name: &str) -> Result<ModelConfig> {
@@ -61,12 +72,13 @@ fn parse_gpu(name: &str) -> Result<GpuKind> {
 fn main() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["all", "baselines", "balance", "simnet"],
+        &["all", "baselines", "balance", "simnet", "smoke", "bench"],
     )?;
     match args.subcommand.as_str() {
         "plan" => cmd_plan(&args),
         "simulate" => cmd_simulate(&args),
         "replay" => cmd_replay(&args),
+        "sweep" => cmd_sweep(&args),
         #[cfg(feature = "pjrt")]
         "serve" => cmd_serve(&args),
         #[cfg(not(feature = "pjrt"))]
@@ -277,6 +289,18 @@ fn cmd_replay(args: &Args) -> Result<()> {
         plan.m,
         plan.global_batch
     );
+    let max_sim_seconds = match args.get("max-seconds") {
+        Some(v) => {
+            let h: f64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--max-seconds={v} not a number"))?;
+            if h.is_nan() || h <= 0.0 {
+                bail!("--max-seconds must be positive (got {v})");
+            }
+            Some(h)
+        }
+        None => None,
+    };
     let cfg = ClusterSimConfig {
         model,
         cluster,
@@ -287,6 +311,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
         seed,
         tenants,
         rebalance_period,
+        max_sim_seconds,
     };
     let plan_json = cfg.plan.to_json();
     let report = ClusterSim::new(cfg).run(&requests);
@@ -298,6 +323,176 @@ fn cmd_replay(args: &Args) -> Result<()> {
         std::fs::write(path, format!("{payload}\n"))
             .with_context(|| format!("writing {path}"))?;
         println!("wrote JSON report to {path}");
+    }
+    Ok(())
+}
+
+fn parse_f64_list(spec: &str, flag: &str) -> Result<Vec<f64>> {
+    spec.split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--{flag}: {s:?} is not a number"))
+        })
+        .collect()
+}
+
+fn parse_usize_list(spec: &str, flag: &str) -> Result<Vec<usize>> {
+    spec.split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--{flag}: {s:?} is not an integer"))
+        })
+        .collect()
+}
+
+/// Run a scenario grid (arrival rate × popularity skew × micro-batches ×
+/// tenant mix) across worker threads with deterministic per-cell seeds, or
+/// (with `--bench`) the simulator self-throughput benchmark. Reports are
+/// byte-identical across runs with the same seed.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    if args.flag("bench") {
+        // Grid flags don't apply to the benchmark — error out instead of
+        // silently ignoring them (e.g. `--requests` would otherwise run
+        // the 1M default while the user expected `--bench-requests`).
+        if args.flag("smoke") {
+            bail!("--smoke is a grid-sweep option and has no effect with --bench");
+        }
+        for grid_only in [
+            "json",
+            "csv",
+            "rates",
+            "skews",
+            "micro-batches",
+            "tenant-mixes",
+            "requests",
+            "workers",
+            "model",
+            "gpu",
+        ] {
+            if args.get(grid_only).is_some() {
+                bail!(
+                    "--{grid_only} is a grid-sweep option; with --bench use \
+                     --bench-requests / --bench-out"
+                );
+            }
+        }
+        let n = args.usize_or("bench-requests", 1_000_000)?;
+        let seed = args.u64_or("seed", 42)?;
+        let out = args.str_or("bench-out", "BENCH_sim.json");
+        let payload = run_sim_bench(n, seed);
+        std::fs::write(&out, format!("{payload}\n"))
+            .with_context(|| format!("writing {out}"))?;
+        println!("{payload}");
+        println!("wrote benchmark report to {out}");
+        return Ok(());
+    }
+
+    // Mirror of the --bench guard: bench-only flags are meaningless for a
+    // grid sweep and almost certainly signal a forgotten --bench.
+    for bench_only in ["bench-requests", "bench-out"] {
+        if args.get(bench_only).is_some() {
+            bail!("--{bench_only} only applies with --bench");
+        }
+    }
+
+    // --smoke: a tiny fixed grid for CI — small model, few requests.
+    let smoke = args.flag("smoke");
+    let model = parse_model(&args.str_or("model", if smoke { "tiny" } else { "mixtral" }))?;
+    let cluster = ClusterSpec::homogeneous(parse_gpu(&args.str_or("gpu", "ampere"))?);
+    let requests = args.usize_or("requests", if smoke { 192 } else { 2000 })?;
+    let base_seed = args.u64_or("seed", 42)?;
+    let rates = parse_f64_list(
+        &args.str_or("rates", if smoke { "0,400" } else { "0" }),
+        "rates",
+    )?;
+    let skews = parse_f64_list(
+        &args.str_or("skews", if smoke { "0,1.2" } else { "0" }),
+        "skews",
+    )?;
+    let micro_batches = parse_usize_list(
+        &args.str_or("micro-batches", if smoke { "1,2" } else { "1,2,3" }),
+        "micro-batches",
+    )?;
+    // Tenant-mix axis: semicolon-separated mixes, each a `--tenants`-style
+    // list; `none` (or an empty entry) is the single-tenant mix.
+    let tenant_mixes: Vec<Vec<TenantClass>> = args
+        .str_or("tenant-mixes", "none")
+        .split(';')
+        .map(|mix| {
+            let mix = mix.trim();
+            if mix.is_empty() || mix.eq_ignore_ascii_case("none") {
+                Ok(Vec::new())
+            } else {
+                TenantClass::parse_list(mix)
+            }
+        })
+        .collect::<Result<_>>()?;
+    let workers = args.usize_or(
+        "workers",
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    )?;
+
+    let spec = if smoke {
+        WorkloadSpec::tiny_bench()
+    } else {
+        WorkloadSpec::default()
+    };
+    let plan = PlanSearcher::new(model.clone(), cluster.clone(), spec.avg_seq_len())
+        .search()
+        .ok_or_else(|| anyhow::anyhow!("no feasible plan"))?;
+    let grid = SweepGrid {
+        model,
+        cluster,
+        plan,
+        spec,
+        requests,
+        base_seed,
+        rates,
+        skews,
+        micro_batches,
+        tenant_mixes,
+    };
+    let cells = run_sweep(&grid, workers.max(1));
+    println!(
+        "sweep: {} cells ({} requests each) on {} workers",
+        cells.len(),
+        grid.requests,
+        workers.max(1)
+    );
+    println!(
+        "{:>8} {:>6} {:>3} {:>4} | {:>10} {:>10} | {:>9} {:>9} | {:>5} {:>5}",
+        "rate", "skew", "m", "mix", "tok/s", "tok/s/GPU", "p50 E2E", "p99 E2E", "rej", "unsrv"
+    );
+    for c in &cells {
+        println!(
+            "{:>8.1} {:>6.2} {:>3} {:>4} | {:>10.1} {:>10.3} | {:>8.3}s {:>8.3}s | {:>5} {:>5}",
+            c.rate,
+            c.skew,
+            c.m,
+            c.tenant_mix,
+            c.throughput,
+            c.per_gpu_throughput,
+            c.e2e_p50,
+            c.e2e_p99,
+            c.rejected,
+            c.unserved_queued
+        );
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, format!("{}\n", sweep_to_json(&grid, &cells)))
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote JSON report to {path}");
+    }
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, sweep_to_csv(&cells))
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote CSV report to {path}");
     }
     Ok(())
 }

@@ -49,9 +49,17 @@ impl Histogram {
         idx.min((BUCKETS_PER_DECADE * DECADES) as usize - 1)
     }
 
-    fn bucket_value(idx: usize) -> f64 {
-        // Midpoint (geometric) of the bucket.
-        MIN_VALUE * 10f64.powf((idx as f64 + 0.5) / BUCKETS_PER_DECADE)
+    /// Value at fractional position `frac` ∈ [0, 1] through bucket `idx`
+    /// (geometric interpolation; `frac = 0.5` is the bucket midpoint).
+    fn bucket_value_at(idx: usize, frac: f64) -> f64 {
+        MIN_VALUE * 10f64.powf((idx as f64 + frac) / BUCKETS_PER_DECADE)
+    }
+
+    /// Fractional position of `v` inside its bucket (0 at the lower edge,
+    /// approaching 1 at the upper edge), consistent with `bucket_index`.
+    fn position_in_bucket(v: f64, idx: usize) -> f64 {
+        let v = v.max(MIN_VALUE);
+        ((v / MIN_VALUE).log10() * BUCKETS_PER_DECADE - idx as f64).clamp(0.0, 1.0)
     }
 
     /// Record one observation. Non-positive values clamp to the smallest bucket.
@@ -108,10 +116,14 @@ impl Histogram {
         }
         let mut seen = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen > rank {
-                return Self::bucket_value(i).clamp(self.min, self.max);
+            if c > 0 && seen + c > rank {
+                // Interpolate within the bucket: spread its c observations
+                // evenly through the bucket's span (consistent with the
+                // linear interpolation in `fraction_below`).
+                let frac = ((rank - seen) as f64 + 0.5) / c as f64;
+                return Self::bucket_value_at(i, frac).clamp(self.min, self.max);
             }
+            seen += c;
         }
         self.max
     }
@@ -135,9 +147,22 @@ impl Histogram {
             let n = self.exact.iter().filter(|&&v| v <= threshold).count();
             return n as f64 / self.count as f64;
         }
+        // Outside the observed range the answer is exact — interpolation
+        // inside the max's (or min's) bucket must not turn a fully-attained
+        // SLO into a fractional one.
+        if threshold >= self.max {
+            return 1.0;
+        }
+        if threshold < self.min {
+            return 0.0;
+        }
         let idx = Self::bucket_index(threshold);
-        let below: u64 = self.buckets[..=idx].iter().sum();
-        below as f64 / self.count as f64
+        let below: u64 = self.buckets[..idx].iter().sum();
+        // Count only the partial share of the bucket the threshold falls
+        // in — taking the whole bucket overstated SLO attainment by up to
+        // one full bucket (~2.4% of the mass near the threshold).
+        let partial = self.buckets[idx] as f64 * Self::position_in_bucket(threshold, idx);
+        (below as f64 + partial) / self.count as f64
     }
 
     /// Merge another histogram into this one.
@@ -208,6 +233,59 @@ mod tests {
         }
         let f = big.fraction_below(5.0);
         assert!((f - 0.5).abs() < 0.03, "fraction {f}");
+    }
+
+    #[test]
+    fn bucketed_fraction_below_interpolates_partial_bucket() {
+        // Regression: the bucketed path used to count the ENTIRE bucket
+        // containing the threshold, overstating SLO attainment by up to a
+        // full bucket (~2.4-5% of the mass here). With the partial bucket
+        // linearly interpolated, the estimate tracks the true CDF closely
+        // at every threshold, including ones just past a bucket edge.
+        let n = 20_000usize;
+        let mut h = Histogram::new();
+        for i in 0..n {
+            h.record(1.0 + (i as f64 + 0.5) / n as f64); // uniform on [1, 2]
+        }
+        for k in 0..=100 {
+            let t = 1.0 + k as f64 / 100.0;
+            let truth = (t - 1.0).clamp(0.0, 1.0);
+            let got = h.fraction_below(t);
+            assert!(
+                (got - truth).abs() < 0.01,
+                "threshold {t}: estimated {got} vs true {truth}"
+            );
+        }
+        assert_eq!(h.fraction_below(0.5), 0.0);
+        assert_eq!(h.fraction_below(10.0), 1.0);
+        // Boundary exactness: at/above the recorded max the answer is
+        // exactly 1 (a fully-attained SLO must not render as fractional
+        // just because the threshold shares the max's bucket); strictly
+        // below the min it is exactly 0.
+        let lo = 1.0 + 0.5 / n as f64;
+        let hi = 2.0 - 0.5 / n as f64;
+        assert_eq!(h.fraction_below(hi), 1.0);
+        assert_eq!(h.fraction_below(hi + 1e-6), 1.0);
+        assert_eq!(h.fraction_below(lo - 1e-6), 0.0);
+    }
+
+    #[test]
+    fn bucketed_percentile_interpolates_within_bucket() {
+        // Regression: the bucketed path used to return the bucket geometric
+        // midpoint (up to ~1.2% relative error); interpolating the rank's
+        // position within the bucket tracks exact order statistics tightly.
+        let n = 50_000usize;
+        let mut h = Histogram::new();
+        for i in 0..n {
+            h.record(1.0 + 9.0 * (i as f64 + 0.5) / n as f64); // uniform [1, 10]
+        }
+        for k in 0..14 {
+            let p = 1.0 + 7.0 * k as f64; // 1, 8, ..., 92
+            let exact = 1.0 + 9.0 * p / 100.0;
+            let est = h.percentile(p);
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.007, "p{p}: estimated {est} vs exact {exact} (rel {rel})");
+        }
     }
 
     #[test]

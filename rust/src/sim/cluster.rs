@@ -44,7 +44,7 @@ use crate::plan::DeploymentPlan;
 use crate::sim::engine::ClusterEngine;
 use crate::sim::SimRng;
 use crate::util::json::Json;
-use crate::workload::{Request, TenantClass};
+use crate::workload::{ArrivalSource, Request, TenantClass, TraceSource};
 
 /// Expert-popularity model driving the synthetic gating logits.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -101,6 +101,10 @@ pub struct ClusterSimConfig {
     /// observed expert loads (None = static placement unless the
     /// popularity model is the per-micro-batch oracle).
     pub rebalance_period: Option<f64>,
+    /// Simulation horizon (virtual seconds): events past it are not
+    /// processed, so feasible work still queued reports as
+    /// `unserved_queued`. None = run to quiescence (serve everything).
+    pub max_sim_seconds: Option<f64>,
 }
 
 impl ClusterSimConfig {
@@ -117,6 +121,7 @@ impl ClusterSimConfig {
             seed: 0,
             tenants: Vec::new(),
             rebalance_period: None,
+            max_sim_seconds: None,
         }
     }
 }
@@ -172,8 +177,21 @@ pub struct ClusterReport {
     pub per_node_attn_busy: Vec<f64>,
     /// Per-expert-node busy fraction (per-rank clocks).
     pub per_node_expert_busy: Vec<f64>,
-    /// Requests left unserved (KV capacity could never admit them).
+    /// Requests whose KV footprint exceeds every node's whole budget — the
+    /// fleet can *never* admit them (truly rejected).
     pub rejected: u64,
+    /// Feasible requests the run ended on: still in the front-door FIFO,
+    /// waiting on a node, or mid-decode — distinct from `rejected`.
+    /// Nonzero only when a [`ClusterSimConfig::max_sim_seconds`] horizon
+    /// cuts the run short; without one the engine runs to quiescence and
+    /// serves every admitted request.
+    pub unserved_queued: u64,
+    /// High-water mark of concurrently in-flight requests (the engine's
+    /// request table is O(this), not O(trace length)).
+    pub peak_in_flight: u64,
+    /// High-water mark of the event queue (O(in-flight) by construction:
+    /// exactly one future Arrive event is outstanding at any time).
+    pub peak_queue_events: u64,
     /// Mean effective per-(micro-batch, layer) stage times actually fed to
     /// the pipeline engine — the DES-vs-Eq.5 cross-check anchors here.
     pub mean_t_a: f64,
@@ -201,7 +219,8 @@ impl ClusterReport {
              TPOT  p50 {:.1} ms  p99 {:.1} ms\n\
              E2E   p50 {:.2} s   p99 {:.2} s\n\
              utilization: attention {:.1}%  expert {:.1}%\n\
-             stage times: T_a {:.3} ms  T_e {:.3} ms  T_c {:.3} ms | rejected {}",
+             stage times: T_a {:.3} ms  T_e {:.3} ms  T_c {:.3} ms | \
+             rejected {}  unserved {} | peak in-flight {}",
             self.completed,
             self.tokens,
             self.elapsed,
@@ -220,6 +239,8 @@ impl ClusterReport {
             self.mean_t_e * 1e3,
             self.mean_t_c * 1e3,
             self.rejected,
+            self.unserved_queued,
+            self.peak_in_flight,
         );
         if self.rebalances > 0 {
             s.push_str(&format!("\nonline re-balances: {}", self.rebalances));
@@ -280,6 +301,9 @@ impl ClusterReport {
             .set("per_node_attn_busy", self.per_node_attn_busy.clone())
             .set("per_node_expert_busy", self.per_node_expert_busy.clone())
             .set("rejected", self.rejected)
+            .set("unserved_queued", self.unserved_queued)
+            .set("peak_in_flight", self.peak_in_flight)
+            .set("peak_queue_events", self.peak_queue_events)
             .set("mean_t_a_ms", self.mean_t_a * 1e3)
             .set("mean_t_e_ms", self.mean_t_e * 1e3)
             .set("mean_t_c_ms", self.mean_t_c * 1e3)
@@ -337,9 +361,18 @@ impl ClusterSim {
     }
 
     /// Simulate serving `requests` to completion. Closed loop when every
-    /// arrival is 0, open loop (trace replay) otherwise.
+    /// arrival is 0, open loop (trace replay) otherwise. This materializes
+    /// the list once inside a [`TraceSource`]; the engine itself still only
+    /// holds in-flight requests.
     pub fn run(&self, requests: &[Request]) -> ClusterReport {
-        ClusterEngine::new(self.cfg.clone(), requests).run()
+        self.run_streaming(Box::new(TraceSource::new(requests.to_vec())))
+    }
+
+    /// Pull-based run over any [`ArrivalSource`] (e.g. a generator-backed
+    /// [`crate::workload::RequestStream`]): memory stays bounded by the
+    /// in-flight request count no matter how long the stream is.
+    pub fn run_streaming(&self, source: Box<dyn ArrivalSource>) -> ClusterReport {
+        ClusterEngine::new(self.cfg.clone(), source).run()
     }
 }
 

@@ -34,8 +34,15 @@
 //! shared [`PipelineCore`] state machine — the same code that backs
 //! [`crate::coordinator::PingPongEngine`] and
 //! [`crate::plan::simulate_plan_des`], which are thin layers over it.
+//!
+//! Arrivals are *pulled*, not preloaded: the engine draws requests one at a
+//! time from an [`ArrivalSource`] (trace- or generator-backed) and keeps
+//! exactly one future `Arrive` event outstanding, so the event queue and
+//! the in-flight [`RequestTable`] are O(in-flight requests) — a
+//! million-request (or unbounded generator) run never materializes its
+//! whole trace.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::coordinator::{
     balance_experts, build_dispatch, BlockAllocator, ContinuousBatcher, ExpertPlacement,
@@ -50,16 +57,22 @@ use crate::sim::cluster::{
 };
 use crate::sim::pipeline::{PipeEvent, PipelineCore, PipelineStats, StageTimes};
 use crate::sim::{EventQueue, SimRng};
-use crate::workload::Request;
+use crate::workload::{ArrivalSource, Request};
+
+/// Paged-KV block size in tokens (vLLM default) — shared by the attention
+/// nodes' allocators, the front door's block-granular admission bound, and
+/// the arrival sources' per-request demand rounding.
+pub const KV_BLOCK: u64 = 16;
 
 /// Engine event. Each variant is owned by exactly one component (plus the
 /// engine itself for `IterBegin`); `Pipe` events additionally pass through
 /// the link/expert conservation observers.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Event {
-    /// Request `arrivals[i]` reaches the front door.
+    /// The request in table slot `i` reaches the front door.
     Arrive(usize),
-    /// Router decision: place request `req` on attention node `node`.
+    /// Router decision: place the request in slot `req` on attention node
+    /// `node`.
     Place { req: usize, node: usize },
     /// Begin a decode iteration: admission + pipeline kickoff.
     IterBegin,
@@ -69,14 +82,104 @@ pub enum Event {
     Pipe(PipeEvent),
 }
 
-/// Cross-component shared state: the workload, the random stream, and the
-/// per-iteration stage context.
+/// One in-flight request plus its routing state.
+struct InFlight {
+    req: Request,
+    /// Attention node the router placed the request on (None while queued).
+    placed_on: Option<usize>,
+}
+
+/// Dense free-list table of in-flight requests. A request occupies a slot
+/// from the moment the engine pulls it off the [`ArrivalSource`] until it
+/// fully decodes; slots are recycled, so memory is O(in-flight), not
+/// O(trace length). Everything downstream of the source — events, the
+/// router's overflow FIFO, the batchers' live ids — refers to requests by
+/// slot.
+pub struct RequestTable {
+    slots: Vec<Option<InFlight>>,
+    free: Vec<usize>,
+    live: usize,
+    peak: usize,
+}
+
+impl RequestTable {
+    fn new() -> Self {
+        Self {
+            slots: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            peak: 0,
+        }
+    }
+
+    /// Claim a slot for a newly-pulled request.
+    pub fn insert(&mut self, req: Request) -> usize {
+        let entry = InFlight {
+            req,
+            placed_on: None,
+        };
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s] = Some(entry);
+                s
+            }
+            None => {
+                self.slots.push(Some(entry));
+                self.slots.len() - 1
+            }
+        };
+        self.live += 1;
+        self.peak = self.peak.max(self.live);
+        slot
+    }
+
+    /// The request occupying `slot` (panics on a dead slot — the engine
+    /// never holds a slot id past completion).
+    pub fn get(&self, slot: usize) -> &Request {
+        &self.slots[slot].as_ref().expect("live request slot").req
+    }
+
+    fn set_placed(&mut self, slot: usize, node: usize) {
+        self.slots[slot].as_mut().expect("live request slot").placed_on = Some(node);
+    }
+
+    fn take_placed(&mut self, slot: usize) -> Option<usize> {
+        self.slots[slot]
+            .as_mut()
+            .expect("live request slot")
+            .placed_on
+            .take()
+    }
+
+    /// Release a completed request's slot for reuse.
+    pub fn remove(&mut self, slot: usize) -> Request {
+        let entry = self.slots[slot].take().expect("live request slot");
+        self.free.push(slot);
+        self.live -= 1;
+        entry.req
+    }
+
+    /// Requests currently in flight.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// High-water mark of concurrently in-flight requests.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+}
+
+/// Cross-component shared state: the in-flight requests, the random stream,
+/// and the per-iteration stage context.
 pub struct SimCtx {
-    /// Arrival-ordered owned copy of the trace — the only full clone the
-    /// engine keeps; everything else indexes into it by position.
-    pub arrivals: Vec<Request>,
-    /// Request id -> index into `arrivals` (ids need not be dense).
-    pub idx_of: HashMap<u64, usize>,
+    /// Free-list table of in-flight requests — the only request storage the
+    /// engine keeps; events and components refer to requests by slot.
+    pub table: RequestTable,
     /// Gating / popularity random stream.
     pub rng: SimRng,
     /// Stage-time context of the in-flight iteration (None while idle).
@@ -115,61 +218,93 @@ pub trait Component {
 // ---------------------------------------------------------------- router --
 
 /// Front-door router component: KV-aware request placement with a strictly
-/// FIFO overflow queue (a request that does not fit blocks later arrivals
-/// from jumping into freed capacity).
+/// FIFO overflow queue (a request that does not fit *right now* blocks
+/// later arrivals from jumping into freed capacity). Requests that could
+/// never fit — KV footprint beyond a whole node's budget — are rejected at
+/// arrival: letting one clog the FIFO head would starve every later
+/// request AND grow the in-flight table without bound as the stream keeps
+/// queueing behind it.
 pub struct RouterFront {
     router: Router,
-    /// FIFO of request indices the fleet could not place yet.
+    /// Block-rounded per-node KV capacity — `floor(budget / KV_BLOCK)`
+    /// blocks worth of tokens, the most KV a node's allocator can actually
+    /// hold (the admission-control bound).
+    usable_kv_tokens: u64,
+    /// FIFO of request slots the fleet could not place yet.
     overflow: VecDeque<usize>,
-    /// Request index -> attention node, set at placement.
-    placed_on: Vec<Option<usize>>,
+    /// Requests rejected at the front door (could never be placed).
+    rejected: u64,
 }
 
 impl RouterFront {
-    fn new(router: Router, n_requests: usize) -> Self {
+    fn new(router: Router, node_kv_tokens: u64) -> Self {
         Self {
             router,
+            usable_kv_tokens: (node_kv_tokens / KV_BLOCK) * KV_BLOCK,
             overflow: VecDeque::new(),
-            placed_on: vec![None; n_requests],
+            rejected: 0,
         }
     }
 
     /// Completion callback: release the request's routing accounting.
-    fn complete(&mut self, req: usize, r: &Request) {
-        if let Some(node) = self.placed_on[req].take() {
-            self.router.complete(node, r);
-        }
+    fn complete(&mut self, node: usize, r: &Request) {
+        self.router.complete(node, r);
     }
 
     /// FIFO-drain the overflow queue into placements, stopping at the first
     /// request that still does not fit.
-    fn drain_overflow(&mut self, now: f64, ctx: &SimCtx, out: &mut Vec<(f64, Event)>) {
+    fn drain_overflow(&mut self, now: f64, ctx: &mut SimCtx, out: &mut Vec<(f64, Event)>) {
         while let Some(&req) = self.overflow.front() {
-            let Some(node) = self.router.route(&ctx.arrivals[req]) else {
+            let Some(node) = self.router.route(ctx.table.get(req)) else {
                 break;
             };
             self.overflow.pop_front();
-            self.placed_on[req] = Some(node);
+            ctx.table.set_placed(req, node);
             out.push((now, Event::Place { req, node }));
         }
     }
 
+    /// Requests still queued at the front door at the horizon.
     fn pending(&self) -> usize {
         self.overflow.len()
+    }
+
+    /// Requests rejected at the front door over the whole run.
+    fn rejected(&self) -> u64 {
+        self.rejected
     }
 }
 
 impl Component for RouterFront {
     fn handle(&mut self, now: f64, ev: &Event, ctx: &mut SimCtx, out: &mut Vec<(f64, Event)>) {
         let Event::Arrive(req) = *ev else { return };
+        // Admission control: a request no node could ever serve is
+        // rejected immediately (its slot is recycled) — parking it in the
+        // FIFO or a node's waiting queue would block the fleet forever.
+        // The bound is block-granular: a node's allocator holds only
+        // `floor(budget/KV_BLOCK)` whole blocks, so comparing against the
+        // raw token budget would admit requests whose prompt can never be
+        // block-admitted (permanent waiting-queue stall) or whose last few
+        // decode tokens would not fit. `need <= usable` also implies the
+        // prompt fits in whole blocks: `ceil(input/B) <= usable/B` because
+        // `input <= need`.
+        let need = {
+            let r = ctx.table.get(req);
+            (r.input_len + r.output_len) as u64
+        };
+        if need > self.usable_kv_tokens {
+            self.rejected += 1;
+            ctx.table.remove(req);
+            return;
+        }
         if !self.overflow.is_empty() {
-            // Preserve FIFO admission behind an unplaceable head-of-line.
+            // Preserve FIFO admission behind a temporarily-unplaceable head.
             self.overflow.push_back(req);
             return;
         }
-        match self.router.route(&ctx.arrivals[req]) {
+        match self.router.route(ctx.table.get(req)) {
             Some(node) => {
-                self.placed_on[req] = Some(node);
+                ctx.table.set_placed(req, node);
                 out.push((now, Event::Place { req, node }));
             }
             None => self.overflow.push_back(req),
@@ -214,8 +349,8 @@ impl AttentionPool {
                     max_batch: node_batch,
                 }),
                 kv: BlockAllocator::new(KvCacheConfig {
-                    block_size: 16,
-                    num_blocks: (kv_tokens / 16) as usize,
+                    block_size: KV_BLOCK as usize,
+                    num_blocks: (kv_tokens / KV_BLOCK) as usize,
                 }),
             })
             .collect();
@@ -307,7 +442,13 @@ impl AttentionPool {
 impl Component for AttentionPool {
     fn handle(&mut self, now: f64, ev: &Event, ctx: &mut SimCtx, out: &mut Vec<(f64, Event)>) {
         let Event::Place { req, node } = *ev else { return };
-        self.nodes[node].batcher.submit(ctx.arrivals[req].clone());
+        // The clone the batcher owns carries the table *slot* as its live
+        // id, so KV accounting and completion callbacks come back
+        // slot-keyed; slots are unique among in-flight requests and only
+        // recycled after completion.
+        let mut r = ctx.table.get(req).clone();
+        r.id = req as u64;
+        self.nodes[node].batcher.submit(r);
         // A placement while the pool is idle re-arms the iteration clock.
         if !ctx.in_iteration && !ctx.iter_pending {
             ctx.iter_pending = true;
@@ -530,9 +671,11 @@ struct TenantAcc {
     e2e: Histogram,
 }
 
-/// The end-to-end cluster engine: components wired onto one event queue.
+/// The end-to-end cluster engine: components wired onto one event queue,
+/// pulling arrivals one at a time from an [`ArrivalSource`].
 pub struct ClusterEngine {
     cfg: ClusterSimConfig,
+    source: Box<dyn ArrivalSource>,
     q: EventQueue<Event>,
     ctx: SimCtx,
     router: RouterFront,
@@ -540,6 +683,8 @@ pub struct ClusterEngine {
     link: M2nLink,
     experts: ExpertPool,
     pipeline: Option<PipelineCore>,
+    /// High-water mark of the event queue (O(in-flight) by construction).
+    peak_events: usize,
     // metrics
     ttft: Histogram,
     tpot: Histogram,
@@ -561,9 +706,14 @@ impl ClusterEngine {
         (budget.max(0.0) / cfg.model.kv_bytes_per_token()).floor() as u64
     }
 
-    pub fn new(mut cfg: ClusterSimConfig, requests: &[Request]) -> Self {
-        // A non-positive interval would never advance the rebalance clock.
+    /// Build the engine over a pull-based arrival stream. The engine never
+    /// materializes the stream: it holds only in-flight requests.
+    pub fn new(mut cfg: ClusterSimConfig, source: Box<dyn ArrivalSource>) -> Self {
+        // A non-positive interval would never advance the rebalance clock,
+        // and a non-positive horizon would silently drop every event —
+        // both degrade to "off".
         cfg.rebalance_period = cfg.rebalance_period.filter(|p| *p > 0.0);
+        cfg.max_sim_seconds = cfg.max_sim_seconds.filter(|h| *h > 0.0);
         let n_a = cfg.plan.n_a.max(1);
         let n_e = cfg.plan.n_e.max(1);
         let experts = cfg.model.experts.max(1);
@@ -600,23 +750,18 @@ impl ClusterEngine {
         };
 
         // --- attention pool + router ------------------------------------
-        // Eq. 8 capacity, capped at the trace's total demand (plus one
+        // Eq. 8 capacity, capped at the stream's total demand (plus one
         // block per request for partial-block rounding): capacity beyond
         // what the whole workload can ever occupy is unreachable, and not
-        // materializing it keeps the block allocator small.
-        let demand: u64 = requests
-            .iter()
-            .map(|r| (r.input_len + r.output_len + 16) as u64)
-            .sum();
-        let kv_tokens = Self::node_kv_tokens(&cfg).min(demand.max(16));
+        // materializing it keeps the block allocator small. Sources report
+        // the demand without materializing the stream (generators replay
+        // their RNG, stopping once the hardware budget is reached), so a
+        // trace and a generator yielding the same requests size the
+        // allocator identically.
+        let node_kv = Self::node_kv_tokens(&cfg);
+        let kv_tokens = node_kv.min(source.kv_demand(node_kv).max(16));
         let router = Router::new(cfg.route, &vec![kv_tokens; n_a]);
         let node_batch = cfg.plan.global_batch.div_ceil(n_a).max(1);
-
-        // --- arrival stream: one sorted owned vec, indexed by position ---
-        let mut arrivals: Vec<Request> = requests.to_vec();
-        arrivals.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
-        let idx_of: HashMap<u64, usize> =
-            arrivals.iter().enumerate().map(|(i, r)| (r.id, i)).collect();
 
         let tenant_stats = cfg
             .tenants
@@ -628,15 +773,14 @@ impl ClusterEngine {
             })
             .collect();
 
-        let n_requests = arrivals.len();
         Self {
-            router: RouterFront::new(router, n_requests),
+            source,
+            router: RouterFront::new(router, kv_tokens),
             attention: AttentionPool::new(n_a, node_batch, kv_tokens),
             link: M2nLink::new(transfer, top_k),
             experts: ExpertPool::new(experts, n_e, top_k, cfg.popularity, weights, oracle_balance),
             ctx: SimCtx {
-                arrivals,
-                idx_of,
+                table: RequestTable::new(),
                 rng,
                 stage: None,
                 in_iteration: false,
@@ -648,6 +792,7 @@ impl ClusterEngine {
             },
             q: EventQueue::new(),
             pipeline: None,
+            peak_events: 0,
             ttft: Histogram::new(),
             tpot: Histogram::new(),
             e2e: Histogram::new(),
@@ -664,14 +809,25 @@ impl ClusterEngine {
 
     /// Run the engine to quiescence and report.
     pub fn run(mut self) -> ClusterReport {
-        for (i, r) in self.ctx.arrivals.iter().enumerate() {
-            self.q.schedule_at(r.arrival.max(0.0), Event::Arrive(i));
+        // Prime the arrival chain: exactly one future Arrive is
+        // outstanding at any time; each firing pulls and schedules the
+        // next, so the queue never holds the whole trace.
+        if let Some(r) = self.source.next_request() {
+            let at = r.arrival.max(0.0);
+            let slot = self.ctx.table.insert(r);
+            self.q.schedule_at(at, Event::Arrive(slot));
         }
         let mut out: Vec<(f64, Event)> = Vec::new();
+        let horizon = self.cfg.max_sim_seconds.unwrap_or(f64::INFINITY);
         while let Some((now, ev)) = self.q.pop() {
+            if now > horizon {
+                // Horizon cutoff: whatever is still queued reports as
+                // `unserved_queued` in the final accounting.
+                break;
+            }
             self.elapsed = self.elapsed.max(now);
             match ev {
-                Event::Arrive(_) => self.router.handle(now, &ev, &mut self.ctx, &mut out),
+                Event::Arrive(slot) => self.on_arrive(now, slot, &mut out),
                 Event::Place { .. } => self.attention.handle(now, &ev, &mut self.ctx, &mut out),
                 Event::Rebalance => self.experts.handle(now, &ev, &mut self.ctx, &mut out),
                 Event::IterBegin => self.begin_iteration(now, &mut out),
@@ -680,8 +836,31 @@ impl ClusterEngine {
             for (at, e) in out.drain(..) {
                 self.q.schedule_at(at, e);
             }
+            self.peak_events = self.peak_events.max(self.q.len());
         }
         self.finalize()
+    }
+
+    /// One arrival fired: route it, absorb every queued arrival sharing its
+    /// timestamp (this preserves the route-then-place event order a
+    /// preloaded closed-loop burst would have produced), then schedule the
+    /// next future arrival to continue the chain.
+    fn on_arrive(&mut self, now: f64, slot: usize, out: &mut Vec<(f64, Event)>) {
+        self.router
+            .handle(now, &Event::Arrive(slot), &mut self.ctx, out);
+        while let Some(r) = self.source.next_request() {
+            // Sources yield non-decreasing arrival times; clamp defensively
+            // so a mis-sorted trace degrades to "arrives now" instead of
+            // scheduling into the past.
+            let at = r.arrival.max(0.0).max(now);
+            let s = self.ctx.table.insert(r);
+            if at <= now {
+                self.router.handle(now, &Event::Arrive(s), &mut self.ctx, out);
+            } else {
+                out.push((at, Event::Arrive(s)));
+                break;
+            }
+        }
     }
 
     /// Iteration boundary: admission on every node, stage-context build,
@@ -786,21 +965,24 @@ impl ClusterEngine {
 
         for nid in 0..self.attention.len() {
             let outcome = self.attention.finish_node_iteration(nid);
+            // Batcher-side ids are table slots (the engine threads requests
+            // by slot); the table maps them back to arrival/tenant state.
             for id in outcome.first {
-                if let Some(&i) = self.ctx.idx_of.get(&id) {
-                    let r = &self.ctx.arrivals[i];
-                    let wait = now - r.arrival;
-                    self.ttft.record(wait);
-                    if !self.cfg.tenants.is_empty() {
-                        let t = r.tenant.min(self.cfg.tenants.len() - 1);
-                        self.tenant_stats[t].ttft.record(wait);
-                    }
+                let slot = id as usize;
+                let r = self.ctx.table.get(slot);
+                let wait = now - r.arrival;
+                let tenant = r.tenant;
+                self.ttft.record(wait);
+                if !self.cfg.tenants.is_empty() {
+                    let t = tenant.min(self.cfg.tenants.len() - 1);
+                    self.tenant_stats[t].ttft.record(wait);
                 }
             }
             for id in outcome.done {
+                let slot = id as usize;
                 self.completed += 1;
-                if let Some(&i) = self.ctx.idx_of.get(&id) {
-                    let r = &self.ctx.arrivals[i];
+                {
+                    let r = self.ctx.table.get(slot);
                     let latency = now - r.arrival;
                     self.e2e.record(latency);
                     if !self.cfg.tenants.is_empty() {
@@ -809,13 +991,17 @@ impl ClusterEngine {
                         acc.completed += 1;
                         acc.e2e.record(latency);
                     }
-                    self.router.complete(i, r);
                 }
+                if let Some(node) = self.ctx.table.take_placed(slot) {
+                    self.router.complete(node, self.ctx.table.get(slot));
+                }
+                // Completion frees the slot for reuse by later arrivals.
+                self.ctx.table.remove(slot);
             }
         }
 
         // Freed KV first, then strictly-FIFO admission of queued arrivals.
-        self.router.drain_overflow(now, &self.ctx, out);
+        self.router.drain_overflow(now, &mut self.ctx, out);
         if self.attention.has_work() && !self.ctx.iter_pending {
             self.ctx.iter_pending = true;
             out.push((now, Event::IterBegin));
@@ -830,7 +1016,18 @@ impl ClusterEngine {
         let gpus = (plan.tp_a * plan.n_a.max(1) + plan.tp_e * plan.n_e.max(1)) as f64;
         let tokens = self.attention.decoded_tokens;
         let throughput = if now > 0.0 { tokens as f64 / now } else { 0.0 };
-        let rejected = (self.router.pending() + self.attention.waiting_total()) as u64;
+        // The leftover split: `rejected` counts front-door admission-control
+        // rejections (KV footprint beyond any node's usable budget — the
+        // fleet could never serve them); everything still queued at the
+        // front door, waiting on a node, or mid-decode is feasible work a
+        // `max_sim_seconds` horizon cut off (`unserved_queued`) — at
+        // quiescence all three sets are empty. Arrivals pulled off the
+        // stream but scheduled past the horizon are excluded: they never
+        // arrived within the simulated window.
+        let rejected = self.router.rejected();
+        let unserved_queued = (self.router.pending()
+            + self.attention.waiting_total()
+            + self.attention.batch_total()) as u64;
         let samples = self.ctx.stage_samples.max(1) as f64;
         let frac = |busy: &f64| {
             if now > 0.0 {
@@ -870,6 +1067,9 @@ impl ClusterEngine {
             per_node_attn_busy,
             per_node_expert_busy,
             rejected,
+            unserved_queued,
+            peak_in_flight: self.ctx.table.peak() as u64,
+            peak_queue_events: self.peak_events as u64,
             mean_t_a: self.ctx.sum_t_a / samples,
             mean_t_e: self.ctx.sum_t_e / samples,
             mean_t_c: self.ctx.sum_t_c / samples,

@@ -11,20 +11,25 @@
 //!   implementation for every simulation path);
 //! * [`engine`] — the event-driven cluster engine: pluggable components
 //!   (router front, attention pool, M2N link, expert pool) wired onto one
-//!   queue;
-//! * [`cluster`] — scenario configuration + reporting, the public facade.
+//!   queue, pulling arrivals from a streaming
+//!   [`crate::workload::ArrivalSource`];
+//! * [`cluster`] — scenario configuration + reporting, the public facade;
+//! * [`sweep`] — multi-threaded scenario-grid sweeps and the simulator
+//!   self-throughput benchmark.
 
 pub mod cluster;
 pub mod engine;
 pub mod pipeline;
 mod rng;
+pub mod sweep;
 
 pub use cluster::{
     ClusterReport, ClusterSim, ClusterSimConfig, ExpertPopularity, TenantReport, Transport,
 };
-pub use engine::{ClusterEngine, Component, Event};
+pub use engine::{ClusterEngine, Component, Event, RequestTable};
 pub use pipeline::{PipeEvent, PipelineCore, PipelineStats, StageTimes};
 pub use rng::SimRng;
+pub use sweep::{run_sim_bench, run_sweep, SweepCell, SweepGrid};
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;

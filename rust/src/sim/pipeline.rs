@@ -248,10 +248,20 @@ impl PipelineCore {
 
     fn stats(&self) -> PipelineStats {
         let total_time = self.mb_done.iter().copied().fold(0.0, f64::max);
+        // A zero-duration pass (every stage time 0, e.g. a degenerate
+        // scenario sweep cell) must report 0 utilization, not NaN — the
+        // NaN would propagate into ClusterReport and its JSON rendering.
+        let util = |busy: f64| {
+            if total_time > 0.0 {
+                busy / total_time
+            } else {
+                0.0
+            }
+        };
         PipelineStats {
             total_time,
-            attn_utilization: self.attn.busy_time() / total_time,
-            expert_utilization: self.expert.busy_time() / total_time,
+            attn_utilization: util(self.attn.busy_time()),
+            expert_utilization: util(self.expert.busy_time()),
             mb_done: self.mb_done.clone(),
         }
     }
@@ -304,6 +314,21 @@ mod tests {
         };
         let stats = drive(2, 1, st);
         assert!((stats.total_time - 3.0).abs() < 1e-12, "{}", stats.total_time);
+    }
+
+    #[test]
+    fn zero_duration_iteration_reports_zero_utilization_not_nan() {
+        // Regression: busy/total was 0/0 = NaN when every stage time is 0.
+        let st = StageTimes {
+            t_a: 0.0,
+            t_e: 0.0,
+            t_c: 0.0,
+        };
+        let stats = drive(2, 3, st);
+        assert_eq!(stats.total_time, 0.0);
+        assert_eq!(stats.attn_utilization, 0.0, "no NaN: {stats:?}");
+        assert_eq!(stats.expert_utilization, 0.0, "no NaN: {stats:?}");
+        assert!(stats.mb_done.iter().all(|&t| t == 0.0));
     }
 
     #[test]

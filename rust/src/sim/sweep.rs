@@ -1,0 +1,416 @@
+//! Scenario-grid sweeps over the cluster engine, plus the simulator's
+//! self-throughput benchmark.
+//!
+//! The streaming arrival engine makes a single cell cheap; this module
+//! makes *grids* cheap: the cartesian product of arrival rate × expert
+//! popularity skew × micro-batch count (the plan axis) × tenant mix is
+//! fanned out across `std::thread` workers. Every cell derives its own
+//! seed deterministically from the base seed and its grid position, and
+//! results are collected by cell index, so the JSON/CSV report is
+//! byte-identical across runs regardless of worker count or scheduling.
+//!
+//! The self-throughput benchmark ([`run_sim_bench`]) answers "how many
+//! simulated output tokens does the simulator itself produce per
+//! wall-clock second?" at million-request scale: it calibrates a service
+//! rate with a short closed-loop run, then streams the full
+//! generator-backed workload (memory bounded by in-flight requests) and
+//! reports wall time, simulated tokens/s, and the in-flight high-water
+//! marks to `BENCH_sim.json` so CI can track the perf trajectory per PR.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::{ClusterSpec, GpuKind, ModelConfig};
+use crate::coordinator::RoutePolicy;
+use crate::plan::{DeploymentPlan, PlanSearcher};
+use crate::sim::cluster::{ClusterSim, ClusterSimConfig, ExpertPopularity, Transport};
+use crate::sim::engine::ClusterEngine;
+use crate::util::json::Json;
+use crate::workload::{RequestStream, TenantClass, WorkloadSpec};
+
+/// The sweep's cartesian grid: scenario axes plus the shared base
+/// configuration every cell starts from.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub model: ModelConfig,
+    pub cluster: ClusterSpec,
+    /// Base deployment plan; each cell overrides `m` from `micro_batches`.
+    pub plan: DeploymentPlan,
+    /// Base workload shape; each cell overrides arrival rate and tenants.
+    pub spec: WorkloadSpec,
+    /// Requests generated (streamed) per cell.
+    pub requests: usize,
+    pub base_seed: u64,
+    /// Arrival rates in requests/s; 0 = closed loop (all arrive at t=0).
+    pub rates: Vec<f64>,
+    /// Zipf popularity skews; 0 = uniform popularity.
+    pub skews: Vec<f64>,
+    /// Micro-batch counts (the deployment-plan axis).
+    pub micro_batches: Vec<usize>,
+    /// Tenant mixes; an empty inner list = single-tenant traffic.
+    pub tenant_mixes: Vec<Vec<TenantClass>>,
+}
+
+/// One simulated grid cell: its coordinates plus the report scalars.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub rate: f64,
+    pub skew: f64,
+    pub m: usize,
+    /// Index into [`SweepGrid::tenant_mixes`].
+    pub tenant_mix: usize,
+    /// The cell's derived deterministic seed.
+    pub seed: u64,
+    pub completed: u64,
+    pub tokens: u64,
+    pub simulated_seconds: f64,
+    pub throughput: f64,
+    pub per_gpu_throughput: f64,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub tpot_p50: f64,
+    pub e2e_p50: f64,
+    pub e2e_p99: f64,
+    pub attn_utilization: f64,
+    pub expert_utilization: f64,
+    pub rejected: u64,
+    pub unserved_queued: u64,
+    pub peak_in_flight: u64,
+    /// Per-tenant `(name, SLO attainment)` pairs.
+    pub tenants: Vec<(String, f64)>,
+}
+
+impl SweepCell {
+    pub fn to_json(&self) -> Json {
+        let tenants: Vec<Json> = self
+            .tenants
+            .iter()
+            .map(|(name, att)| {
+                Json::obj()
+                    .set("name", name.as_str())
+                    .set("attainment", *att)
+            })
+            .collect();
+        Json::obj()
+            .set("rate", self.rate)
+            .set("skew", self.skew)
+            .set("micro_batches", self.m)
+            .set("tenant_mix", self.tenant_mix)
+            .set("seed", self.seed)
+            .set("completed", self.completed)
+            .set("tokens", self.tokens)
+            .set("simulated_seconds", self.simulated_seconds)
+            .set("throughput", self.throughput)
+            .set("per_gpu_throughput", self.per_gpu_throughput)
+            .set("ttft_p50_s", self.ttft_p50)
+            .set("ttft_p99_s", self.ttft_p99)
+            .set("tpot_p50_s", self.tpot_p50)
+            .set("e2e_p50_s", self.e2e_p50)
+            .set("e2e_p99_s", self.e2e_p99)
+            .set("attn_utilization", self.attn_utilization)
+            .set("expert_utilization", self.expert_utilization)
+            .set("rejected", self.rejected)
+            .set("unserved_queued", self.unserved_queued)
+            .set("peak_in_flight", self.peak_in_flight)
+            .set("tenants", Json::Arr(tenants))
+    }
+}
+
+/// Derive a cell's seed from the base seed and its grid position — a
+/// SplitMix64-style finalizer so adjacent cells get unrelated streams while
+/// the mapping stays deterministic.
+fn cell_seed(base: u64, idx: u64) -> u64 {
+    let mut z = base
+        ^ idx
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(0xd1b5_4a32_d192_ed03);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Run one cell to completion through the streaming engine.
+fn run_cell(grid: &SweepGrid, idx: usize, rate: f64, skew: f64, m: usize, mix: usize) -> SweepCell {
+    let seed = cell_seed(grid.base_seed, idx as u64);
+    let tenants = grid.tenant_mixes.get(mix).cloned().unwrap_or_default();
+    let spec = WorkloadSpec {
+        arrival_rate: (rate > 0.0).then_some(rate),
+        tenants: tenants.clone(),
+        ..grid.spec.clone()
+    };
+    let mut plan = grid.plan.clone();
+    plan.m = m.max(1);
+    let popularity = if skew > 0.0 {
+        ExpertPopularity::Zipf(skew)
+    } else {
+        ExpertPopularity::Uniform
+    };
+    let cfg = ClusterSimConfig {
+        model: grid.model.clone(),
+        cluster: grid.cluster.clone(),
+        plan,
+        route: RoutePolicy::LeastLoaded,
+        popularity,
+        transport: Transport::Analytic,
+        seed,
+        tenants,
+        rebalance_period: None,
+        max_sim_seconds: None,
+    };
+    // Decorrelate the workload generator from the engine's gating stream
+    // (the engine does the same for its expert-permutation RNG): feeding
+    // both SimRngs the identical seed would make request lengths track the
+    // expert-gating draws sample for sample.
+    let wl_seed = seed ^ 0xa076_1d64_78bd_642f;
+    let rep = ClusterSim::new(cfg)
+        .run_streaming(Box::new(RequestStream::new(spec, grid.requests, wl_seed)));
+    SweepCell {
+        rate,
+        skew,
+        m,
+        tenant_mix: mix,
+        seed,
+        completed: rep.completed,
+        tokens: rep.tokens,
+        simulated_seconds: rep.elapsed,
+        throughput: rep.throughput,
+        per_gpu_throughput: rep.per_gpu_throughput,
+        ttft_p50: rep.ttft.median(),
+        ttft_p99: rep.ttft.p99(),
+        tpot_p50: rep.tpot.median(),
+        e2e_p50: rep.e2e.median(),
+        e2e_p99: rep.e2e.p99(),
+        attn_utilization: rep.attn_utilization,
+        expert_utilization: rep.expert_utilization,
+        rejected: rep.rejected,
+        unserved_queued: rep.unserved_queued,
+        peak_in_flight: rep.peak_in_flight,
+        tenants: rep
+            .tenants
+            .iter()
+            .map(|t| (t.name.clone(), t.attainment()))
+            .collect(),
+    }
+}
+
+/// Run the whole grid across `workers` OS threads. Cells are claimed from a
+/// shared counter and written back by index, so the result order (and
+/// therefore the serialized report) is independent of scheduling.
+pub fn run_sweep(grid: &SweepGrid, workers: usize) -> Vec<SweepCell> {
+    let mut coords: Vec<(f64, f64, usize, usize)> = Vec::new();
+    for &rate in &grid.rates {
+        for &skew in &grid.skews {
+            for &m in &grid.micro_batches {
+                for mix in 0..grid.tenant_mixes.len().max(1) {
+                    coords.push((rate, skew, m, mix));
+                }
+            }
+        }
+    }
+    let n = coords.len();
+    let results: Vec<Mutex<Option<SweepCell>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = workers.clamp(1, n.max(1));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let (rate, skew, m, mix) = coords[i];
+                let cell = run_cell(grid, i, rate, skew, m, mix);
+                *results[i].lock().unwrap() = Some(cell);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every cell ran"))
+        .collect()
+}
+
+/// Serialize a sweep into the machine-readable report
+/// (`msi sweep --json`). Deterministic: object keys are sorted and the
+/// cell order is the grid order.
+pub fn sweep_to_json(grid: &SweepGrid, cells: &[SweepCell]) -> Json {
+    let meta = Json::obj()
+        .set("model", grid.model.name.as_str())
+        .set("requests_per_cell", grid.requests)
+        .set("base_seed", grid.base_seed)
+        .set("rates", grid.rates.clone())
+        .set("skews", grid.skews.clone())
+        .set(
+            "micro_batches",
+            Json::Arr(grid.micro_batches.iter().map(|&m| Json::from(m)).collect()),
+        )
+        .set("tenant_mixes", grid.tenant_mixes.len())
+        .set("cells", cells.len());
+    Json::obj()
+        .set("grid", meta)
+        .set(
+            "cells",
+            Json::Arr(cells.iter().map(|c| c.to_json()).collect()),
+        )
+}
+
+/// Serialize a sweep as CSV (one row per cell, header first). Per-tenant
+/// attainments are folded into one `name=value;...` column.
+pub fn sweep_to_csv(cells: &[SweepCell]) -> String {
+    let mut s = String::from(
+        "rate,skew,micro_batches,tenant_mix,seed,completed,tokens,simulated_seconds,\
+         throughput,per_gpu_throughput,ttft_p50_s,ttft_p99_s,tpot_p50_s,e2e_p50_s,\
+         e2e_p99_s,attn_utilization,expert_utilization,rejected,unserved_queued,\
+         peak_in_flight,attainments\n",
+    );
+    for c in cells {
+        let atts: Vec<String> = c
+            .tenants
+            .iter()
+            .map(|(name, a)| format!("{name}={a}"))
+            .collect();
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            c.rate,
+            c.skew,
+            c.m,
+            c.tenant_mix,
+            c.seed,
+            c.completed,
+            c.tokens,
+            c.simulated_seconds,
+            c.throughput,
+            c.per_gpu_throughput,
+            c.ttft_p50,
+            c.ttft_p99,
+            c.tpot_p50,
+            c.e2e_p50,
+            c.e2e_p99,
+            c.attn_utilization,
+            c.expert_utilization,
+            c.rejected,
+            c.unserved_queued,
+            c.peak_in_flight,
+            atts.join(";"),
+        ));
+    }
+    s
+}
+
+/// The simulator self-throughput benchmark: stream `requests`
+/// generator-backed requests through the engine at a calibrated
+/// open-loop arrival rate and measure simulated output tokens per
+/// wall-clock second. Memory stays bounded by in-flight requests — this is
+/// the scale check the streaming arrival engine exists for.
+pub fn run_sim_bench(requests: usize, seed: u64) -> Json {
+    let model = ModelConfig::tiny();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let spec = WorkloadSpec::tiny_bench();
+    let plan = PlanSearcher::new(model.clone(), cluster.clone(), spec.avg_seq_len())
+        .search()
+        .expect("tiny plan");
+    let cfg = |seed: u64| ClusterSimConfig {
+        // Ideal popularity: the bench measures the engine's event
+        // machinery, not the RNG cost of per-token gating draws.
+        popularity: ExpertPopularity::Ideal,
+        seed,
+        ..ClusterSimConfig::new(model.clone(), cluster.clone(), plan.clone())
+    };
+
+    // Phase 1 — calibrate: a short closed-loop run measures the service
+    // rate so the timed run can stream near (below) saturation, keeping
+    // the in-flight set small and the queues stable.
+    let cal_n = 4096.min(requests.max(1));
+    let cal = ClusterSim::new(cfg(seed)).run_streaming(Box::new(RequestStream::new(
+        spec.clone(),
+        cal_n,
+        seed,
+    )));
+    let rate = 0.85 * (cal.throughput / spec.mean_output()).max(1.0);
+
+    // Phase 2 — the timed streaming run. Engine construction (which sizes
+    // the KV allocators via a capped generator replay) happens OUTSIDE the
+    // timed window so the reported tokens/wall-second measures the event
+    // machinery itself.
+    let open = WorkloadSpec {
+        arrival_rate: Some(rate),
+        ..spec
+    };
+    let engine = ClusterEngine::new(
+        cfg(seed ^ 0x6d5a_11),
+        Box::new(RequestStream::new(open, requests, seed)),
+    );
+    let t0 = std::time::Instant::now();
+    let rep = engine.run();
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+
+    Json::obj()
+        .set("requests", requests)
+        .set("completed", rep.completed)
+        .set("simulated_tokens", rep.tokens)
+        .set("simulated_seconds", rep.elapsed)
+        .set("iterations", rep.iterations)
+        .set("wall_seconds", wall)
+        .set("tokens_per_wall_second", rep.tokens as f64 / wall)
+        .set("requests_per_wall_second", requests as f64 / wall)
+        .set("peak_in_flight", rep.peak_in_flight)
+        .set("peak_queue_events", rep.peak_queue_events)
+        .set("calibrated_arrival_rate_rps", rate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_grid() -> SweepGrid {
+        let model = ModelConfig::tiny();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        let spec = WorkloadSpec {
+            median_input: 48.0,
+            median_output: 6.0,
+            sigma: 0.3,
+            ..Default::default()
+        };
+        let plan = PlanSearcher::new(model.clone(), cluster.clone(), spec.avg_seq_len())
+            .search()
+            .expect("tiny plan");
+        SweepGrid {
+            model,
+            cluster,
+            plan,
+            spec,
+            requests: 48,
+            base_seed: 7,
+            rates: vec![0.0, 400.0],
+            skews: vec![0.0, 1.2],
+            micro_batches: vec![1, 2],
+            tenant_mixes: vec![Vec::new()],
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_worker_counts() {
+        let grid = tiny_grid();
+        let serial = run_sweep(&grid, 1);
+        let parallel = run_sweep(&grid, 4);
+        assert_eq!(serial.len(), 8);
+        let a = sweep_to_json(&grid, &serial).to_string();
+        let b = sweep_to_json(&grid, &parallel).to_string();
+        assert_eq!(a, b, "byte-identical report regardless of workers");
+        assert_eq!(sweep_to_csv(&serial), sweep_to_csv(&parallel));
+        for c in &serial {
+            assert_eq!(c.completed, 48, "cell completes its workload");
+            assert!(c.throughput > 0.0);
+        }
+    }
+
+    #[test]
+    fn cell_seeds_differ_across_cells_and_stay_fixed() {
+        let s: Vec<u64> = (0..8).map(|i| cell_seed(42, i)).collect();
+        let mut uniq = s.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), s.len(), "distinct per-cell seeds");
+        assert_eq!(s, (0..8).map(|i| cell_seed(42, i)).collect::<Vec<u64>>());
+    }
+}

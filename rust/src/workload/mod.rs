@@ -2,9 +2,16 @@
 //! production dataset statistics (§7.1: median input 571 tokens, median
 //! output 159 tokens), with log-normal length distributions, Poisson
 //! arrivals, and optional multi-tenant traffic classes with per-class SLOs.
+//!
+//! Workloads reach the cluster engine through the pull-based
+//! [`ArrivalSource`] trait ([`arrivals`]): either a [`TraceSource`] over an
+//! explicit request list or a streaming [`RequestStream`] generator with
+//! O(1) state, so simulations only ever hold in-flight requests.
 
+mod arrivals;
 mod trace;
 
+pub use arrivals::{ArrivalSource, RequestStream, TraceSource};
 pub use trace::{Trace, TraceStats};
 
 use anyhow::bail;
@@ -137,13 +144,35 @@ impl Default for WorkloadSpec {
 }
 
 impl WorkloadSpec {
+    /// The small fixed workload shape shared by the simulator
+    /// self-throughput benchmark (`msi sweep --bench`), the CI smoke
+    /// sweep, and the streaming scale tests — one definition so they
+    /// cannot silently diverge.
+    pub fn tiny_bench() -> Self {
+        Self {
+            median_input: 64.0,
+            median_output: 8.0,
+            sigma: 0.3,
+            ..Default::default()
+        }
+    }
+
+    /// Expected prompt length: E[lognormal] = median · exp(σ²/2).
+    pub fn mean_input(&self) -> f64 {
+        self.median_input * (self.sigma * self.sigma / 2.0).exp()
+    }
+
+    /// Expected output length: E[lognormal] = median · exp(σ²/2). Divides
+    /// a token throughput into a request service rate (benchmark/test
+    /// calibration).
+    pub fn mean_output(&self) -> f64 {
+        self.median_output * (self.sigma * self.sigma / 2.0).exp()
+    }
+
     /// Expected steady-state average sequence length during decoding: the
     /// prompt plus half the output on average.
     pub fn avg_seq_len(&self) -> f64 {
-        // E[lognormal] = median * exp(sigma^2/2)
-        let mean_in = self.median_input * (self.sigma * self.sigma / 2.0).exp();
-        let mean_out = self.median_output * (self.sigma * self.sigma / 2.0).exp();
-        mean_in + mean_out / 2.0
+        self.mean_input() + self.mean_output() / 2.0
     }
 
     /// Weighted tenant draw (0 when the workload is single-tenant).
@@ -162,34 +191,15 @@ impl WorkloadSpec {
         self.tenants.len() - 1
     }
 
-    /// Generate `n` requests.
+    /// Generate `n` requests (the materialized form of [`Self::stream`]).
     pub fn generate(&self, n: usize, seed: u64) -> Vec<Request> {
-        let mut rng = SimRng::new(seed);
-        let mut t = 0.0;
-        (0..n as u64)
-            .map(|id| {
-                if let Some(rate) = self.arrival_rate {
-                    let mut gap = rng.exponential(1.0 / rate);
-                    if self.burst_sigma > 0.0 {
-                        // Unit-mean log-normal modulation: median exp(-σ²/2)
-                        // has mean 1, so the arrival rate is preserved while
-                        // the inter-arrival CV grows.
-                        let s = self.burst_sigma;
-                        gap *= rng.lognormal_median((-s * s / 2.0).exp(), s);
-                    }
-                    t += gap;
-                }
-                Request {
-                    id,
-                    arrival: t,
-                    input_len: (rng.lognormal_median(self.median_input, self.sigma) as usize)
-                        .clamp(1, self.max_len),
-                    output_len: (rng.lognormal_median(self.median_output, self.sigma) as usize)
-                        .clamp(1, self.max_len),
-                    tenant: self.draw_tenant(&mut rng),
-                }
-            })
-            .collect()
+        self.stream(n, seed).collect()
+    }
+
+    /// Streaming generator over the same request sequence as
+    /// [`Self::generate`], yielding one request at a time with O(1) state.
+    pub fn stream(&self, n: usize, seed: u64) -> RequestStream {
+        RequestStream::new(self.clone(), n, seed)
     }
 }
 

@@ -409,6 +409,44 @@ fn prop_engine_conserves_tokens_across_components() {
     }
 }
 
+/// Generator-backed streaming arrivals are non-decreasing in time, start at
+/// or after t=0, and are bit-identical to the preloaded trace
+/// `WorkloadSpec::generate` builds from the same (spec, n, seed) — the
+/// contract the pull-based engine relies on.
+#[test]
+fn prop_stream_arrivals_monotone_and_match_generate() {
+    use megascale_infer::workload::RequestStream;
+    for (seed, mut rng) in cases(300) {
+        let n = rng.below(400);
+        let open = rng.chance(0.7);
+        let spec = WorkloadSpec {
+            median_input: 8.0 + rng.uniform() * 600.0,
+            median_output: 2.0 + rng.uniform() * 200.0,
+            sigma: 0.1 + rng.uniform(),
+            arrival_rate: open.then(|| 0.5 + rng.uniform() * 500.0),
+            burst_sigma: if open { rng.uniform() * 1.5 } else { 0.0 },
+            ..Default::default()
+        };
+        let streamed: Vec<_> = RequestStream::new(spec.clone(), n, seed).collect();
+        assert_eq!(streamed.len(), n, "seed {seed}");
+        for w in streamed.windows(2) {
+            assert!(
+                w[1].arrival >= w[0].arrival,
+                "seed {seed}: arrivals must be non-decreasing"
+            );
+        }
+        assert!(
+            streamed.iter().all(|r| r.arrival >= 0.0),
+            "seed {seed}: arrivals start at or after t=0"
+        );
+        assert_eq!(
+            streamed,
+            spec.generate(n, seed),
+            "seed {seed}: stream and preloaded trace identical"
+        );
+    }
+}
+
 /// Histogram percentiles agree with exact order statistics within the
 /// documented 3% relative error, for log-uniform samples.
 #[test]
