@@ -9,6 +9,7 @@
 //! cargo run --release --example sweep_grid
 //! ```
 
+use megascale_infer::baselines::SystemKind;
 use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
 use megascale_infer::plan::PlanSearcher;
 use megascale_infer::sim::sweep::{run_sweep, sweep_to_csv, sweep_to_json, SweepGrid};
@@ -47,6 +48,10 @@ fn main() {
                 },
             ],
         ],
+        // The serving-system axis: disaggregated plus the vLLM-style
+        // colocated fleet sized to the plan's GPU count (`msi compare` as
+        // a grid dimension).
+        systems: vec![SystemKind::Disaggregated, SystemKind::Vllm],
     };
 
     let workers = std::thread::available_parallelism()
@@ -56,12 +61,13 @@ fn main() {
     println!("{} cells on {} workers:", cells.len(), workers);
     for c in &cells {
         println!(
-            "rate {:>6.1}  skew {:>4.2}  m {}  mix {} | {:>9.1} tok/s | \
+            "rate {:>6.1}  skew {:>4.2}  m {}  mix {}  {:<9} | {:>9.1} tok/s | \
              E2E p99 {:>7.3}s | rejected {} unserved {} | peak in-flight {}",
             c.rate,
             c.skew,
             c.m,
             c.tenant_mix,
+            c.system,
             c.throughput,
             c.e2e_p99,
             c.rejected,

@@ -1,0 +1,223 @@
+//! Colocated (monolithic) deployments as first-class *simulated* systems.
+//!
+//! The analytic functions in [`crate::baselines`] evaluate a vLLM-style or
+//! TensorRT-LLM-style deployment at a steady-state batch; this module makes
+//! the same deployments runnable through the event-driven
+//! [`crate::sim::engine::ClusterEngine`] so the paper's central comparison
+//! (§7.2, Figure 8) can be reproduced on *realistic traffic* — bursty
+//! arrivals, multi-tenant mixes, ramp-up and drain — on the exact same
+//! [`crate::workload::ArrivalSource`] workloads the disaggregated path
+//! serves.
+//!
+//! The architectural differences the engine models, per §2.3/§2.4:
+//!
+//! * attention and experts are **colocated on one pool of serving groups**:
+//!   a decode layer is one serial stage (attention + all experts' GEMMs +
+//!   TP collectives), so there is no ping-pong overlap (`m = 1`) and the
+//!   "expert stage"/M2N link contribute zero time;
+//! * the decode batch is **never aggregated across replicas** — each group
+//!   runs continuous batching under its own scheduler cap
+//!   ([`BaselineKind::max_batch`]), so per-expert batches stay in the
+//!   low-utilization regime of Figure 1(b);
+//! * unoverlapped MoE all-to-all, per-step scheduler overhead, and kernel
+//!   quality differences are folded into the per-layer time through
+//!   [`BaselineKind::kernel_efficiency`] (see the calibration note in
+//!   `EXPERIMENTS.md`).
+
+use crate::config::{ClusterSpec, GpuSpec, ModelConfig, DTYPE_BYTES};
+
+use super::{layer_time, minimal_deployment, pp_send_time, BaselineDeployment, BaselineKind};
+
+/// A colocated deployment scaled out to `replicas` independent serving
+/// groups: the simulation-mode counterpart of
+/// [`super::BaselineDeployment`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ColocatedPlan {
+    /// Which baseline system the groups run.
+    pub kind: BaselineKind,
+    /// Tensor-parallel degree inside each group (GPUs per PP stage).
+    pub tp: usize,
+    /// Pipeline-parallel stages per group (multi-node models).
+    pub pp: usize,
+    /// Independent serving groups (data-parallel replicas). Batches are
+    /// never aggregated across them — the capability disaggregation adds.
+    pub replicas: usize,
+}
+
+impl ColocatedPlan {
+    /// GPUs in one serving group (`tp · pp`).
+    pub fn gpus_per_group(&self) -> usize {
+        self.tp * self.pp
+    }
+
+    /// GPUs across the whole fleet.
+    pub fn total_gpus(&self) -> usize {
+        self.gpus_per_group() * self.replicas
+    }
+
+    /// Scheduler cap per group (vLLM `max_num_seqs` / TRT-LLM batch
+    /// scheduler defaults).
+    pub fn max_batch_per_group(&self) -> usize {
+        self.kind.max_batch()
+    }
+
+    /// The minimal viable group for `model` (mirroring §7.2), replicated
+    /// until the fleet reaches at least `target_gpus` — how `msi compare`
+    /// sizes a baseline fleet to match a disaggregated plan's GPU count so
+    /// per-GPU throughput is compared at comparable scale.
+    pub fn sized_to_match(
+        kind: BaselineKind,
+        model: &ModelConfig,
+        cluster: &ClusterSpec,
+        target_gpus: usize,
+    ) -> Self {
+        let dep = minimal_deployment(kind, model, cluster);
+        let per_group = (dep.tp * dep.pp).max(1);
+        Self {
+            kind,
+            tp: dep.tp,
+            pp: dep.pp,
+            replicas: target_gpus.div_ceil(per_group).max(1),
+        }
+    }
+
+    /// KV-token budget of one serving group: the group's aggregate GPU
+    /// memory minus the **full** model parameters (every GPU slice holds
+    /// attention *and* experts — the memory pressure §2.4 calls out) with
+    /// 5% activation headroom.
+    pub fn group_kv_tokens(&self, model: &ModelConfig, cluster: &ClusterSpec) -> u64 {
+        let gpu = cluster.attention_gpu();
+        let params = model.total_params() * DTYPE_BYTES;
+        let budget = self.gpus_per_group() as f64 * gpu.mem_bytes() - params * 1.05;
+        (budget.max(0.0) / model.kv_bytes_per_token()).floor() as u64
+    }
+
+    /// One-line human description, e.g. `vLLM tp=8 pp=1 x4`.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} tp={} pp={} x{}",
+            self.kind.name(),
+            self.tp,
+            self.pp,
+            self.replicas
+        )
+    }
+}
+
+/// Per-layer stage-time model of a colocated serving group at the live
+/// batch composition — the colocated counterpart of
+/// [`crate::perf_model::PerfModel`], rebuilt each decode iteration at the
+/// batch's live average sequence length.
+///
+/// The whole decode layer (attention + MoE + TP collectives, at the
+/// baseline's kernel efficiency) is charged to the single serial stage the
+/// engine's pipeline runs in colocated mode; pipeline-parallel stage
+/// rounding and inter-stage hops are amortized into the per-layer time so
+/// one pass over `L` layers reproduces the analytic
+/// [`super::evaluate_at_batch`] TPOT exactly.
+#[derive(Debug, Clone)]
+pub struct ColocatedModel {
+    kind: BaselineKind,
+    tp: usize,
+    pp: usize,
+    gpu: GpuSpec,
+    model: ModelConfig,
+    avg_seq: f64,
+    /// `ceil(L/pp)·pp / L`: PP stage rounding spread over the `L` hops.
+    stage_factor: f64,
+}
+
+impl ColocatedModel {
+    /// Build the model for one serving group of `plan` at the live average
+    /// sequence length `avg_seq`.
+    pub fn new(
+        plan: &ColocatedPlan,
+        model: &ModelConfig,
+        cluster: &ClusterSpec,
+        avg_seq: f64,
+    ) -> Self {
+        let layers = model.layers.max(1) as f64;
+        let pp = plan.pp.max(1) as f64;
+        let stage_factor = (layers / pp).ceil() * pp / layers;
+        Self {
+            kind: plan.kind,
+            tp: plan.tp.max(1),
+            pp: plan.pp.max(1),
+            gpu: cluster.attention_gpu(),
+            model: model.clone(),
+            avg_seq,
+            stage_factor,
+        }
+    }
+
+    /// Effective per-layer decode time of one group at batch `b`, such that
+    /// `L · layer_time(b)` equals the group's full TPOT (including PP stage
+    /// rounding and inter-stage activation hops).
+    pub fn layer_time(&self, b: f64) -> f64 {
+        let lt = layer_time(self.kind, &self.model, &self.gpu, self.tp, self.avg_seq, b);
+        let hops = (self.pp as f64 - 1.0) * pp_send_time(&self.model, &self.gpu, b)
+            / self.model.layers.max(1) as f64;
+        lt * self.stage_factor + hops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::evaluate_at_batch;
+    use crate::config::GpuKind;
+
+    #[test]
+    fn sized_to_match_covers_target() {
+        let model = ModelConfig::mixtral_8x22b();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        for target in [1, 8, 11, 52] {
+            let p = ColocatedPlan::sized_to_match(BaselineKind::Vllm, &model, &cluster, target);
+            assert!(p.total_gpus() >= target);
+            assert!(p.total_gpus() - target < p.gpus_per_group());
+        }
+    }
+
+    #[test]
+    fn layer_time_reproduces_analytic_tpot() {
+        // L · layer_time(b) must equal the analytic TPOT of the same
+        // deployment at the same batch (the steady-state cross-check the
+        // engine path anchors to).
+        let model = ModelConfig::mixtral_8x22b();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        for kind in [BaselineKind::Vllm, BaselineKind::TrtLlm] {
+            let plan = ColocatedPlan::sized_to_match(kind, &model, &cluster, 8);
+            let cm = ColocatedModel::new(&plan, &model, &cluster, 730.0);
+            let b = 128;
+            let analytic = evaluate_at_batch(
+                &BaselineDeployment {
+                    kind,
+                    tp: plan.tp,
+                    pp: plan.pp,
+                },
+                &model,
+                &cluster,
+                730.0,
+                b,
+            );
+            let des = cm.layer_time(b as f64) * model.layers as f64;
+            let rel = (des - analytic.tpot).abs() / analytic.tpot;
+            assert!(rel < 1e-9, "{kind:?}: des {des} vs analytic {}", analytic.tpot);
+        }
+    }
+
+    #[test]
+    fn group_kv_budget_positive_and_param_dominated() {
+        let model = ModelConfig::mixtral_8x22b();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        let p = ColocatedPlan::sized_to_match(BaselineKind::Vllm, &model, &cluster, 8);
+        let kv = p.group_kv_tokens(&model, &cluster);
+        assert!(kv > 0, "8x80GB minus 141B params leaves KV room");
+        // The whole model's parameters squeeze the budget well below the
+        // attention-only budget a disaggregated node enjoys per GPU.
+        let disagg_per_gpu =
+            (cluster.attention_gpu().mem_bytes() - model.attn_param_bytes()).max(0.0)
+                / model.kv_bytes_per_token();
+        assert!((kv as f64 / p.gpus_per_group() as f64) < disagg_per_gpu);
+    }
+}

@@ -1,0 +1,417 @@
+//! The simulated end-to-end comparison (`msi compare`): disaggregated
+//! MegaScale-Infer vs colocated vLLM-/TRT-LLM-style fleets on the **same
+//! workload** through the **same** event-driven engine — the reproduction
+//! of the paper's Figure 8 under arbitrary traffic.
+//!
+//! For a model/cluster/workload, [`run_compare`]:
+//!
+//! 1. picks the disaggregated plan — Algorithm 1's analytic winner, or the
+//!    sim-validated winner when `validate_top` is set
+//!    ([`crate::plan::validate_top_k`]);
+//! 2. sizes each baseline fleet to at least the plan's GPU count
+//!    ([`ColocatedPlan::sized_to_match`]) so per-GPU throughput is compared
+//!    at comparable scale;
+//! 3. serves one identical request list through all three systems via
+//!    [`ClusterSim`] (the baselines in
+//!    [`crate::sim::cluster::EngineMode::Colocated`]);
+//! 4. reports per-GPU decode throughput, the Figure-8 ratios, and
+//!    TTFT/TPOT/E2E/SLO-attainment per system, as text, JSON, or CSV.
+//!
+//! Everything is seeded: two runs with the same configuration produce
+//! byte-identical JSON (pinned by `tests/compare.rs`).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{ClusterSpec, ModelConfig};
+use crate::plan::{validate_top_k, DeploymentPlan, PlanSearcher, ValidationConfig};
+use crate::sim::cluster::{ClusterReport, ClusterSim, ClusterSimConfig, ExpertPopularity};
+use crate::util::json::Json;
+use crate::workload::WorkloadSpec;
+
+use super::{BaselineKind, ColocatedPlan};
+
+/// Salt decorrelating the workload generator from the engines' gating
+/// streams (mirrors `sim::sweep`).
+const WORKLOAD_SALT: u64 = 0xa076_1d64_78bd_642f;
+
+/// The serving systems a comparison (or a sweep's `system` axis) can run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemKind {
+    /// MegaScale-Infer: disaggregated pools + ping-pong pipelining.
+    Disaggregated,
+    /// vLLM-style colocated baseline.
+    Vllm,
+    /// TensorRT-LLM-style colocated baseline.
+    TrtLlm,
+}
+
+impl SystemKind {
+    /// Stable short name used in reports and CLI axis lists.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::Disaggregated => "megascale",
+            SystemKind::Vllm => "vllm",
+            SystemKind::TrtLlm => "trtllm",
+        }
+    }
+
+    /// Parse a CLI token (`megascale`/`disagg`, `vllm`, `trtllm`/`trt`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim().to_lowercase().as_str() {
+            "megascale" | "disagg" | "disaggregated" | "msi" => SystemKind::Disaggregated,
+            "vllm" => SystemKind::Vllm,
+            "trtllm" | "trt" | "trt-llm" | "tensorrt-llm" => SystemKind::TrtLlm,
+            other => bail!("unknown system {other:?} (megascale|vllm|trtllm)"),
+        })
+    }
+
+    /// The colocated baseline this system maps to (None for disaggregated).
+    pub fn baseline(&self) -> Option<BaselineKind> {
+        match self {
+            SystemKind::Disaggregated => None,
+            SystemKind::Vllm => Some(BaselineKind::Vllm),
+            SystemKind::TrtLlm => Some(BaselineKind::TrtLlm),
+        }
+    }
+}
+
+/// Inputs of one comparison run.
+#[derive(Debug, Clone)]
+pub struct CompareConfig {
+    /// The MoE model served by all three systems.
+    pub model: ModelConfig,
+    /// Hardware offered to the plan search; the baselines run on the
+    /// attention GPU type (monolithic fleets are single-GPU-kind).
+    pub cluster: ClusterSpec,
+    /// Workload shape (lengths, arrival process, tenant classes) shared by
+    /// every system.
+    pub spec: WorkloadSpec,
+    /// Requests to serve. `0` = auto-size so every system saturates: twice
+    /// the disaggregated global batch, and at least each baseline fleet's
+    /// aggregate scheduler cap.
+    pub requests: usize,
+    /// Seed for the workload draw and every engine run.
+    pub seed: u64,
+    /// TPOT SLO for the plan search and the per-system TPOT-attainment
+    /// metric (seconds; paper: 0.150).
+    pub slo: f64,
+    /// Expert popularity for the disaggregated system. Default `Ideal`
+    /// (balanced experts) — the Figure-8 setting, and the assumption the
+    /// colocated layer-time model makes for the baselines, so the
+    /// comparison isolates architecture. Set a Zipf variant to explore
+    /// skewed regimes (the baselines keep their balanced-expert model,
+    /// which *favors* them).
+    pub popularity: ExpertPopularity,
+    /// When `Some(k)`, pick the disaggregated plan by sim-validated goodput
+    /// over the top-`k` analytic candidates instead of the analytic winner.
+    pub validate_top: Option<usize>,
+    /// Optional simulation horizon forwarded to every system's engine run.
+    pub max_sim_seconds: Option<f64>,
+}
+
+impl CompareConfig {
+    /// Defaults: paper workload shape, auto-sized request count, 150 ms
+    /// SLO, balanced experts, analytic plan choice.
+    pub fn new(model: ModelConfig, cluster: ClusterSpec) -> Self {
+        Self {
+            model,
+            cluster,
+            spec: WorkloadSpec::default(),
+            requests: 0,
+            seed: 42,
+            slo: 0.150,
+            popularity: ExpertPopularity::Ideal,
+            validate_top: None,
+            max_sim_seconds: None,
+        }
+    }
+}
+
+/// One system's simulated outcome.
+#[derive(Debug, Clone)]
+pub struct SystemResult {
+    /// Which system ran.
+    pub system: SystemKind,
+    /// Human-readable deployment shape (plan or fleet description).
+    pub deployment: String,
+    /// Fleet GPU count the per-GPU metric divides by.
+    pub gpus: usize,
+    /// The engine's full report.
+    pub report: ClusterReport,
+    /// Fraction of decode iterations meeting the TPOT SLO
+    /// ([`crate::metrics::Histogram::fraction_below`] on the TPOT
+    /// distribution).
+    pub tpot_slo_attainment: f64,
+}
+
+impl SystemResult {
+    /// JSON rendering (one entry of the `msi compare --json` payload).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("system", self.system.name())
+            .set("deployment", self.deployment.as_str())
+            .set("gpus", self.gpus)
+            .set("tpot_slo_attainment", self.tpot_slo_attainment)
+            .set("report", self.report.to_json())
+    }
+}
+
+/// Outcome of one comparison: the three systems plus the Figure-8 ratios.
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    /// The disaggregated plan that ran (analytic or sim-validated winner).
+    pub plan: DeploymentPlan,
+    /// Requests actually served (after auto-sizing).
+    pub requests: usize,
+    /// The run's seed.
+    pub seed: u64,
+    /// TPOT SLO used for attainment metrics (seconds).
+    pub slo: f64,
+    /// MegaScale-Infer's result.
+    pub disaggregated: SystemResult,
+    /// The vLLM-style fleet's result.
+    pub vllm: SystemResult,
+    /// The TRT-LLM-style fleet's result.
+    pub trtllm: SystemResult,
+}
+
+impl CompareReport {
+    /// The three results in report order (disaggregated first).
+    pub fn systems(&self) -> [&SystemResult; 3] {
+        [&self.disaggregated, &self.vllm, &self.trtllm]
+    }
+
+    /// Per-GPU decode-throughput ratio of disaggregated over `other` (the
+    /// Figure-8 headline number).
+    fn ratio_over(&self, other: &SystemResult) -> f64 {
+        self.disaggregated.report.per_gpu_throughput
+            / other.report.per_gpu_throughput.max(f64::MIN_POSITIVE)
+    }
+
+    /// Disaggregated / vLLM per-GPU throughput.
+    pub fn ratio_vs_vllm(&self) -> f64 {
+        self.ratio_over(&self.vllm)
+    }
+
+    /// Disaggregated / TRT-LLM per-GPU throughput.
+    pub fn ratio_vs_trtllm(&self) -> f64 {
+        self.ratio_over(&self.trtllm)
+    }
+
+    /// Deterministic multi-line rendering (the `msi compare` stdout table).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "compare: {} requests | plan tp_a={} tp_e={} n_a={} m={} B={} ({} GPUs)\n\
+             {:<10} {:>24} {:>5} | {:>11} {:>9} | {:>9} {:>9} {:>9} | {:>8}\n",
+            self.requests,
+            self.plan.tp_a,
+            self.plan.tp_e,
+            self.plan.n_a,
+            self.plan.m,
+            self.plan.global_batch,
+            self.plan.total_gpus(),
+            "system",
+            "deployment",
+            "GPUs",
+            "tok/s/GPU",
+            "tok/s",
+            "TTFT p50",
+            "TPOT p50",
+            "E2E p99",
+            "SLO att",
+        );
+        for r in self.systems() {
+            s.push_str(&format!(
+                "{:<10} {:>24} {:>5} | {:>11.2} {:>9.0} | {:>8.0}ms {:>8.1}ms {:>8.2}s | {:>7.1}%\n",
+                r.system.name(),
+                r.deployment,
+                r.gpus,
+                r.report.per_gpu_throughput,
+                r.report.throughput,
+                r.report.ttft.median() * 1e3,
+                r.report.tpot.median() * 1e3,
+                r.report.e2e.p99(),
+                r.tpot_slo_attainment * 100.0,
+            ));
+        }
+        s.push_str(&format!(
+            "per-GPU throughput ratio: {:.2}x vs vLLM, {:.2}x vs TensorRT-LLM \
+             (paper Fig. 8: 2.56x/1.28x Mixtral+DBRX avg, 7.11x/1.90x Scaled-MoE)",
+            self.ratio_vs_vllm(),
+            self.ratio_vs_trtllm(),
+        ));
+        s
+    }
+
+    /// Machine-readable report (the `msi compare --json` payload).
+    /// Byte-identical across same-seed runs.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("plan", self.plan.to_json())
+            .set("requests", self.requests)
+            .set("seed", self.seed)
+            .set("slo_s", self.slo)
+            .set("ratio_vs_vllm", self.ratio_vs_vllm())
+            .set("ratio_vs_trtllm", self.ratio_vs_trtllm())
+            .set(
+                "systems",
+                Json::Arr(self.systems().iter().map(|r| r.to_json()).collect()),
+            )
+    }
+
+    /// CSV rendering: one row per system, per-GPU throughput normalized to
+    /// vLLM in the last column (Figure 8's bar heights).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "system,deployment,gpus,per_gpu_throughput,throughput,completed,tokens,\
+             ttft_p50_s,ttft_p99_s,tpot_p50_s,e2e_p50_s,e2e_p99_s,tpot_slo_attainment,\
+             vs_vllm\n",
+        );
+        let vllm_pgpu = self.vllm.report.per_gpu_throughput.max(f64::MIN_POSITIVE);
+        for r in self.systems() {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                r.system.name(),
+                r.deployment,
+                r.gpus,
+                r.report.per_gpu_throughput,
+                r.report.throughput,
+                r.report.completed,
+                r.report.tokens,
+                r.report.ttft.median(),
+                r.report.ttft.p99(),
+                r.report.tpot.median(),
+                r.report.e2e.median(),
+                r.report.e2e.p99(),
+                r.tpot_slo_attainment,
+                r.report.per_gpu_throughput / vllm_pgpu,
+            ));
+        }
+        s
+    }
+}
+
+/// Run one baseline fleet over the shared workload.
+fn run_baseline(
+    cfg: &CompareConfig,
+    kind: BaselineKind,
+    target_gpus: usize,
+    workload: &[crate::workload::Request],
+) -> SystemResult {
+    let cplan = ColocatedPlan::sized_to_match(kind, &cfg.model, &cfg.cluster, target_gpus);
+    let deployment = cplan.describe();
+    let gpus = cplan.total_gpus();
+    let sim_cfg = ClusterSimConfig {
+        seed: cfg.seed,
+        tenants: cfg.spec.tenants.clone(),
+        max_sim_seconds: cfg.max_sim_seconds,
+        ..ClusterSimConfig::colocated(cfg.model.clone(), cfg.cluster.clone(), cplan)
+    };
+    let report = ClusterSim::new(sim_cfg).run(workload);
+    SystemResult {
+        system: match kind {
+            BaselineKind::Vllm => SystemKind::Vllm,
+            BaselineKind::TrtLlm => SystemKind::TrtLlm,
+        },
+        deployment,
+        gpus,
+        tpot_slo_attainment: report.tpot.fraction_below(cfg.slo),
+        report,
+    }
+}
+
+/// Run the full three-system comparison. See the module docs for the
+/// procedure; fails only when no feasible disaggregated plan exists.
+pub fn run_compare(cfg: &CompareConfig) -> Result<CompareReport> {
+    let avg_seq = cfg.spec.avg_seq_len();
+    let mut searcher = PlanSearcher::new(cfg.model.clone(), cfg.cluster.clone(), avg_seq);
+    searcher.limits.slo = cfg.slo;
+    let plan = match cfg.validate_top {
+        Some(k) if k > 0 => validate_top_k(
+            &searcher,
+            &cfg.spec,
+            &ValidationConfig {
+                top_k: k,
+                seed: cfg.seed,
+                popularity: cfg.popularity,
+                ..Default::default()
+            },
+        )
+        .map(|v| v.plan),
+        _ => searcher.search(),
+    }
+    .ok_or_else(|| anyhow!("no feasible disaggregated plan under the SLO"))?;
+
+    // Size the baseline fleets to at least the plan's GPU count, then
+    // auto-size the workload so every system reaches steady state: twice
+    // the disaggregated global batch and at least each fleet's aggregate
+    // scheduler cap.
+    let target_gpus = plan.total_gpus();
+    let requests = if cfg.requests == 0 {
+        let fleet_cap = |kind: BaselineKind| {
+            let p = ColocatedPlan::sized_to_match(kind, &cfg.model, &cfg.cluster, target_gpus);
+            p.replicas * p.max_batch_per_group()
+        };
+        (2 * plan.global_batch)
+            .max(fleet_cap(BaselineKind::Vllm))
+            .max(fleet_cap(BaselineKind::TrtLlm))
+            .max(256)
+    } else {
+        cfg.requests
+    };
+    let workload = cfg.spec.generate(requests, cfg.seed ^ WORKLOAD_SALT);
+
+    let disagg_cfg = ClusterSimConfig {
+        popularity: cfg.popularity,
+        seed: cfg.seed,
+        tenants: cfg.spec.tenants.clone(),
+        max_sim_seconds: cfg.max_sim_seconds,
+        ..ClusterSimConfig::new(cfg.model.clone(), cfg.cluster.clone(), plan.clone())
+    };
+    let disagg_report = ClusterSim::new(disagg_cfg).run(&workload);
+    let disaggregated = SystemResult {
+        system: SystemKind::Disaggregated,
+        deployment: format!(
+            "MSI tp_a={} n_a={} tp_e={} n_e={} m={}",
+            plan.tp_a, plan.n_a, plan.tp_e, plan.n_e, plan.m
+        ),
+        gpus: target_gpus,
+        tpot_slo_attainment: disagg_report.tpot.fraction_below(cfg.slo),
+        report: disagg_report,
+    };
+
+    let vllm = run_baseline(cfg, BaselineKind::Vllm, target_gpus, &workload);
+    let trtllm = run_baseline(cfg, BaselineKind::TrtLlm, target_gpus, &workload);
+
+    Ok(CompareReport {
+        plan,
+        requests,
+        seed: cfg.seed,
+        slo: cfg.slo,
+        disaggregated,
+        vllm,
+        trtllm,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_kind_parse_roundtrip() {
+        for k in [SystemKind::Disaggregated, SystemKind::Vllm, SystemKind::TrtLlm] {
+            assert_eq!(SystemKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(SystemKind::parse("disagg").unwrap(), SystemKind::Disaggregated);
+        assert_eq!(SystemKind::parse("trt").unwrap(), SystemKind::TrtLlm);
+        assert!(SystemKind::parse("sglang").is_err());
+    }
+
+    #[test]
+    fn baseline_mapping() {
+        assert_eq!(SystemKind::Disaggregated.baseline(), None);
+        assert_eq!(SystemKind::Vllm.baseline(), Some(BaselineKind::Vllm));
+        assert_eq!(SystemKind::TrtLlm.baseline(), Some(BaselineKind::TrtLlm));
+    }
+}

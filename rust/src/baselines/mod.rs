@@ -8,6 +8,22 @@
 //! GPU holds a slice of every expert (TP) or a subset of experts (EP) and
 //! the decode batch is never aggregated across replicas, so each expert
 //! sees only `b·K/E` tokens — the low-utilization regime of Figure 1(b).
+//!
+//! Two evaluation paths exist:
+//!
+//! * **analytic** (this module): steady-state metrics at a chosen batch
+//!   ([`evaluate_at_batch`], [`best_under_slo`]) — the closed-form Figure 8
+//!   columns the benches print;
+//! * **simulated** ([`colocated`], [`compare`]): the same deployments run
+//!   through the event-driven [`crate::sim::engine::ClusterEngine`] on
+//!   arbitrary arrival processes, which is what `msi compare` uses to
+//!   reproduce the paper's comparison under realistic traffic.
+
+mod colocated;
+mod compare;
+
+pub use colocated::{ColocatedModel, ColocatedPlan};
+pub use compare::{run_compare, CompareConfig, CompareReport, SystemKind, SystemResult};
 
 use crate::config::{ClusterSpec, GpuSpec, ModelConfig, DTYPE_BYTES};
 use crate::perf_model::{AttentionModel, GpuPerf, GemmShape};
@@ -59,6 +75,7 @@ impl BaselineKind {
         matches!(self, BaselineKind::TrtLlm)
     }
 
+    /// Human-readable system name for reports.
     pub fn name(&self) -> &'static str {
         match self {
             BaselineKind::Vllm => "vLLM",
@@ -71,20 +88,30 @@ impl BaselineKind {
 /// across nodes.
 #[derive(Debug, Clone)]
 pub struct BaselineDeployment {
+    /// Which baseline system runs the deployment.
     pub kind: BaselineKind,
+    /// Tensor-parallel degree within one node.
     pub tp: usize,
+    /// Pipeline-parallel stages across nodes.
     pub pp: usize,
 }
 
-/// Simulated metrics for a baseline at a given batch size.
+/// Analytic steady-state metrics for a baseline at a given batch size.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BaselineMetrics {
+    /// Decode time per output token (seconds).
     pub tpot: f64,
+    /// Output tokens per second for the serving group.
     pub throughput: f64,
+    /// Output tokens per second per GPU (the Figure-8 metric).
     pub per_gpu_throughput: f64,
+    /// Output tokens per second per normalized dollar (Table 3 prices).
     pub throughput_per_dollar: f64,
+    /// The batch size evaluated.
     pub batch: usize,
+    /// GPUs in the serving group.
     pub gpus: usize,
+    /// Normalized cost of the serving group.
     pub cost: f64,
 }
 

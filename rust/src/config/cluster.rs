@@ -6,6 +6,7 @@ use super::hardware::{GpuKind, GpuSpec};
 /// One homogeneous group of nodes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NodeSpec {
+    /// GPU type of this node group.
     pub gpu: GpuKind,
     /// GPUs per physical node.
     pub gpus_per_node: usize,
@@ -56,14 +57,17 @@ impl ClusterSpec {
         }
     }
 
+    /// Spec of the attention-pool GPU type.
     pub fn attention_gpu(&self) -> GpuSpec {
         GpuSpec::of(self.attention.gpu)
     }
 
+    /// Spec of the expert-pool GPU type.
     pub fn expert_gpu(&self) -> GpuSpec {
         GpuSpec::of(self.expert.gpu)
     }
 
+    /// Whether the pools use different GPU types (§4.3).
     pub fn is_heterogeneous(&self) -> bool {
         self.attention.gpu != self.expert.gpu
     }

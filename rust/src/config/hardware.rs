@@ -5,10 +5,15 @@
 /// part (80GB, A800-class NVLink box with 200 Gbps NICs, §7.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum GpuKind {
+    /// Table 3 row: L20 (PCIe, the price-normalization baseline).
     L20,
+    /// Table 3 row: H800 (flagship compute + NVLink).
     H800,
+    /// Table 3 row: A800 (Ampere-class NVLink part).
     A800,
+    /// Table 3 row: H20 (huge HBM bandwidth per cost).
     H20,
+    /// Table 3 row: L40S (best compute per cost, PCIe).
     L40S,
     /// "NVIDIA 80GB Ampere" of the homogeneous testbed; modeled with A100
     /// SXM numbers used in the paper's §2.3 roofline example
@@ -21,7 +26,9 @@ pub enum GpuKind {
 /// `price` is normalized by L20 = 1.00, exactly as in paper Table 3.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GpuSpec {
+    /// Which catalog entry this is.
     pub kind: GpuKind,
+    /// Human-readable part name.
     pub name: String,
     /// Normalized purchase price (L20 = 1.00).
     pub price: f64,

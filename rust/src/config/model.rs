@@ -174,6 +174,7 @@ impl ModelConfig {
             .set("head_dim", self.head_dim)
     }
 
+    /// Parse the [`Self::to_json`] rendering.
     pub fn from_json(v: &Json) -> anyhow::Result<Self> {
         Ok(Self {
             name: v.get("name")?.as_str()?.to_string(),

@@ -6,6 +6,7 @@ use crate::workload::Request;
 /// A request admitted to the decode batch.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ActiveRequest {
+    /// Request id (the cluster engine threads table slots through this).
     pub id: u64,
     /// Current sequence length (prompt + decoded so far).
     pub seq_len: usize,
@@ -18,6 +19,7 @@ pub struct ActiveRequest {
 }
 
 impl ActiveRequest {
+    /// Admit a request at time `now` (prompt KV already materialized, §3).
     pub fn from_request(r: &Request, now: f64) -> Self {
         Self {
             id: r.id,
@@ -43,14 +45,17 @@ impl ActiveRequest {
 /// request count and the token batch size `B`.
 #[derive(Debug, Clone, Default)]
 pub struct DecodeBatch {
+    /// The live requests, in admission order.
     pub requests: Vec<ActiveRequest>,
 }
 
 impl DecodeBatch {
+    /// Requests currently decoding (== token batch size `B`).
     pub fn len(&self) -> usize {
         self.requests.len()
     }
 
+    /// Whether the batch is empty.
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }

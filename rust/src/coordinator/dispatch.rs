@@ -23,6 +23,7 @@ pub struct DispatchPlan {
 }
 
 impl DispatchPlan {
+    /// Number of experts the plan covers.
     pub fn num_experts(&self) -> usize {
         self.offsets.len() - 1
     }

@@ -12,6 +12,7 @@
 /// Gating decision for a batch of tokens, flat row-major `[batch, k]`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GatingOutput {
+    /// Experts selected per token.
     pub k: usize,
     /// `[batch * k]` selected expert ids, by descending router weight.
     pub experts: Vec<u16>,
@@ -20,6 +21,7 @@ pub struct GatingOutput {
 }
 
 impl GatingOutput {
+    /// Number of token rows in the decision.
     pub fn batch(&self) -> usize {
         if self.k == 0 {
             0

@@ -49,13 +49,17 @@ pub struct InstanceReport {
     pub tpot: Histogram,
     /// Mean attention / expert stage utilization over the run.
     pub attn_utilization: f64,
+    /// Mean expert stage utilization over the run.
     pub expert_utilization: f64,
 }
 
 /// Virtual-time serving instance.
 pub struct RuntimeInstance {
+    /// The model being served.
     pub model: ModelConfig,
+    /// Hardware the instance runs on.
     pub cluster: ClusterSpec,
+    /// Deployment shape (TP degrees, pool sizes, micro-batches).
     pub plan: DeploymentPlan,
     /// Expert-popularity model (default Uniform).
     pub traffic: ExpertTraffic,
@@ -64,6 +68,7 @@ pub struct RuntimeInstance {
 }
 
 impl RuntimeInstance {
+    /// An instance with uniform expert traffic and a fixed default seed.
     pub fn new(model: ModelConfig, cluster: ClusterSpec, plan: DeploymentPlan) -> Self {
         Self {
             model,

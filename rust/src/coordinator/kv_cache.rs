@@ -41,6 +41,7 @@ pub struct BlockAllocator {
 }
 
 impl BlockAllocator {
+    /// An allocator with `config.num_blocks` free blocks.
     pub fn new(config: KvCacheConfig) -> Self {
         let free = (0..config.num_blocks as u32).rev().collect();
         Self {
@@ -51,10 +52,12 @@ impl BlockAllocator {
         }
     }
 
+    /// Blocks currently free.
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
 
+    /// Blocks currently allocated.
     pub fn allocated_blocks(&self) -> usize {
         self.config.num_blocks - self.free.len()
     }
@@ -117,6 +120,7 @@ impl BlockAllocator {
         self.tokens.get(&request_id).copied()
     }
 
+    /// Requests currently holding blocks.
     pub fn num_requests(&self) -> usize {
         self.owned.len()
     }

@@ -29,7 +29,9 @@ pub use crate::sim::pipeline::{PipelineStats, StageTimes};
 /// providers (RNG-backed gating draws) stay deterministic.
 #[derive(Debug, Clone)]
 pub struct PingPongEngine {
+    /// Micro-batches in flight.
     pub m: usize,
+    /// MoE layers per decode iteration.
     pub layers: usize,
 }
 
@@ -67,7 +69,9 @@ pub struct PingPongSim {
     pub t_e: f64,
     /// One-direction communication time per micro-batch.
     pub t_c: f64,
+    /// Micro-batches in flight.
     pub m: usize,
+    /// MoE layers per decode iteration.
     pub layers: usize,
 }
 

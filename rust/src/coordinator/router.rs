@@ -16,6 +16,7 @@ use crate::workload::Request;
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutePolicy {
+    /// Cycle through instances regardless of load.
     RoundRobin,
     /// Route to the instance with the least outstanding decode tokens,
     /// skipping instances whose KV headroom cannot admit the request.
@@ -58,6 +59,7 @@ impl Router {
         }
     }
 
+    /// Per-instance routing state (diagnostics/tests).
     pub fn instances(&self) -> &[InstanceState] {
         &self.instances
     }

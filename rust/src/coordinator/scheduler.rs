@@ -24,6 +24,7 @@ pub struct SchedulerConfig {
 /// Iteration-level scheduler state.
 #[derive(Debug)]
 pub struct ContinuousBatcher {
+    /// Scheduler parameters.
     pub config: SchedulerConfig,
     /// Requests waiting for admission (arrived, not yet decoding).
     pub waiting: VecDeque<Request>,
@@ -34,11 +35,14 @@ pub struct ContinuousBatcher {
 /// What happened during one admission step.
 #[derive(Debug, Default, PartialEq)]
 pub struct AdmissionReport {
+    /// Requests admitted this step.
     pub admitted: usize,
+    /// Admissions blocked on KV memory this step.
     pub rejected_kv: usize,
 }
 
 impl ContinuousBatcher {
+    /// An empty batcher with the given parameters.
     pub fn new(config: SchedulerConfig) -> Self {
         Self {
             config,
@@ -92,6 +96,7 @@ impl ContinuousBatcher {
         done
     }
 
+    /// Whether any request is decoding or waiting.
     pub fn has_work(&self) -> bool {
         !self.batch.is_empty() || !self.waiting.is_empty()
     }

@@ -19,8 +19,15 @@
 //! * **Analytical performance model** — roofline GEMM timing (Table 2),
 //!   `T_a`/`T_e`/`T_c` models and iteration-latency equations (Eq. 4–6)
 //!   ([`perf_model`]).
-//! * **Baselines** — vLLM-like and TensorRT-LLM-like monolithic serving
-//!   simulators sharing the same substrate ([`baselines`]).
+//! * **Baselines + the Figure-8 comparison** — vLLM-like and
+//!   TensorRT-LLM-like monolithic deployments, both as closed forms and as
+//!   *simulated systems* running through the same cluster engine as the
+//!   disaggregated path, so `msi compare` reproduces the paper's central
+//!   per-GPU-throughput comparison on arbitrary traffic
+//!   ([`baselines`], [`baselines::run_compare`]).
+//! * **Sim-validated plan choice** — `msi plan --validate-top K` re-scores
+//!   the top analytic plans through short engine runs and picks by
+//!   simulated goodput per dollar ([`plan::validate_top_k`]).
 //! * **PJRT runtime** — loads JAX/Pallas-AOT-compiled HLO artifacts and runs
 //!   the same coordinator logic against real compute (`runtime`, behind the
 //!   `pjrt` cargo feature: it needs a locally-provided `xla` binding crate,
@@ -33,11 +40,17 @@
 //!   Arrivals stream through a pull-based [`workload::ArrivalSource`]
 //!   (trace- or generator-backed), so memory stays bounded by in-flight
 //!   requests at million-request scale; [`sim::sweep`] fans scenario grids
-//!   (rate × skew × micro-batches × tenant mix) across worker threads with
-//!   deterministic per-cell seeds.
+//!   (rate × skew × micro-batches × tenant mix × serving system) across
+//!   worker threads with deterministic per-cell seeds.
 //!
-//! See `DESIGN.md` for the experiment index and substitution notes, and
-//! `EXPERIMENTS.md` for measured results.
+//! See `README.md` for the quickstart, `DESIGN.md` for the experiment
+//! index and substitution notes, and `EXPERIMENTS.md` for measured
+//! results.
+
+// Docs are a first-class deliverable: every public item is documented, and
+// CI builds `cargo doc --no-deps` with `-D warnings` so coverage and
+// intra-doc links stay green.
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod config;

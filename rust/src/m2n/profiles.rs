@@ -20,6 +20,7 @@ pub enum LibraryKind {
 /// Per-operation cost constants for one stack.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LibraryProfile {
+    /// Which stack this profile models.
     pub kind: LibraryKind,
     /// NIC line rate per GPU, bytes/s (200 Gbps default, §7.3 testbed).
     pub nic_bw: f64,
@@ -59,6 +60,7 @@ pub struct LibraryProfile {
 }
 
 impl LibraryProfile {
+    /// The calibrated cost profile of one stack.
     pub fn of(kind: LibraryKind) -> Self {
         match kind {
             LibraryKind::MegaScale => Self {

@@ -27,6 +27,7 @@ use super::profiles::LibraryProfile;
 /// Scenario description for one microbenchmark run.
 #[derive(Debug, Clone)]
 pub struct M2nScenario {
+    /// Cost profile of the stack under test.
     pub profile: LibraryProfile,
     /// Number of senders (M).
     pub senders: usize,
@@ -39,6 +40,7 @@ pub struct M2nScenario {
     /// Model bidirectional load (ping-pong pipeline in flight both ways):
     /// adds the ACK-delay term for stacks without high-priority ACKs.
     pub bidirectional: bool,
+    /// Seed for the jitter/stall draws.
     pub seed: u64,
 }
 

@@ -16,7 +16,9 @@ use super::simnet::{simulate_m2n, M2nScenario};
 /// Affine per-dispatch latency model for an M-to-N token transfer.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TransferModel {
+    /// Senders (M) the model was calibrated for.
     pub senders: usize,
+    /// Receivers (N) the model was calibrated for.
     pub receivers: usize,
     /// Fixed per-dispatch latency (seconds): setup, posts, propagation.
     pub base: f64,

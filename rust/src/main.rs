@@ -2,7 +2,13 @@
 //!
 //! ```text
 //! msi plan      --model mixtral --attention-gpu ampere [--expert-gpu l40s]
-//!               [--slo-ms 150] [--avg-seq 730] [--all]
+//!               [--hetero h20:l40s] [--slo-ms 150] [--avg-seq 730] [--all]
+//!               [--validate-top K] [--validate-requests 512] [--seed 42]
+//! msi compare   --model mixtral [--attention-gpu ampere] [--expert-gpu l40s]
+//!               [--hetero h20:l40s] [--requests 0=auto] [--rate 0]
+//!               [--burst 0.0] [--skew 0] [--tenants name:w:slo,...]
+//!               [--slo-ms 150] [--validate-top K] [--seed 42]
+//!               [--json report.json] [--csv report.csv]
 //! msi simulate  --model mixtral --gpu ampere [--requests 512] [--baselines]
 //! msi replay    [--trace t.jsonl | --requests 1000] --model mixtral
 //!               --attention-gpu ampere [--expert-gpu l40s]
@@ -16,8 +22,8 @@
 //! msi sweep     [--model tiny] [--gpu ampere] [--requests 2000]
 //!               [--rates 0,200,400] [--skews 0,1.2] [--micro-batches 1,2,3]
 //!               [--tenant-mixes "none;interactive:0.7:2.5,batch:0.3:60"]
-//!               [--workers N] [--seed 42] [--json sweep.json]
-//!               [--csv sweep.csv] [--smoke]
+//!               [--systems megascale,vllm,trtllm] [--workers N] [--seed 42]
+//!               [--json sweep.json] [--csv sweep.csv] [--smoke]
 //! msi sweep     --bench [--bench-requests 1000000] [--seed 42]
 //!               [--bench-out BENCH_sim.json]
 //! msi m2n       --library megascale|nccl|perftest [--senders 8]
@@ -30,21 +36,26 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use megascale_infer::baselines::{best_under_slo, minimal_deployment, BaselineKind};
+use megascale_infer::baselines::{
+    best_under_slo, minimal_deployment, run_compare, BaselineKind, CompareConfig, SystemKind,
+};
 use megascale_infer::config::{gpu_catalog, ClusterSpec, GpuKind, ModelConfig, NodeSpec};
 use megascale_infer::coordinator::{RoutePolicy, RuntimeInstance};
 use megascale_infer::m2n::{simulate_m2n, LibraryKind, LibraryProfile, M2nScenario};
-use megascale_infer::plan::PlanSearcher;
+use megascale_infer::plan::{validate_top_k, PlanSearcher, ValidationConfig};
 #[cfg(feature = "pjrt")]
 use megascale_infer::runtime::ServingEngine;
-use megascale_infer::sim::cluster::{ClusterSim, ClusterSimConfig, ExpertPopularity, Transport};
+use megascale_infer::sim::cluster::{
+    ClusterSim, ClusterSimConfig, EngineMode, ExpertPopularity, Transport,
+};
 use megascale_infer::sim::sweep::{
     run_sim_bench, run_sweep, sweep_to_csv, sweep_to_json, SweepGrid,
 };
 use megascale_infer::util::cli::Args;
 use megascale_infer::workload::{TenantClass, Trace, WorkloadSpec};
 
-const USAGE: &str = "usage: msi <plan|simulate|replay|sweep|serve|m2n|hardware|trace> [--options]
+const USAGE: &str =
+    "usage: msi <plan|compare|simulate|replay|sweep|serve|m2n|hardware|trace> [--options]
 run `msi help` or see README.md for details";
 
 fn parse_model(name: &str) -> Result<ModelConfig> {
@@ -69,6 +80,40 @@ fn parse_gpu(name: &str) -> Result<GpuKind> {
     })
 }
 
+/// Cluster shape from the shared GPU flags: `--hetero attn:expert` is
+/// shorthand for `--attention-gpu`/`--expert-gpu` (which defaults to the
+/// attention kind). Used identically by `plan`, `compare` and `replay`.
+fn parse_cluster(args: &Args) -> Result<ClusterSpec> {
+    let (a, e) = match args.get("hetero") {
+        Some(pair) => {
+            let (a, e) = pair
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("--hetero expects <attn-gpu>:<expert-gpu>"))?;
+            (parse_gpu(a)?, parse_gpu(e)?)
+        }
+        None => {
+            let a = parse_gpu(&args.str_or("attention-gpu", "ampere"))?;
+            let e = match args.get("expert-gpu") {
+                Some(g) => parse_gpu(g)?,
+                None => a,
+            };
+            (a, e)
+        }
+    };
+    Ok(ClusterSpec {
+        attention: NodeSpec {
+            gpu: a,
+            gpus_per_node: 8,
+            nodes: None,
+        },
+        expert: NodeSpec {
+            gpu: e,
+            gpus_per_node: 8,
+            nodes: None,
+        },
+    })
+}
+
 fn main() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
@@ -76,6 +121,7 @@ fn main() -> Result<()> {
     )?;
     match args.subcommand.as_str() {
         "plan" => cmd_plan(&args),
+        "compare" => cmd_compare(&args),
         "simulate" => cmd_simulate(&args),
         "replay" => cmd_replay(&args),
         "sweep" => cmd_sweep(&args),
@@ -99,34 +145,110 @@ fn main() -> Result<()> {
 
 fn cmd_plan(args: &Args) -> Result<()> {
     let model = parse_model(&args.str_or("model", "mixtral"))?;
-    let a = parse_gpu(&args.str_or("attention-gpu", "ampere"))?;
-    let e = match args.get("expert-gpu") {
-        Some(g) => parse_gpu(g)?,
-        None => a,
-    };
-    let cluster = ClusterSpec {
-        attention: NodeSpec {
-            gpu: a,
-            gpus_per_node: 8,
-            nodes: None,
-        },
-        expert: NodeSpec {
-            gpu: e,
-            gpus_per_node: 8,
-            nodes: None,
-        },
-    };
+    let cluster = parse_cluster(args)?;
     let mut searcher = PlanSearcher::new(model, cluster, args.f64_or("avg-seq", 730.0)?);
     searcher.limits.slo = args.f64_or("slo-ms", 150.0)? / 1000.0;
     if args.flag("all") {
         for p in searcher.search_all() {
             println!("{}", p.to_json());
         }
-    } else {
-        match searcher.search() {
-            Some(p) => println!("{}", p.to_json()),
-            None => bail!("no feasible plan"),
+        return Ok(());
+    }
+    // Sim-in-the-loop validation: re-score the top-K analytic candidates
+    // through short engine runs and pick by simulated goodput per dollar
+    // (K = 1 sim-checks the analytic winner and reports its numbers).
+    let k = args.usize_or("validate-top", 0)?;
+    if k > 0 {
+        let vcfg = ValidationConfig {
+            top_k: k,
+            requests: args.usize_or("validate-requests", 512)?,
+            seed: args.u64_or("seed", 42)?,
+            ..Default::default()
+        };
+        // Match the validation workload's sequence-length regime to the
+        // --avg-seq the analytic search ranked under, keeping the paper's
+        // input:output shape.
+        let base = WorkloadSpec::default();
+        let scale = searcher.avg_seq / base.avg_seq_len();
+        let spec = WorkloadSpec {
+            median_input: base.median_input * scale,
+            median_output: base.median_output * scale,
+            ..base
+        };
+        let v = validate_top_k(&searcher, &spec, &vcfg)
+            .ok_or_else(|| anyhow::anyhow!("no feasible plan"))?;
+        for c in &v.candidates {
+            println!(
+                "candidate #{}: tp_a={} tp_e={} n_a={} m={} B={} | analytic {:.1} tok/s/$ | \
+                 simulated {:.1} tok/s, goodput {:.1} tok/s/$",
+                c.analytic_rank,
+                c.plan.tp_a,
+                c.plan.tp_e,
+                c.plan.n_a,
+                c.plan.m,
+                c.plan.global_batch,
+                c.plan.metrics.throughput_per_dollar,
+                c.simulated_throughput,
+                c.goodput_per_dollar,
+            );
         }
+        if v.overturned() {
+            println!(
+                "simulation overturned the analytic ranking: candidate #{} wins",
+                v.chosen
+            );
+        }
+        println!("{}", v.plan.to_json());
+        return Ok(());
+    }
+    match searcher.search() {
+        Some(p) => println!("{}", p.to_json()),
+        None => bail!("no feasible plan"),
+    }
+    Ok(())
+}
+
+/// Run the simulated Figure-8 comparison: the best disaggregated plan vs
+/// vLLM-style and TRT-LLM-style colocated fleets (sized to match its GPU
+/// count) on one identical workload through the same cluster engine.
+fn cmd_compare(args: &Args) -> Result<()> {
+    let model = parse_model(&args.str_or("model", "mixtral"))?;
+    let cluster = parse_cluster(args)?;
+    let rate = args.f64_or("rate", 0.0)?;
+    let tenants = match args.get("tenants") {
+        Some(spec) => TenantClass::parse_list(spec)?,
+        None => Vec::new(),
+    };
+    let skew = args.f64_or("skew", 0.0)?;
+    let k = args.usize_or("validate-top", 0)?;
+    let cfg = CompareConfig {
+        spec: WorkloadSpec {
+            arrival_rate: (rate > 0.0).then_some(rate),
+            burst_sigma: args.f64_or("burst", 0.0)?,
+            tenants,
+            ..Default::default()
+        },
+        requests: args.usize_or("requests", 0)?,
+        seed: args.u64_or("seed", 42)?,
+        slo: args.f64_or("slo-ms", 150.0)? / 1000.0,
+        popularity: if skew > 0.0 {
+            ExpertPopularity::Zipf(skew)
+        } else {
+            ExpertPopularity::Ideal
+        },
+        validate_top: (k > 0).then_some(k),
+        ..CompareConfig::new(model, cluster)
+    };
+    let report = run_compare(&cfg)?;
+    println!("{}", report.summary());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, format!("{}\n", report.to_json()))
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote JSON report to {path}");
+    }
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, report.to_csv()).with_context(|| format!("writing {path}"))?;
+        println!("wrote CSV report to {path}");
     }
     Ok(())
 }
@@ -182,35 +304,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 /// with periodic online re-balancing (`--popularity-drift`/`--rebalance`).
 fn cmd_replay(args: &Args) -> Result<()> {
     let model = parse_model(&args.str_or("model", "mixtral"))?;
-    // `--hetero attn:expert` is shorthand for the per-pool GPU flags.
-    let (a, e) = match args.get("hetero") {
-        Some(pair) => {
-            let (a, e) = pair
-                .split_once(':')
-                .ok_or_else(|| anyhow::anyhow!("--hetero expects <attn-gpu>:<expert-gpu>"))?;
-            (parse_gpu(a)?, parse_gpu(e)?)
-        }
-        None => {
-            let a = parse_gpu(&args.str_or("attention-gpu", "ampere"))?;
-            let e = match args.get("expert-gpu") {
-                Some(g) => parse_gpu(g)?,
-                None => a,
-            };
-            (a, e)
-        }
-    };
-    let cluster = ClusterSpec {
-        attention: NodeSpec {
-            gpu: a,
-            gpus_per_node: 8,
-            nodes: None,
-        },
-        expert: NodeSpec {
-            gpu: e,
-            gpus_per_node: 8,
-            nodes: None,
-        },
-    };
+    let cluster = parse_cluster(args)?;
     let seed = args.u64_or("seed", 42)?;
     let rate = args.f64_or("rate", 0.0)?;
     let tenants = match args.get("tenants") {
@@ -312,6 +406,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
         tenants,
         rebalance_period,
         max_sim_seconds,
+        mode: EngineMode::Disaggregated,
     };
     let plan_json = cfg.plan.to_json();
     let report = ClusterSim::new(cfg).run(&requests);
@@ -368,6 +463,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             "skews",
             "micro-batches",
             "tenant-mixes",
+            "systems",
             "requests",
             "workers",
             "model",
@@ -437,6 +533,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .map(|n| n.get())
             .unwrap_or(1),
     )?;
+    // Serving-system axis: the disaggregated plan and/or colocated
+    // baseline fleets sized to match its GPU count (the compare pairing).
+    let systems: Vec<SystemKind> = args
+        .str_or("systems", if smoke { "megascale,vllm" } else { "megascale" })
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(SystemKind::parse)
+        .collect::<Result<_>>()?;
+    if systems.is_empty() {
+        bail!("--systems needs at least one of megascale,vllm,trtllm");
+    }
 
     let spec = if smoke {
         WorkloadSpec::tiny_bench()
@@ -457,6 +564,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         skews,
         micro_batches,
         tenant_mixes,
+        systems,
     };
     let cells = run_sweep(&grid, workers.max(1));
     println!(
@@ -466,16 +574,27 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         workers.max(1)
     );
     println!(
-        "{:>8} {:>6} {:>3} {:>4} | {:>10} {:>10} | {:>9} {:>9} | {:>5} {:>5}",
-        "rate", "skew", "m", "mix", "tok/s", "tok/s/GPU", "p50 E2E", "p99 E2E", "rej", "unsrv"
+        "{:>8} {:>6} {:>3} {:>4} {:>10} | {:>10} {:>10} | {:>9} {:>9} | {:>5} {:>5}",
+        "rate",
+        "skew",
+        "m",
+        "mix",
+        "system",
+        "tok/s",
+        "tok/s/GPU",
+        "p50 E2E",
+        "p99 E2E",
+        "rej",
+        "unsrv"
     );
     for c in &cells {
         println!(
-            "{:>8.1} {:>6.2} {:>3} {:>4} | {:>10.1} {:>10.3} | {:>8.3}s {:>8.3}s | {:>5} {:>5}",
+            "{:>8.1} {:>6.2} {:>3} {:>4} {:>10} | {:>10.1} {:>10.3} | {:>8.3}s {:>8.3}s | {:>5} {:>5}",
             c.rate,
             c.skew,
             c.m,
             c.tenant_mix,
+            c.system,
             c.throughput,
             c.per_gpu_throughput,
             c.e2e_p50,

@@ -32,6 +32,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Self {
             exact: Vec::new(),
@@ -74,10 +75,12 @@ impl Histogram {
         self.buckets[Self::bucket_index(v)] += 1;
     }
 
+    /// Observations recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -86,6 +89,7 @@ impl Histogram {
         }
     }
 
+    /// Smallest observation (0 when empty).
     pub fn min(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -94,6 +98,7 @@ impl Histogram {
         }
     }
 
+    /// Largest observation (0 when empty).
     pub fn max(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -128,10 +133,12 @@ impl Histogram {
         self.max
     }
 
+    /// The 50th percentile.
     pub fn median(&self) -> f64 {
         self.percentile(50.0)
     }
 
+    /// The 99th percentile.
     pub fn p99(&self) -> f64 {
         self.percentile(99.0)
     }
@@ -139,6 +146,18 @@ impl Histogram {
     /// Fraction of recorded observations at or below `threshold` — the SLO
     /// attainment query. Exact while the sample count is small, bucketed
     /// (≤ ~2.4% relative threshold error) beyond that.
+    ///
+    /// ```
+    /// use megascale_infer::metrics::Histogram;
+    ///
+    /// let mut lat = Histogram::new();
+    /// for seconds in [0.050, 0.080, 0.120, 0.300] {
+    ///     lat.record(seconds);
+    /// }
+    /// // 3 of 4 decode iterations met a 150 ms TPOT SLO.
+    /// assert_eq!(lat.fraction_below(0.150), 0.75);
+    /// assert_eq!(lat.fraction_below(1.0), 1.0);
+    /// ```
     pub fn fraction_below(&self, threshold: f64) -> f64 {
         if self.count == 0 {
             return 0.0;

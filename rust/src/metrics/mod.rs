@@ -19,6 +19,7 @@ pub struct Throughput {
 }
 
 impl Throughput {
+    /// An empty counter.
     pub fn new() -> Self {
         Self::default()
     }
@@ -33,10 +34,12 @@ impl Throughput {
         self.units += units;
     }
 
+    /// Recorded events.
     pub fn events(&self) -> u64 {
         self.events
     }
 
+    /// Total units recorded.
     pub fn units(&self) -> f64 {
         self.units
     }
@@ -59,14 +62,17 @@ pub struct Utilization {
 }
 
 impl Utilization {
+    /// A tracker with zero busy time and an empty horizon.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Accumulate `dur` seconds of busy time.
     pub fn add_busy(&mut self, dur: f64) {
         self.busy += dur;
     }
 
+    /// Extend the observation horizon to at least `t` seconds.
     pub fn set_horizon(&mut self, t: f64) {
         self.horizon = self.horizon.max(t);
     }

@@ -36,6 +36,7 @@ pub struct CommModel {
 }
 
 impl CommModel {
+    /// Build from the model's shapes and the two pools' NIC rates.
     pub fn new(
         model: &ModelConfig,
         attn_gpu: &GpuSpec,

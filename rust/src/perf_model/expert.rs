@@ -24,12 +24,14 @@ pub struct ExpertModel {
     pub k3: f64,
     /// Fixed seconds per layer: weight-panel load (`k4`).
     pub k4: f64,
+    /// TP degree this model was built for.
     pub tp: usize,
     perf: GpuPerf,
     model: ModelConfig,
 }
 
 impl ExpertModel {
+    /// Derive `k3`, `k4` from hardware specs and model shapes.
     pub fn new(model: &ModelConfig, gpu: &GpuSpec, tp: usize) -> Self {
         let perf = GpuPerf::from_spec(gpu);
         let h = model.hidden as f64;

@@ -5,12 +5,16 @@ use crate::config::{GpuSpec, ModelConfig, DTYPE_BYTES};
 /// An `m × k` by `k × n` GEMM.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GemmShape {
+    /// Rows of the output (tokens).
     pub m: f64,
+    /// Contraction dimension.
     pub k: f64,
+    /// Columns of the output.
     pub n: f64,
 }
 
 impl GemmShape {
+    /// A GEMM of the given dimensions.
     pub fn new(m: f64, k: f64, n: f64) -> Self {
         Self { m, k, n }
     }
@@ -53,6 +57,7 @@ pub struct GpuPerf {
 }
 
 impl GpuPerf {
+    /// Achievable-rate model for a GPU spec.
     pub fn from_spec(spec: &GpuSpec) -> Self {
         Self {
             flops: spec.tflops * 1e12,

@@ -31,9 +31,13 @@ use crate::config::{ClusterSpec, ModelConfig};
 /// virtual-time coordinator backend.
 #[derive(Debug, Clone)]
 pub struct PerfModel {
+    /// `T_a` model of the attention pool.
     pub attention: AttentionModel,
+    /// `T_e` model of the expert pool.
     pub expert: ExpertModel,
+    /// `T_c` model of the M2N link (Eq. 6).
     pub comm: CommModel,
+    /// The model architecture the times are derived from.
     pub model: ModelConfig,
 }
 

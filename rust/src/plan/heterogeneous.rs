@@ -9,8 +9,11 @@ use super::{DeploymentPlan, PlanSearcher, SearchLimits};
 /// Result of one hardware pairing.
 #[derive(Debug, Clone)]
 pub struct HeteroResult {
+    /// GPU type of the attention pool.
     pub attention_gpu: GpuKind,
+    /// GPU type of the expert pool.
     pub expert_gpu: GpuKind,
+    /// Best plan found for the pairing.
     pub plan: DeploymentPlan,
 }
 

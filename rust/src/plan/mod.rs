@@ -11,12 +11,22 @@
 //!    inside SIMULATE),
 //!
 //! and maximizes **throughput per unit cost**.
+//!
+//! The closed-form ranking can optionally be **sim-validated**
+//! ([`validate_top_k`], `msi plan --validate-top K`): the top-K candidates
+//! are re-scored by short [`crate::sim::engine::ClusterEngine`] runs over a
+//! shared workload and the winner is picked by simulated goodput per
+//! dollar, catching queueing/admission effects Eq. 4–6 cannot see.
 
 mod heterogeneous;
 mod simulate;
+mod validate;
 
 pub use heterogeneous::{search_heterogeneous, table3_kinds, HeteroResult};
 pub use simulate::{simulate_plan, simulate_plan_des, PlanMetrics};
+pub use validate::{
+    validate_heterogeneous, validate_top_k, CandidateScore, ValidatedPlan, ValidationConfig,
+};
 
 use crate::config::{ClusterSpec, ModelConfig};
 use crate::perf_model::PerfModel;
@@ -51,6 +61,7 @@ impl Default for SearchLimits {
 /// A fully-specified deployment plan with its simulated metrics.
 #[derive(Debug, Clone)]
 pub struct DeploymentPlan {
+    /// Name of the model the plan serves.
     pub model: String,
     /// TP inside each attention node.
     pub tp_a: usize,
@@ -64,10 +75,12 @@ pub struct DeploymentPlan {
     pub m: usize,
     /// Global batch size per instance.
     pub global_batch: usize,
+    /// Analytic metrics of the plan (Eq. 4-6 closed forms).
     pub metrics: PlanMetrics,
 }
 
 impl DeploymentPlan {
+    /// GPUs across both pools.
     pub fn total_gpus(&self) -> usize {
         self.tp_a * self.n_a + self.tp_e * self.n_e
     }
@@ -101,14 +114,18 @@ impl DeploymentPlan {
 
 /// Algorithm 1 driver.
 pub struct PlanSearcher {
+    /// The model to deploy.
     pub model: ModelConfig,
+    /// Hardware offered to the search.
     pub cluster: ClusterSpec,
+    /// Search-space limits and the TPOT SLO.
     pub limits: SearchLimits,
     /// Average sequence length of the workload (`s`).
     pub avg_seq: f64,
 }
 
 impl PlanSearcher {
+    /// A searcher with the default limits (paper settings).
     pub fn new(model: ModelConfig, cluster: ClusterSpec, avg_seq: f64) -> Self {
         Self {
             model,
@@ -154,8 +171,22 @@ impl PlanSearcher {
             && tp_e <= exp_gpu.max_per_node
     }
 
-    /// Run the full search; returns the best plan (max throughput/$) and
-    /// optionally all evaluated plans.
+    /// Run the full search; returns the best plan (max throughput/$), or
+    /// `None` when no feasible plan meets the SLO.
+    ///
+    /// ```
+    /// use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
+    /// use megascale_infer::plan::PlanSearcher;
+    ///
+    /// let searcher = PlanSearcher::new(
+    ///     ModelConfig::tiny(),
+    ///     ClusterSpec::homogeneous(GpuKind::Ampere80G),
+    ///     200.0, // average sequence length of the workload
+    /// );
+    /// let plan = searcher.search().expect("a feasible plan");
+    /// assert!(plan.metrics.tpot <= searcher.limits.slo);
+    /// assert!(plan.total_gpus() > 0 && plan.global_batch > 0);
+    /// ```
     pub fn search(&self) -> Option<DeploymentPlan> {
         self.search_all().into_iter().max_by(|a, b| {
             a.metrics

@@ -23,16 +23,39 @@ pub struct PlanMetrics {
     pub cost: f64,
     /// Per-micro-batch times for one layer (diagnostics).
     pub t_a: f64,
+    /// Expert time per micro-batch per layer.
     pub t_e: f64,
+    /// One-direction transfer time per micro-batch.
     pub t_c: f64,
     /// Whether the ping-pong pipeline fully hides communication.
     pub pipeline_full: bool,
     /// Attention / expert busy fractions.
     pub attn_busy: f64,
+    /// Expert busy fraction.
     pub expert_busy: f64,
 }
 
 impl PlanMetrics {
+    /// All-zero placeholder for plans whose numbers come from simulation
+    /// rather than the closed forms (e.g. the facade plan a colocated
+    /// baseline fleet hands the cluster engine).
+    pub fn zeroed() -> Self {
+        Self {
+            tpot: 0.0,
+            throughput: 0.0,
+            per_gpu_throughput: 0.0,
+            throughput_per_dollar: 0.0,
+            cost: 0.0,
+            t_a: 0.0,
+            t_e: 0.0,
+            t_c: 0.0,
+            pipeline_full: false,
+            attn_busy: 0.0,
+            expert_busy: 0.0,
+        }
+    }
+
+    /// JSON rendering for the CLI and experiment logs.
     pub fn to_json(&self) -> crate::util::json::Json {
         crate::util::json::Json::obj()
             .set("tpot_ms", self.tpot * 1e3)

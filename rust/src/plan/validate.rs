@@ -1,0 +1,332 @@
+//! Sim-in-the-loop plan validation: re-score the top analytic plans by
+//! *running* them through the event-driven cluster engine and pick by
+//! simulated goodput per dollar (`msi plan --validate-top K`).
+//!
+//! Algorithm 1's SIMULATE step is a closed form (Eq. 4–6) evaluated at one
+//! steady-state batch; it cannot see queueing, KV admission, ramp-up/drain,
+//! multinomial gating noise, or multi-tenant SLO pressure. Validation takes
+//! the top-`K` candidates by analytic throughput/$, serves the *same*
+//! workload through [`ClusterSim`] for each, and picks the plan whose
+//! **simulated** goodput per normalized dollar is highest — goodput being
+//! simulated token throughput scaled by SLO attainment when the workload
+//! declares tenant classes. Cost is the plan's Table-3 normalized price, so
+//! heterogeneous pairings (cheap-compute experts, big-memory attention) are
+//! compared on cost-per-token, not GPU count.
+//!
+//! Ties keep the analytically better-ranked candidate, and every draw is
+//! seeded, so the choice is deterministic for a given
+//! (model, cluster, spec, seed).
+
+use crate::config::{ClusterSpec, GpuKind, ModelConfig, NodeSpec};
+use crate::sim::cluster::{ClusterSim, ClusterSimConfig, ExpertPopularity};
+use crate::util::json::Json;
+use crate::workload::WorkloadSpec;
+
+use super::{DeploymentPlan, PlanSearcher, SearchLimits};
+
+/// Salt decorrelating the validation workload's generator from the engine
+/// runs' gating streams (mirrors `sim::sweep` / `baselines::compare`):
+/// feeding both SimRngs the identical seed would make request lengths
+/// track the expert-gating draws sample for sample, biasing the scores.
+const WORKLOAD_SALT: u64 = 0xa076_1d64_78bd_642f;
+
+/// Knobs of the sim-in-the-loop validation pass.
+#[derive(Debug, Clone)]
+pub struct ValidationConfig {
+    /// How many analytically-ranked candidates to re-score (`K`).
+    pub top_k: usize,
+    /// Requests in the shared validation workload (each candidate serves
+    /// the identical request list).
+    pub requests: usize,
+    /// Seed for both the workload draw and every candidate's engine run.
+    pub seed: u64,
+    /// Expert popularity the candidates are validated under. `Uniform`
+    /// includes multinomial gating noise; `Ideal` is the noise-free
+    /// perf-model assumption (cheapest).
+    pub popularity: ExpertPopularity,
+}
+
+impl Default for ValidationConfig {
+    fn default() -> Self {
+        Self {
+            top_k: 3,
+            requests: 512,
+            seed: 42,
+            popularity: ExpertPopularity::Uniform,
+        }
+    }
+}
+
+/// One candidate's analytic rank and simulated score.
+#[derive(Debug, Clone)]
+pub struct CandidateScore {
+    /// The candidate plan (analytic metrics included).
+    pub plan: DeploymentPlan,
+    /// 0-based analytic rank (0 = best analytic throughput/$).
+    pub analytic_rank: usize,
+    /// Simulated output-token throughput over the validation workload.
+    pub simulated_throughput: f64,
+    /// Mean per-tenant SLO attainment (1.0 for single-tenant workloads).
+    pub attainment: f64,
+    /// The selection metric: `throughput · attainment / cost`.
+    pub goodput_per_dollar: f64,
+}
+
+impl CandidateScore {
+    /// JSON rendering (one row of the `msi plan --validate-top` report).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("plan", self.plan.to_json())
+            .set("analytic_rank", self.analytic_rank)
+            .set("simulated_throughput", self.simulated_throughput)
+            .set("attainment", self.attainment)
+            .set("goodput_per_dollar", self.goodput_per_dollar)
+    }
+}
+
+/// Outcome of [`validate_top_k`]: the winning plan plus every candidate's
+/// score (in analytic rank order) for reporting.
+#[derive(Debug, Clone)]
+pub struct ValidatedPlan {
+    /// The plan with the best simulated goodput per dollar.
+    pub plan: DeploymentPlan,
+    /// Index of the winner within `candidates`.
+    pub chosen: usize,
+    /// All re-scored candidates, in analytic rank order.
+    pub candidates: Vec<CandidateScore>,
+}
+
+impl ValidatedPlan {
+    /// True when the simulation overturned the analytic ranking.
+    pub fn overturned(&self) -> bool {
+        self.chosen != 0
+    }
+
+    /// JSON rendering (the `msi plan --validate-top --json` payload).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("chosen", self.chosen)
+            .set("overturned", self.overturned())
+            .set("plan", self.plan.to_json())
+            .set(
+                "candidates",
+                Json::Arr(self.candidates.iter().map(|c| c.to_json()).collect()),
+            )
+    }
+}
+
+/// Rank `searcher`'s feasible plans analytically, re-score the top
+/// `cfg.top_k` by short engine runs over the same `spec`-drawn workload,
+/// and return the plan with the best simulated goodput per dollar.
+///
+/// Returns `None` when no feasible plan exists. Deterministic: the workload
+/// and every gating draw derive from `cfg.seed`, candidate order is
+/// total-ordered (analytic score, then shape), and ties keep the earlier
+/// (analytically better) candidate.
+pub fn validate_top_k(
+    searcher: &PlanSearcher,
+    spec: &WorkloadSpec,
+    cfg: &ValidationConfig,
+) -> Option<ValidatedPlan> {
+    let mut plans = searcher.search_all();
+    if plans.is_empty() {
+        return None;
+    }
+    // Total order: analytic throughput/$ descending, shape as tie-break so
+    // the rank (and therefore the seed-derived choice) is deterministic.
+    plans.sort_by(|a, b| {
+        b.metrics
+            .throughput_per_dollar
+            .total_cmp(&a.metrics.throughput_per_dollar)
+            .then(a.tp_a.cmp(&b.tp_a))
+            .then(a.tp_e.cmp(&b.tp_e))
+            .then(a.n_a.cmp(&b.n_a))
+            .then(a.m.cmp(&b.m))
+    });
+    plans.truncate(cfg.top_k.max(1));
+
+    let requests = spec.generate(cfg.requests.max(1), cfg.seed ^ WORKLOAD_SALT);
+    let mut candidates = Vec::with_capacity(plans.len());
+    for (rank, plan) in plans.into_iter().enumerate() {
+        let cost = plan.metrics.cost.max(f64::MIN_POSITIVE);
+        let sim_cfg = ClusterSimConfig {
+            popularity: cfg.popularity,
+            seed: cfg.seed,
+            tenants: spec.tenants.clone(),
+            ..ClusterSimConfig::new(
+                searcher.model.clone(),
+                searcher.cluster.clone(),
+                plan.clone(),
+            )
+        };
+        let rep = ClusterSim::new(sim_cfg).run(&requests);
+        let attainment = if rep.tenants.is_empty() {
+            1.0
+        } else {
+            rep.tenants.iter().map(|t| t.attainment()).sum::<f64>() / rep.tenants.len() as f64
+        };
+        candidates.push(CandidateScore {
+            goodput_per_dollar: rep.throughput * attainment / cost,
+            simulated_throughput: rep.throughput,
+            attainment,
+            analytic_rank: rank,
+            plan,
+        });
+    }
+
+    // First strict maximum wins: on exact ties the analytically
+    // better-ranked candidate is kept.
+    let mut chosen = 0;
+    for (i, c) in candidates.iter().enumerate().skip(1) {
+        if c.goodput_per_dollar > candidates[chosen].goodput_per_dollar {
+            chosen = i;
+        }
+    }
+    Some(ValidatedPlan {
+        plan: candidates[chosen].plan.clone(),
+        chosen,
+        candidates,
+    })
+}
+
+/// Heterogeneous pairing search with sim-in-the-loop re-ranking: run
+/// [`super::search_heterogeneous`] over `kinds`, then validate the top
+/// `cfg.top_k` pairings' best plans on their own clusters against the same
+/// workload and return `(pairing, simulated goodput/$)` sorted by the
+/// simulated score (descending, deterministic).
+///
+/// This is §4.3's cost-per-token argument carried through to simulation:
+/// each pairing's cost uses its own Table-3 prices, so a cheap-compute
+/// expert pool can win on goodput per dollar even when its raw throughput
+/// is lower.
+pub fn validate_heterogeneous(
+    model: &ModelConfig,
+    kinds: &[GpuKind],
+    spec: &WorkloadSpec,
+    limits: &SearchLimits,
+    cfg: &ValidationConfig,
+) -> Vec<(super::HeteroResult, f64)> {
+    let results = super::search_heterogeneous(model, kinds, spec.avg_seq_len(), limits);
+    let requests = spec.generate(cfg.requests.max(1), cfg.seed ^ WORKLOAD_SALT);
+    let mut scored: Vec<(super::HeteroResult, f64)> = results
+        .into_iter()
+        .take(cfg.top_k.max(1))
+        .map(|r| {
+            let cluster = ClusterSpec {
+                attention: NodeSpec {
+                    gpu: r.attention_gpu,
+                    gpus_per_node: 8,
+                    nodes: None,
+                },
+                expert: NodeSpec {
+                    gpu: r.expert_gpu,
+                    gpus_per_node: 8,
+                    nodes: None,
+                },
+            };
+            let sim_cfg = ClusterSimConfig {
+                popularity: cfg.popularity,
+                seed: cfg.seed,
+                tenants: spec.tenants.clone(),
+                ..ClusterSimConfig::new(model.clone(), cluster, r.plan.clone())
+            };
+            let rep = ClusterSim::new(sim_cfg).run(&requests);
+            let attainment = if rep.tenants.is_empty() {
+                1.0
+            } else {
+                rep.tenants.iter().map(|t| t.attainment()).sum::<f64>() / rep.tenants.len() as f64
+            };
+            let cost = r.plan.metrics.cost.max(f64::MIN_POSITIVE);
+            let score = rep.throughput * attainment / cost;
+            (r, score)
+        })
+        .collect();
+    // Stable sort + total_cmp keeps equal scores in analytic order.
+    scored.sort_by(|a, b| b.1.total_cmp(&a.1));
+    scored
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuKind;
+
+    fn tiny_searcher() -> PlanSearcher {
+        PlanSearcher::new(
+            ModelConfig::tiny(),
+            ClusterSpec::homogeneous(GpuKind::Ampere80G),
+            200.0,
+        )
+    }
+
+    fn tiny_spec() -> WorkloadSpec {
+        WorkloadSpec {
+            median_input: 64.0,
+            median_output: 8.0,
+            sigma: 0.3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn validation_is_deterministic_across_runs() {
+        let searcher = tiny_searcher();
+        let cfg = ValidationConfig {
+            top_k: 3,
+            requests: 96,
+            seed: 11,
+            popularity: ExpertPopularity::Ideal,
+        };
+        let a = validate_top_k(&searcher, &tiny_spec(), &cfg).expect("plan");
+        let b = validate_top_k(&searcher, &tiny_spec(), &cfg).expect("plan");
+        assert_eq!(a.chosen, b.chosen);
+        assert_eq!(
+            (a.plan.tp_a, a.plan.tp_e, a.plan.n_a, a.plan.m, a.plan.global_batch),
+            (b.plan.tp_a, b.plan.tp_e, b.plan.n_a, b.plan.m, b.plan.global_batch),
+        );
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn candidates_cover_top_k_in_rank_order() {
+        let searcher = tiny_searcher();
+        let cfg = ValidationConfig {
+            top_k: 2,
+            requests: 64,
+            seed: 3,
+            popularity: ExpertPopularity::Ideal,
+        };
+        let v = validate_top_k(&searcher, &tiny_spec(), &cfg).expect("plan");
+        assert!(v.candidates.len() <= 2 && !v.candidates.is_empty());
+        for (i, c) in v.candidates.iter().enumerate() {
+            assert_eq!(c.analytic_rank, i);
+            assert!(c.simulated_throughput > 0.0);
+            assert!(c.goodput_per_dollar > 0.0);
+            assert_eq!(c.attainment, 1.0, "single-tenant => attainment 1");
+        }
+        assert!(v.chosen < v.candidates.len());
+    }
+
+    #[test]
+    fn hetero_validation_scores_sorted() {
+        let scored = validate_heterogeneous(
+            &ModelConfig::tiny(),
+            &[GpuKind::H20, GpuKind::L40S],
+            &tiny_spec(),
+            &SearchLimits {
+                slo: 0.200,
+                ..Default::default()
+            },
+            &ValidationConfig {
+                top_k: 2,
+                requests: 48,
+                seed: 5,
+                popularity: ExpertPopularity::Ideal,
+            },
+        );
+        assert!(!scored.is_empty());
+        for w in scored.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+}

@@ -13,6 +13,10 @@
 //!   gating, expert dispatch (the same [`crate::coordinator`] logic that the
 //!   virtual-time simulator uses), expert FFN, combine, sampling.
 
+// Feature-gated (`pjrt`) and excluded from the default `cargo doc` build;
+// the missing-docs bar applies to the always-built surface.
+#![allow(missing_docs)]
+
 pub mod artifacts;
 pub mod engine;
 pub mod serving;

@@ -36,15 +36,36 @@
 //! Everything is seeded through [`SimRng`]; two runs with the same
 //! configuration and seed produce bit-identical reports.
 
+use crate::baselines::ColocatedPlan;
 use crate::config::{ClusterSpec, ModelConfig};
 use crate::coordinator::{softmax_topk, GatingOutput, RoutePolicy};
 use crate::m2n::LibraryKind;
 use crate::metrics::Histogram;
-use crate::plan::DeploymentPlan;
+use crate::plan::{DeploymentPlan, PlanMetrics};
 use crate::sim::engine::ClusterEngine;
 use crate::sim::SimRng;
 use crate::util::json::Json;
 use crate::workload::{ArrivalSource, Request, TenantClass, TraceSource};
+
+/// Which serving architecture the engine simulates.
+///
+/// The same event-driven substrate (router, continuous batching + paged KV,
+/// pipeline machine, conservation counters) runs both; only the deployment
+/// shape and the per-hop stage-time model differ, so measured differences
+/// between modes come from *architecture* — the paper's §7.2 comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineMode {
+    /// MegaScale-Infer: disaggregated attention/expert pools with ping-pong
+    /// micro-batch pipelining (the default).
+    Disaggregated,
+    /// A monolithic vLLM-/TRT-LLM-style fleet: attention and experts
+    /// colocated on independent serving groups, no ping-pong overlap
+    /// (`m = 1`), decode batches never aggregated across replicas. Expert
+    /// popularity is forced to `Ideal` (balanced experts — favoring the
+    /// baseline) and transport to `Analytic` (the all-to-all cost is folded
+    /// into the layer time via `kernel_efficiency`).
+    Colocated(ColocatedPlan),
+}
 
 /// Expert-popularity model driving the synthetic gating logits.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -83,6 +104,7 @@ pub enum Transport {
 /// Full scenario description.
 #[derive(Debug, Clone)]
 pub struct ClusterSimConfig {
+    /// The MoE model being served.
     pub model: ModelConfig,
     /// Possibly heterogeneous hardware (attention vs expert GPU kinds).
     pub cluster: ClusterSpec,
@@ -90,9 +112,13 @@ pub struct ClusterSimConfig {
     /// ratio), `m` (micro-batch count), `global_batch`. Override fields to
     /// sweep scenarios the plan search would not pick.
     pub plan: DeploymentPlan,
+    /// Router placement policy.
     pub route: RoutePolicy,
+    /// Expert-popularity model driving the gating draws.
     pub popularity: ExpertPopularity,
+    /// How M2N transfer time is obtained.
     pub transport: Transport,
+    /// Seed for every random stream of the run.
     pub seed: u64,
     /// Traffic classes for per-tenant SLO reporting (empty = single
     /// tenant). `Request::tenant` indexes into this list.
@@ -105,6 +131,9 @@ pub struct ClusterSimConfig {
     /// processed, so feasible work still queued reports as
     /// `unserved_queued`. None = run to quiescence (serve everything).
     pub max_sim_seconds: Option<f64>,
+    /// Serving architecture: disaggregated (default) or a colocated
+    /// monolithic baseline fleet (`msi compare`).
+    pub mode: EngineMode,
 }
 
 impl ClusterSimConfig {
@@ -122,6 +151,31 @@ impl ClusterSimConfig {
             tenants: Vec::new(),
             rebalance_period: None,
             max_sim_seconds: None,
+            mode: EngineMode::Disaggregated,
+        }
+    }
+
+    /// A colocated-baseline scenario: the monolithic fleet described by
+    /// `plan` served through the same engine substrate. The facade
+    /// [`DeploymentPlan`] encodes the fleet shape the engine reads —
+    /// `n_a` = replicas, `tp_a` = GPUs per group, no expert pool GPUs,
+    /// `m = 1` (no ping-pong), per-group scheduler caps — with zeroed
+    /// analytic metrics (a baseline's numbers come from the simulation).
+    pub fn colocated(model: ModelConfig, cluster: ClusterSpec, plan: ColocatedPlan) -> Self {
+        let facade = DeploymentPlan {
+            model: model.name.clone(),
+            tp_a: plan.gpus_per_group(),
+            tp_e: 0,
+            n_a: plan.replicas.max(1),
+            n_e: 0,
+            m: 1,
+            global_batch: plan.replicas.max(1) * plan.max_batch_per_group(),
+            metrics: PlanMetrics::zeroed(),
+        };
+        Self {
+            popularity: ExpertPopularity::Ideal,
+            mode: EngineMode::Colocated(plan),
+            ..Self::new(model, cluster, facade)
         }
     }
 }
@@ -129,12 +183,15 @@ impl ClusterSimConfig {
 /// Per-tenant slice of the report.
 #[derive(Debug, Clone)]
 pub struct TenantReport {
+    /// Class name (from the workload's tenant list).
     pub name: String,
     /// The class's end-to-end SLO (seconds).
     pub slo_e2e: f64,
     /// Requests of this class fully decoded.
     pub completed: u64,
+    /// Time-to-first-token distribution of the class.
     pub ttft: Histogram,
+    /// End-to-end latency distribution of the class.
     pub e2e: Histogram,
 }
 
@@ -195,7 +252,9 @@ pub struct ClusterReport {
     /// Mean effective per-(micro-batch, layer) stage times actually fed to
     /// the pipeline engine — the DES-vs-Eq.5 cross-check anchors here.
     pub mean_t_a: f64,
+    /// Mean effective expert-stage time (see `mean_t_a`).
     pub mean_t_e: f64,
+    /// Mean effective one-way transfer time (see `mean_t_a`).
     pub mean_t_c: f64,
     /// Token copies handed to the M2N link toward the expert pool.
     pub dispatched_copies: u64,
@@ -352,10 +411,12 @@ pub fn draw_gating(rng: &mut SimRng, tokens: usize, weights: &[f64], k: usize) -
 /// The end-to-end cluster simulator: a thin facade that wires the scenario
 /// into the event-driven [`ClusterEngine`].
 pub struct ClusterSim {
+    /// The scenario being simulated.
     pub cfg: ClusterSimConfig,
 }
 
 impl ClusterSim {
+    /// Wrap a scenario configuration.
     pub fn new(cfg: ClusterSimConfig) -> Self {
         Self { cfg }
     }

@@ -44,6 +44,7 @@
 
 use std::collections::VecDeque;
 
+use crate::baselines::ColocatedModel;
 use crate::coordinator::{
     balance_experts, build_dispatch, BlockAllocator, ContinuousBatcher, ExpertPlacement,
     KvCacheConfig, Router, SchedulerConfig,
@@ -52,8 +53,8 @@ use crate::m2n::{LibraryProfile, TransferModel};
 use crate::metrics::{Histogram, Utilization};
 use crate::perf_model::PerfModel;
 use crate::sim::cluster::{
-    draw_gating, popularity_weights, ClusterReport, ClusterSimConfig, ExpertPopularity,
-    TenantReport, Transport,
+    draw_gating, popularity_weights, ClusterReport, ClusterSimConfig, EngineMode,
+    ExpertPopularity, TenantReport, Transport,
 };
 use crate::sim::pipeline::{PipeEvent, PipelineCore, PipelineStats, StageTimes};
 use crate::sim::{EventQueue, SimRng};
@@ -164,6 +165,7 @@ impl RequestTable {
         self.live
     }
 
+    /// No requests in flight.
     pub fn is_empty(&self) -> bool {
         self.live == 0
     }
@@ -190,15 +192,82 @@ pub struct SimCtx {
     pub iter_pending: bool,
     // Running sums of the effective stage times fed to the pipeline (the
     // DES-vs-Eq.5 cross-check anchors here).
+    /// Running sum of effective attention-stage times.
     pub sum_t_a: f64,
+    /// Running sum of effective expert-stage times.
     pub sum_t_e: f64,
+    /// Running sum of effective one-way transfer times.
     pub sum_t_c: f64,
+    /// Stage-time samples accumulated (one per (micro-batch, layer) hop).
     pub stage_samples: u64,
+}
+
+/// Stage-time provider for one decode iteration: the disaggregated
+/// `T_a`/`T_e`/`T_c` models, or the colocated per-layer model in baseline
+/// mode (where the whole layer runs as one serial stage and the expert
+/// stage and M2N link contribute zero time).
+pub enum StageModel {
+    /// Disaggregated pools: the paper's Eq. 4–6 substrate.
+    Disaggregated(PerfModel),
+    /// A colocated serving group: full layer time on the (sole) serial
+    /// stage ([`ColocatedModel::layer_time`]).
+    Colocated(ColocatedModel),
+}
+
+impl StageModel {
+    /// Attention-stage time for a micro-batch of `b` tokens (in colocated
+    /// mode: the whole layer — attention, all experts, TP collectives).
+    pub fn t_a(&self, b: f64) -> f64 {
+        match self {
+            StageModel::Disaggregated(pm) => pm.t_a(b),
+            StageModel::Colocated(cm) => cm.layer_time(b),
+        }
+    }
+
+    /// Expert-stage time for `b_e` tokens (zero when colocated: expert
+    /// compute is already inside the layer time).
+    pub fn t_e(&self, b_e: f64) -> f64 {
+        match self {
+            StageModel::Disaggregated(pm) => pm.t_e(b_e),
+            StageModel::Colocated(_) => 0.0,
+        }
+    }
+
+    /// One-direction M2N transfer time (zero when colocated: the
+    /// unoverlapped all-to-all is folded into the layer's kernel
+    /// efficiency).
+    pub fn t_c(&self, b_a: f64, b_e: f64) -> f64 {
+        match self {
+            StageModel::Disaggregated(pm) => pm.t_c(b_a, b_e),
+            StageModel::Colocated(_) => 0.0,
+        }
+    }
+
+    /// Bytes one attention GPU hands the M2N link per micro-batch (for the
+    /// simnet-calibrated transfer path; zero when colocated).
+    pub fn send_bytes(&self, b_a: f64) -> f64 {
+        match self {
+            StageModel::Disaggregated(pm) => pm.comm.send_bytes(b_a),
+            StageModel::Colocated(_) => 0.0,
+        }
+    }
+
+    /// The expert model's per-layer weight-load floor `k4` (for the extra
+    /// charge when one expert node hosts several experts; zero when
+    /// colocated).
+    fn expert_weight_floor(&self) -> f64 {
+        match self {
+            StageModel::Disaggregated(pm) => pm.expert.k4,
+            StageModel::Colocated(_) => 0.0,
+        }
+    }
 }
 
 /// Per-iteration stage-time inputs derived from the live batch composition.
 pub struct StageCtx {
-    pub pm: PerfModel,
+    /// This iteration's stage-time provider (rebuilt per iteration at the
+    /// live average sequence length).
+    pub pm: StageModel,
     /// Per-node micro-batch token shares: `share[node][mb]`.
     pub share: Vec<Vec<usize>>,
     /// Paced attention micro-batch size (max share across nodes).
@@ -212,6 +281,8 @@ pub struct StageCtx {
 /// A simulation component: consumes an event addressed to it, mutates its
 /// local state, and emits scheduled `(time, event)` follow-ups.
 pub trait Component {
+    /// Handle one event at virtual time `now`, pushing any follow-up
+    /// `(time, event)` pairs into `out` for the engine to schedule.
     fn handle(&mut self, now: f64, ev: &Event, ctx: &mut SimCtx, out: &mut Vec<(f64, Event)>);
 }
 
@@ -487,7 +558,7 @@ impl M2nLink {
         match &self.transfer {
             None => stage.pm.t_c(stage.b_a[mb], hot_tokens),
             Some(tm) => {
-                let pair_bytes = stage.pm.comm.send_bytes(stage.b_a[mb]) / tm.receivers as f64;
+                let pair_bytes = stage.pm.send_bytes(stage.b_a[mb]) / tm.receivers as f64;
                 tm.latency(pair_bytes)
             }
         }
@@ -699,8 +770,13 @@ pub struct ClusterEngine {
 }
 
 impl ClusterEngine {
-    /// KV-token capacity of one attention node (Eq. 8 budget).
+    /// KV-token capacity of one attention node (Eq. 8 budget) — or, in
+    /// colocated mode, of one monolithic serving group (whose memory also
+    /// holds every expert's parameters).
     fn node_kv_tokens(cfg: &ClusterSimConfig) -> u64 {
+        if let EngineMode::Colocated(cp) = &cfg.mode {
+            return cp.group_kv_tokens(&cfg.model, &cfg.cluster);
+        }
         let gpu = cfg.cluster.attention_gpu();
         let budget = cfg.plan.tp_a as f64 * gpu.mem_bytes() - cfg.model.attn_param_bytes();
         (budget.max(0.0) / cfg.model.kv_bytes_per_token()).floor() as u64
@@ -714,6 +790,16 @@ impl ClusterEngine {
         // both degrade to "off".
         cfg.rebalance_period = cfg.rebalance_period.filter(|p| *p > 0.0);
         cfg.max_sim_seconds = cfg.max_sim_seconds.filter(|h| *h > 0.0);
+        // Colocated baselines have no separate expert stage or M2N link:
+        // expert compute and the (unoverlapped) all-to-all live inside the
+        // layer time, so popularity draws, simnet transport and §6
+        // re-balancing do not apply — normalize them off so same-seed runs
+        // are identical however the caller filled those fields.
+        if matches!(cfg.mode, EngineMode::Colocated(_)) {
+            cfg.popularity = ExpertPopularity::Ideal;
+            cfg.transport = Transport::Analytic;
+            cfg.rebalance_period = None;
+        }
         let n_a = cfg.plan.n_a.max(1);
         let n_e = cfg.plan.n_e.max(1);
         let experts = cfg.model.experts.max(1);
@@ -890,7 +976,21 @@ impl ClusterEngine {
         let experts = self.cfg.model.experts.max(1);
 
         let avg_seq = self.attention.avg_seq();
-        let pm = PerfModel::new(&self.cfg.model, &self.cfg.cluster, plan.tp_a, plan.tp_e, avg_seq);
+        let pm = match &self.cfg.mode {
+            EngineMode::Disaggregated => StageModel::Disaggregated(PerfModel::new(
+                &self.cfg.model,
+                &self.cfg.cluster,
+                plan.tp_a,
+                plan.tp_e,
+                avg_seq,
+            )),
+            EngineMode::Colocated(cp) => StageModel::Colocated(ColocatedModel::new(
+                cp,
+                &self.cfg.model,
+                &self.cfg.cluster,
+                avg_seq,
+            )),
+        };
         let share = self.attention.splits(m);
         let b_a: Vec<f64> = (0..m)
             .map(|j| share.iter().map(|s| s[j]).max().unwrap_or(0) as f64)
@@ -900,7 +1000,7 @@ impl ClusterEngine {
         // hosting several experts streams each one's weight panels, so
         // charge the extra k4 floors when n_e < experts.
         let extra_weight_loads =
-            (experts.div_ceil(n_e).saturating_sub(1)) as f64 * pm.expert.k4;
+            (experts.div_ceil(n_e).saturating_sub(1)) as f64 * pm.expert_weight_floor();
         self.ctx.stage = Some(StageCtx {
             pm,
             share,

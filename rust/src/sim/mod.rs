@@ -24,9 +24,10 @@ mod rng;
 pub mod sweep;
 
 pub use cluster::{
-    ClusterReport, ClusterSim, ClusterSimConfig, ExpertPopularity, TenantReport, Transport,
+    ClusterReport, ClusterSim, ClusterSimConfig, EngineMode, ExpertPopularity, TenantReport,
+    Transport,
 };
-pub use engine::{ClusterEngine, Component, Event, RequestTable};
+pub use engine::{ClusterEngine, Component, Event, RequestTable, StageModel};
 pub use pipeline::{PipeEvent, PipelineCore, PipelineStats, StageTimes};
 pub use rng::SimRng;
 pub use sweep::{run_sim_bench, run_sweep, SweepCell, SweepGrid};
@@ -77,6 +78,7 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// An empty queue at virtual time 0.
     pub fn new() -> Self {
         Self {
             heap: BinaryHeap::new(),
@@ -114,10 +116,12 @@ impl<E> EventQueue<E> {
         })
     }
 
+    /// No scheduled events remain.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// Scheduled events currently outstanding.
     pub fn len(&self) -> usize {
         self.heap.len()
     }

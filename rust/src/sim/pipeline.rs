@@ -112,7 +112,9 @@ impl Stage {
 /// whatever event queue drives the simulation.
 #[derive(Debug, Clone)]
 pub struct PipelineCore {
+    /// Micro-batches in flight.
     pub m: usize,
+    /// MoE layers each micro-batch traverses.
     pub layers: usize,
     attn: Stage,
     expert: Stage,
@@ -125,6 +127,7 @@ pub struct PipelineCore {
 }
 
 impl PipelineCore {
+    /// A fresh pass of `m` micro-batches over `layers` layers.
     pub fn new(m: usize, layers: usize) -> Self {
         assert!(m >= 1 && layers >= 1);
         Self {

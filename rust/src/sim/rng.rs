@@ -22,6 +22,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl SimRng {
+    /// Seed the generator (SplitMix64-expanded into xoshiro state).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Self {

@@ -3,9 +3,11 @@
 //!
 //! The streaming arrival engine makes a single cell cheap; this module
 //! makes *grids* cheap: the cartesian product of arrival rate × expert
-//! popularity skew × micro-batch count (the plan axis) × tenant mix is
-//! fanned out across `std::thread` workers. Every cell derives its own
-//! seed deterministically from the base seed and its grid position, and
+//! popularity skew × micro-batch count (the plan axis) × tenant mix ×
+//! serving system (disaggregated vs colocated baseline fleets — the
+//! `msi compare` pairing as a grid dimension) is fanned out across
+//! `std::thread` workers. Every cell derives its own seed
+//! deterministically from the base seed and its grid position, and
 //! results are collected by cell index, so the JSON/CSV report is
 //! byte-identical across runs regardless of worker count or scheduling.
 //!
@@ -20,6 +22,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::baselines::{ColocatedPlan, SystemKind};
 use crate::config::{ClusterSpec, GpuKind, ModelConfig};
 use crate::coordinator::RoutePolicy;
 use crate::plan::{DeploymentPlan, PlanSearcher};
@@ -32,7 +35,9 @@ use crate::workload::{RequestStream, TenantClass, WorkloadSpec};
 /// configuration every cell starts from.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
+    /// Model served in every cell.
     pub model: ModelConfig,
+    /// Hardware every cell runs on.
     pub cluster: ClusterSpec,
     /// Base deployment plan; each cell overrides `m` from `micro_batches`.
     pub plan: DeploymentPlan,
@@ -40,6 +45,7 @@ pub struct SweepGrid {
     pub spec: WorkloadSpec,
     /// Requests generated (streamed) per cell.
     pub requests: usize,
+    /// Base seed every cell seed derives from.
     pub base_seed: u64,
     /// Arrival rates in requests/s; 0 = closed loop (all arrive at t=0).
     pub rates: Vec<f64>,
@@ -49,38 +55,66 @@ pub struct SweepGrid {
     pub micro_batches: Vec<usize>,
     /// Tenant mixes; an empty inner list = single-tenant traffic.
     pub tenant_mixes: Vec<Vec<TenantClass>>,
+    /// Serving systems (the `msi compare` axis): the disaggregated plan
+    /// and/or colocated baseline fleets sized to match its GPU count. The
+    /// `skew` and `m` axes apply to the disaggregated system only — a
+    /// colocated fleet runs `m = 1` with balanced experts, so it gets ONE
+    /// canonical cell (reported as `skew = 0`, `m = 1`) per (rate, mix)
+    /// instead of redundant identical runs across those axes.
+    pub systems: Vec<SystemKind>,
 }
 
 /// One simulated grid cell: its coordinates plus the report scalars.
 #[derive(Debug, Clone)]
 pub struct SweepCell {
+    /// Cell arrival rate (requests/s; 0 = closed loop).
     pub rate: f64,
+    /// Cell Zipf popularity skew (0 = uniform).
     pub skew: f64,
+    /// Cell micro-batch count.
     pub m: usize,
     /// Index into [`SweepGrid::tenant_mixes`].
     pub tenant_mix: usize,
+    /// Which serving system the cell ran ([`SystemKind::name`]).
+    pub system: &'static str,
     /// The cell's derived deterministic seed.
     pub seed: u64,
+    /// Requests fully decoded.
     pub completed: u64,
+    /// Output tokens generated.
     pub tokens: u64,
+    /// Virtual time elapsed (seconds).
     pub simulated_seconds: f64,
+    /// Output tokens per second.
     pub throughput: f64,
+    /// Output tokens per second per GPU.
     pub per_gpu_throughput: f64,
+    /// Median time to first token (seconds).
     pub ttft_p50: f64,
+    /// 99th-percentile time to first token (seconds).
     pub ttft_p99: f64,
+    /// Median per-iteration decode latency (seconds).
     pub tpot_p50: f64,
+    /// Median end-to-end latency (seconds).
     pub e2e_p50: f64,
+    /// 99th-percentile end-to-end latency (seconds).
     pub e2e_p99: f64,
+    /// Attention-pool busy fraction.
     pub attn_utilization: f64,
+    /// Expert-pool busy fraction.
     pub expert_utilization: f64,
+    /// Front-door admission-control rejections.
     pub rejected: u64,
+    /// Feasible work cut off by a horizon (0 at quiescence).
     pub unserved_queued: u64,
+    /// High-water mark of concurrently in-flight requests.
     pub peak_in_flight: u64,
     /// Per-tenant `(name, SLO attainment)` pairs.
     pub tenants: Vec<(String, f64)>,
 }
 
 impl SweepCell {
+    /// JSON rendering (one cell of the sweep report).
     pub fn to_json(&self) -> Json {
         let tenants: Vec<Json> = self
             .tenants
@@ -96,6 +130,7 @@ impl SweepCell {
             .set("skew", self.skew)
             .set("micro_batches", self.m)
             .set("tenant_mix", self.tenant_mix)
+            .set("system", self.system)
             .set("seed", self.seed)
             .set("completed", self.completed)
             .set("tokens", self.tokens)
@@ -130,7 +165,16 @@ fn cell_seed(base: u64, idx: u64) -> u64 {
 }
 
 /// Run one cell to completion through the streaming engine.
-fn run_cell(grid: &SweepGrid, idx: usize, rate: f64, skew: f64, m: usize, mix: usize) -> SweepCell {
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    grid: &SweepGrid,
+    idx: usize,
+    rate: f64,
+    skew: f64,
+    m: usize,
+    mix: usize,
+    system: SystemKind,
+) -> SweepCell {
     let seed = cell_seed(grid.base_seed, idx as u64);
     let tenants = grid.tenant_mixes.get(mix).cloned().unwrap_or_default();
     let spec = WorkloadSpec {
@@ -138,24 +182,45 @@ fn run_cell(grid: &SweepGrid, idx: usize, rate: f64, skew: f64, m: usize, mix: u
         tenants: tenants.clone(),
         ..grid.spec.clone()
     };
-    let mut plan = grid.plan.clone();
-    plan.m = m.max(1);
-    let popularity = if skew > 0.0 {
-        ExpertPopularity::Zipf(skew)
-    } else {
-        ExpertPopularity::Uniform
-    };
-    let cfg = ClusterSimConfig {
-        model: grid.model.clone(),
-        cluster: grid.cluster.clone(),
-        plan,
-        route: RoutePolicy::LeastLoaded,
-        popularity,
-        transport: Transport::Analytic,
-        seed,
-        tenants,
-        rebalance_period: None,
-        max_sim_seconds: None,
+    let cfg = match system.baseline() {
+        // A colocated baseline fleet sized to the disaggregated plan's GPU
+        // count (the `msi compare` pairing, swept over the traffic axes).
+        Some(kind) => ClusterSimConfig {
+            seed,
+            tenants,
+            ..ClusterSimConfig::colocated(
+                grid.model.clone(),
+                grid.cluster.clone(),
+                ColocatedPlan::sized_to_match(
+                    kind,
+                    &grid.model,
+                    &grid.cluster,
+                    grid.plan.total_gpus(),
+                ),
+            )
+        },
+        None => {
+            let mut plan = grid.plan.clone();
+            plan.m = m.max(1);
+            let popularity = if skew > 0.0 {
+                ExpertPopularity::Zipf(skew)
+            } else {
+                ExpertPopularity::Uniform
+            };
+            ClusterSimConfig {
+                model: grid.model.clone(),
+                cluster: grid.cluster.clone(),
+                plan,
+                route: RoutePolicy::LeastLoaded,
+                popularity,
+                transport: Transport::Analytic,
+                seed,
+                tenants,
+                rebalance_period: None,
+                max_sim_seconds: None,
+                mode: crate::sim::cluster::EngineMode::Disaggregated,
+            }
+        }
     };
     // Decorrelate the workload generator from the engine's gating stream
     // (the engine does the same for its expert-permutation RNG): feeding
@@ -169,6 +234,7 @@ fn run_cell(grid: &SweepGrid, idx: usize, rate: f64, skew: f64, m: usize, mix: u
         skew,
         m,
         tenant_mix: mix,
+        system: system.name(),
         seed,
         completed: rep.completed,
         tokens: rep.tokens,
@@ -193,16 +259,42 @@ fn run_cell(grid: &SweepGrid, idx: usize, rate: f64, skew: f64, m: usize, mix: u
     }
 }
 
+/// The system axis actually swept: an empty [`SweepGrid::systems`] means
+/// "disaggregated only" — resolved in ONE place so the cells that run and
+/// the report metadata can never disagree.
+fn effective_systems(grid: &SweepGrid) -> &[SystemKind] {
+    const DEFAULT_SYSTEMS: &[SystemKind] = &[SystemKind::Disaggregated];
+    if grid.systems.is_empty() {
+        DEFAULT_SYSTEMS
+    } else {
+        &grid.systems
+    }
+}
+
 /// Run the whole grid across `workers` OS threads. Cells are claimed from a
 /// shared counter and written back by index, so the result order (and
 /// therefore the serialized report) is independent of scheduling.
 pub fn run_sweep(grid: &SweepGrid, workers: usize) -> Vec<SweepCell> {
-    let mut coords: Vec<(f64, f64, usize, usize)> = Vec::new();
+    let systems = effective_systems(grid);
+    let mut coords: Vec<(f64, f64, usize, usize, SystemKind)> = Vec::new();
     for &rate in &grid.rates {
-        for &skew in &grid.skews {
-            for &m in &grid.micro_batches {
+        for (si, &skew) in grid.skews.iter().enumerate() {
+            for (mi, &m) in grid.micro_batches.iter().enumerate() {
                 for mix in 0..grid.tenant_mixes.len().max(1) {
-                    coords.push((rate, skew, m, mix));
+                    for &system in systems {
+                        if system.baseline().is_some() {
+                            // Colocated fleets ignore the skew and
+                            // micro-batch axes (balanced experts, m = 1):
+                            // one canonical cell per (rate, mix) instead of
+                            // redundant identical runs — and the report's
+                            // coordinates say what actually ran.
+                            if si == 0 && mi == 0 {
+                                coords.push((rate, 0.0, 1, mix, system));
+                            }
+                        } else {
+                            coords.push((rate, skew, m, mix, system));
+                        }
+                    }
                 }
             }
         }
@@ -218,8 +310,8 @@ pub fn run_sweep(grid: &SweepGrid, workers: usize) -> Vec<SweepCell> {
                 if i >= n {
                     break;
                 }
-                let (rate, skew, m, mix) = coords[i];
-                let cell = run_cell(grid, i, rate, skew, m, mix);
+                let (rate, skew, m, mix, system) = coords[i];
+                let cell = run_cell(grid, i, rate, skew, m, mix, system);
                 *results[i].lock().unwrap() = Some(cell);
             });
         }
@@ -245,6 +337,15 @@ pub fn sweep_to_json(grid: &SweepGrid, cells: &[SweepCell]) -> Json {
             Json::Arr(grid.micro_batches.iter().map(|&m| Json::from(m)).collect()),
         )
         .set("tenant_mixes", grid.tenant_mixes.len())
+        .set(
+            "systems",
+            Json::Arr(
+                effective_systems(grid)
+                    .iter()
+                    .map(|s| Json::from(s.name()))
+                    .collect(),
+            ),
+        )
         .set("cells", cells.len());
     Json::obj()
         .set("grid", meta)
@@ -258,7 +359,7 @@ pub fn sweep_to_json(grid: &SweepGrid, cells: &[SweepCell]) -> Json {
 /// attainments are folded into one `name=value;...` column.
 pub fn sweep_to_csv(cells: &[SweepCell]) -> String {
     let mut s = String::from(
-        "rate,skew,micro_batches,tenant_mix,seed,completed,tokens,simulated_seconds,\
+        "rate,skew,micro_batches,tenant_mix,system,seed,completed,tokens,simulated_seconds,\
          throughput,per_gpu_throughput,ttft_p50_s,ttft_p99_s,tpot_p50_s,e2e_p50_s,\
          e2e_p99_s,attn_utilization,expert_utilization,rejected,unserved_queued,\
          peak_in_flight,attainments\n",
@@ -270,11 +371,12 @@ pub fn sweep_to_csv(cells: &[SweepCell]) -> String {
             .map(|(name, a)| format!("{name}={a}"))
             .collect();
         s.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             c.rate,
             c.skew,
             c.m,
             c.tenant_mix,
+            c.system,
             c.seed,
             c.completed,
             c.tokens,
@@ -385,6 +487,7 @@ mod tests {
             skews: vec![0.0, 1.2],
             micro_batches: vec![1, 2],
             tenant_mixes: vec![Vec::new()],
+            systems: vec![SystemKind::Disaggregated],
         }
     }
 
@@ -402,6 +505,55 @@ mod tests {
             assert_eq!(c.completed, 48, "cell completes its workload");
             assert!(c.throughput > 0.0);
         }
+    }
+
+    #[test]
+    fn system_axis_runs_colocated_baselines() {
+        let grid = SweepGrid {
+            rates: vec![0.0],
+            skews: vec![0.0],
+            micro_batches: vec![2],
+            systems: vec![
+                SystemKind::Disaggregated,
+                SystemKind::Vllm,
+                SystemKind::TrtLlm,
+            ],
+            ..tiny_grid()
+        };
+        let cells = run_sweep(&grid, 2);
+        assert_eq!(cells.len(), 3);
+        let names: Vec<&str> = cells.iter().map(|c| c.system).collect();
+        assert_eq!(names, vec!["megascale", "vllm", "trtllm"]);
+        for c in &cells {
+            assert_eq!(c.completed, 48, "system {} completes", c.system);
+            assert!(c.throughput > 0.0);
+        }
+        // Colocated cells report the matched-fleet per-GPU metric, and the
+        // CSV carries the system column.
+        let csv = sweep_to_csv(&cells);
+        assert!(csv.starts_with("rate,skew,micro_batches,tenant_mix,system,"));
+        assert!(csv.contains(",vllm,") && csv.contains(",trtllm,"));
+    }
+
+    #[test]
+    fn colocated_cells_collapse_to_one_canonical_cell_per_rate_and_mix() {
+        // The skew/m axes do not apply to colocated fleets: instead of
+        // redundant identical runs, each baseline gets exactly one cell per
+        // (rate, mix), reported at the canonical (skew 0, m 1) coordinates.
+        let grid = SweepGrid {
+            rates: vec![0.0],
+            skews: vec![0.0, 1.2],
+            micro_batches: vec![1, 2],
+            systems: vec![SystemKind::Disaggregated, SystemKind::Vllm],
+            ..tiny_grid()
+        };
+        let cells = run_sweep(&grid, 2);
+        let disagg = cells.iter().filter(|c| c.system == "megascale").count();
+        let vllm: Vec<_> = cells.iter().filter(|c| c.system == "vllm").collect();
+        assert_eq!(disagg, 4, "disaggregated covers the full skew x m grid");
+        assert_eq!(vllm.len(), 1, "one canonical colocated cell");
+        assert_eq!((vllm[0].skew, vllm[0].m), (0.0, 1));
+        assert_eq!(vllm[0].completed, 48);
     }
 
     #[test]

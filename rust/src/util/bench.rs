@@ -6,16 +6,22 @@ use std::time::Instant;
 /// Timing result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
     /// Seconds per iteration: median, p10, p90 across samples.
     pub median: f64,
+    /// 10th-percentile seconds per iteration.
     pub p10: f64,
+    /// 90th-percentile seconds per iteration.
     pub p90: f64,
+    /// Iterations batched per timed sample.
     pub iters_per_sample: u64,
+    /// Timed samples taken.
     pub samples: usize,
 }
 
 impl BenchResult {
+    /// Print one aligned report line.
     pub fn print(&self) {
         println!(
             "{:<44} {:>12} /iter   [{} .. {}]  ({} samples x {} iters)",

@@ -8,6 +8,7 @@ use anyhow::{bail, Context, Result};
 /// Parsed arguments: a subcommand plus `--key value` pairs and bare flags.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// First positional argument (the subcommand name).
     pub subcommand: String,
     options: HashMap<String, String>,
     flags: Vec<String>,
@@ -42,18 +43,22 @@ impl Args {
         Ok(out)
     }
 
+    /// Whether the bare flag was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw option value, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Option value, or `default` when absent.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Option parsed as `usize`, or `default` when absent.
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             Some(v) => v.parse().with_context(|| format!("--{name}={v} not an integer")),
@@ -61,6 +66,7 @@ impl Args {
         }
     }
 
+    /// Option parsed as `u64`, or `default` when absent.
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             Some(v) => v.parse().with_context(|| format!("--{name}={v} not an integer")),
@@ -68,6 +74,7 @@ impl Args {
         }
     }
 
+    /// Option parsed as `f64`, or `default` when absent.
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             Some(v) => v.parse().with_context(|| format!("--{name}={v} not a number")),

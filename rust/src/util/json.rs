@@ -10,20 +10,28 @@ use anyhow::{anyhow, bail, Result};
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// Boolean.
     Bool(bool),
+    /// Number (all JSON numbers are `f64`).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object; keys are sorted, so rendering is deterministic.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ---- constructors ----
+    /// An empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Insert a key (builder style); no-op on non-objects.
     pub fn set(mut self, key: &str, value: impl Into<Json>) -> Json {
         if let Json::Obj(ref mut m) = self {
             m.insert(key.to_string(), value.into());
@@ -32,6 +40,7 @@ impl Json {
     }
 
     // ---- accessors ----
+    /// Field lookup; errors on a missing key or a non-object.
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m
@@ -41,6 +50,7 @@ impl Json {
         }
     }
 
+    /// Optional field lookup.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -48,6 +58,7 @@ impl Json {
         }
     }
 
+    /// The value as a number, or an error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -55,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, or an error.
     pub fn as_usize(&self) -> Result<usize> {
         let f = self.as_f64()?;
         if f < 0.0 || f.fract() != 0.0 {
@@ -63,10 +75,12 @@ impl Json {
         Ok(f as usize)
     }
 
+    /// The value as a `u64`, or an error.
     pub fn as_u64(&self) -> Result<u64> {
         Ok(self.as_usize()? as u64)
     }
 
+    /// The value as a string, or an error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -74,6 +88,7 @@ impl Json {
         }
     }
 
+    /// The value as a boolean, or an error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -81,6 +96,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice, or an error.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),

@@ -61,6 +61,7 @@ pub struct TraceSource {
 }
 
 impl TraceSource {
+    /// Build a source over `requests` (sorted into arrival order internally).
     pub fn new(mut requests: Vec<Request>) -> Self {
         requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
         let kv_demand = requests.iter().map(request_kv_demand).sum();
@@ -99,6 +100,7 @@ pub struct RequestStream {
 }
 
 impl RequestStream {
+    /// A stream yielding exactly the workload of `spec.generate(n, seed)`.
     pub fn new(spec: WorkloadSpec, n: usize, seed: u64) -> Self {
         Self {
             spec,

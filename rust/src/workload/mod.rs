@@ -21,6 +21,7 @@ use crate::sim::SimRng;
 /// One inference request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
+    /// Unique request id (generator index or trace id).
     pub id: u64,
     /// Arrival time in seconds (0 for closed-loop benchmarks).
     pub arrival: f64,
@@ -39,6 +40,7 @@ impl Request {
         self.input_len + decoded.min(self.output_len)
     }
 
+    /// JSON rendering for trace files (one JSONL line).
     pub fn to_json(&self) -> crate::util::json::Json {
         crate::util::json::Json::obj()
             .set("id", self.id)
@@ -48,6 +50,7 @@ impl Request {
             .set("tenant", self.tenant)
     }
 
+    /// Parse one trace line; `tenant` defaults to 0 for pre-multi-tenancy traces.
     pub fn from_json(v: &crate::util::json::Json) -> anyhow::Result<Self> {
         Ok(Self {
             id: v.get("id")?.as_u64()?,
@@ -66,6 +69,7 @@ impl Request {
 /// A traffic class in a multi-tenant workload.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TenantClass {
+    /// Class name used in reports.
     pub name: String,
     /// Relative traffic share (normalized over the mix).
     pub weight: f64,
@@ -192,12 +196,36 @@ impl WorkloadSpec {
     }
 
     /// Generate `n` requests (the materialized form of [`Self::stream`]).
+    ///
+    /// ```
+    /// use megascale_infer::workload::WorkloadSpec;
+    ///
+    /// let spec = WorkloadSpec {
+    ///     median_input: 64.0,
+    ///     median_output: 8.0,
+    ///     ..Default::default()
+    /// };
+    /// let reqs = spec.generate(4, 42);
+    /// assert_eq!(reqs.len(), 4);
+    /// // No arrival rate => closed loop: everything arrives at t = 0.
+    /// assert!(reqs.iter().all(|r| r.arrival == 0.0));
+    /// ```
     pub fn generate(&self, n: usize, seed: u64) -> Vec<Request> {
         self.stream(n, seed).collect()
     }
 
     /// Streaming generator over the same request sequence as
     /// [`Self::generate`], yielding one request at a time with O(1) state.
+    ///
+    /// ```
+    /// use megascale_infer::workload::WorkloadSpec;
+    ///
+    /// let spec = WorkloadSpec::tiny_bench();
+    /// // The stream yields bit-identically the same requests as
+    /// // `generate` — without materializing the list.
+    /// let streamed: Vec<_> = spec.stream(16, 7).collect();
+    /// assert_eq!(streamed, spec.generate(16, 7));
+    /// ```
     pub fn stream(&self, n: usize, seed: u64) -> RequestStream {
         RequestStream::new(self.clone(), n, seed)
     }

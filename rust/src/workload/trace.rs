@@ -14,22 +14,29 @@ use super::Request;
 /// A replayable request trace.
 #[derive(Debug, Clone, Default)]
 pub struct Trace {
+    /// The requests, in file order.
     pub requests: Vec<Request>,
 }
 
 /// Summary statistics of a trace.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceStats {
+    /// Number of requests.
     pub count: usize,
+    /// Median prompt length (tokens).
     pub median_input: usize,
+    /// Median output length (tokens).
     pub median_output: usize,
+    /// Mean prompt length (tokens).
     pub mean_input: f64,
+    /// Mean output length (tokens).
     pub mean_output: f64,
     /// Steady-state average sequence length (input + output/2).
     pub avg_seq: f64,
 }
 
 impl Trace {
+    /// Wrap a request list.
     pub fn new(requests: Vec<Request>) -> Self {
         Self { requests }
     }
@@ -59,6 +66,7 @@ impl Trace {
         Ok(Self { requests })
     }
 
+    /// Summary statistics (length medians/means, steady-state average sequence).
     pub fn stats(&self) -> TraceStats {
         let n = self.requests.len();
         if n == 0 {
