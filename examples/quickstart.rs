@@ -27,6 +27,10 @@ fn main() {
         plan.n_a, plan.tp_a, plan.n_e, plan.tp_e, plan.m
     );
     println!(
+        "  prefill pool: {} nodes x {} GPUs (chunked prefill feeding the decode pools)",
+        plan.n_p, plan.tp_p
+    );
+    println!(
         "  global batch {} | predicted TPOT {:.1} ms | {:.0} tok/s/GPU | {:.0} tok/s/$",
         plan.global_batch,
         plan.metrics.tpot * 1e3,

@@ -33,6 +33,9 @@ fn main() {
         rates: vec![0.0, 200.0, 400.0],
         skews: vec![0.0, 1.2],
         micro_batches: vec![1, 2],
+        // Prompt-length axis: the base spec's median vs a long-prompt mix
+        // that loads the prefill pool (0 = keep the spec's median).
+        prompt_lens: vec![0.0, 512.0],
         tenant_mixes: vec![
             Vec::new(),
             vec![

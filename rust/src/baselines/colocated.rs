@@ -25,6 +25,7 @@
 //!   `EXPERIMENTS.md`).
 
 use crate::config::{ClusterSpec, GpuSpec, ModelConfig, DTYPE_BYTES};
+use crate::perf_model::PrefillModel;
 
 use super::{layer_time, minimal_deployment, pp_send_time, BaselineDeployment, BaselineKind};
 
@@ -150,6 +151,19 @@ impl ColocatedModel {
         }
     }
 
+    /// Roofline model for the group's inline chunked-prefill passes. The
+    /// engine builds this ONCE (it does not depend on the live batch) and
+    /// passes it back into [`Self::prefill_layer_time`] each iteration —
+    /// `ColocatedModel` itself is rebuilt per iteration at the live
+    /// `avg_seq`, and must stay cheap to construct.
+    pub fn prefill_model(
+        plan: &ColocatedPlan,
+        model: &ModelConfig,
+        cluster: &ClusterSpec,
+    ) -> PrefillModel {
+        PrefillModel::new(model, &cluster.attention_gpu(), plan.tp.max(1))
+    }
+
     /// Effective per-layer decode time of one group at batch `b`, such that
     /// `L · layer_time(b)` equals the group's full TPOT (including PP stage
     /// rounding and inter-stage activation hops).
@@ -158,6 +172,17 @@ impl ColocatedModel {
         let hops = (self.pp as f64 - 1.0) * pp_send_time(&self.model, &self.gpu, b)
             / self.model.layers.max(1) as f64;
         lt * self.stage_factor + hops
+    }
+
+    /// Per-layer time of one inline chunked-prefill pass of `tokens` prompt
+    /// tokens at mean attended context `ctx`, charged ON TOP of the decode
+    /// layer time when a group mixes a prefill chunk into an iteration
+    /// (vLLM-style chunked prefill interfering with decode). The roofline
+    /// chunk cost (from the [`Self::prefill_model`] the caller holds) is
+    /// discounted by the baseline's kernel efficiency and spread like the
+    /// decode layers across PP stages.
+    pub fn prefill_layer_time(&self, prefill: &PrefillModel, tokens: f64, ctx: f64) -> f64 {
+        prefill.chunk_layer_time(tokens, ctx) / self.kind.kernel_efficiency() * self.stage_factor
     }
 }
 
@@ -204,6 +229,21 @@ mod tests {
             let rel = (des - analytic.tpot).abs() / analytic.tpot;
             assert!(rel < 1e-9, "{kind:?}: des {des} vs analytic {}", analytic.tpot);
         }
+    }
+
+    #[test]
+    fn inline_prefill_chunk_costs_more_at_lower_kernel_efficiency() {
+        let model = ModelConfig::mixtral_8x22b();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        let time = |kind| {
+            let plan = ColocatedPlan::sized_to_match(kind, &model, &cluster, 8);
+            let pm = ColocatedModel::prefill_model(&plan, &model, &cluster);
+            ColocatedModel::new(&plan, &model, &cluster, 730.0)
+                .prefill_layer_time(&pm, 2048.0, 1024.0)
+        };
+        let vllm = time(BaselineKind::Vllm);
+        let trt = time(BaselineKind::TrtLlm);
+        assert!(trt > 0.0 && vllm > trt, "vllm {vllm} vs trt {trt}");
     }
 
     #[test]

@@ -23,7 +23,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::{ClusterSpec, ModelConfig};
-use crate::plan::{validate_top_k, DeploymentPlan, PlanSearcher, ValidationConfig};
+use crate::plan::{validate_top_k, DeploymentPlan, PlanSearcher, PromptShape, ValidationConfig};
 use crate::sim::cluster::{ClusterReport, ClusterSim, ClusterSimConfig, ExpertPopularity};
 use crate::util::json::Json;
 use crate::workload::WorkloadSpec;
@@ -201,12 +201,13 @@ impl CompareReport {
     /// Deterministic multi-line rendering (the `msi compare` stdout table).
     pub fn summary(&self) -> String {
         let mut s = format!(
-            "compare: {} requests | plan tp_a={} tp_e={} n_a={} m={} B={} ({} GPUs)\n\
-             {:<10} {:>24} {:>5} | {:>11} {:>9} | {:>9} {:>9} {:>9} | {:>8}\n",
+            "compare: {} requests | plan tp_a={} tp_e={} n_a={} n_p={} m={} B={} ({} GPUs)\n\
+             {:<10} {:>26} {:>5} | {:>11} {:>9} | {:>9} {:>9} {:>9} {:>9} | {:>8}\n",
             self.requests,
             self.plan.tp_a,
             self.plan.tp_e,
             self.plan.n_a,
+            self.plan.n_p,
             self.plan.m,
             self.plan.global_batch,
             self.plan.total_gpus(),
@@ -216,19 +217,21 @@ impl CompareReport {
             "tok/s/GPU",
             "tok/s",
             "TTFT p50",
+            "prefill50",
             "TPOT p50",
             "E2E p99",
             "SLO att",
         );
         for r in self.systems() {
             s.push_str(&format!(
-                "{:<10} {:>24} {:>5} | {:>11.2} {:>9.0} | {:>8.0}ms {:>8.1}ms {:>8.2}s | {:>7.1}%\n",
+                "{:<10} {:>26} {:>5} | {:>11.2} {:>9.0} | {:>8.0}ms {:>8.0}ms {:>8.1}ms {:>8.2}s | {:>7.1}%\n",
                 r.system.name(),
                 r.deployment,
                 r.gpus,
                 r.report.per_gpu_throughput,
                 r.report.throughput,
                 r.report.ttft.median() * 1e3,
+                r.report.ttft_prefill.median() * 1e3,
                 r.report.tpot.median() * 1e3,
                 r.report.e2e.p99(),
                 r.tpot_slo_attainment * 100.0,
@@ -264,13 +267,14 @@ impl CompareReport {
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "system,deployment,gpus,per_gpu_throughput,throughput,completed,tokens,\
-             ttft_p50_s,ttft_p99_s,tpot_p50_s,e2e_p50_s,e2e_p99_s,tpot_slo_attainment,\
-             vs_vllm\n",
+             ttft_p50_s,ttft_p99_s,ttft_queue_p50_s,ttft_prefill_p50_s,\
+             ttft_transfer_p50_s,ttft_decode_p50_s,tpot_p50_s,e2e_p50_s,e2e_p99_s,\
+             tpot_slo_attainment,vs_vllm\n",
         );
         let vllm_pgpu = self.vllm.report.per_gpu_throughput.max(f64::MIN_POSITIVE);
         for r in self.systems() {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.system.name(),
                 r.deployment,
                 r.gpus,
@@ -280,6 +284,10 @@ impl CompareReport {
                 r.report.tokens,
                 r.report.ttft.median(),
                 r.report.ttft.p99(),
+                r.report.ttft_queue.median(),
+                r.report.ttft_prefill.median(),
+                r.report.ttft_transfer.median(),
+                r.report.ttft_decode.median(),
                 r.report.tpot.median(),
                 r.report.e2e.median(),
                 r.report.e2e.p99(),
@@ -326,6 +334,9 @@ pub fn run_compare(cfg: &CompareConfig) -> Result<CompareReport> {
     let avg_seq = cfg.spec.avg_seq_len();
     let mut searcher = PlanSearcher::new(cfg.model.clone(), cfg.cluster.clone(), avg_seq);
     searcher.limits.slo = cfg.slo;
+    // Size the prefill pool for the actual workload shape, so prefill is
+    // neither the bottleneck nor idle ballast in the comparison.
+    searcher.prompt = PromptShape::of_spec(&cfg.spec);
     let plan = match cfg.validate_top {
         Some(k) if k > 0 => validate_top_k(
             &searcher,
@@ -372,8 +383,8 @@ pub fn run_compare(cfg: &CompareConfig) -> Result<CompareReport> {
     let disaggregated = SystemResult {
         system: SystemKind::Disaggregated,
         deployment: format!(
-            "MSI tp_a={} n_a={} tp_e={} n_e={} m={}",
-            plan.tp_a, plan.n_a, plan.tp_e, plan.n_e, plan.m
+            "MSI a={}x{} e={}x{} p={}x{} m={}",
+            plan.n_a, plan.tp_a, plan.n_e, plan.tp_e, plan.n_p, plan.tp_p, plan.m
         ),
         gpus: target_gpus,
         tpot_slo_attainment: disagg_report.tpot.fraction_below(cfg.slo),

@@ -198,7 +198,10 @@ impl RuntimeInstance {
             completed += batcher.complete_iteration(&mut kv).len() as u64;
         }
 
-        let gpus = self.plan.total_gpus() as f64;
+        // This virtual-time instance simulates the DECODE pools only, so
+        // its per-GPU metric divides by the decode instance (the prefill
+        // pool lives in the cluster engine's report, not here).
+        let gpus = self.plan.decode_gpus() as f64;
         let cost = self.cluster.attention_gpu().price * (self.plan.tp_a * self.plan.n_a) as f64
             + self.cluster.expert_gpu().price * (self.plan.tp_e * self.plan.n_e) as f64;
         let throughput = if now > 0.0 { tokens as f64 / now } else { 0.0 };

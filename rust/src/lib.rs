@@ -25,6 +25,12 @@
 //!   disaggregated path, so `msi compare` reproduces the paper's central
 //!   per-GPU-throughput comparison on arbitrary traffic
 //!   ([`baselines`], [`baselines::run_compare`]).
+//! * **Disaggregated prefill** — an explicit request-lifecycle state
+//!   machine (`Queued → Prefill → KvTransfer → Decode → Done`) with a
+//!   packed chunked-prefill pool ahead of the decode pools, TTFT
+//!   decomposed per request into queue/prefill/transfer/first-decode, and
+//!   vLLM-style inline chunked prefill interfering with decode on the
+//!   colocated baselines ([`sim::engine`], [`perf_model::PrefillModel`]).
 //! * **Sim-validated plan choice** — `msi plan --validate-top K` re-scores
 //!   the top analytic plans through short engine runs and picks by
 //!   simulated goodput per dollar ([`plan::validate_top_k`]).

@@ -3,24 +3,26 @@
 //! ```text
 //! msi plan      --model mixtral --attention-gpu ampere [--expert-gpu l40s]
 //!               [--hetero h20:l40s] [--slo-ms 150] [--avg-seq 730] [--all]
-//!               [--validate-top K] [--validate-requests 512] [--seed 42]
+//!               [--validate-top K] [--validate-requests 512]
+//!               [--prompt-heavy] [--seed 42]
 //! msi compare   --model mixtral [--attention-gpu ampere] [--expert-gpu l40s]
 //!               [--hetero h20:l40s] [--requests 0=auto] [--rate 0]
 //!               [--burst 0.0] [--skew 0] [--tenants name:w:slo,...]
-//!               [--slo-ms 150] [--validate-top K] [--seed 42]
-//!               [--json report.json] [--csv report.csv]
+//!               [--slo-ms 150] [--validate-top K] [--prompt-heavy]
+//!               [--seed 42] [--json report.json] [--csv report.csv]
 //! msi simulate  --model mixtral --gpu ampere [--requests 512] [--baselines]
 //! msi replay    [--trace t.jsonl | --requests 1000] --model mixtral
 //!               --attention-gpu ampere [--expert-gpu l40s]
 //!               [--hetero h20:l40s] [--rate 0] [--burst 0.0] [--skew 0]
 //!               [--popularity-drift <s>] [--rebalance <s>] [--balance]
 //!               [--tenants name:weight:slo_s,...] [--simnet]
-//!               [--micro-batches m] [--max-seconds <s>] [--seed 42]
-//!               [--json report.json]
+//!               [--micro-batches m] [--prefill N] [--prefill-chunk 2048]
+//!               [--max-seconds <s>] [--seed 42] [--json report.json]
 //! msi serve     --artifacts artifacts [--micro-batches 2] [--requests 16]
 //!               (requires the `pjrt` feature)
 //! msi sweep     [--model tiny] [--gpu ampere] [--requests 2000]
 //!               [--rates 0,200,400] [--skews 0,1.2] [--micro-batches 1,2,3]
+//!               [--prompt-lens 0,571,2048]
 //!               [--tenant-mixes "none;interactive:0.7:2.5,batch:0.3:60"]
 //!               [--systems megascale,vllm,trtllm] [--workers N] [--seed 42]
 //!               [--json sweep.json] [--csv sweep.csv] [--smoke]
@@ -42,7 +44,8 @@ use megascale_infer::baselines::{
 use megascale_infer::config::{gpu_catalog, ClusterSpec, GpuKind, ModelConfig, NodeSpec};
 use megascale_infer::coordinator::{RoutePolicy, RuntimeInstance};
 use megascale_infer::m2n::{simulate_m2n, LibraryKind, LibraryProfile, M2nScenario};
-use megascale_infer::plan::{validate_top_k, PlanSearcher, ValidationConfig};
+use megascale_infer::perf_model::DEFAULT_PREFILL_CHUNK;
+use megascale_infer::plan::{validate_top_k, PlanSearcher, PromptShape, ValidationConfig};
 #[cfg(feature = "pjrt")]
 use megascale_infer::runtime::ServingEngine;
 use megascale_infer::sim::cluster::{
@@ -117,7 +120,15 @@ fn parse_cluster(args: &Args) -> Result<ClusterSpec> {
 fn main() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["all", "baselines", "balance", "simnet", "smoke", "bench"],
+        &[
+            "all",
+            "baselines",
+            "balance",
+            "simnet",
+            "smoke",
+            "bench",
+            "prompt-heavy",
+        ],
     )?;
     match args.subcommand.as_str() {
         "plan" => cmd_plan(&args),
@@ -146,8 +157,20 @@ fn main() -> Result<()> {
 fn cmd_plan(args: &Args) -> Result<()> {
     let model = parse_model(&args.str_or("model", "mixtral"))?;
     let cluster = parse_cluster(args)?;
-    let mut searcher = PlanSearcher::new(model, cluster, args.f64_or("avg-seq", 730.0)?);
+    // --prompt-heavy: rank (and, with --validate-top, sim-re-rank) under
+    // the long-context preset — the regime where prefill-pool sizing is
+    // the decisive third dimension.
+    let prompt_heavy = args.flag("prompt-heavy");
+    let default_avg_seq = if prompt_heavy {
+        WorkloadSpec::prompt_heavy().avg_seq_len()
+    } else {
+        730.0
+    };
+    let mut searcher = PlanSearcher::new(model, cluster, args.f64_or("avg-seq", default_avg_seq)?);
     searcher.limits.slo = args.f64_or("slo-ms", 150.0)? / 1000.0;
+    if prompt_heavy {
+        searcher.prompt = PromptShape::of_spec(&WorkloadSpec::prompt_heavy());
+    }
     if args.flag("all") {
         for p in searcher.search_all() {
             println!("{}", p.to_json());
@@ -167,24 +190,30 @@ fn cmd_plan(args: &Args) -> Result<()> {
         };
         // Match the validation workload's sequence-length regime to the
         // --avg-seq the analytic search ranked under, keeping the paper's
-        // input:output shape.
-        let base = WorkloadSpec::default();
-        let scale = searcher.avg_seq / base.avg_seq_len();
-        let spec = WorkloadSpec {
-            median_input: base.median_input * scale,
-            median_output: base.median_output * scale,
-            ..base
+        // input:output shape (or the prompt-heavy preset verbatim).
+        let spec = if prompt_heavy {
+            WorkloadSpec::prompt_heavy()
+        } else {
+            let base = WorkloadSpec::default();
+            let scale = searcher.avg_seq / base.avg_seq_len();
+            WorkloadSpec {
+                median_input: base.median_input * scale,
+                median_output: base.median_output * scale,
+                ..base
+            }
         };
         let v = validate_top_k(&searcher, &spec, &vcfg)
             .ok_or_else(|| anyhow::anyhow!("no feasible plan"))?;
         for c in &v.candidates {
             println!(
-                "candidate #{}: tp_a={} tp_e={} n_a={} m={} B={} | analytic {:.1} tok/s/$ | \
+                "candidate #{}: tp_a={} tp_e={} n_a={} n_p={} m={} B={} | \
+                 analytic {:.1} tok/s/$ | \
                  simulated {:.1} tok/s, goodput {:.1} tok/s/$",
                 c.analytic_rank,
                 c.plan.tp_a,
                 c.plan.tp_e,
                 c.plan.n_a,
+                c.plan.n_p,
                 c.plan.m,
                 c.plan.global_batch,
                 c.plan.metrics.throughput_per_dollar,
@@ -221,12 +250,17 @@ fn cmd_compare(args: &Args) -> Result<()> {
     };
     let skew = args.f64_or("skew", 0.0)?;
     let k = args.usize_or("validate-top", 0)?;
+    let base_spec = if args.flag("prompt-heavy") {
+        WorkloadSpec::prompt_heavy()
+    } else {
+        WorkloadSpec::default()
+    };
     let cfg = CompareConfig {
         spec: WorkloadSpec {
             arrival_rate: (rate > 0.0).then_some(rate),
             burst_sigma: args.f64_or("burst", 0.0)?,
             tenants,
-            ..Default::default()
+            ..base_spec
         },
         requests: args.usize_or("requests", 0)?,
         seed: args.u64_or("seed", 42)?,
@@ -374,14 +408,22 @@ fn cmd_replay(args: &Args) -> Result<()> {
         Transport::Analytic
     };
 
+    // Prefill-pool override: `--prefill N` resizes the pool the plan
+    // search picked; `--prefill 0` disables prefill modeling entirely.
+    let prefill_nodes = args.usize_or("prefill", plan.n_p)?;
+    let prefill_chunk = args.usize_or("prefill-chunk", DEFAULT_PREFILL_CHUNK)?;
     println!(
-        "replay: {} requests | plan tp_a={} tp_e={} n_a={} m={} B={}",
+        "replay: {} requests | plan tp_a={} tp_e={} n_a={} m={} B={} | \
+         prefill {} nodes x{} GPUs (chunk {})",
         requests.len(),
         plan.tp_a,
         plan.tp_e,
         plan.n_a,
         plan.m,
-        plan.global_batch
+        plan.global_batch,
+        prefill_nodes,
+        plan.tp_p,
+        prefill_chunk,
     );
     let max_sim_seconds = match args.get("max-seconds") {
         Some(v) => {
@@ -406,6 +448,8 @@ fn cmd_replay(args: &Args) -> Result<()> {
         tenants,
         rebalance_period,
         max_sim_seconds,
+        prefill_nodes,
+        prefill_chunk,
         mode: EngineMode::Disaggregated,
     };
     let plan_json = cfg.plan.to_json();
@@ -462,6 +506,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             "rates",
             "skews",
             "micro-batches",
+            "prompt-lens",
             "tenant-mixes",
             "systems",
             "requests",
@@ -513,6 +558,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         &args.str_or("micro-batches", if smoke { "1,2" } else { "1,2,3" }),
         "micro-batches",
     )?;
+    // Prompt-length axis (median input tokens; 0 = the base spec's median).
+    let prompt_lens = parse_f64_list(&args.str_or("prompt-lens", "0"), "prompt-lens")?;
     // Tenant-mix axis: semicolon-separated mixes, each a `--tenants`-style
     // list; `none` (or an empty entry) is the single-tenant mix.
     let tenant_mixes: Vec<Vec<TenantClass>> = args
@@ -563,6 +610,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         rates,
         skews,
         micro_batches,
+        prompt_lens,
         tenant_mixes,
         systems,
     };
@@ -574,10 +622,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         workers.max(1)
     );
     println!(
-        "{:>8} {:>6} {:>3} {:>4} {:>10} | {:>10} {:>10} | {:>9} {:>9} | {:>5} {:>5}",
+        "{:>8} {:>6} {:>3} {:>7} {:>4} {:>10} | {:>10} {:>10} | {:>9} {:>9} | {:>5} {:>5}",
         "rate",
         "skew",
         "m",
+        "prompt",
         "mix",
         "system",
         "tok/s",
@@ -589,10 +638,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     );
     for c in &cells {
         println!(
-            "{:>8.1} {:>6.2} {:>3} {:>4} {:>10} | {:>10.1} {:>10.3} | {:>8.3}s {:>8.3}s | {:>5} {:>5}",
+            "{:>8.1} {:>6.2} {:>3} {:>7.0} {:>4} {:>10} | {:>10.1} {:>10.3} | {:>8.3}s {:>8.3}s | {:>5} {:>5}",
             c.rate,
             c.skew,
             c.m,
+            c.prompt_len,
             c.tenant_mix,
             c.system,
             c.throughput,

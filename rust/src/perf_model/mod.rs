@@ -14,6 +14,7 @@ mod comm;
 mod expert;
 mod gemm;
 mod iteration;
+mod prefill;
 mod roofline;
 
 pub use attention::AttentionModel;
@@ -21,6 +22,7 @@ pub use comm::{CommModel, bandwidth_util};
 pub use expert::ExpertModel;
 pub use gemm::{GemmShape, GpuPerf, table2_gemms};
 pub use iteration::{IterationModel, LatencyBreakdown};
+pub use prefill::{prefill_node_gpus, PrefillModel, DEFAULT_PREFILL_CHUNK};
 pub use roofline::{attention_utilization, ffn_utilization_dense, ffn_utilization_moe};
 
 use crate::config::{ClusterSpec, ModelConfig};

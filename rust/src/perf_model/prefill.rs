@@ -1,0 +1,175 @@
+//! Chunked-prefill time model for a full-model prefill instance.
+//!
+//! MegaScale-Infer's attention/FFN disaggregation serves the *decode* phase;
+//! prefill runs on a separate pool of full-model instances (§2, following
+//! DistServe/Mooncake). A prefill node holds attention *and* every expert,
+//! and processes prompts in token-budgeted chunks (Sarathi-style): each
+//! chunk streams the whole model's weight panels once per layer, so small
+//! chunks are weight-load bound while large chunks amortize the panels and
+//! turn compute-bound — the knob [`DEFAULT_PREFILL_CHUNK`] defaults into
+//! the compute-bound regime.
+//!
+//! Per layer, a chunk of `c` tokens at mean attended context `ctx` costs:
+//!
+//! * the QKV/output projection GEMMs at batch `c` (roofline),
+//! * the attention core, `4·c·ctx·h` flops (causal score+value matmuls),
+//! * the MoE FFN: `c·K` token-copies spread over all `E` resident experts,
+//!   each expert's GEMMs evaluated on the exact roofline (which charges the
+//!   per-expert weight-panel floor `E` times — the chunking trade-off).
+//!
+//! All times are seconds; weights are sharded over the node's `tp` GPUs.
+
+use crate::config::{ClusterSpec, GpuSpec, ModelConfig, DTYPE_BYTES};
+
+use super::gemm::{table2_gemms, GpuPerf};
+use super::ExpertModel;
+
+/// Default chunked-prefill token budget (per pass on a prefill node, and
+/// per iteration per colocated serving group) — vLLM's default
+/// `max_num_batched_tokens`, large enough that Table-4-scale models run
+/// their prefill GEMMs compute-bound.
+pub const DEFAULT_PREFILL_CHUNK: usize = 2048;
+
+/// GPUs one prefill node needs to hold the FULL model (attention + all
+/// experts) with 5% activation headroom, on the cluster's attention GPU
+/// type. May exceed one node's GPU count for Scaled-MoE-class models; the
+/// time model then stands in for a (perfectly balanced) multi-node TP/PP
+/// prefill instance.
+pub fn prefill_node_gpus(model: &ModelConfig, cluster: &ClusterSpec) -> usize {
+    let gpu = cluster.attention_gpu();
+    let params = model.total_params() * DTYPE_BYTES;
+    ((params * 1.05 / gpu.mem_bytes()).ceil() as usize).max(1)
+}
+
+/// Roofline time model of one full-model prefill node.
+#[derive(Debug, Clone)]
+pub struct PrefillModel {
+    perf: GpuPerf,
+    expert: ExpertModel,
+    model: ModelConfig,
+    tp: usize,
+}
+
+impl PrefillModel {
+    /// Build the model for a prefill node of `tp` GPUs of type `gpu`.
+    pub fn new(model: &ModelConfig, gpu: &GpuSpec, tp: usize) -> Self {
+        let tp = tp.max(1);
+        Self {
+            perf: GpuPerf::from_spec(gpu),
+            expert: ExpertModel::new(model, gpu, tp),
+            model: model.clone(),
+            tp,
+        }
+    }
+
+    /// Time for one chunk of `tokens` prompt tokens through ONE layer, at
+    /// mean attended context `ctx` (seconds). The chunk may pack segments
+    /// of several prompts — callers pass the token-weighted mean context.
+    pub fn chunk_layer_time(&self, tokens: f64, ctx: f64) -> f64 {
+        let tokens = tokens.max(1.0);
+        let (qkv, out, _, _) = table2_gemms(&self.model, tokens, 1.0, self.tp, 1);
+        let attn_gemm = self.perf.gemm_time(&qkv) + self.perf.gemm_time(&out);
+        // Causal attention core: ~4·c·ctx·h flops (QK^T + PV), compute-bound
+        // during prefill.
+        let core = 4.0 * tokens * ctx.max(1.0) * self.model.hidden as f64 / self.tp as f64
+            / (self.perf.flops * self.perf.mfu_cap);
+        // MoE FFN: c·K copies spread evenly over the E resident experts;
+        // the exact per-expert roofline charges E weight-panel floors.
+        let e = self.model.experts.max(1) as f64;
+        let per_expert = tokens * self.model.top_k.max(1) as f64 / e;
+        let moe = e * self.expert.time(per_expert);
+        attn_gemm + core + moe
+    }
+
+    /// Full chunked prefill time of a single `prompt`-token request across
+    /// all layers (no cross-request packing), chunked at `chunk` tokens.
+    pub fn prompt_time(&self, prompt: usize, chunk: usize) -> f64 {
+        let layers = self.model.layers.max(1) as f64;
+        let chunk = chunk.max(1);
+        let mut t = 0.0;
+        let mut done = 0usize;
+        let prompt = prompt.max(1);
+        while done < prompt {
+            let c = chunk.min(prompt - done);
+            t += layers * self.chunk_layer_time(c as f64, done as f64 + c as f64 / 2.0);
+            done += c;
+        }
+        t
+    }
+
+    /// Steady-state packed prefill rate (prompt tokens/second) of one node
+    /// running full `chunk`-token passes over a stream of `mean_prompt`-token
+    /// prompts (mean attended context ≈ half the prompt).
+    pub fn steady_rate(&self, chunk: usize, mean_prompt: f64) -> f64 {
+        let c = chunk.max(1) as f64;
+        let layers = self.model.layers.max(1) as f64;
+        let per_pass = layers * self.chunk_layer_time(c, (mean_prompt / 2.0).max(1.0));
+        c / per_pass.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuKind;
+
+    fn mixtral_node() -> PrefillModel {
+        let model = ModelConfig::mixtral_8x22b();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        let tp = prefill_node_gpus(&model, &cluster);
+        PrefillModel::new(&model, &cluster.attention_gpu(), tp)
+    }
+
+    #[test]
+    fn mixtral_needs_four_gpus_per_prefill_node() {
+        // 141B bf16 params (282 GB) + headroom over 80 GB GPUs => 4.
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        assert_eq!(
+            prefill_node_gpus(&ModelConfig::mixtral_8x22b(), &cluster),
+            4
+        );
+        // The tiny model fits on one GPU.
+        assert_eq!(prefill_node_gpus(&ModelConfig::tiny(), &cluster), 1);
+    }
+
+    #[test]
+    fn prompt_time_monotone_in_length() {
+        let pm = mixtral_node();
+        let t1 = pm.prompt_time(256, DEFAULT_PREFILL_CHUNK);
+        let t2 = pm.prompt_time(1024, DEFAULT_PREFILL_CHUNK);
+        assert!(t2 > t1 * 3.0, "4x prompt should cost >3x: {t1} vs {t2}");
+    }
+
+    #[test]
+    fn small_chunks_pay_weight_streaming() {
+        // Chunking a prompt into many small passes re-streams every
+        // expert's weight panels per pass: strictly slower than one big
+        // chunk (the §2.3 utilization argument, applied to prefill).
+        let pm = mixtral_node();
+        let big = pm.prompt_time(2048, 2048);
+        let small = pm.prompt_time(2048, 128);
+        assert!(small > 1.5 * big, "chunk 128 {small} vs chunk 2048 {big}");
+    }
+
+    #[test]
+    fn packed_rate_beats_single_short_prompt() {
+        // A full 2048-token pass amortizes weight panels that a lone
+        // 256-token prompt pays alone.
+        let pm = mixtral_node();
+        let packed = pm.steady_rate(DEFAULT_PREFILL_CHUNK, 256.0);
+        let alone = 256.0 / pm.prompt_time(256, DEFAULT_PREFILL_CHUNK);
+        assert!(packed > 1.5 * alone, "packed {packed} vs alone {alone}");
+        assert!(packed.is_finite() && packed > 0.0);
+    }
+
+    #[test]
+    fn quadratic_context_term_matters_for_long_prompts() {
+        // At fixed chunk size, later chunks (larger attended context) cost
+        // more than earlier ones, so doubling a long prompt more than
+        // doubles its time.
+        let pm = mixtral_node();
+        let t1 = pm.prompt_time(8192, 2048);
+        let t2 = pm.prompt_time(16384, 2048);
+        assert!(t2 > 2.05 * t1, "{t2} vs 2x{t1}");
+    }
+}

@@ -29,7 +29,8 @@ pub use validate::{
 };
 
 use crate::config::{ClusterSpec, ModelConfig};
-use crate::perf_model::PerfModel;
+use crate::perf_model::{prefill_node_gpus, PerfModel, PrefillModel, DEFAULT_PREFILL_CHUNK};
+use crate::workload::WorkloadSpec;
 
 /// Search-space limits (paper: `N_m = 4`, GPUs per node in {1,2,4,8}).
 #[derive(Debug, Clone)]
@@ -44,6 +45,9 @@ pub struct SearchLimits {
     pub tp_choices: Vec<usize>,
     /// Upper bound on attention nodes to consider.
     pub max_attention_nodes: usize,
+    /// Upper bound on prefill nodes the BALANCE-style prefill sizing may
+    /// pick (degenerate tiny-model plans would otherwise demand hundreds).
+    pub max_prefill_nodes: usize,
 }
 
 impl Default for SearchLimits {
@@ -54,6 +58,43 @@ impl Default for SearchLimits {
             slo: 0.150,
             tp_choices: vec![1, 2, 4, 8],
             max_attention_nodes: 64,
+            max_prefill_nodes: 64,
+        }
+    }
+}
+
+/// Mean prompt/output lengths the prefill-pool sizing balances against.
+///
+/// The decode side of a plan consumes prefilled requests at
+/// `throughput / mean_output` requests/second, each carrying `mean_input`
+/// prompt tokens to prefill — the prefill pool is sized so its aggregate
+/// chunked-prefill rate covers that demand (the attention : prefill :
+/// expert analogue of Algorithm 1's BALANCE step).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PromptShape {
+    /// Mean prompt length in tokens.
+    pub mean_input: f64,
+    /// Mean output length in tokens.
+    pub mean_output: f64,
+}
+
+impl PromptShape {
+    /// Paper-ratio shape (571:159 production medians) scaled so that
+    /// `mean_input + mean_output/2` matches the given average sequence
+    /// length — the default when a caller only knows `avg_seq`.
+    pub fn from_avg_seq(avg_seq: f64) -> Self {
+        let scale = (avg_seq / (571.0 + 159.0 / 2.0)).max(1e-6);
+        Self {
+            mean_input: 571.0 * scale,
+            mean_output: 159.0 * scale,
+        }
+    }
+
+    /// Exact mean lengths of a workload spec.
+    pub fn of_spec(spec: &WorkloadSpec) -> Self {
+        Self {
+            mean_input: spec.mean_input().max(1.0),
+            mean_output: spec.mean_output().max(1.0),
         }
     }
 }
@@ -71,18 +112,36 @@ pub struct DeploymentPlan {
     pub n_a: usize,
     /// Number of expert nodes (= number of experts `E`).
     pub n_e: usize,
+    /// Prefill-pool nodes: full-model instances feeding the decode pools
+    /// with chunk-prefilled prompts (0 = prefill not modeled). Sized by the
+    /// search so the pool's packed chunked-prefill rate covers the decode
+    /// side's request consumption under [`PlanSearcher::prompt`].
+    pub n_p: usize,
+    /// GPUs per prefill node (enough to hold the full model).
+    pub tp_p: usize,
     /// Micro-batches in the ping-pong pipeline.
     pub m: usize,
     /// Global batch size per instance.
     pub global_batch: usize,
-    /// Analytic metrics of the plan (Eq. 4-6 closed forms).
+    /// Analytic metrics of the plan (Eq. 4-6 closed forms; decode-instance
+    /// scope — prefill-pool cost is layered on via [`Self::prefill_cost`]).
     pub metrics: PlanMetrics,
 }
 
 impl DeploymentPlan {
-    /// GPUs across both pools.
+    /// GPUs across all pools (attention + expert + prefill).
     pub fn total_gpus(&self) -> usize {
+        self.tp_a * self.n_a + self.tp_e * self.n_e + self.tp_p * self.n_p
+    }
+
+    /// GPUs across the two decode pools only (the Eq. 4–6 instance).
+    pub fn decode_gpus(&self) -> usize {
         self.tp_a * self.n_a + self.tp_e * self.n_e
+    }
+
+    /// Normalized Table-3 cost of the prefill pool (attention-GPU prices).
+    pub fn prefill_cost(&self, cluster: &ClusterSpec) -> f64 {
+        cluster.attention_gpu().price * (self.tp_p * self.n_p) as f64
     }
 
     /// Micro-batch size per attention node (`b_a`).
@@ -105,6 +164,8 @@ impl DeploymentPlan {
             .set("tp_e", self.tp_e)
             .set("n_a", self.n_a)
             .set("n_e", self.n_e)
+            .set("n_p", self.n_p)
+            .set("tp_p", self.tp_p)
             .set("m", self.m)
             .set("global_batch", self.global_batch)
             .set("total_gpus", self.total_gpus())
@@ -122,6 +183,10 @@ pub struct PlanSearcher {
     pub limits: SearchLimits,
     /// Average sequence length of the workload (`s`).
     pub avg_seq: f64,
+    /// Mean prompt/output lengths driving the prefill-pool sizing. Defaults
+    /// to the paper ratio scaled to `avg_seq`; set it from the actual
+    /// workload ([`PromptShape::of_spec`]) when known.
+    pub prompt: PromptShape,
 }
 
 impl PlanSearcher {
@@ -132,7 +197,21 @@ impl PlanSearcher {
             cluster,
             limits: SearchLimits::default(),
             avg_seq,
+            prompt: PromptShape::from_avg_seq(avg_seq),
         }
+    }
+
+    /// Size the prefill pool for a decode throughput of `throughput` output
+    /// tokens/s: the pool must chunk-prefill `throughput / mean_output ·
+    /// mean_input` prompt tokens/s. Returns `(n_p, tp_p)`.
+    pub fn size_prefill_pool(&self, throughput: f64) -> (usize, usize) {
+        let tp_p = prefill_node_gpus(&self.model, &self.cluster);
+        let gpu = self.cluster.attention_gpu();
+        let node_rate = PrefillModel::new(&self.model, &gpu, tp_p)
+            .steady_rate(DEFAULT_PREFILL_CHUNK, self.prompt.mean_input);
+        let demand = throughput / self.prompt.mean_output * self.prompt.mean_input;
+        let n_p = (demand / node_rate.max(1e-9)).ceil() as usize;
+        (n_p.clamp(1, self.limits.max_prefill_nodes.max(1)), tp_p)
     }
 
     /// BALANCE (Algorithm 1 line 5): choose `n_a` so that `T_a ≈ T_e`.
@@ -235,12 +314,15 @@ impl PlanSearcher {
             self.avg_seq,
             self.limits.slo,
         )?;
+        let (n_p, tp_p) = self.size_prefill_pool(metrics.throughput);
         Some(DeploymentPlan {
             model: self.model.name.clone(),
             tp_a,
             tp_e,
             n_a,
             n_e: self.model.experts,
+            n_p,
+            tp_p,
             m,
             global_batch,
             metrics,
@@ -300,6 +382,30 @@ mod tests {
         for p in &plans {
             assert!(p.m >= 3 && p.m <= 4);
         }
+    }
+
+    #[test]
+    fn prefill_pool_sized_and_bounded() {
+        let s = searcher(ModelConfig::mixtral_8x22b());
+        let plan = s.search().unwrap();
+        assert!(plan.n_p >= 1 && plan.n_p <= s.limits.max_prefill_nodes);
+        assert_eq!(plan.tp_p, 4, "141B bf16 over 80GB GPUs: 4 per prefill node");
+        assert_eq!(
+            plan.total_gpus(),
+            plan.decode_gpus() + plan.tp_p * plan.n_p,
+            "total GPUs = decode pools + prefill pool"
+        );
+        assert!(plan.prefill_cost(&s.cluster) > 0.0);
+        // A prompt-heavier mix needs at least as many prefill nodes for the
+        // same decode throughput.
+        let mut heavy = searcher(ModelConfig::mixtral_8x22b());
+        heavy.prompt = PromptShape {
+            mean_input: 4.0 * s.prompt.mean_input,
+            mean_output: s.prompt.mean_output,
+        };
+        let (n_heavy, _) = heavy.size_prefill_pool(plan.metrics.throughput);
+        let (n_base, _) = s.size_prefill_pool(plan.metrics.throughput);
+        assert!(n_heavy >= n_base, "heavy {n_heavy} vs base {n_base}");
     }
 
     #[test]

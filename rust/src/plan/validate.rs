@@ -13,8 +13,17 @@
 //! heterogeneous pairings (cheap-compute experts, big-memory attention) are
 //! compared on cost-per-token, not GPU count.
 //!
-//! Ties keep the analytically better-ranked candidate, and every draw is
-//! seeded, so the choice is deterministic for a given
+//! Validation also searches the **prefill-pool dimension**: each top-K
+//! candidate is re-scored at its BALANCE-sized prefill pool `n_p` and at
+//! ±25% perturbations of it (the attention : prefill : expert third axis),
+//! with the pool's Table-3 cost included in the goodput-per-dollar metric —
+//! the knob that matters under prompt-heavy workloads
+//! ([`crate::workload::WorkloadSpec::prompt_heavy`], `msi plan
+//! --prompt-heavy`), where TTFT is prefill-dominated and an undersized pool
+//! starves the decode fleet.
+//!
+//! Ties keep the analytically better-ranked (then smaller-pool) candidate,
+//! and every draw is seeded, so the choice is deterministic for a given
 //! (model, cluster, spec, seed).
 
 use crate::config::{ClusterSpec, GpuKind, ModelConfig, NodeSpec};
@@ -92,7 +101,8 @@ pub struct ValidatedPlan {
     pub plan: DeploymentPlan,
     /// Index of the winner within `candidates`.
     pub chosen: usize,
-    /// All re-scored candidates, in analytic rank order.
+    /// All re-scored candidates: analytic-rank-major, prefill-pool size
+    /// ascending within a rank.
     pub candidates: Vec<CandidateScore>,
 }
 
@@ -115,9 +125,26 @@ impl ValidatedPlan {
     }
 }
 
+/// Deterministic prefill-pool variants for one candidate: the BALANCE-sized
+/// `n_p` and ±25% perturbations (deduplicated, clamped to `[0 stays 0, 1..=cap]`).
+/// A plan with prefill modeling off (`n_p == 0`) gets no variants.
+fn prefill_variants(n_p: usize, cap: usize) -> Vec<usize> {
+    if n_p == 0 {
+        return vec![0];
+    }
+    let cap = cap.max(1);
+    let lo = ((n_p * 3) / 4).max(1);
+    let hi = ((n_p * 5).div_ceil(4)).max(n_p + 1).min(cap);
+    let mut v = vec![lo, n_p.min(cap), hi];
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
 /// Rank `searcher`'s feasible plans analytically, re-score the top
-/// `cfg.top_k` by short engine runs over the same `spec`-drawn workload,
-/// and return the plan with the best simulated goodput per dollar.
+/// `cfg.top_k` — each across its prefill-pool variants — by short engine
+/// runs over the same `spec`-drawn workload, and return the plan with the
+/// best simulated goodput per dollar.
 ///
 /// Returns `None` when no feasible plan exists. Deterministic: the workload
 /// and every gating draw derive from `cfg.seed`, candidate order is
@@ -146,32 +173,39 @@ pub fn validate_top_k(
     plans.truncate(cfg.top_k.max(1));
 
     let requests = spec.generate(cfg.requests.max(1), cfg.seed ^ WORKLOAD_SALT);
-    let mut candidates = Vec::with_capacity(plans.len());
+    let mut candidates = Vec::new();
     for (rank, plan) in plans.into_iter().enumerate() {
-        let cost = plan.metrics.cost.max(f64::MIN_POSITIVE);
-        let sim_cfg = ClusterSimConfig {
-            popularity: cfg.popularity,
-            seed: cfg.seed,
-            tenants: spec.tenants.clone(),
-            ..ClusterSimConfig::new(
-                searcher.model.clone(),
-                searcher.cluster.clone(),
-                plan.clone(),
-            )
-        };
-        let rep = ClusterSim::new(sim_cfg).run(&requests);
-        let attainment = if rep.tenants.is_empty() {
-            1.0
-        } else {
-            rep.tenants.iter().map(|t| t.attainment()).sum::<f64>() / rep.tenants.len() as f64
-        };
-        candidates.push(CandidateScore {
-            goodput_per_dollar: rep.throughput * attainment / cost,
-            simulated_throughput: rep.throughput,
-            attainment,
-            analytic_rank: rank,
-            plan,
-        });
+        for n_p in prefill_variants(plan.n_p, searcher.limits.max_prefill_nodes) {
+            let mut plan = plan.clone();
+            plan.n_p = n_p;
+            // Goodput per TOTAL dollar: the decode instance's Table-3 cost
+            // plus the prefill pool's.
+            let cost = (plan.metrics.cost + plan.prefill_cost(&searcher.cluster))
+                .max(f64::MIN_POSITIVE);
+            let sim_cfg = ClusterSimConfig {
+                popularity: cfg.popularity,
+                seed: cfg.seed,
+                tenants: spec.tenants.clone(),
+                ..ClusterSimConfig::new(
+                    searcher.model.clone(),
+                    searcher.cluster.clone(),
+                    plan.clone(),
+                )
+            };
+            let rep = ClusterSim::new(sim_cfg).run(&requests);
+            let attainment = if rep.tenants.is_empty() {
+                1.0
+            } else {
+                rep.tenants.iter().map(|t| t.attainment()).sum::<f64>() / rep.tenants.len() as f64
+            };
+            candidates.push(CandidateScore {
+                goodput_per_dollar: rep.throughput * attainment / cost,
+                simulated_throughput: rep.throughput,
+                attainment,
+                analytic_rank: rank,
+                plan,
+            });
+        }
     }
 
     // First strict maximum wins: on exact ties the analytically
@@ -228,7 +262,7 @@ pub fn validate_heterogeneous(
                 popularity: cfg.popularity,
                 seed: cfg.seed,
                 tenants: spec.tenants.clone(),
-                ..ClusterSimConfig::new(model.clone(), cluster, r.plan.clone())
+                ..ClusterSimConfig::new(model.clone(), cluster.clone(), r.plan.clone())
             };
             let rep = ClusterSim::new(sim_cfg).run(&requests);
             let attainment = if rep.tenants.is_empty() {
@@ -236,7 +270,8 @@ pub fn validate_heterogeneous(
             } else {
                 rep.tenants.iter().map(|t| t.attainment()).sum::<f64>() / rep.tenants.len() as f64
             };
-            let cost = r.plan.metrics.cost.max(f64::MIN_POSITIVE);
+            let cost = (r.plan.metrics.cost + r.plan.prefill_cost(&cluster))
+                .max(f64::MIN_POSITIVE);
             let score = rep.throughput * attainment / cost;
             (r, score)
         })
@@ -288,7 +323,7 @@ mod tests {
     }
 
     #[test]
-    fn candidates_cover_top_k_in_rank_order() {
+    fn candidates_cover_top_k_with_prefill_variants() {
         let searcher = tiny_searcher();
         let cfg = ValidationConfig {
             top_k: 2,
@@ -297,14 +332,42 @@ mod tests {
             popularity: ExpertPopularity::Ideal,
         };
         let v = validate_top_k(&searcher, &tiny_spec(), &cfg).expect("plan");
-        assert!(v.candidates.len() <= 2 && !v.candidates.is_empty());
-        for (i, c) in v.candidates.iter().enumerate() {
-            assert_eq!(c.analytic_rank, i);
+        assert!(!v.candidates.is_empty());
+        // Rank-major order; the prefill-pool dimension ascends within a
+        // rank and covers more than one pool size.
+        for w in v.candidates.windows(2) {
+            assert!(w[0].analytic_rank <= w[1].analytic_rank);
+            if w[0].analytic_rank == w[1].analytic_rank {
+                assert!(w[0].plan.n_p < w[1].plan.n_p, "variants ascend");
+            }
+        }
+        let ranks: std::collections::BTreeSet<usize> =
+            v.candidates.iter().map(|c| c.analytic_rank).collect();
+        assert!(ranks.contains(&0) && ranks.len() <= 2);
+        let pools: std::collections::BTreeSet<usize> = v
+            .candidates
+            .iter()
+            .filter(|c| c.analytic_rank == 0)
+            .map(|c| c.plan.n_p)
+            .collect();
+        assert!(pools.len() >= 2, "prefill dimension searched: {pools:?}");
+        for c in &v.candidates {
             assert!(c.simulated_throughput > 0.0);
             assert!(c.goodput_per_dollar > 0.0);
             assert_eq!(c.attainment, 1.0, "single-tenant => attainment 1");
         }
         assert!(v.chosen < v.candidates.len());
+    }
+
+    #[test]
+    fn prefill_variants_deterministic_and_bounded() {
+        assert_eq!(prefill_variants(0, 64), vec![0]);
+        assert_eq!(prefill_variants(1, 64), vec![1, 2]);
+        assert_eq!(prefill_variants(8, 64), vec![6, 8, 10]);
+        assert_eq!(prefill_variants(64, 64), vec![48, 64]);
+        for v in prefill_variants(26, 64) {
+            assert!((1..=64).contains(&v));
+        }
     }
 
     #[test]

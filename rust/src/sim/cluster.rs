@@ -10,10 +10,15 @@
 //! ```text
 //!            workload::Trace (Poisson/bursty/replayed JSONL,
 //!                             optional multi-tenant classes)
-//!                 │ Arrive events
+//!                 │ Arrive events (front-door admission control)
+//!                 ▼
+//!   PrefillPool: n_p full-model nodes, packed chunked-prefill passes
+//!                (requests: Queued → Prefill; colocated groups instead
+//!                chunk prompts inline through decode iterations)
+//!                 │ prompts done
 //!                 ▼
 //!       RouterFront (least-loaded / round-robin, KV-aware, FIFO overflow)
-//!                 │ Place events
+//!                 │ Place events → prompt-KV transfer → KvArrive
 //!                 ▼
 //!   AttentionPool: n_a nodes × ContinuousBatcher + BlockAllocator,
 //!                  per-node clocks; decode batch split into m micro-batches
@@ -41,6 +46,7 @@ use crate::config::{ClusterSpec, ModelConfig};
 use crate::coordinator::{softmax_topk, GatingOutput, RoutePolicy};
 use crate::m2n::LibraryKind;
 use crate::metrics::Histogram;
+use crate::perf_model::DEFAULT_PREFILL_CHUNK;
 use crate::plan::{DeploymentPlan, PlanMetrics};
 use crate::sim::engine::ClusterEngine;
 use crate::sim::SimRng;
@@ -131,6 +137,16 @@ pub struct ClusterSimConfig {
     /// processed, so feasible work still queued reports as
     /// `unserved_queued`. None = run to quiescence (serve everything).
     pub max_sim_seconds: Option<f64>,
+    /// Prefill-pool size for the disaggregated mode: full-model nodes
+    /// (each `plan.tp_p` GPUs) running packed chunked prefill ahead of the
+    /// decode pools. Defaults to the plan's sized pool (`plan.n_p`); 0
+    /// disables prefill modeling (legacy instant-KV admission, TTFT = pure
+    /// queue wait). Ignored by colocated mode, which prefills inline.
+    pub prefill_nodes: usize,
+    /// Chunked-prefill token budget: per pass on a prefill node, and per
+    /// iteration per colocated serving group (vLLM-style chunked prefill,
+    /// interfering with decode). 0 disables prefill modeling in BOTH modes.
+    pub prefill_chunk: usize,
     /// Serving architecture: disaggregated (default) or a colocated
     /// monolithic baseline fleet (`msi compare`).
     pub mode: EngineMode,
@@ -140,6 +156,7 @@ impl ClusterSimConfig {
     /// A scenario with the default knobs: least-loaded routing, uniform
     /// popularity, analytic transport, single tenant, no re-balancing.
     pub fn new(model: ModelConfig, cluster: ClusterSpec, plan: DeploymentPlan) -> Self {
+        let prefill_nodes = plan.n_p;
         Self {
             model,
             cluster,
@@ -151,6 +168,8 @@ impl ClusterSimConfig {
             tenants: Vec::new(),
             rebalance_period: None,
             max_sim_seconds: None,
+            prefill_nodes,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
             mode: EngineMode::Disaggregated,
         }
     }
@@ -168,6 +187,10 @@ impl ClusterSimConfig {
             tp_e: 0,
             n_a: plan.replicas.max(1),
             n_e: 0,
+            // No separate prefill pool: colocated groups chunk-prefill
+            // inline, interleaved with decode iterations.
+            n_p: 0,
+            tp_p: 0,
             m: 1,
             global_batch: plan.replicas.max(1) * plan.max_batch_per_group(),
             metrics: PlanMetrics::zeroed(),
@@ -191,6 +214,15 @@ pub struct TenantReport {
     pub completed: u64,
     /// Time-to-first-token distribution of the class.
     pub ttft: Histogram,
+    /// TTFT queue component of the class (arrival → first prefill chunk).
+    pub ttft_queue: Histogram,
+    /// TTFT prefill component of the class (chunked prompt compute).
+    pub ttft_prefill: Histogram,
+    /// TTFT KV-transfer component of the class (prefill→decode handoff).
+    pub ttft_transfer: Histogram,
+    /// TTFT first-decode component of the class (decode admission wait +
+    /// first decode iteration).
+    pub ttft_decode: Histogram,
     /// End-to-end latency distribution of the class.
     pub e2e: Histogram,
 }
@@ -212,15 +244,32 @@ pub struct ClusterReport {
     pub tokens: u64,
     /// Virtual time elapsed (seconds).
     pub elapsed: f64,
-    /// Decode iterations executed.
+    /// Engine iterations executed (decode, and — in colocated mode —
+    /// iterations carrying inline chunked-prefill passes, mixed or pure).
     pub iterations: u64,
     /// Output tokens per second.
     pub throughput: f64,
     /// Output tokens per second per GPU.
     pub per_gpu_throughput: f64,
-    /// Time to first token (admission wait + first decode iteration).
+    /// Time to first token: `queue + prefill + transfer + first decode`
+    /// per request (the four components are the `ttft_*` histograms, which
+    /// sum to this exactly request by request).
     pub ttft: Histogram,
-    /// Per-decode-iteration latency (time per output token).
+    /// TTFT component: arrival → first prefill chunk (front-door + prefill
+    /// queueing). With prefill modeling off this is arrival → placement.
+    pub ttft_queue: Histogram,
+    /// TTFT component: chunked prompt prefill (zero when prefill modeling
+    /// is off).
+    pub ttft_prefill: Histogram,
+    /// TTFT component: prompt-KV shipping from the prefill node to the
+    /// assigned decode attention node, including any wait for a decode
+    /// placement (zero in colocated mode — the KV never moves).
+    pub ttft_transfer: Histogram,
+    /// TTFT component: decode admission wait + the first decode iteration.
+    pub ttft_decode: Histogram,
+    /// Per-decode-iteration latency (time per output token; colocated
+    /// iterations that mix in prefill chunks count — that interference is
+    /// the vLLM-style chunked-prefill cost).
     pub tpot: Histogram,
     /// Request end-to-end latency (arrival → last token).
     pub e2e: Histogram,
@@ -234,6 +283,21 @@ pub struct ClusterReport {
     pub per_node_attn_busy: Vec<f64>,
     /// Per-expert-node busy fraction (per-rank clocks).
     pub per_node_expert_busy: Vec<f64>,
+    /// Per-prefill-node busy fraction (empty when the disaggregated
+    /// prefill pool is off or the mode is colocated).
+    pub per_node_prefill_busy: Vec<f64>,
+    /// Prompt tokens that completed (chunked) prefill — on the dedicated
+    /// pool or inline on colocated groups. Conservation: at quiescence with
+    /// prefill on this equals the summed `input_len` of completed requests.
+    pub prefilled_tokens: u64,
+    /// Prompt tokens whose KV was shipped over the prefill→decode link
+    /// (disaggregated mode only; colocated KV never moves).
+    pub kv_transferred_tokens: u64,
+    /// KV blocks still allocated across the decode attention nodes when the
+    /// run ended — 0 at quiescence (no leaked blocks across the
+    /// prefill→decode handoff); nonzero only for horizon-cut runs, where it
+    /// accounts exactly for the requests still mid-decode.
+    pub kv_blocks_in_use_at_end: u64,
     /// Requests whose KV footprint exceeds every node's whole budget — the
     /// fleet can *never* admit them (truly rejected).
     pub rejected: u64,
@@ -274,7 +338,8 @@ impl ClusterReport {
         let mut s = format!(
             "completed {} requests | {} output tokens in {:.3}s over {} iterations\n\
              throughput {:.1} tok/s | {:.3} tok/s/GPU\n\
-             TTFT  p50 {:.1} ms  p99 {:.1} ms\n\
+             TTFT  p50 {:.1} ms  p99 {:.1} ms  \
+             (p50 split: queue {:.1} + prefill {:.1} + xfer {:.1} + decode {:.1} ms)\n\
              TPOT  p50 {:.1} ms  p99 {:.1} ms\n\
              E2E   p50 {:.2} s   p99 {:.2} s\n\
              utilization: attention {:.1}%  expert {:.1}%\n\
@@ -288,6 +353,10 @@ impl ClusterReport {
             self.per_gpu_throughput,
             self.ttft.median() * 1e3,
             self.ttft.p99() * 1e3,
+            self.ttft_queue.median() * 1e3,
+            self.ttft_prefill.median() * 1e3,
+            self.ttft_transfer.median() * 1e3,
+            self.ttft_decode.median() * 1e3,
             self.tpot.median() * 1e3,
             self.tpot.p99() * 1e3,
             self.e2e.median(),
@@ -301,6 +370,15 @@ impl ClusterReport {
             self.unserved_queued,
             self.peak_in_flight,
         );
+        if self.prefilled_tokens > 0 {
+            s.push_str(&format!(
+                "\nprefill: {} prompt tokens chunk-prefilled | {} shipped to decode | \
+                 {} pool nodes",
+                self.prefilled_tokens,
+                self.kv_transferred_tokens,
+                self.per_node_prefill_busy.len(),
+            ));
+        }
         if self.rebalances > 0 {
             s.push_str(&format!("\nonline re-balances: {}", self.rebalances));
         }
@@ -339,6 +417,10 @@ impl ClusterReport {
                     .set("completed", t.completed)
                     .set("attainment", t.attainment())
                     .set("ttft", hist(&t.ttft))
+                    .set("ttft_queue", hist(&t.ttft_queue))
+                    .set("ttft_prefill", hist(&t.ttft_prefill))
+                    .set("ttft_transfer", hist(&t.ttft_transfer))
+                    .set("ttft_decode", hist(&t.ttft_decode))
                     .set("e2e", hist(&t.e2e))
             })
             .collect();
@@ -350,6 +432,10 @@ impl ClusterReport {
             .set("throughput", self.throughput)
             .set("per_gpu_throughput", self.per_gpu_throughput)
             .set("ttft", hist(&self.ttft))
+            .set("ttft_queue", hist(&self.ttft_queue))
+            .set("ttft_prefill", hist(&self.ttft_prefill))
+            .set("ttft_transfer", hist(&self.ttft_transfer))
+            .set("ttft_decode", hist(&self.ttft_decode))
             .set("tpot", hist(&self.tpot))
             .set("e2e", hist(&self.e2e))
             .set("attn_utilization", self.attn_utilization)
@@ -359,6 +445,10 @@ impl ClusterReport {
             ))
             .set("per_node_attn_busy", self.per_node_attn_busy.clone())
             .set("per_node_expert_busy", self.per_node_expert_busy.clone())
+            .set("per_node_prefill_busy", self.per_node_prefill_busy.clone())
+            .set("prefilled_tokens", self.prefilled_tokens)
+            .set("kv_transferred_tokens", self.kv_transferred_tokens)
+            .set("kv_blocks_in_use_at_end", self.kv_blocks_in_use_at_end)
             .set("rejected", self.rejected)
             .set("unserved_queued", self.unserved_queued)
             .set("peak_in_flight", self.peak_in_flight)
@@ -534,6 +624,9 @@ mod tests {
             ClusterSim::new(ClusterSimConfig {
                 popularity: pop,
                 seed: 9,
+                // Decode-stage anchor: prefill off, so the identical prefill
+                // phase cannot compress the popularity-driven gaps.
+                prefill_nodes: 0,
                 ..ClusterSimConfig::new(model.clone(), cluster.clone(), plan.clone())
             })
             .run(&reqs)

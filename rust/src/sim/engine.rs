@@ -8,10 +8,24 @@
 //! module decomposes it into an event-driven engine built on
 //! [`crate::sim::EventQueue`]:
 //!
+//! Requests walk an explicit lifecycle state machine, tracked per slot in
+//! the [`RequestTable`]:
+//!
 //! ```text
-//!   Event::Arrive ──► RouterFront ──Event::Place──► AttentionPool
-//!                                                        │ admission at
-//!   Event::IterBegin ◄── (armed by placements /          ▼ IterBegin
+//!   Queued ──► Prefill ──► KvTransfer ──► Decode ──► Done
+//! ```
+//!
+//! and the event graph mirrors it:
+//!
+//! ```text
+//!   Event::Arrive ──► front door (admission control) ──► PrefillPool
+//!                                                        (packed chunked
+//!        Event::PrefillPass ◄── per-node pass clock ──── passes, FIFO)
+//!             │ prompts done → RouterFront places on a decode node
+//!             ▼
+//!   Event::Place ──KV ships over the inter-pool link──► Event::KvArrive
+//!                                                        │ batcher submit
+//!   Event::IterBegin ◄── (armed by KV arrivals /         ▼ admission at
 //!                          end-of-iteration)      continuous batching
 //!                                                     + paged KV
 //!        │ kicks off the shared ping-pong core
@@ -26,13 +40,21 @@
 //!                                     observed loads, drifting Zipf)
 //! ```
 //!
-//! Each component implements [`Component`]: handle an event addressed to
-//! it, mutate local state, and emit future `(time, event)` pairs. All
+//! With prefill modeling off (`prefill_nodes = 0` / `prefill_chunk = 0`)
+//! the Prefill and KvTransfer phases are zero-length and placement happens
+//! at arrival — the legacy instant-KV behavior. In
+//! [`EngineMode::Colocated`] there is no separate pool: each serving group
+//! chunk-prefills its own backlog INSIDE decode iterations (vLLM-style
+//! chunked prefill), so prefill work visibly inflates the baseline's TPOT
+//! while the disaggregated pool leaves decode iterations untouched.
+//!
+//! Each pool component implements [`Component`]: handle an event addressed
+//! to it, mutate local state, and emit future `(time, event)` pairs. All
 //! cross-component interaction flows through events and the shared
-//! [`SimCtx`], so arrivals, pipeline hops and re-balancing interleave on a
-//! single deterministic queue. The ping-pong scheduling itself is the
-//! shared [`PipelineCore`] state machine — the same code that backs
-//! [`crate::coordinator::PingPongEngine`] and
+//! [`SimCtx`], so arrivals, prefill passes, pipeline hops and re-balancing
+//! interleave on a single deterministic queue. The ping-pong scheduling
+//! itself is the shared [`PipelineCore`] state machine — the same code
+//! that backs [`crate::coordinator::PingPongEngine`] and
 //! [`crate::plan::simulate_plan_des`], which are thin layers over it.
 //!
 //! Arrivals are *pulled*, not preloaded: the engine draws requests one at a
@@ -51,7 +73,7 @@ use crate::coordinator::{
 };
 use crate::m2n::{LibraryProfile, TransferModel};
 use crate::metrics::{Histogram, Utilization};
-use crate::perf_model::PerfModel;
+use crate::perf_model::{bandwidth_util, prefill_node_gpus, PerfModel, PrefillModel};
 use crate::sim::cluster::{
     draw_gating, popularity_weights, ClusterReport, ClusterSimConfig, EngineMode,
     ExpertPopularity, TenantReport, Transport,
@@ -72,9 +94,13 @@ pub const KV_BLOCK: u64 = 16;
 pub enum Event {
     /// The request in table slot `i` reaches the front door.
     Arrive(usize),
-    /// Router decision: place the request in slot `req` on attention node
-    /// `node`.
+    /// A prefill node finished one packed chunked pass over its queue.
+    PrefillPass { node: usize },
+    /// Router decision: place the request in slot `req` on decode
+    /// attention node `node` (its prompt KV then ships over the link).
     Place { req: usize, node: usize },
+    /// Prompt KV for slot `req` landed on decode attention node `node`.
+    KvArrive { req: usize, node: usize },
     /// Begin a decode iteration: admission + pipeline kickoff.
     IterBegin,
     /// Periodic §6 online re-balancing from observed expert loads.
@@ -83,11 +109,41 @@ pub enum Event {
     Pipe(PipeEvent),
 }
 
-/// One in-flight request plus its routing state.
+/// Lifecycle phase of an in-flight request — the explicit state machine
+/// `Queued → Prefill → KvTransfer → Decode → Done` the [`RequestTable`]
+/// tracks (`Done` is momentary: the slot is recycled immediately after).
+/// Transition timestamps feed the report's TTFT decomposition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestPhase {
+    /// Past admission control, waiting for prefill capacity (or, with
+    /// prefill modeling off, for a decode placement).
+    Queued,
+    /// Prompt being chunk-prefilled — on the dedicated pool, or inline on
+    /// a colocated serving group's backlog.
+    Prefill,
+    /// Prompt KV in flight from the prefill node to the assigned decode
+    /// attention node (includes any wait for a decode placement).
+    KvTransfer,
+    /// Submitted to a decode attention node: batcher waiting queue, then
+    /// the live continuous batch until the last output token.
+    Decode,
+    /// Fully decoded; the table slot is freed in the same event.
+    Done,
+}
+
+/// One in-flight request plus its routing and lifecycle state.
 struct InFlight {
     req: Request,
     /// Attention node the router placed the request on (None while queued).
     placed_on: Option<usize>,
+    /// Current lifecycle phase.
+    phase: RequestPhase,
+    /// When the first prefill chunk started (end of `Queued`).
+    prefill_start: f64,
+    /// When the last prefill chunk finished (start of `KvTransfer`).
+    prefill_end: f64,
+    /// When the prompt KV reached the decode node (start of `Decode`).
+    decode_entry: f64,
 }
 
 /// Dense free-list table of in-flight requests. A request occupies a slot
@@ -118,6 +174,10 @@ impl RequestTable {
         let entry = InFlight {
             req,
             placed_on: None,
+            phase: RequestPhase::Queued,
+            prefill_start: 0.0,
+            prefill_end: 0.0,
+            decode_entry: 0.0,
         };
         let slot = match self.free.pop() {
             Some(s) => {
@@ -138,6 +198,46 @@ impl RequestTable {
     /// never holds a slot id past completion).
     pub fn get(&self, slot: usize) -> &Request {
         &self.slots[slot].as_ref().expect("live request slot").req
+    }
+
+    /// Current lifecycle phase of the request in `slot`.
+    pub fn phase(&self, slot: usize) -> RequestPhase {
+        self.slots[slot].as_ref().expect("live request slot").phase
+    }
+
+    /// Advance the slot's lifecycle phase ONE step along
+    /// `Queued → Prefill → KvTransfer → Decode → Done`, stamping the
+    /// transition time the TTFT decomposition reads back at first-token
+    /// time. Skipped stages are driven through with zero duration by the
+    /// callers (e.g. no-prefill placement), never jumped over.
+    fn advance(&mut self, slot: usize, to: RequestPhase, now: f64) {
+        let e = self.slots[slot].as_mut().expect("live request slot");
+        debug_assert!(
+            matches!(
+                (e.phase, to),
+                (RequestPhase::Queued, RequestPhase::Prefill)
+                    | (RequestPhase::Prefill, RequestPhase::KvTransfer)
+                    | (RequestPhase::KvTransfer, RequestPhase::Decode)
+                    | (RequestPhase::Decode, RequestPhase::Done)
+            ),
+            "illegal phase transition {:?} -> {:?}",
+            e.phase,
+            to
+        );
+        match to {
+            RequestPhase::Prefill => e.prefill_start = now,
+            RequestPhase::KvTransfer => e.prefill_end = now,
+            RequestPhase::Decode => e.decode_entry = now,
+            RequestPhase::Queued | RequestPhase::Done => {}
+        }
+        e.phase = to;
+    }
+
+    /// Phase-transition timestamps `(prefill_start, prefill_end,
+    /// decode_entry)` of a request that reached the `Decode` phase.
+    fn timings(&self, slot: usize) -> (f64, f64, f64) {
+        let e = self.slots[slot].as_ref().expect("live request slot");
+        (e.prefill_start, e.prefill_end, e.decode_entry)
     }
 
     fn set_placed(&mut self, slot: usize, node: usize) {
@@ -261,6 +361,17 @@ impl StageModel {
             StageModel::Colocated(_) => 0.0,
         }
     }
+
+    /// Per-layer time of an inline chunked-prefill pass mixed into a
+    /// decode iteration (colocated groups only — the disaggregated path
+    /// prefills on its dedicated pool, outside decode iterations). The
+    /// engine passes in its once-built roofline `prefill` model.
+    pub fn prefill_layer_time(&self, prefill: &PrefillModel, tokens: f64, ctx: f64) -> f64 {
+        match self {
+            StageModel::Disaggregated(_) => 0.0,
+            StageModel::Colocated(cm) => cm.prefill_layer_time(prefill, tokens, ctx),
+        }
+    }
 }
 
 /// Per-iteration stage-time inputs derived from the live batch composition.
@@ -276,6 +387,17 @@ pub struct StageCtx {
     pub tok: Vec<usize>,
     /// Extra k4 weight-load floors when a node hosts several experts.
     pub extra_weight_loads: f64,
+    /// Decode tokens are present this iteration (a colocated iteration can
+    /// be pure inline prefill; such iterations record no TPOT sample).
+    pub has_decode: bool,
+    /// Per-node inline chunked-prefill time charged on this iteration's
+    /// first hop (colocated groups; all-zero on the disaggregated path).
+    pub prefill_node_time: Vec<f64>,
+    /// Per-node requests whose prompts finish prefilling when this
+    /// iteration ends — they join the decode batcher at end-of-iteration.
+    pub prefill_finish: Vec<Vec<usize>>,
+    /// Prompt tokens chunked through this iteration (inline prefill).
+    pub prefill_tokens: u64,
 }
 
 /// A simulation component: consumes an event addressed to it, mutates its
@@ -322,6 +444,54 @@ impl RouterFront {
         self.router.complete(node, r);
     }
 
+    /// Front-door admission control: returns true when the request could
+    /// never be served (KV footprint beyond any node's usable budget) and
+    /// was rejected, its slot recycled.
+    fn reject_if_infeasible(&mut self, req: usize, ctx: &mut SimCtx) -> bool {
+        // The bound is block-granular: a node's allocator holds only
+        // `floor(budget/KV_BLOCK)` whole blocks, so comparing against the
+        // raw token budget would admit requests whose prompt can never be
+        // block-admitted (permanent waiting-queue stall) or whose last few
+        // decode tokens would not fit. `need <= usable` also implies the
+        // prompt fits in whole blocks: `ceil(input/B) <= usable/B` because
+        // `input <= need`.
+        let need = {
+            let r = ctx.table.get(req);
+            (r.input_len + r.output_len) as u64
+        };
+        if need > self.usable_kv_tokens {
+            self.rejected += 1;
+            ctx.table.remove(req);
+            return true;
+        }
+        false
+    }
+
+    /// Route a (prefilled) request to a decode node, or park it in the
+    /// strictly-FIFO overflow queue until completions free capacity — a
+    /// request that does not fit *right now* blocks later ones from
+    /// jumping into freed capacity.
+    fn place_or_queue(
+        &mut self,
+        now: f64,
+        req: usize,
+        ctx: &mut SimCtx,
+        out: &mut Vec<(f64, Event)>,
+    ) {
+        if !self.overflow.is_empty() {
+            // Preserve FIFO admission behind a temporarily-unplaceable head.
+            self.overflow.push_back(req);
+            return;
+        }
+        match self.router.route(ctx.table.get(req)) {
+            Some(node) => {
+                ctx.table.set_placed(req, node);
+                out.push((now, Event::Place { req, node }));
+            }
+            None => self.overflow.push_back(req),
+        }
+    }
+
     /// FIFO-drain the overflow queue into placements, stopping at the first
     /// request that still does not fit.
     fn drain_overflow(&mut self, now: f64, ctx: &mut SimCtx, out: &mut Vec<(f64, Event)>) {
@@ -346,40 +516,161 @@ impl RouterFront {
     }
 }
 
-impl Component for RouterFront {
-    fn handle(&mut self, now: f64, ev: &Event, ctx: &mut SimCtx, out: &mut Vec<(f64, Event)>) {
-        let Event::Arrive(req) = *ev else { return };
-        // Admission control: a request no node could ever serve is
-        // rejected immediately (its slot is recycled) — parking it in the
-        // FIFO or a node's waiting queue would block the fleet forever.
-        // The bound is block-granular: a node's allocator holds only
-        // `floor(budget/KV_BLOCK)` whole blocks, so comparing against the
-        // raw token budget would admit requests whose prompt can never be
-        // block-admitted (permanent waiting-queue stall) or whose last few
-        // decode tokens would not fit. `need <= usable` also implies the
-        // prompt fits in whole blocks: `ceil(input/B) <= usable/B` because
-        // `input <= need`.
-        let need = {
-            let r = ctx.table.get(req);
-            (r.input_len + r.output_len) as u64
+// ---------------------------------------------------------- prefill pool --
+
+/// Take up to `budget` prompt tokens off a `(slot, remaining)` FIFO,
+/// packing across request boundaries — the ONE chunk-assembly rule shared
+/// by the dedicated pool and the colocated inline backlogs (the TTFT
+/// decomposition and the conservation counters both hang off it). Stamps
+/// `Queued → Prefill` on a prompt's first touch, pops finished prompts
+/// into `finish`, and returns `(tokens_taken, token-weighted mean
+/// attended context)`.
+fn take_prefill_chunk(
+    queue: &mut VecDeque<(usize, usize)>,
+    budget: usize,
+    now: f64,
+    table: &mut RequestTable,
+    finish: &mut Vec<usize>,
+) -> (usize, f64) {
+    let mut budget = budget;
+    let mut total = 0usize;
+    let mut wctx = 0.0f64;
+    while budget > 0 {
+        let Some(&(req, remaining)) = queue.front() else {
+            break;
         };
-        if need > self.usable_kv_tokens {
-            self.rejected += 1;
-            ctx.table.remove(req);
+        if table.phase(req) == RequestPhase::Queued {
+            table.advance(req, RequestPhase::Prefill, now);
+        }
+        let take = remaining.min(budget);
+        let done = table.get(req).input_len.saturating_sub(remaining);
+        wctx += take as f64 * (done as f64 + take as f64 / 2.0);
+        budget -= take;
+        total += take;
+        if take == remaining {
+            queue.pop_front();
+            finish.push(req);
+        } else {
+            queue.front_mut().expect("front exists").1 -= take;
+        }
+    }
+    let mean_ctx = if total > 0 {
+        (wctx / total as f64).max(1.0)
+    } else {
+        1.0
+    };
+    (total, mean_ctx)
+}
+
+/// One in-flight packed chunked pass on a prefill node.
+struct PrefillPass {
+    /// Requests whose prompts complete when this pass ends.
+    finish: Vec<usize>,
+    /// Prompt tokens the pass processes.
+    tokens: u64,
+}
+
+/// The dedicated prefill pool: `prefill_nodes` full-model instances (each
+/// `tp_p` GPUs) running packed chunked prefill. Each node owns a FIFO of
+/// prompts; a pass takes up to `chunk` tokens off the FIFO — PACKING
+/// across request boundaries, the way real prefill instances batch
+/// prompts — prices one pass through all layers at the token-weighted mean
+/// attended context, and hands finished prompts to the router for the KV
+/// shipment to a decode node. Requests are assigned whole to the node with
+/// the fewest pending prompt tokens (ties to the lowest index), so the
+/// pool is deterministic and a partially-prefilled prompt never migrates.
+pub struct PrefillPool {
+    chunk: usize,
+    layers: usize,
+    model: PrefillModel,
+    /// Per-node FIFO of `(slot, prompt tokens still to prefill)`.
+    queues: Vec<VecDeque<(usize, usize)>>,
+    /// Per-node prompt tokens queued OR in the node's current pass — the
+    /// least-loaded assignment key, so a node mid-pass never ties with a
+    /// genuinely idle one.
+    pending: Vec<u64>,
+    /// Per-node pass in flight.
+    pass: Vec<Option<PrefillPass>>,
+    /// Per-node cumulative busy seconds.
+    node_busy: Vec<f64>,
+    /// Prompt tokens that completed prefill on the pool (conservation
+    /// counter for the prefill→decode handoff).
+    pub prefilled_tokens: u64,
+}
+
+impl PrefillPool {
+    fn new(nodes: usize, chunk: usize, layers: usize, model: PrefillModel) -> Self {
+        let n = nodes.max(1);
+        Self {
+            chunk: chunk.max(1),
+            layers: layers.max(1),
+            model,
+            queues: vec![VecDeque::new(); n],
+            pending: vec![0; n],
+            pass: (0..n).map(|_| None).collect(),
+            node_busy: vec![0.0; n],
+            prefilled_tokens: 0,
+        }
+    }
+
+    /// Enqueue a request on the least-loaded node (by queued + in-pass
+    /// prompt tokens) and start a pass if that node is idle. Callers
+    /// guarantee a non-empty prompt.
+    fn submit(&mut self, now: f64, req: usize, ctx: &mut SimCtx, out: &mut Vec<(f64, Event)>) {
+        let tokens = ctx.table.get(req).input_len;
+        debug_assert!(tokens > 0, "empty prompts skip the prefill pool");
+        let node = (0..self.queues.len())
+            .min_by_key(|&i| (self.pending[i], i))
+            .expect("at least one prefill node");
+        self.queues[node].push_back((req, tokens));
+        self.pending[node] += tokens as u64;
+        if self.pass[node].is_none() {
+            self.start_pass(node, now, ctx, out);
+        }
+    }
+
+    /// Assemble and launch the next packed pass on `node`, scheduling its
+    /// completion. No-op when the node's queue is empty.
+    fn start_pass(&mut self, node: usize, now: f64, ctx: &mut SimCtx, out: &mut Vec<(f64, Event)>) {
+        debug_assert!(self.pass[node].is_none(), "node already mid-pass");
+        let mut finish = Vec::new();
+        let (total, ctx_mean) = take_prefill_chunk(
+            &mut self.queues[node],
+            self.chunk,
+            now,
+            &mut ctx.table,
+            &mut finish,
+        );
+        if total == 0 {
             return;
         }
-        if !self.overflow.is_empty() {
-            // Preserve FIFO admission behind a temporarily-unplaceable head.
-            self.overflow.push_back(req);
-            return;
+        let dur = self.layers as f64 * self.model.chunk_layer_time(total as f64, ctx_mean);
+        self.node_busy[node] += dur;
+        self.pass[node] = Some(PrefillPass {
+            finish,
+            tokens: total as u64,
+        });
+        out.push((now + dur, Event::PrefillPass { node }));
+    }
+
+    /// A pass completed: advance its finished prompts into `KvTransfer`
+    /// and return them for routing to decode nodes.
+    fn finish_pass(&mut self, node: usize, now: f64, ctx: &mut SimCtx) -> Vec<usize> {
+        let pass = self.pass[node].take().expect("pass in flight");
+        // The pass's tokens stop counting toward the node's load only now
+        // that they are done.
+        self.pending[node] -= pass.tokens;
+        self.prefilled_tokens += pass.tokens;
+        for &req in &pass.finish {
+            ctx.table.advance(req, RequestPhase::KvTransfer, now);
         }
-        match self.router.route(ctx.table.get(req)) {
-            Some(node) => {
-                ctx.table.set_placed(req, node);
-                out.push((now, Event::Place { req, node }));
-            }
-            None => self.overflow.push_back(req),
-        }
+        pass.finish
+    }
+
+    /// Requests queued or mid-pass on the pool (horizon accounting).
+    fn in_pool(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum::<usize>()
+            + self.pass.iter().flatten().map(|p| p.finish.len()).sum::<usize>()
     }
 }
 
@@ -389,6 +680,29 @@ impl Component for RouterFront {
 struct AttnNode {
     batcher: ContinuousBatcher,
     kv: BlockAllocator,
+    /// Colocated inline-prefill backlog: `(slot, prompt tokens left)` —
+    /// chunked through decode iterations (empty in disaggregated mode).
+    backlog: VecDeque<(usize, usize)>,
+}
+
+/// Result of advancing the colocated inline-prefill backlogs one chunk.
+struct PrefillAdvance {
+    /// Per-node per-layer prefill time charged to this iteration.
+    node_time: Vec<f64>,
+    /// Per-node requests whose prompts finish when this iteration ends.
+    finish: Vec<Vec<usize>>,
+    /// Prompt tokens taken this iteration across the pool.
+    tokens: u64,
+}
+
+impl PrefillAdvance {
+    fn none(nodes: usize) -> Self {
+        Self {
+            node_time: vec![0.0; nodes],
+            finish: vec![Vec::new(); nodes],
+            tokens: 0,
+        }
+    }
 }
 
 /// What one attention node produced in one decode iteration.
@@ -423,6 +737,7 @@ impl AttentionPool {
                     block_size: KV_BLOCK as usize,
                     num_blocks: (kv_tokens / KV_BLOCK) as usize,
                 }),
+                backlog: VecDeque::new(),
             })
             .collect();
         Self {
@@ -456,6 +771,56 @@ impl AttentionPool {
         self.nodes.iter().any(|n| n.batcher.has_work())
     }
 
+    /// Requests parked on the inline-prefill backlogs (colocated mode).
+    fn backlog_requests(&self) -> usize {
+        self.nodes.iter().map(|n| n.backlog.len()).sum()
+    }
+
+    /// Park a request on `node`'s inline-prefill backlog (callers
+    /// guarantee a non-empty prompt).
+    fn enqueue_prefill(&mut self, node: usize, req: usize, tokens: usize) {
+        debug_assert!(tokens > 0, "empty prompts skip inline prefill");
+        self.nodes[node].backlog.push_back((req, tokens));
+    }
+
+    /// Submit a prefill-complete request to `node`'s decode batcher.
+    fn submit_to(&mut self, node: usize, r: Request) {
+        self.nodes[node].batcher.submit(r);
+    }
+
+    /// KV blocks currently allocated across the pool (leak accounting).
+    fn allocated_kv_blocks(&self) -> u64 {
+        self.nodes.iter().map(|n| n.kv.allocated_blocks() as u64).sum()
+    }
+
+    /// Colocated inline chunked prefill: take up to `chunk` prompt tokens
+    /// off each node's backlog for this iteration (packing across request
+    /// boundaries), pricing each node's pass via `time(tokens, mean_ctx)`
+    /// — the per-layer chunk cost charged on top of the decode layer time.
+    fn advance_prefill(
+        &mut self,
+        chunk: usize,
+        now: f64,
+        ctx: &mut SimCtx,
+        time: &dyn Fn(f64, f64) -> f64,
+    ) -> PrefillAdvance {
+        let mut adv = PrefillAdvance::none(self.nodes.len());
+        for (nid, node) in self.nodes.iter_mut().enumerate() {
+            let (total, mean_ctx) = take_prefill_chunk(
+                &mut node.backlog,
+                chunk,
+                now,
+                &mut ctx.table,
+                &mut adv.finish[nid],
+            );
+            if total > 0 {
+                adv.node_time[nid] = time(total as f64, mean_ctx);
+                adv.tokens += total as u64;
+            }
+        }
+        adv
+    }
+
     /// Live-batch mean sequence length, weighted by per-node batch size.
     fn avg_seq(&self) -> f64 {
         let total = self.batch_total();
@@ -479,15 +844,34 @@ impl AttentionPool {
     }
 
     /// Attention stage time for hop `mb`: the slowest node paces the pool;
-    /// each node's own clock is charged its actual share.
+    /// each node's own clock is charged its actual share. Hop 0 of a
+    /// colocated iteration additionally carries the iteration's inline
+    /// chunked-prefill passes: decode and chunk run back to back on each
+    /// group, so the pace is the per-node max of `t_a(share) + chunk
+    /// time` (not the sum of the two maxima — the slowest decode node and
+    /// the heaviest chunk may be different groups).
     fn hop_t_a(&mut self, stage: &StageCtx, mb: usize) -> f64 {
+        // Empty-micro-batch floor: a hop with b_a = 0 still paces at k2
+        // while any decode is live (the historical behavior the Eq. 4–6
+        // anchors pin); per-node totals can only raise this.
+        let mut pace = if stage.has_decode {
+            stage.pm.t_a(stage.b_a[mb])
+        } else {
+            0.0
+        };
         for (n, busy) in self.node_busy.iter_mut().enumerate() {
             let share = stage.share[n][mb];
+            let extra = if mb == 0 { stage.prefill_node_time[n] } else { 0.0 };
+            let mut t = extra;
             if share > 0 {
-                *busy += stage.pm.t_a(share as f64);
+                t += stage.pm.t_a(share as f64);
             }
+            if t > 0.0 {
+                *busy += t;
+            }
+            pace = pace.max(t);
         }
-        stage.pm.t_a(stage.b_a[mb])
+        pace
     }
 
     /// End-of-iteration bookkeeping for one node: extend KV, retire
@@ -512,7 +896,8 @@ impl AttentionPool {
 
 impl Component for AttentionPool {
     fn handle(&mut self, now: f64, ev: &Event, ctx: &mut SimCtx, out: &mut Vec<(f64, Event)>) {
-        let Event::Place { req, node } = *ev else { return };
+        let Event::KvArrive { req, node } = *ev else { return };
+        ctx.table.advance(req, RequestPhase::Decode, now);
         // The clone the batcher owns carries the table *slot* as its live
         // id, so KV accounting and completion callbacks come back
         // slot-keyed; slots are unique among in-flight requests and only
@@ -520,7 +905,7 @@ impl Component for AttentionPool {
         let mut r = ctx.table.get(req).clone();
         r.id = req as u64;
         self.nodes[node].batcher.submit(r);
-        // A placement while the pool is idle re-arms the iteration clock.
+        // A KV arrival while the pool is idle re-arms the iteration clock.
         if !ctx.in_iteration && !ctx.iter_pending {
             ctx.iter_pending = true;
             out.push((now, Event::IterBegin));
@@ -739,7 +1124,25 @@ impl Component for ExpertPool {
 struct TenantAcc {
     completed: u64,
     ttft: Histogram,
+    ttft_queue: Histogram,
+    ttft_prefill: Histogram,
+    ttft_transfer: Histogram,
+    ttft_decode: Histogram,
     e2e: Histogram,
+}
+
+impl TenantAcc {
+    fn new() -> Self {
+        Self {
+            completed: 0,
+            ttft: Histogram::new(),
+            ttft_queue: Histogram::new(),
+            ttft_prefill: Histogram::new(),
+            ttft_transfer: Histogram::new(),
+            ttft_decode: Histogram::new(),
+            e2e: Histogram::new(),
+        }
+    }
 }
 
 /// The end-to-end cluster engine: components wired onto one event queue,
@@ -750,6 +1153,26 @@ pub struct ClusterEngine {
     q: EventQueue<Event>,
     ctx: SimCtx,
     router: RouterFront,
+    /// Dedicated prefill pool (None = prefill modeling off, or colocated
+    /// mode where groups prefill inline).
+    prefill: Option<PrefillPool>,
+    /// GPUs per prefill node (the per-GPU-throughput divisor includes the
+    /// pool).
+    prefill_tp: usize,
+    /// Once-built roofline for colocated inline chunked-prefill passes
+    /// (None when inline prefill can never run). Hoisted out of the
+    /// per-iteration `ColocatedModel` rebuild: it does not depend on the
+    /// live batch.
+    inline_prefill_model: Option<PrefillModel>,
+    /// Aggregate NIC bandwidth of the narrower end of the prefill→decode
+    /// KV link, bytes/s.
+    kv_link_bw: f64,
+    /// KV transfers currently on the wire.
+    in_transfer: usize,
+    /// Prompt tokens shipped over the prefill→decode link.
+    kv_transferred_tokens: u64,
+    /// Prompt tokens chunk-prefilled inline on colocated groups.
+    inline_prefilled_tokens: u64,
     attention: AttentionPool,
     link: M2nLink,
     experts: ExpertPool,
@@ -758,6 +1181,10 @@ pub struct ClusterEngine {
     peak_events: usize,
     // metrics
     ttft: Histogram,
+    ttft_queue: Histogram,
+    ttft_prefill: Histogram,
+    ttft_transfer: Histogram,
+    ttft_decode: Histogram,
     tpot: Histogram,
     e2e: Histogram,
     attn_util: Utilization,
@@ -790,15 +1217,23 @@ impl ClusterEngine {
         // both degrade to "off".
         cfg.rebalance_period = cfg.rebalance_period.filter(|p| *p > 0.0);
         cfg.max_sim_seconds = cfg.max_sim_seconds.filter(|h| *h > 0.0);
+        // A zero chunk budget disables prefill modeling entirely; a
+        // zero-node pool likewise (legacy instant-KV admission).
+        if cfg.prefill_chunk == 0 {
+            cfg.prefill_nodes = 0;
+        }
         // Colocated baselines have no separate expert stage or M2N link:
         // expert compute and the (unoverlapped) all-to-all live inside the
         // layer time, so popularity draws, simnet transport and §6
         // re-balancing do not apply — normalize them off so same-seed runs
-        // are identical however the caller filled those fields.
+        // are identical however the caller filled those fields. Prefill
+        // runs INLINE on the serving groups (keyed off `prefill_chunk`),
+        // never on a dedicated pool.
         if matches!(cfg.mode, EngineMode::Colocated(_)) {
             cfg.popularity = ExpertPopularity::Ideal;
             cfg.transport = Transport::Analytic;
             cfg.rebalance_period = None;
+            cfg.prefill_nodes = 0;
         }
         let n_a = cfg.plan.n_a.max(1);
         let n_e = cfg.plan.n_e.max(1);
@@ -849,19 +1284,46 @@ impl ClusterEngine {
         let router = Router::new(cfg.route, &vec![kv_tokens; n_a]);
         let node_batch = cfg.plan.global_batch.div_ceil(n_a).max(1);
 
-        let tenant_stats = cfg
-            .tenants
-            .iter()
-            .map(|_| TenantAcc {
-                completed: 0,
-                ttft: Histogram::new(),
-                e2e: Histogram::new(),
-            })
-            .collect();
+        let tenant_stats = cfg.tenants.iter().map(|_| TenantAcc::new()).collect();
+
+        // --- prefill pool + KV link -------------------------------------
+        let attn_gpu = cfg.cluster.attention_gpu();
+        let prefill_tp = if cfg.plan.tp_p > 0 {
+            cfg.plan.tp_p
+        } else {
+            prefill_node_gpus(&cfg.model, &cfg.cluster)
+        };
+        let prefill = (cfg.prefill_nodes > 0).then(|| {
+            PrefillPool::new(
+                cfg.prefill_nodes,
+                cfg.prefill_chunk,
+                cfg.model.layers.max(1),
+                PrefillModel::new(&cfg.model, &attn_gpu, prefill_tp),
+            )
+        });
+        let inline_prefill_model = match &cfg.mode {
+            EngineMode::Colocated(cp) if cfg.prefill_chunk > 0 => {
+                Some(ColocatedModel::prefill_model(cp, &cfg.model, &cfg.cluster))
+            }
+            _ => None,
+        };
+        // The KV shipment bottleneck is the narrower end of the link: the
+        // sending prefill node's or the receiving decode node's aggregate
+        // NIC rate (per-request transfers are independent; cross-request
+        // wire contention is not modeled).
+        let kv_link_bw =
+            attn_gpu.nic_gbps * 1e9 / 8.0 * cfg.plan.tp_a.max(1).min(prefill_tp) as f64;
 
         Self {
             source,
             router: RouterFront::new(router, kv_tokens),
+            prefill,
+            prefill_tp,
+            inline_prefill_model,
+            kv_link_bw,
+            in_transfer: 0,
+            kv_transferred_tokens: 0,
+            inline_prefilled_tokens: 0,
             attention: AttentionPool::new(n_a, node_batch, kv_tokens),
             link: M2nLink::new(transfer, top_k),
             experts: ExpertPool::new(experts, n_e, top_k, cfg.popularity, weights, oracle_balance),
@@ -880,6 +1342,10 @@ impl ClusterEngine {
             pipeline: None,
             peak_events: 0,
             ttft: Histogram::new(),
+            ttft_queue: Histogram::new(),
+            ttft_prefill: Histogram::new(),
+            ttft_transfer: Histogram::new(),
+            ttft_decode: Histogram::new(),
             tpot: Histogram::new(),
             e2e: Histogram::new(),
             attn_util: Utilization::new(),
@@ -914,7 +1380,9 @@ impl ClusterEngine {
             self.elapsed = self.elapsed.max(now);
             match ev {
                 Event::Arrive(slot) => self.on_arrive(now, slot, &mut out),
-                Event::Place { .. } => self.attention.handle(now, &ev, &mut self.ctx, &mut out),
+                Event::PrefillPass { node } => self.on_prefill_pass(now, node, &mut out),
+                Event::Place { req, node } => self.on_place(now, req, node, &mut out),
+                Event::KvArrive { req, node } => self.on_kv_arrive(now, req, node, true, &mut out),
                 Event::Rebalance => self.experts.handle(now, &ev, &mut self.ctx, &mut out),
                 Event::IterBegin => self.begin_iteration(now, &mut out),
                 Event::Pipe(pe) => self.on_pipe(now, pe, &mut out),
@@ -927,13 +1395,12 @@ impl ClusterEngine {
         self.finalize()
     }
 
-    /// One arrival fired: route it, absorb every queued arrival sharing its
-    /// timestamp (this preserves the route-then-place event order a
-    /// preloaded closed-loop burst would have produced), then schedule the
-    /// next future arrival to continue the chain.
+    /// One arrival fired: run it through the front door, absorb every
+    /// queued arrival sharing its timestamp (this preserves the event
+    /// order a preloaded closed-loop burst would have produced), then
+    /// schedule the next future arrival to continue the chain.
     fn on_arrive(&mut self, now: f64, slot: usize, out: &mut Vec<(f64, Event)>) {
-        self.router
-            .handle(now, &Event::Arrive(slot), &mut self.ctx, out);
+        self.front_door(now, slot, out);
         while let Some(r) = self.source.next_request() {
             // Sources yield non-decreasing arrival times; clamp defensively
             // so a mis-sorted trace degrades to "arrives now" instead of
@@ -941,7 +1408,7 @@ impl ClusterEngine {
             let at = r.arrival.max(0.0).max(now);
             let s = self.ctx.table.insert(r);
             if at <= now {
-                self.router.handle(now, &Event::Arrive(s), &mut self.ctx, out);
+                self.front_door(now, s, out);
             } else {
                 out.push((at, Event::Arrive(s)));
                 break;
@@ -949,13 +1416,112 @@ impl ClusterEngine {
         }
     }
 
-    /// Iteration boundary: admission on every node, stage-context build,
-    /// pipeline kickoff. A boundary with an empty batch simply goes idle —
-    /// the next placement re-arms the clock.
+    /// Colocated groups chunk-prefill inline on their own backlogs (no
+    /// dedicated pool) — the single source of truth for that predicate.
+    fn inline_prefill(&self) -> bool {
+        matches!(self.cfg.mode, EngineMode::Colocated(_)) && self.cfg.prefill_chunk > 0
+    }
+
+    /// The front door: admission-control reject, then hand the request to
+    /// the prefill pool — or straight to the router when prefill runs
+    /// inline (colocated), is off, or the prompt is empty (a hand-written
+    /// trace can carry `input_len: 0`; there is nothing to prefill, and a
+    /// phantom token would break the conservation counters).
+    fn front_door(&mut self, now: f64, slot: usize, out: &mut Vec<(f64, Event)>) {
+        if self.router.reject_if_infeasible(slot, &mut self.ctx) {
+            return;
+        }
+        match self.prefill.as_mut() {
+            Some(pool) if self.ctx.table.get(slot).input_len > 0 => {
+                pool.submit(now, slot, &mut self.ctx, out)
+            }
+            _ => self.router.place_or_queue(now, slot, &mut self.ctx, out),
+        }
+    }
+
+    /// A prefill node finished a packed pass: route the completed prompts
+    /// toward decode nodes and start the node's next pass.
+    fn on_prefill_pass(&mut self, now: f64, node: usize, out: &mut Vec<(f64, Event)>) {
+        let pool = self.prefill.as_mut().expect("prefill pass without a pool");
+        let finished = pool.finish_pass(node, now, &mut self.ctx);
+        for req in finished {
+            self.router.place_or_queue(now, req, &mut self.ctx, out);
+        }
+        let pool = self.prefill.as_mut().expect("pool still present");
+        pool.start_pass(node, now, &mut self.ctx, out);
+    }
+
+    /// Router placement decided: run the prompt-KV handoff leg. With the
+    /// dedicated pool on, the KV ships over the inter-pool link; colocated
+    /// groups instead park the request on the node's inline-prefill
+    /// backlog; with prefill modeling off the request reaches the batcher
+    /// immediately (zero-length Prefill/KvTransfer phases).
+    fn on_place(&mut self, now: f64, req: usize, node: usize, out: &mut Vec<(f64, Event)>) {
+        let input_len = self.ctx.table.get(req).input_len;
+        if self.inline_prefill() && input_len > 0 {
+            self.attention.enqueue_prefill(node, req, input_len);
+            if !self.ctx.in_iteration && !self.ctx.iter_pending {
+                self.ctx.iter_pending = true;
+                out.push((now, Event::IterBegin));
+            }
+            return;
+        }
+        if self.ctx.table.phase(req) == RequestPhase::Queued {
+            // No prefill ahead of this placement (prefill off, or an empty
+            // prompt): zero-length Prefill and KvTransfer phases keep the
+            // TTFT decomposition exact.
+            self.ctx.table.advance(req, RequestPhase::Prefill, now);
+            self.ctx.table.advance(req, RequestPhase::KvTransfer, now);
+        }
+        if self.prefill.is_some() && input_len > 0 {
+            let dur = self.kv_transfer_time(input_len);
+            self.in_transfer += 1;
+            out.push((now + dur, Event::KvArrive { req, node }));
+        } else {
+            self.on_kv_arrive(now, req, node, false, out);
+        }
+    }
+
+    /// Prompt KV landed on the decode node: submit to its batcher.
+    fn on_kv_arrive(
+        &mut self,
+        now: f64,
+        req: usize,
+        node: usize,
+        from_wire: bool,
+        out: &mut Vec<(f64, Event)>,
+    ) {
+        if from_wire {
+            self.in_transfer -= 1;
+            self.kv_transferred_tokens += self.ctx.table.get(req).input_len as u64;
+        }
+        let ev = Event::KvArrive { req, node };
+        self.attention.handle(now, &ev, &mut self.ctx, out);
+    }
+
+    /// Wire time of one prompt-KV shipment over the prefill→decode link:
+    /// the simnet-calibrated [`TransferModel`] when the scenario runs
+    /// simnet transport (the same link model the M2N dispatch/combine path
+    /// uses), or the analytic NIC bandwidth-utilization curve otherwise.
+    fn kv_transfer_time(&self, input_len: usize) -> f64 {
+        let bytes = (input_len.max(1) as f64) * self.cfg.model.kv_bytes_per_token();
+        match &self.link.transfer {
+            Some(tm) => tm.latency(bytes),
+            None => {
+                bytes / (self.kv_link_bw * bandwidth_util(bytes, self.kv_link_bw, 6e-6)).max(1e-9)
+            }
+        }
+    }
+
+    /// Iteration boundary: admission on every node, inline-prefill chunk
+    /// selection (colocated), stage-context build, pipeline kickoff. A
+    /// boundary with neither decode nor backlog work simply goes idle —
+    /// the next KV arrival or placement re-arms the clock.
     fn begin_iteration(&mut self, now: f64, out: &mut Vec<(f64, Event)>) {
         self.ctx.iter_pending = false;
         self.attention.admit_all(now);
-        if self.attention.batch_total() == 0 {
+        let has_backlog = self.inline_prefill() && self.attention.backlog_requests() > 0;
+        if self.attention.batch_total() == 0 && !has_backlog {
             return;
         }
         // Periodic §6 online re-balancing, applied before this iteration's
@@ -991,6 +1557,24 @@ impl ClusterEngine {
                 avg_seq,
             )),
         };
+        // Colocated inline chunked prefill: take this iteration's chunk
+        // off each node's backlog; the per-node pass times ride on hop 0
+        // and the finished prompts join the batchers at end-of-iteration.
+        let adv = if has_backlog {
+            let ipm = self
+                .inline_prefill_model
+                .as_ref()
+                .expect("inline prefill implies a colocated prefill model");
+            self.attention.advance_prefill(
+                self.cfg.prefill_chunk,
+                now,
+                &mut self.ctx,
+                &|tokens, ctx| pm.prefill_layer_time(ipm, tokens, ctx),
+            )
+        } else {
+            PrefillAdvance::none(self.attention.len())
+        };
+
         let share = self.attention.splits(m);
         let b_a: Vec<f64> = (0..m)
             .map(|j| share.iter().map(|s| s[j]).max().unwrap_or(0) as f64)
@@ -1007,6 +1591,10 @@ impl ClusterEngine {
             b_a,
             tok,
             extra_weight_loads,
+            has_decode: self.attention.batch_total() > 0,
+            prefill_node_time: adv.node_time,
+            prefill_finish: adv.finish,
+            prefill_tokens: adv.tokens,
         });
         self.ctx.in_iteration = true;
 
@@ -1051,17 +1639,38 @@ impl ClusterEngine {
         }
     }
 
-    /// End of a decode iteration: latency/utilization metrics, per-node
-    /// token accounting, completions back to the router, FIFO overflow
-    /// drain into the freed capacity, and the next iteration boundary.
+    /// End of an iteration: latency/utilization metrics, inline-prefill
+    /// completions into the batchers, per-node token accounting,
+    /// completions back to the router, FIFO overflow drain into the freed
+    /// capacity, and the next iteration boundary.
     fn end_iteration(&mut self, now: f64, stats: PipelineStats, out: &mut Vec<(f64, Event)>) {
+        let stage = self.ctx.stage.take().expect("iteration stage context");
         let t_iter = stats.total_time;
         self.attn_util.add_busy(stats.attn_utilization * t_iter);
         self.expert_util.add_busy(stats.expert_utilization * t_iter);
-        self.tpot.record(t_iter);
+        // A pure inline-prefill iteration decodes nothing: no TPOT sample.
+        // Mixed iterations DO count — chunked-prefill interference is
+        // exactly what inflates the colocated baseline's TPOT.
+        if stage.has_decode {
+            self.tpot.record(t_iter);
+        }
         self.iterations += 1;
         self.ctx.in_iteration = false;
-        self.ctx.stage = None;
+
+        // Inline-prefill completions: the prompts whose last chunk ran this
+        // iteration join their node's batcher (admitted at the next
+        // boundary), crossing Prefill → KvTransfer → Decode with a
+        // zero-length transfer (the KV never leaves the group).
+        self.inline_prefilled_tokens += stage.prefill_tokens;
+        for (nid, slots) in stage.prefill_finish.iter().enumerate() {
+            for &slot in slots {
+                self.ctx.table.advance(slot, RequestPhase::KvTransfer, now);
+                self.ctx.table.advance(slot, RequestPhase::Decode, now);
+                let mut r = self.ctx.table.get(slot).clone();
+                r.id = slot as u64;
+                self.attention.submit_to(nid, r);
+            }
+        }
 
         for nid in 0..self.attention.len() {
             let outcome = self.attention.finish_node_iteration(nid);
@@ -1069,13 +1678,37 @@ impl ClusterEngine {
             // by slot); the table maps them back to arrival/tenant state.
             for id in outcome.first {
                 let slot = id as usize;
-                let r = self.ctx.table.get(slot);
-                let wait = now - r.arrival;
-                let tenant = r.tenant;
-                self.ttft.record(wait);
+                let (p_start, p_end, d_entry) = self.ctx.table.timings(slot);
+                let (arrival, tenant) = {
+                    let r = self.ctx.table.get(slot);
+                    (r.arrival, r.tenant)
+                };
+                // The four components telescope to the TTFT exactly,
+                // request by request (the decomposition invariant the
+                // regression suite pins).
+                let ttft = now - arrival;
+                let queue = p_start - arrival;
+                let prefill = p_end - p_start;
+                let transfer = d_entry - p_end;
+                let decode = now - d_entry;
+                debug_assert!(
+                    ((queue + prefill + transfer + decode) - ttft).abs()
+                        <= 1e-9 * ttft.abs().max(1.0),
+                    "TTFT components must sum to TTFT"
+                );
+                self.ttft.record(ttft);
+                self.ttft_queue.record(queue);
+                self.ttft_prefill.record(prefill);
+                self.ttft_transfer.record(transfer);
+                self.ttft_decode.record(decode);
                 if !self.cfg.tenants.is_empty() {
                     let t = tenant.min(self.cfg.tenants.len() - 1);
-                    self.tenant_stats[t].ttft.record(wait);
+                    let acc = &mut self.tenant_stats[t];
+                    acc.ttft.record(ttft);
+                    acc.ttft_queue.record(queue);
+                    acc.ttft_prefill.record(prefill);
+                    acc.ttft_transfer.record(transfer);
+                    acc.ttft_decode.record(decode);
                 }
             }
             for id in outcome.done {
@@ -1096,13 +1729,15 @@ impl ClusterEngine {
                     self.router.complete(node, self.ctx.table.get(slot));
                 }
                 // Completion frees the slot for reuse by later arrivals.
+                self.ctx.table.advance(slot, RequestPhase::Done, now);
                 self.ctx.table.remove(slot);
             }
         }
 
         // Freed KV first, then strictly-FIFO admission of queued arrivals.
         self.router.drain_overflow(now, &mut self.ctx, out);
-        if self.attention.has_work() && !self.ctx.iter_pending {
+        let inline_pending = self.inline_prefill() && self.attention.backlog_requests() > 0;
+        if (self.attention.has_work() || inline_pending) && !self.ctx.iter_pending {
             self.ctx.iter_pending = true;
             out.push((now, Event::IterBegin));
         }
@@ -1113,21 +1748,37 @@ impl ClusterEngine {
         self.attn_util.set_horizon(now);
         self.expert_util.set_horizon(now);
         let plan = &self.cfg.plan;
-        let gpus = (plan.tp_a * plan.n_a.max(1) + plan.tp_e * plan.n_e.max(1)) as f64;
+        let gpus = (plan.tp_a * plan.n_a.max(1)
+            + plan.tp_e * plan.n_e.max(1)
+            + self.prefill_tp * self.cfg.prefill_nodes) as f64;
         let tokens = self.attention.decoded_tokens;
         let throughput = if now > 0.0 { tokens as f64 / now } else { 0.0 };
         // The leftover split: `rejected` counts front-door admission-control
         // rejections (KV footprint beyond any node's usable budget — the
-        // fleet could never serve them); everything still queued at the
-        // front door, waiting on a node, or mid-decode is feasible work a
+        // fleet could never serve them); everything still in the prefill
+        // pool, on the KV wire, queued at the router, on an inline-prefill
+        // backlog, waiting on a node, or mid-decode is feasible work a
         // `max_sim_seconds` horizon cut off (`unserved_queued`) — at
-        // quiescence all three sets are empty. Arrivals pulled off the
+        // quiescence all these sets are empty. Arrivals pulled off the
         // stream but scheduled past the horizon are excluded: they never
         // arrived within the simulated window.
         let rejected = self.router.rejected();
-        let unserved_queued = (self.router.pending()
+        // A horizon cut mid-iteration can strand prompts whose last inline
+        // chunk ran in the still-in-flight iteration: they are already off
+        // their node's backlog but not yet in a batcher (end_iteration
+        // never ran), so count the stage's finish lists too.
+        let in_flight_prefill = self
+            .ctx
+            .stage
+            .as_ref()
+            .map_or(0, |s| s.prefill_finish.iter().map(Vec::len).sum());
+        let unserved_queued = (self.prefill.as_ref().map_or(0, |p| p.in_pool())
+            + self.in_transfer
+            + self.router.pending()
+            + self.attention.backlog_requests()
             + self.attention.waiting_total()
-            + self.attention.batch_total()) as u64;
+            + self.attention.batch_total()
+            + in_flight_prefill) as u64;
         let samples = self.ctx.stage_samples.max(1) as f64;
         let frac = |busy: &f64| {
             if now > 0.0 {
@@ -1138,6 +1789,13 @@ impl ClusterEngine {
         };
         let per_node_attn_busy: Vec<f64> = self.attention.node_busy.iter().map(frac).collect();
         let per_node_expert_busy: Vec<f64> = self.experts.node_busy.iter().map(frac).collect();
+        let per_node_prefill_busy: Vec<f64> = self
+            .prefill
+            .as_ref()
+            .map(|p| p.node_busy.iter().map(frac).collect())
+            .unwrap_or_default();
+        let prefilled_tokens = self.inline_prefilled_tokens
+            + self.prefill.as_ref().map_or(0, |p| p.prefilled_tokens);
         let tenants: Vec<TenantReport> = self
             .cfg
             .tenants
@@ -1148,6 +1806,10 @@ impl ClusterEngine {
                 slo_e2e: tc.slo_e2e,
                 completed: acc.completed,
                 ttft: acc.ttft,
+                ttft_queue: acc.ttft_queue,
+                ttft_prefill: acc.ttft_prefill,
+                ttft_transfer: acc.ttft_transfer,
+                ttft_decode: acc.ttft_decode,
                 e2e: acc.e2e,
             })
             .collect();
@@ -1159,6 +1821,10 @@ impl ClusterEngine {
             throughput,
             per_gpu_throughput: throughput / gpus.max(1.0),
             ttft: self.ttft,
+            ttft_queue: self.ttft_queue,
+            ttft_prefill: self.ttft_prefill,
+            ttft_transfer: self.ttft_transfer,
+            ttft_decode: self.ttft_decode,
             tpot: self.tpot,
             e2e: self.e2e,
             attn_utilization: self.attn_util.fraction(),
@@ -1166,6 +1832,10 @@ impl ClusterEngine {
             per_node_tokens: self.attention.node_tokens.clone(),
             per_node_attn_busy,
             per_node_expert_busy,
+            per_node_prefill_busy,
+            prefilled_tokens,
+            kv_transferred_tokens: self.kv_transferred_tokens,
+            kv_blocks_in_use_at_end: self.attention.allocated_kv_blocks(),
             rejected,
             unserved_queued,
             peak_in_flight: self.ctx.table.peak() as u64,

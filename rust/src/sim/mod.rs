@@ -10,9 +10,10 @@
 //! * [`pipeline`] — the shared ping-pong scheduling state machine (one
 //!   implementation for every simulation path);
 //! * [`engine`] — the event-driven cluster engine: pluggable components
-//!   (router front, attention pool, M2N link, expert pool) wired onto one
-//!   queue, pulling arrivals from a streaming
-//!   [`crate::workload::ArrivalSource`];
+//!   (prefill pool, router front, attention pool, M2N link, expert pool)
+//!   wired onto one queue, driving each request through the explicit
+//!   `Queued → Prefill → KvTransfer → Decode → Done` lifecycle while
+//!   pulling arrivals from a streaming [`crate::workload::ArrivalSource`];
 //! * [`cluster`] — scenario configuration + reporting, the public facade;
 //! * [`sweep`] — multi-threaded scenario-grid sweeps and the simulator
 //!   self-throughput benchmark.
@@ -27,7 +28,9 @@ pub use cluster::{
     ClusterReport, ClusterSim, ClusterSimConfig, EngineMode, ExpertPopularity, TenantReport,
     Transport,
 };
-pub use engine::{ClusterEngine, Component, Event, RequestTable, StageModel};
+pub use engine::{
+    ClusterEngine, Component, Event, PrefillPool, RequestPhase, RequestTable, StageModel,
+};
 pub use pipeline::{PipeEvent, PipelineCore, PipelineStats, StageTimes};
 pub use rng::SimRng;
 pub use sweep::{run_sim_bench, run_sweep, SweepCell, SweepGrid};

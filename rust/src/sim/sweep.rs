@@ -25,6 +25,7 @@ use std::sync::Mutex;
 use crate::baselines::{ColocatedPlan, SystemKind};
 use crate::config::{ClusterSpec, GpuKind, ModelConfig};
 use crate::coordinator::RoutePolicy;
+use crate::perf_model::DEFAULT_PREFILL_CHUNK;
 use crate::plan::{DeploymentPlan, PlanSearcher};
 use crate::sim::cluster::{ClusterSim, ClusterSimConfig, ExpertPopularity, Transport};
 use crate::sim::engine::ClusterEngine;
@@ -53,6 +54,13 @@ pub struct SweepGrid {
     pub skews: Vec<f64>,
     /// Micro-batch counts (the deployment-plan axis).
     pub micro_batches: Vec<usize>,
+    /// Prompt lengths (median input tokens; 0 = the base spec's median):
+    /// the prefill axis — long prompts shift TTFT into its prefill
+    /// component and load the prefill pool / inline chunked prefill. The
+    /// deployment plan (including its prefill-pool size) is held fixed
+    /// across the axis, so cells show how one deployment degrades as
+    /// prompts grow.
+    pub prompt_lens: Vec<f64>,
     /// Tenant mixes; an empty inner list = single-tenant traffic.
     pub tenant_mixes: Vec<Vec<TenantClass>>,
     /// Serving systems (the `msi compare` axis): the disaggregated plan
@@ -73,6 +81,8 @@ pub struct SweepCell {
     pub skew: f64,
     /// Cell micro-batch count.
     pub m: usize,
+    /// Cell median prompt length (0 = the base spec's median).
+    pub prompt_len: f64,
     /// Index into [`SweepGrid::tenant_mixes`].
     pub tenant_mix: usize,
     /// Which serving system the cell ran ([`SystemKind::name`]).
@@ -93,6 +103,8 @@ pub struct SweepCell {
     pub ttft_p50: f64,
     /// 99th-percentile time to first token (seconds).
     pub ttft_p99: f64,
+    /// Median TTFT prefill component (seconds; 0 when prefill is off).
+    pub ttft_prefill_p50: f64,
     /// Median per-iteration decode latency (seconds).
     pub tpot_p50: f64,
     /// Median end-to-end latency (seconds).
@@ -129,6 +141,7 @@ impl SweepCell {
             .set("rate", self.rate)
             .set("skew", self.skew)
             .set("micro_batches", self.m)
+            .set("prompt_len", self.prompt_len)
             .set("tenant_mix", self.tenant_mix)
             .set("system", self.system)
             .set("seed", self.seed)
@@ -139,6 +152,7 @@ impl SweepCell {
             .set("per_gpu_throughput", self.per_gpu_throughput)
             .set("ttft_p50_s", self.ttft_p50)
             .set("ttft_p99_s", self.ttft_p99)
+            .set("ttft_prefill_p50_s", self.ttft_prefill_p50)
             .set("tpot_p50_s", self.tpot_p50)
             .set("e2e_p50_s", self.e2e_p50)
             .set("e2e_p99_s", self.e2e_p99)
@@ -172,6 +186,7 @@ fn run_cell(
     rate: f64,
     skew: f64,
     m: usize,
+    prompt_len: f64,
     mix: usize,
     system: SystemKind,
 ) -> SweepCell {
@@ -179,6 +194,11 @@ fn run_cell(
     let tenants = grid.tenant_mixes.get(mix).cloned().unwrap_or_default();
     let spec = WorkloadSpec {
         arrival_rate: (rate > 0.0).then_some(rate),
+        median_input: if prompt_len > 0.0 {
+            prompt_len
+        } else {
+            grid.spec.median_input
+        },
         tenants: tenants.clone(),
         ..grid.spec.clone()
     };
@@ -207,6 +227,7 @@ fn run_cell(
             } else {
                 ExpertPopularity::Uniform
             };
+            let prefill_nodes = plan.n_p;
             ClusterSimConfig {
                 model: grid.model.clone(),
                 cluster: grid.cluster.clone(),
@@ -218,6 +239,8 @@ fn run_cell(
                 tenants,
                 rebalance_period: None,
                 max_sim_seconds: None,
+                prefill_nodes,
+                prefill_chunk: DEFAULT_PREFILL_CHUNK,
                 mode: crate::sim::cluster::EngineMode::Disaggregated,
             }
         }
@@ -233,6 +256,7 @@ fn run_cell(
         rate,
         skew,
         m,
+        prompt_len,
         tenant_mix: mix,
         system: system.name(),
         seed,
@@ -243,6 +267,7 @@ fn run_cell(
         per_gpu_throughput: rep.per_gpu_throughput,
         ttft_p50: rep.ttft.median(),
         ttft_p99: rep.ttft.p99(),
+        ttft_prefill_p50: rep.ttft_prefill.median(),
         tpot_p50: rep.tpot.median(),
         e2e_p50: rep.e2e.median(),
         e2e_p99: rep.e2e.p99(),
@@ -271,28 +296,44 @@ fn effective_systems(grid: &SweepGrid) -> &[SystemKind] {
     }
 }
 
+/// The prompt-length axis actually swept: empty means "the base spec's
+/// median" (one canonical 0 entry).
+fn effective_prompt_lens(grid: &SweepGrid) -> &[f64] {
+    const DEFAULT_PROMPTS: &[f64] = &[0.0];
+    if grid.prompt_lens.is_empty() {
+        DEFAULT_PROMPTS
+    } else {
+        &grid.prompt_lens
+    }
+}
+
 /// Run the whole grid across `workers` OS threads. Cells are claimed from a
 /// shared counter and written back by index, so the result order (and
 /// therefore the serialized report) is independent of scheduling.
 pub fn run_sweep(grid: &SweepGrid, workers: usize) -> Vec<SweepCell> {
     let systems = effective_systems(grid);
-    let mut coords: Vec<(f64, f64, usize, usize, SystemKind)> = Vec::new();
+    let prompts = effective_prompt_lens(grid);
+    let mut coords: Vec<(f64, f64, usize, f64, usize, SystemKind)> = Vec::new();
     for &rate in &grid.rates {
         for (si, &skew) in grid.skews.iter().enumerate() {
             for (mi, &m) in grid.micro_batches.iter().enumerate() {
-                for mix in 0..grid.tenant_mixes.len().max(1) {
-                    for &system in systems {
-                        if system.baseline().is_some() {
-                            // Colocated fleets ignore the skew and
-                            // micro-batch axes (balanced experts, m = 1):
-                            // one canonical cell per (rate, mix) instead of
-                            // redundant identical runs — and the report's
-                            // coordinates say what actually ran.
-                            if si == 0 && mi == 0 {
-                                coords.push((rate, 0.0, 1, mix, system));
+                for &prompt in prompts {
+                    for mix in 0..grid.tenant_mixes.len().max(1) {
+                        for &system in systems {
+                            if system.baseline().is_some() {
+                                // Colocated fleets ignore the skew and
+                                // micro-batch axes (balanced experts, m=1):
+                                // one canonical cell per (rate, prompt,
+                                // mix) instead of redundant identical runs
+                                // — the report's coordinates say what
+                                // actually ran. The prompt axis DOES apply:
+                                // it drives the inline chunked prefill.
+                                if si == 0 && mi == 0 {
+                                    coords.push((rate, 0.0, 1, prompt, mix, system));
+                                }
+                            } else {
+                                coords.push((rate, skew, m, prompt, mix, system));
                             }
-                        } else {
-                            coords.push((rate, skew, m, mix, system));
                         }
                     }
                 }
@@ -310,8 +351,8 @@ pub fn run_sweep(grid: &SweepGrid, workers: usize) -> Vec<SweepCell> {
                 if i >= n {
                     break;
                 }
-                let (rate, skew, m, mix, system) = coords[i];
-                let cell = run_cell(grid, i, rate, skew, m, mix, system);
+                let (rate, skew, m, prompt, mix, system) = coords[i];
+                let cell = run_cell(grid, i, rate, skew, m, prompt, mix, system);
                 *results[i].lock().unwrap() = Some(cell);
             });
         }
@@ -336,6 +377,7 @@ pub fn sweep_to_json(grid: &SweepGrid, cells: &[SweepCell]) -> Json {
             "micro_batches",
             Json::Arr(grid.micro_batches.iter().map(|&m| Json::from(m)).collect()),
         )
+        .set("prompt_lens", effective_prompt_lens(grid).to_vec())
         .set("tenant_mixes", grid.tenant_mixes.len())
         .set(
             "systems",
@@ -359,8 +401,9 @@ pub fn sweep_to_json(grid: &SweepGrid, cells: &[SweepCell]) -> Json {
 /// attainments are folded into one `name=value;...` column.
 pub fn sweep_to_csv(cells: &[SweepCell]) -> String {
     let mut s = String::from(
-        "rate,skew,micro_batches,tenant_mix,system,seed,completed,tokens,simulated_seconds,\
-         throughput,per_gpu_throughput,ttft_p50_s,ttft_p99_s,tpot_p50_s,e2e_p50_s,\
+        "rate,skew,micro_batches,prompt_len,tenant_mix,system,seed,completed,tokens,\
+         simulated_seconds,throughput,per_gpu_throughput,ttft_p50_s,ttft_p99_s,\
+         ttft_prefill_p50_s,tpot_p50_s,e2e_p50_s,\
          e2e_p99_s,attn_utilization,expert_utilization,rejected,unserved_queued,\
          peak_in_flight,attainments\n",
     );
@@ -371,10 +414,11 @@ pub fn sweep_to_csv(cells: &[SweepCell]) -> String {
             .map(|(name, a)| format!("{name}={a}"))
             .collect();
         s.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             c.rate,
             c.skew,
             c.m,
+            c.prompt_len,
             c.tenant_mix,
             c.system,
             c.seed,
@@ -385,6 +429,7 @@ pub fn sweep_to_csv(cells: &[SweepCell]) -> String {
             c.per_gpu_throughput,
             c.ttft_p50,
             c.ttft_p99,
+            c.ttft_prefill_p50,
             c.tpot_p50,
             c.e2e_p50,
             c.e2e_p99,
@@ -486,6 +531,7 @@ mod tests {
             rates: vec![0.0, 400.0],
             skews: vec![0.0, 1.2],
             micro_batches: vec![1, 2],
+            prompt_lens: vec![0.0],
             tenant_mixes: vec![Vec::new()],
             systems: vec![SystemKind::Disaggregated],
         }
@@ -529,10 +575,46 @@ mod tests {
             assert!(c.throughput > 0.0);
         }
         // Colocated cells report the matched-fleet per-GPU metric, and the
-        // CSV carries the system column.
+        // CSV carries the system and prefill columns.
         let csv = sweep_to_csv(&cells);
-        assert!(csv.starts_with("rate,skew,micro_batches,tenant_mix,system,"));
+        assert!(csv.starts_with("rate,skew,micro_batches,prompt_len,tenant_mix,system,"));
+        assert!(csv.contains("ttft_prefill_p50_s"));
         assert!(csv.contains(",vllm,") && csv.contains(",trtllm,"));
+    }
+
+    #[test]
+    fn prompt_length_axis_loads_prefill() {
+        // The prompt axis reshapes the workload per cell; longer prompts
+        // push TTFT into its prefill component on every system.
+        let grid = SweepGrid {
+            rates: vec![0.0],
+            skews: vec![0.0],
+            micro_batches: vec![2],
+            prompt_lens: vec![32.0, 512.0],
+            requests: 24,
+            systems: vec![SystemKind::Disaggregated, SystemKind::Vllm],
+            ..tiny_grid()
+        };
+        let cells = run_sweep(&grid, 2);
+        assert_eq!(cells.len(), 4, "2 prompts x 2 systems");
+        for system in ["megascale", "vllm"] {
+            let cell = |p: f64| {
+                cells
+                    .iter()
+                    .find(|c| c.system == system && c.prompt_len == p)
+                    .unwrap_or_else(|| panic!("{system} cell at prompt {p}"))
+            };
+            let (short, long) = (cell(32.0), cell(512.0));
+            assert_eq!(short.completed, 24);
+            assert_eq!(long.completed, 24);
+            assert!(
+                long.ttft_prefill_p50 > short.ttft_prefill_p50,
+                "{system}: prefill p50 {} vs {}",
+                long.ttft_prefill_p50,
+                short.ttft_prefill_p50
+            );
+            assert!(long.ttft_prefill_p50 > 0.0);
+        }
     }
 
     #[test]

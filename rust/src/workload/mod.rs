@@ -161,6 +161,18 @@ impl WorkloadSpec {
         }
     }
 
+    /// A prompt-heavy preset (long-context summarization / RAG shape):
+    /// prompts ~13x the output length, so TTFT — and therefore the prefill
+    /// pool — dominates. This is the workload `msi plan --prompt-heavy` and
+    /// `msi compare --prompt-heavy` re-rank prefill-pool sizing under.
+    pub fn prompt_heavy() -> Self {
+        Self {
+            median_input: 2048.0,
+            median_output: 160.0,
+            ..Default::default()
+        }
+    }
+
     /// Expected prompt length: E[lognormal] = median · exp(σ²/2).
     pub fn mean_input(&self) -> f64 {
         self.median_input * (self.sigma * self.sigma / 2.0).exp()

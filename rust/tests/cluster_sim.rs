@@ -32,6 +32,10 @@ fn fixed_plan(m: usize, global_batch: usize) -> (ModelConfig, ClusterSpec, Deplo
         tp_e,
         n_a,
         n_e: model.experts,
+        // Decode-stage anchor plans opt out of prefill modeling: these
+        // tests pin the decode pipeline against the Eq. 4–6 closed forms.
+        n_p: 0,
+        tp_p: 0,
         m,
         global_batch,
         metrics,
@@ -326,6 +330,9 @@ fn popularity_drift_hurts_and_periodic_rebalance_recovers() {
             popularity: pop,
             seed: 9,
             rebalance_period: rebalance,
+            // Decode-stage anchor: the identical prefill phase would
+            // compress the drift-vs-rebalance throughput gaps.
+            prefill_nodes: 0,
             ..ClusterSimConfig::new(model.clone(), cluster.clone(), plan.clone())
         })
         .run(&reqs)
@@ -352,6 +359,82 @@ fn popularity_drift_hurts_and_periodic_rebalance_recovers() {
         rebalanced.throughput,
         static_placement.throughput
     );
+}
+
+/// Satellite regression for the prefill state machine: the four TTFT
+/// components (`queue + prefill + transfer + first-decode`) sum to the
+/// reported TTFT, one sample per request each, and a prompt-heavy golden
+/// workload shows prefill-DOMINATED TTFT — guarding against silently
+/// reverting to the old queue-wait-only TTFT. Also pins the handoff
+/// conservation counters: every completed request's prompt was prefilled
+/// exactly once and shipped to a decode node exactly once.
+#[test]
+fn ttft_decomposition_sums_and_prefill_dominates_prompt_heavy() {
+    let model = ModelConfig::mixtral_8x22b();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    // Fixed-length prompt-heavy workload, open loop well below saturation
+    // (prefill-pool utilization ~20%) so the queue component stays small
+    // and prefill compute dominates.
+    let spec = WorkloadSpec {
+        median_input: 2048.0,
+        median_output: 8.0,
+        sigma: 0.0,
+        arrival_rate: Some(5.0),
+        ..Default::default()
+    };
+    let plan = megascale_infer::plan::PlanSearcher::new(
+        model.clone(),
+        cluster.clone(),
+        spec.avg_seq_len(),
+    )
+    .search()
+    .expect("mixtral plan");
+    assert!(plan.n_p >= 1 && plan.tp_p >= 1, "search sizes a prefill pool");
+    let reqs = spec.generate(24, 11);
+    let rep = ClusterSim::new(ClusterSimConfig {
+        seed: 11,
+        ..ClusterSimConfig::new(model, cluster, plan)
+    })
+    .run(&reqs);
+    assert_eq!(rep.completed, 24);
+
+    // One sample per request in every component.
+    assert_eq!(rep.ttft.count(), 24);
+    for h in [
+        &rep.ttft_queue,
+        &rep.ttft_prefill,
+        &rep.ttft_transfer,
+        &rep.ttft_decode,
+    ] {
+        assert_eq!(h.count(), rep.ttft.count());
+    }
+    // The component sums telescope to the TTFT sum (exact up to fp).
+    let sum = rep.ttft_queue.mean()
+        + rep.ttft_prefill.mean()
+        + rep.ttft_transfer.mean()
+        + rep.ttft_decode.mean();
+    let want = rep.ttft.mean();
+    assert!(
+        (sum - want).abs() <= 1e-6 * want.max(1e-9),
+        "components {sum} vs TTFT {want}"
+    );
+    // Prompt-heavy golden: prefill is the majority of TTFT, and every
+    // component that should be live is live.
+    assert!(
+        rep.ttft_prefill.mean() > 0.5 * want,
+        "prefill {} should dominate TTFT {want}",
+        rep.ttft_prefill.mean()
+    );
+    assert!(rep.ttft_transfer.mean() > 0.0, "KV shipping takes wire time");
+    assert!(rep.ttft_decode.mean() > 0.0);
+
+    // Handoff conservation: prompts prefilled once, shipped once; no KV
+    // blocks leaked at quiescence.
+    let prompt_tokens: u64 = reqs.iter().map(|r| r.input_len as u64).sum();
+    assert_eq!(rep.prefilled_tokens, prompt_tokens);
+    assert_eq!(rep.kv_transferred_tokens, prompt_tokens);
+    assert_eq!(rep.kv_blocks_in_use_at_end, 0);
+    assert_eq!(rep.unserved_queued, 0);
 }
 
 /// The heterogeneous H20 (attention) + L40S (expert) pairing of §4.3 runs

@@ -106,6 +106,9 @@ fn colocated_engine_conserves_tokens() {
     let reqs = fixed_requests(256, 64, 8);
     let rep = ClusterSim::new(ClusterSimConfig {
         seed: 5,
+        // Lockstep anchor: inline prefill off so every request enters the
+        // first iteration and the iteration count is exact.
+        prefill_chunk: 0,
         ..ClusterSimConfig::colocated(model.clone(), cluster, cplan)
     })
     .run(&reqs);
@@ -141,6 +144,8 @@ fn colocated_engine_tpot_tracks_analytic_model() {
     let reqs = fixed_requests(batch, input, output);
     let rep = ClusterSim::new(ClusterSimConfig {
         seed: 13,
+        // Lockstep anchor vs the analytic steady state: inline prefill off.
+        prefill_chunk: 0,
         ..ClusterSimConfig::colocated(model.clone(), cluster.clone(), cplan.clone())
     })
     .run(&reqs);
@@ -164,6 +169,52 @@ fn colocated_engine_tpot_tracks_analytic_model() {
         "engine TPOT {} vs analytic {} (rel {rel})",
         rep.tpot.mean(),
         analytic.tpot
+    );
+}
+
+/// Colocated inline chunked prefill: prompts are chunked THROUGH decode
+/// iterations, inflating the baseline's TPOT (the vLLM-style interference
+/// the paper's disaggregation avoids), while conservation holds — every
+/// prompt token is prefilled exactly once and the KV never crosses a link.
+#[test]
+fn colocated_inline_prefill_interferes_and_conserves() {
+    let model = ModelConfig::tiny();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let cplan = ColocatedPlan::sized_to_match(BaselineKind::Vllm, &model, &cluster, 8);
+    let reqs = fixed_requests(64, 128, 8);
+    let run = |chunk: usize| {
+        ClusterSim::new(ClusterSimConfig {
+            seed: 3,
+            prefill_chunk: chunk,
+            ..ClusterSimConfig::colocated(model.clone(), cluster.clone(), cplan.clone())
+        })
+        .run(&reqs)
+    };
+    let off = run(0);
+    let on = run(512);
+    assert_eq!(on.completed, 64);
+    assert_eq!(on.tokens, 64 * 8);
+    // Conservation across the inline handoff.
+    assert_eq!(on.prefilled_tokens, 64 * 128, "every prompt token chunked once");
+    assert_eq!(on.kv_transferred_tokens, 0, "KV never leaves the group");
+    assert_eq!(on.kv_blocks_in_use_at_end, 0);
+    assert_eq!(off.prefilled_tokens, 0, "chunk 0 = prefill not modeled");
+    // TTFT decomposition: prefill live, transfer exactly zero (colocated).
+    assert!(on.ttft_prefill.mean() > 0.0);
+    assert_eq!(on.ttft_transfer.mean(), 0.0);
+    // Interference: chunked prefill inflates both TPOT and E2E vs the
+    // instant-KV fiction.
+    assert!(
+        on.tpot.mean() > off.tpot.mean(),
+        "mixed iterations inflate TPOT: {} vs {}",
+        on.tpot.mean(),
+        off.tpot.mean()
+    );
+    assert!(
+        on.e2e.mean() > off.e2e.mean(),
+        "prefill serializes ahead of decode: {} vs {}",
+        on.e2e.mean(),
+        off.e2e.mean()
     );
 }
 

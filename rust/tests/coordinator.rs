@@ -139,7 +139,9 @@ fn report_metrics_are_consistent() {
     let plan = PlanSearcher::new(model.clone(), cluster.clone(), 730.0)
         .search()
         .unwrap();
-    let gpus = plan.total_gpus() as f64;
+    // The runtime instance simulates the decode pools only; its per-GPU
+    // metric divides by the decode instance, not the prefill pool.
+    let gpus = plan.decode_gpus() as f64;
     let reqs = WorkloadSpec {
         median_output: 15.0,
         ..Default::default()

@@ -3,6 +3,7 @@
 //! case generation (1000+ cases per property), with the failing seed
 //! printed on assert so cases replay deterministically.
 
+use megascale_infer::baselines::{BaselineKind, ColocatedPlan};
 use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
 use megascale_infer::coordinator::{
     balance_experts, build_dispatch, combine_expert_outputs, gather_expert_input, softmax_topk,
@@ -406,6 +407,98 @@ fn prop_engine_conserves_tokens_across_components() {
         );
         let per_node: u64 = rep.per_node_tokens.iter().sum();
         assert_eq!(per_node, rep.tokens, "seed {seed}: per-node tokens partition");
+    }
+}
+
+/// KV-block conservation across the prefill→decode handoff and request
+/// slot recycling, under arbitrary event interleavings: random workloads
+/// (closed and open loop, both engine modes, random chunk budgets and pool
+/// sizes, with occasional front-door rejections) must neither leak nor
+/// double-free KV blocks or table slots — whether requests are rejected,
+/// cut off by a `max_sim_seconds` horizon, or complete normally.
+#[test]
+fn prop_prefill_handoff_conserves_kv_blocks_and_slots() {
+    let model = ModelConfig::tiny();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let base_plan = PlanSearcher::new(model.clone(), cluster.clone(), 200.0)
+        .search()
+        .expect("tiny plan");
+    for (seed, mut rng) in cases(40) {
+        let n = 4 + rng.below(40);
+        let open = rng.chance(0.5);
+        let spec = WorkloadSpec {
+            median_input: 16.0 + rng.uniform() * 128.0,
+            median_output: 2.0 + rng.uniform() * 8.0,
+            sigma: 0.3,
+            arrival_rate: open.then(|| 50.0 + rng.uniform() * 400.0),
+            ..Default::default()
+        };
+        let reqs = spec.generate(n, seed.wrapping_add(7));
+        let colocated = rng.chance(0.3);
+        let chunk = [64usize, 512, 2048][rng.below(3)];
+        let mut cfg = if colocated {
+            let cplan = ColocatedPlan::sized_to_match(BaselineKind::Vllm, &model, &cluster, 8);
+            ClusterSimConfig::colocated(model.clone(), cluster.clone(), cplan)
+        } else {
+            let mut plan = base_plan.clone();
+            plan.m = 1 + rng.below(3);
+            ClusterSimConfig::new(model.clone(), cluster.clone(), plan)
+        };
+        cfg.seed = seed.wrapping_mul(17).wrapping_add(3);
+        cfg.prefill_chunk = chunk;
+        if !colocated {
+            cfg.prefill_nodes = 1 + rng.below(3);
+        }
+
+        // Quiescent run: everything completes; no leaked blocks, prompts
+        // prefilled (and, disaggregated, shipped) exactly once. The
+        // front-door rejection leg of the slot-recycling story is pinned
+        // by `streaming::infeasible_request_rejected_feasible_queue_served`.
+        let rep = ClusterSim::new(cfg.clone()).run(&reqs);
+        assert_eq!(rep.completed as usize, reqs.len(), "seed {seed}");
+        assert_eq!(rep.rejected, 0, "seed {seed}");
+        assert_eq!(rep.unserved_queued, 0, "seed {seed}");
+        assert_eq!(
+            rep.kv_blocks_in_use_at_end, 0,
+            "seed {seed}: leaked KV blocks at quiescence"
+        );
+        let prompt: u64 = reqs.iter().map(|r| r.input_len as u64).sum();
+        assert_eq!(
+            rep.prefilled_tokens, prompt,
+            "seed {seed}: every admitted prompt prefilled exactly once"
+        );
+        if colocated {
+            assert_eq!(rep.kv_transferred_tokens, 0, "seed {seed}: inline KV");
+        } else {
+            assert_eq!(
+                rep.kv_transferred_tokens, prompt,
+                "seed {seed}: every prompt shipped exactly once"
+            );
+        }
+        assert!(rep.peak_in_flight <= reqs.len() as u64, "seed {seed}");
+
+        // Horizon-cut run (closed loop so every request arrives): the
+        // workload partitions exactly into completed/unserved at ANY
+        // cutoff, and a fully-drained cutoff holds no blocks.
+        let mut closed = reqs.clone();
+        for r in &mut closed {
+            r.arrival = 0.0;
+        }
+        let mut hcfg = cfg.clone();
+        hcfg.max_sim_seconds = Some(1e-9 + rng.uniform() * rep.elapsed);
+        let hrep = ClusterSim::new(hcfg).run(&closed);
+        assert_eq!(
+            hrep.completed + hrep.rejected + hrep.unserved_queued,
+            reqs.len() as u64,
+            "seed {seed}: horizon partition"
+        );
+        assert!(hrep.prefilled_tokens <= prompt, "seed {seed}");
+        if hrep.unserved_queued == 0 {
+            assert_eq!(
+                hrep.kv_blocks_in_use_at_end, 0,
+                "seed {seed}: drained horizon run holds no blocks"
+            );
+        }
     }
 }
 

@@ -156,6 +156,12 @@ fn infeasible_request_rejected_feasible_queue_served() {
     );
     assert_eq!(rep.unserved_queued, 0);
     assert_eq!(rep.tokens, 32, "8 requests x 4 output tokens");
+    // The rejected request's slot was recycled WITHOUT touching prefill or
+    // KV state: only the 8 feasible prompts were prefilled and shipped,
+    // and no blocks are left allocated.
+    assert_eq!(rep.prefilled_tokens, 8 * 512);
+    assert_eq!(rep.kv_transferred_tokens, 8 * 512);
+    assert_eq!(rep.kv_blocks_in_use_at_end, 0);
 }
 
 /// A `max_sim_seconds` horizon cuts the run short and surfaces feasible
