@@ -1,0 +1,149 @@
+//! Event-kernel primitive micro-benchmarks: the four hot structures under
+//! every end-to-end simulation — the indexed [`EventQueue`], the
+//! slot-recycling [`RequestTable`], the ping-pong [`PipelineCore`] stepper
+//! and [`Histogram::record`] — plus a small streamed end-to-end engine run.
+//!
+//! Run via `cargo bench --bench sim_kernel`. Pass `--quick` (CI smoke) to
+//! exercise every benchmark body a fixed handful of times without the
+//! ~20 ms auto-calibrated sampling — a crash/regression canary, not a
+//! measurement. The committed perf baseline lives in `BENCH_sim.json`
+//! (refreshed by `msi sweep --bench`, gated in CI by `--bench-compare`).
+
+use megascale_infer::metrics::Histogram;
+use megascale_infer::sim::{EventQueue, PipeEvent, PipelineCore, RequestTable, SimRng, StageTimes};
+use megascale_infer::util::bench::{bench, black_box, section};
+use megascale_infer::workload::Request;
+
+/// Full measurement, or a fixed-iteration smoke pass with `--quick`.
+fn run<F: FnMut()>(name: &str, quick: bool, mut f: F) {
+    if quick {
+        for _ in 0..3 {
+            f();
+        }
+        println!("  {name:<44} ok (quick)");
+    } else {
+        bench(name, f).print();
+    }
+}
+
+fn req(id: u64) -> Request {
+    Request {
+        id,
+        arrival: id as f64 * 1e-3,
+        input_len: 512,
+        output_len: 64,
+        tenant: 0,
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    section("event-kernel primitives");
+
+    // ---- EventQueue: steady-state churn at a serving-like depth ----
+    // Hold ~1k pending events and push+pop in a loop: the pattern every
+    // engine iteration produces (a handful of schedules per pop).
+    {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut rng = SimRng::new(7);
+        for i in 0..1024u64 {
+            q.schedule_in(rng.exponential(1.0), i);
+        }
+        run("event_queue push+pop, 1k pending", quick, || {
+            for i in 0..64u64 {
+                let (t, e) = q.pop().expect("queue stays primed");
+                black_box((t, e));
+                q.schedule_in(rng.exponential(1.0), i);
+            }
+        });
+    }
+
+    // ---- EventQueue: same-timestamp bursts (iteration barriers) ----
+    {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        run("event_queue burst fill+drain x256", quick, || {
+            let base = q.now();
+            for i in 0..256u64 {
+                q.schedule_at(base + 0.5, i);
+            }
+            while let Some(x) = q.pop() {
+                black_box(x);
+            }
+        });
+    }
+
+    // ---- RequestTable: slot claim/release recycling ----
+    {
+        let mut table = RequestTable::new();
+        // Warm a steady in-flight population so the free list is hot.
+        let mut live: Vec<usize> = (0..512).map(|i| table.insert(req(i))).collect();
+        run("request_table insert+remove x64, 512 live", quick, || {
+            for k in 0..64 {
+                let slot = live[k * 7 % live.len()];
+                black_box(table.remove(slot));
+                live[k * 7 % live.len()] = table.insert(req(k as u64));
+            }
+            black_box(table.len());
+        });
+    }
+
+    // ---- PipelineCore: a full ping-pong pass, event-stepped ----
+    {
+        run("pipeline_core full pass m=2 layers=8", quick, || {
+            let mut core = PipelineCore::new(2, 8);
+            let mut q: EventQueue<PipeEvent> = EventQueue::new();
+            let mut out = Vec::new();
+            let mut times = |_now: f64, _mb: usize, _layer: usize| StageTimes {
+                t_a: 1.0e-3,
+                t_e: 1.4e-3,
+                t_c: 0.2e-3,
+            };
+            core.start(q.now(), &mut out);
+            loop {
+                for (at, ev) in out.drain(..) {
+                    q.schedule_at(at, ev);
+                }
+                let Some((now, ev)) = q.pop() else { break };
+                if let Some(stats) = core.on_event(now, ev, &mut times, &mut out) {
+                    black_box(stats);
+                    break;
+                }
+            }
+        });
+    }
+
+    // ---- Histogram::record on the exact→bucketed spectrum ----
+    {
+        let mut h = Histogram::new();
+        let mut rng = SimRng::new(13);
+        let samples: Vec<f64> = (0..1024).map(|_| rng.exponential(0.05)).collect();
+        run("histogram record x1024", quick, || {
+            for &v in &samples {
+                h.record(v);
+            }
+            black_box(h.count());
+        });
+        black_box(h.percentile(99.0));
+    }
+
+    // ---- end-to-end: a small streamed engine run ----
+    // The real composition of all of the above; `msi sweep --bench` runs
+    // the full-size (1M-request) version and maintains BENCH_sim.json.
+    {
+        use megascale_infer::sim::run_sim_bench;
+        if quick {
+            let payload = run_sim_bench(2_000, 42);
+            println!("  {:<44} ok (quick)", "engine e2e 2k requests");
+            black_box(payload);
+        } else {
+            let payload = run_sim_bench(50_000, 42);
+            let tps = payload
+                .get("tokens_per_wall_second")
+                .and_then(|j| j.as_f64())
+                .unwrap_or(0.0);
+            println!("  engine e2e 50k requests: {tps:.0} tok/wall-s");
+        }
+    }
+
+    println!();
+}

@@ -17,7 +17,8 @@
 //!               [--popularity-drift <s>] [--rebalance <s>] [--balance]
 //!               [--tenants name:weight:slo_s,...] [--simnet]
 //!               [--micro-batches m] [--prefill N] [--prefill-chunk 2048]
-//!               [--max-seconds <s>] [--seed 42] [--json report.json]
+//!               [--max-seconds <s>] [--shards K] [--shard-workers N]
+//!               [--seed 42] [--json report.json]
 //! msi serve     --artifacts artifacts [--micro-batches 2] [--requests 16]
 //!               (requires the `pjrt` feature)
 //! msi sweep     [--model tiny] [--gpu ampere] [--requests 2000]
@@ -28,6 +29,7 @@
 //!               [--json sweep.json] [--csv sweep.csv] [--smoke]
 //! msi sweep     --bench [--bench-requests 1000000] [--seed 42]
 //!               [--bench-out BENCH_sim.json]
+//!               [--bench-compare BENCH_sim.json] [--bench-threshold 0.15]
 //! msi m2n       --library megascale|nccl|perftest [--senders 8]
 //!               [--receivers 8] [--size-kib 256] [--rounds 1000]
 //! msi hardware
@@ -51,11 +53,15 @@ use megascale_infer::runtime::ServingEngine;
 use megascale_infer::sim::cluster::{
     ClusterSim, ClusterSimConfig, EngineMode, ExpertPopularity, Transport,
 };
+use megascale_infer::sim::shard::effective_shards;
 use megascale_infer::sim::sweep::{
     run_sim_bench, run_sweep, sweep_to_csv, sweep_to_json, SweepGrid,
 };
+use megascale_infer::sim::{run_sharded, ShardPlan};
 use megascale_infer::util::cli::Args;
-use megascale_infer::workload::{TenantClass, Trace, WorkloadSpec};
+use megascale_infer::workload::{
+    ArrivalSource, StridedSource, TenantClass, Trace, TraceSource, WorkloadSpec,
+};
 
 const USAGE: &str =
     "usage: msi <plan|compare|simulate|replay|sweep|serve|m2n|hardware|trace> [--options]
@@ -453,7 +459,35 @@ fn cmd_replay(args: &Args) -> Result<()> {
         mode: EngineMode::Disaggregated,
     };
     let plan_json = cfg.plan.to_json();
-    let report = ClusterSim::new(cfg).run(&requests);
+    // --shards K: run as K independent sub-clusters stepped in parallel
+    // (deterministic: byte-identical reports for any --shard-workers).
+    let shards = args.usize_or("shards", 1)?;
+    let report = if shards > 1 {
+        let eff = effective_shards(&cfg, shards);
+        if eff != shards {
+            println!("note: --shards {shards} clamped to {eff} (pool widths bound the shard count)");
+        }
+        let mut splan = ShardPlan::new(eff);
+        if let Some(w) = args.get("shard-workers") {
+            let w: usize = w
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--shard-workers={w} not an integer"))?;
+            splan = splan.with_workers(w);
+        }
+        println!(
+            "sharded run: {} sub-clusters on {} worker threads",
+            eff, splan.workers
+        );
+        let reqs = requests.clone();
+        run_sharded(&cfg, splan, move |shard, stride| -> Box<dyn ArrivalSource> {
+            Box::new(StridedSource::new(TraceSource::new(reqs.clone()), shard, stride))
+        })
+    } else {
+        if args.get("shard-workers").is_some() {
+            bail!("--shard-workers only applies with --shards > 1");
+        }
+        ClusterSim::new(cfg).run(&requests)
+    };
     println!("{}", report.summary());
     if let Some(path) = args.get("json") {
         let payload = megascale_infer::util::json::Json::obj()
@@ -524,17 +558,52 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let n = args.usize_or("bench-requests", 1_000_000)?;
         let seed = args.u64_or("seed", 42)?;
         let out = args.str_or("bench-out", "BENCH_sim.json");
+        // Read the committed baseline BEFORE running (and possibly
+        // overwriting the same path via --bench-out) so the gate always
+        // compares against the committed numbers.
+        let gate = match args.get("bench-compare") {
+            Some(path) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading committed bench baseline {path}"))?;
+                let committed = megascale_infer::util::json::Json::parse(&text)?
+                    .get("tokens_per_wall_second")?
+                    .as_f64()?;
+                Some((path.to_string(), committed))
+            }
+            None => None,
+        };
+        let threshold = args.f64_or("bench-threshold", 0.15)?;
+        if !(0.0..1.0).contains(&threshold) {
+            bail!("--bench-threshold must be in [0, 1) (got {threshold})");
+        }
         let payload = run_sim_bench(n, seed);
         std::fs::write(&out, format!("{payload}\n"))
             .with_context(|| format!("writing {out}"))?;
         println!("{payload}");
         println!("wrote benchmark report to {out}");
+        if let Some((path, committed)) = gate {
+            let fresh = payload.get("tokens_per_wall_second")?.as_f64()?;
+            let floor = committed * (1.0 - threshold);
+            if fresh < floor {
+                bail!(
+                    "simulator throughput regression: {fresh:.0} tok/wall-s is more than \
+                     {:.0}% below the committed baseline {committed:.0} tok/wall-s \
+                     (floor {floor:.0}) from {path}",
+                    threshold * 100.0
+                );
+            }
+            println!(
+                "bench gate OK: {fresh:.0} tok/wall-s vs committed {committed:.0} \
+                 (floor {floor:.0}, -{:.0}%)",
+                threshold * 100.0
+            );
+        }
         return Ok(());
     }
 
     // Mirror of the --bench guard: bench-only flags are meaningless for a
     // grid sweep and almost certainly signal a forgotten --bench.
-    for bench_only in ["bench-requests", "bench-out"] {
+    for bench_only in ["bench-requests", "bench-out", "bench-compare", "bench-threshold"] {
         if args.get(bench_only).is_some() {
             bail!("--{bench_only} only applies with --bench");
         }

@@ -16,6 +16,9 @@ pub struct Histogram {
     sum: f64,
     min: f64,
     max: f64,
+    /// Non-finite / negative samples rejected by `record` (release builds
+    /// skip them instead of asserting).
+    skipped: u64,
 }
 
 const EXACT_LIMIT: usize = 4096;
@@ -41,6 +44,7 @@ impl Histogram {
             sum: 0.0,
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
+            skipped: 0,
         }
     }
 
@@ -63,8 +67,21 @@ impl Histogram {
         ((v / MIN_VALUE).log10() * BUCKETS_PER_DECADE - idx as f64).clamp(0.0, 1.0)
     }
 
-    /// Record one observation. Non-positive values clamp to the smallest bucket.
+    /// Record one observation. Zero clamps to the smallest bucket;
+    /// non-finite and negative samples are rejected — a `debug_assert` in
+    /// debug builds, silently skipped (and counted in
+    /// [`Histogram::skipped_samples`]) in release builds. Before this
+    /// guard, a NaN or negative sample aliased into bucket 0 through the
+    /// `as usize` cast while still polluting `sum`/`min`/`max`.
     pub fn record(&mut self, v: f64) {
+        debug_assert!(
+            v.is_finite() && v >= 0.0,
+            "histogram sample must be finite and non-negative, got {v}"
+        );
+        if !(v.is_finite() && v >= 0.0) {
+            self.skipped += 1;
+            return;
+        }
         self.count += 1;
         self.sum += v;
         self.min = self.min.min(v);
@@ -73,6 +90,12 @@ impl Histogram {
             self.exact.push(v);
         }
         self.buckets[Self::bucket_index(v)] += 1;
+    }
+
+    /// Samples rejected by [`Histogram::record`] (non-finite or negative).
+    /// Always 0 in debug builds, where rejection asserts instead.
+    pub fn skipped_samples(&self) -> u64 {
+        self.skipped
     }
 
     /// Observations recorded.
@@ -107,25 +130,35 @@ impl Histogram {
         }
     }
 
-    /// Percentile in [0, 100]. Exact while sample count <= 4096, bucketed
-    /// (≤ ~2.4% relative error) beyond that.
+    /// Percentile in [0, 100]. Exact (linearly interpolated between
+    /// adjacent order statistics) while the sample count is <= 4096,
+    /// bucketed (≤ ~2.4% relative error) beyond that. Both paths use the
+    /// same fractional rank `p/100 · (count-1)`, so the answer moves by at
+    /// most one bucket width as the count crosses the exact limit — the
+    /// nearest-rank exact path used to jump discontinuously against the
+    /// interpolated bucketed path at that boundary.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
-        let rank = ((p / 100.0) * (self.count as f64 - 1.0)).round() as u64;
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (self.count as f64 - 1.0);
         if self.count as usize <= EXACT_LIMIT {
             let mut v = self.exact.clone();
             v.sort_by(|a, b| a.total_cmp(b));
-            return v[rank as usize];
+            let lo = rank.floor() as usize;
+            let hi = (lo + 1).min(v.len() - 1);
+            let frac = rank - lo as f64;
+            return v[lo] + (v[hi] - v[lo]) * frac;
         }
         let mut seen = 0u64;
+        let target = rank.floor() as u64;
         for (i, &c) in self.buckets.iter().enumerate() {
-            if c > 0 && seen + c > rank {
+            if c > 0 && seen + c > target {
                 // Interpolate within the bucket: spread its c observations
                 // evenly through the bucket's span (consistent with the
-                // linear interpolation in `fraction_below`).
-                let frac = ((rank - seen) as f64 + 0.5) / c as f64;
+                // linear interpolation in `fraction_below`), keeping the
+                // fractional part of the rank for continuity.
+                let frac = (((rank - seen as f64) + 0.5) / c as f64).clamp(0.0, 1.0);
                 return Self::bucket_value_at(i, frac).clamp(self.min, self.max);
             }
             seen += c;
@@ -186,6 +219,7 @@ impl Histogram {
 
     /// Merge another histogram into this one.
     pub fn merge(&mut self, other: &Histogram) {
+        self.skipped += other.skipped;
         self.count += other.count;
         self.sum += other.sum;
         self.min = self.min.min(other.min);
@@ -304,6 +338,106 @@ mod tests {
             let est = h.percentile(p);
             let rel = (est - exact).abs() / exact;
             assert!(rel < 0.007, "p{p}: estimated {est} vs exact {exact} (rel {rel})");
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "finite and non-negative")]
+    fn nan_sample_asserts_in_debug() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "finite and non-negative")]
+    fn negative_sample_asserts_in_debug() {
+        let mut h = Histogram::new();
+        h.record(-1.0);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn invalid_samples_skipped_in_release() {
+        // Regression: NaN and negative samples used to alias into bucket 0
+        // via the `as usize` cast while polluting sum/min/max.
+        let mut h = Histogram::new();
+        h.record(1.0);
+        h.record(f64::NAN);
+        h.record(-5.0);
+        h.record(f64::INFINITY);
+        h.record(3.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.skipped_samples(), 3);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 3.0);
+        assert!((h.mean() - 2.0).abs() < 1e-12, "mean unpolluted");
+    }
+
+    #[test]
+    fn zero_sample_still_accepted() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.skipped_samples(), 0);
+        assert_eq!(h.min(), 0.0);
+    }
+
+    #[test]
+    fn merge_carries_skipped_counter() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(1.0);
+        b.record(2.0);
+        a.merge(&b);
+        assert_eq!(a.skipped_samples(), 0);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn exact_even_count_median_interpolates() {
+        // With linear interpolation between order statistics, the median
+        // of an even-count exact histogram is the midpoint of the two
+        // central samples (it used to snap to one of them by nearest rank).
+        let mut h = Histogram::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            h.record(v);
+        }
+        assert_eq!(h.median(), 2.5);
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(100.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_continuous_across_exact_limit() {
+        // Regression: the exact path used nearest-rank while the bucketed
+        // path interpolated, so percentiles jumped discontinuously as the
+        // count crossed EXACT_LIMIT. Record the same log-uniform shape at
+        // EXACT_LIMIT - 1, EXACT_LIMIT, and EXACT_LIMIT + 1 samples: every
+        // percentile must agree within ~one bucket width (~2.4% relative).
+        let shapes: Vec<Histogram> = [EXACT_LIMIT - 1, EXACT_LIMIT, EXACT_LIMIT + 1]
+            .iter()
+            .map(|&n| {
+                let mut h = Histogram::new();
+                for i in 0..n {
+                    // Log-uniform over [1e-3, 1e3].
+                    h.record(10f64.powf(6.0 * (i as f64 + 0.5) / n as f64 - 3.0));
+                }
+                h
+            })
+            .collect();
+        for p in [1.0, 5.0, 25.0, 50.0, 75.0, 95.0, 99.0] {
+            let below = shapes[0].percentile(p); // exact path
+            let at = shapes[1].percentile(p); // exact path, at the limit
+            let above = shapes[2].percentile(p); // bucketed path
+            for (name, v) in [("at-limit", at), ("above-limit", above)] {
+                let rel = (v - below).abs() / below;
+                assert!(
+                    rel < 0.03,
+                    "p{p}: {name} {v} vs below-limit {below} (rel {rel})"
+                );
+            }
         }
     }
 

@@ -328,6 +328,12 @@ pub struct ClusterReport {
     pub processed_copies: u64,
     /// Periodic §6 re-placements applied during the run.
     pub rebalances: u64,
+    /// Event schedules that landed within the event-queue's epsilon
+    /// *behind* the virtual clock and were saturated to `now` (see
+    /// [`crate::sim::EventQueue::clamped_past_schedules`]). Nonzero counts
+    /// are benign floating-point jitter; past-time schedules beyond the
+    /// epsilon abort the run instead of being silently clamped.
+    pub clamped_past_schedules: u64,
     /// Per-tenant SLO slices (empty when single-tenant).
     pub tenants: Vec<TenantReport>,
 }
@@ -460,6 +466,7 @@ impl ClusterReport {
             .set("combined_copies", self.combined_copies)
             .set("processed_copies", self.processed_copies)
             .set("rebalances", self.rebalances)
+            .set("clamped_past_schedules", self.clamped_past_schedules)
             .set("tenants", Json::Arr(tenants))
     }
 }

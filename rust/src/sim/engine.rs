@@ -159,8 +159,15 @@ pub struct RequestTable {
     peak: usize,
 }
 
+impl Default for RequestTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl RequestTable {
-    fn new() -> Self {
+    /// An empty table (slots are allocated lazily and recycled).
+    pub fn new() -> Self {
         Self {
             slots: Vec::new(),
             free: Vec::new(),
@@ -1179,6 +1186,13 @@ pub struct ClusterEngine {
     pipeline: Option<PipelineCore>,
     /// High-water mark of the event queue (O(in-flight) by construction).
     peak_events: usize,
+    /// Reusable scratch buffer for events emitted by component handlers —
+    /// held on the engine (rather than rebuilt per step batch) so
+    /// steady-state event dispatch does not allocate.
+    out: Vec<(f64, Event)>,
+    /// The run hit its `max_sim_seconds` horizon: stepping is over even
+    /// though events may remain queued.
+    cut: bool,
     // metrics
     ttft: Histogram,
     ttft_queue: Histogram,
@@ -1341,6 +1355,8 @@ impl ClusterEngine {
             q: EventQueue::new(),
             pipeline: None,
             peak_events: 0,
+            out: Vec::new(),
+            cut: false,
             ttft: Histogram::new(),
             ttft_queue: Histogram::new(),
             ttft_prefill: Histogram::new(),
@@ -1361,21 +1377,48 @@ impl ClusterEngine {
 
     /// Run the engine to quiescence and report.
     pub fn run(mut self) -> ClusterReport {
-        // Prime the arrival chain: exactly one future Arrive is
-        // outstanding at any time; each firing pulls and schedules the
-        // next, so the queue never holds the whole trace.
+        self.prime();
+        self.step_until(f64::INFINITY);
+        self.finalize()
+    }
+
+    /// Prime the arrival chain: exactly one future Arrive is outstanding
+    /// at any time; each firing pulls and schedules the next, so the
+    /// queue never holds the whole trace. Call once before stepping.
+    pub(crate) fn prime(&mut self) {
         if let Some(r) = self.source.next_request() {
             let at = r.arrival.max(0.0);
             let slot = self.ctx.table.insert(r);
             self.q.schedule_at(at, Event::Arrive(slot));
         }
-        let mut out: Vec<(f64, Event)> = Vec::new();
+    }
+
+    /// Process every queued event with timestamp <= `until` (and within
+    /// the configured `max_sim_seconds` horizon). Returns the timestamp of
+    /// the earliest still-pending event beyond `until`, or `None` when the
+    /// engine is done (quiescent or horizon-cut). The sharded runner steps
+    /// engines epoch by epoch through this; `run` calls it once with an
+    /// infinite epoch — both paths execute the identical event sequence.
+    pub(crate) fn step_until(&mut self, until: f64) -> Option<f64> {
+        if self.cut {
+            return None;
+        }
+        let mut out = std::mem::take(&mut self.out);
         let horizon = self.cfg.max_sim_seconds.unwrap_or(f64::INFINITY);
-        while let Some((now, ev)) = self.q.pop() {
+        let next = loop {
+            let Some(t) = self.q.peek_time() else {
+                break None;
+            };
+            if t > until {
+                break Some(t);
+            }
+            let (now, ev) = self.q.pop().expect("peeked event pops");
             if now > horizon {
-                // Horizon cutoff: whatever is still queued reports as
-                // `unserved_queued` in the final accounting.
-                break;
+                // Horizon cutoff: the popped event is dropped (matching
+                // the original run loop) and whatever is still queued
+                // reports as `unserved_queued` in the final accounting.
+                self.cut = true;
+                break None;
             }
             self.elapsed = self.elapsed.max(now);
             match ev {
@@ -1391,8 +1434,9 @@ impl ClusterEngine {
                 self.q.schedule_at(at, e);
             }
             self.peak_events = self.peak_events.max(self.q.len());
-        }
-        self.finalize()
+        };
+        self.out = out;
+        next
     }
 
     /// One arrival fired: run it through the front door, absorb every
@@ -1743,7 +1787,8 @@ impl ClusterEngine {
         }
     }
 
-    fn finalize(mut self) -> ClusterReport {
+    /// Fold the engine's terminal state into a [`ClusterReport`].
+    pub(crate) fn finalize(mut self) -> ClusterReport {
         let now = self.elapsed;
         self.attn_util.set_horizon(now);
         self.expert_util.set_horizon(now);
@@ -1847,6 +1892,7 @@ impl ClusterEngine {
             combined_copies: self.link.combined_copies,
             processed_copies: self.experts.processed_copies,
             rebalances: self.experts.rebalances,
+            clamped_past_schedules: self.q.clamped_past_schedules(),
             tenants,
         }
     }

@@ -4,9 +4,9 @@
 //!
 //! Layers:
 //!
-//! * [`EventQueue`] — the kernel: virtual clock in f64 seconds, binary-heap
-//!   scheduling, deterministic tie-breaking by insertion sequence so
-//!   repeated runs are bit-identical;
+//! * [`EventQueue`] — the kernel: virtual clock in f64 seconds, an indexed
+//!   calendar (bucket) queue for scheduling, deterministic tie-breaking by
+//!   insertion sequence so repeated runs are bit-identical;
 //! * [`pipeline`] — the shared ping-pong scheduling state machine (one
 //!   implementation for every simulation path);
 //! * [`engine`] — the event-driven cluster engine: pluggable components
@@ -15,13 +15,26 @@
 //!   `Queued → Prefill → KvTransfer → Decode → Done` lifecycle while
 //!   pulling arrivals from a streaming [`crate::workload::ArrivalSource`];
 //! * [`cluster`] — scenario configuration + reporting, the public facade;
+//! * [`shard`] — deterministic sharded execution: independent sub-clusters
+//!   on worker threads with epoch-merged reports;
 //! * [`sweep`] — multi-threaded scenario-grid sweeps and the simulator
 //!   self-throughput benchmark.
+//!
+//! # Event-queue ordering contract
+//!
+//! [`EventQueue::pop`] always returns the globally earliest event, breaking
+//! exact-time ties by insertion sequence. This is the same contract the
+//! original `BinaryHeap` kernel had; the calendar layout only changes *how*
+//! the minimum is found (O(1) amortized instead of O(log n), with bucket
+//! vectors reused as slabs so steady-state scheduling is allocation-free),
+//! never *which* event is the minimum. The bucket width and bucket count
+//! are pure performance knobs: pops are bit-identical for any setting.
 
 pub mod cluster;
 pub mod engine;
 pub mod pipeline;
 mod rng;
+pub mod shard;
 pub mod sweep;
 
 pub use cluster::{
@@ -33,45 +46,93 @@ pub use engine::{
 };
 pub use pipeline::{PipeEvent, PipelineCore, PipelineStats, StageTimes};
 pub use rng::SimRng;
+pub use shard::{run_sharded, ShardPlan};
 pub use sweep::{run_sim_bench, run_sweep, SweepCell, SweepGrid};
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::fmt;
 
-/// An event payload. Generic over the simulation's event type `E`.
+/// Relative epsilon within which a past-time schedule is saturated to `now`
+/// instead of rejected. Floating-point service-time arithmetic can land an
+/// event a few ulps behind the clock legitimately; anything further in the
+/// past is a logic bug in the caller and is reported as a hard error.
+const PAST_EPSILON: f64 = 1e-9;
+
+/// Minimum (and initial) number of calendar buckets. Always a power of two.
+const MIN_BUCKETS: usize = 16;
+
+/// Initial bucket width in virtual seconds, used until the first rehash
+/// measures the live event span and adapts.
+const INITIAL_WIDTH: f64 = 1e-3;
+
+/// Pops between periodic rehashes. A rehash re-measures the live event
+/// span and re-picks the bucket width, so a queue whose population is
+/// stable (no grow/shrink trigger) still tracks the event horizon as the
+/// clock advances. Purely a performance knob — see the ordering contract.
+const REHASH_INTERVAL: usize = 16_384;
+
+/// An event payload tagged with its due time and insertion sequence.
 struct Scheduled<E> {
     time: f64,
     seq: u64,
     event: E,
 }
 
-impl<E> PartialEq for Scheduled<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
+/// A schedule request rejected because its timestamp lies in the simulated
+/// past (beyond the clamping epsilon) or is NaN.
+///
+/// Returned by [`EventQueue::try_schedule_at`];
+/// [`EventQueue::schedule_at`] panics on it instead.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PastScheduleError {
+    /// The rejected timestamp.
+    pub at: f64,
+    /// The queue's virtual clock at the time of the attempt.
+    pub now: f64,
 }
-impl<E> Eq for Scheduled<E> {}
-impl<E> PartialOrd for Scheduled<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<E> Ord for Scheduled<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; invert for earliest-first, tie-break on
-        // sequence for determinism.
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
+
+impl fmt::Display for PastScheduleError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "cannot schedule in the past: at={} is behind now={} by more than epsilon",
+            self.at, self.now
+        )
     }
 }
 
-/// Event-driven simulator with a virtual clock.
+impl std::error::Error for PastScheduleError {}
+
+/// Event-driven simulator kernel with a virtual clock.
+///
+/// Internally an indexed calendar queue (R. Brown, CACM 1988): cycle `k`
+/// of the virtual calendar (`k = floor(time / width)`) maps to bucket
+/// `k & mask`, a cursor drains cycles in order, and a direct-search
+/// fallback handles sparse stretches where no event falls within a full
+/// calendar rotation of the cursor. Bucket vectors are retained across
+/// pops (`swap_remove`), so a steady-state simulation schedules events
+/// with no allocation at all.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Scheduled<E>>,
+    /// Bucket ring; `buckets.len()` is always a power of two.
+    buckets: Vec<Vec<Scheduled<E>>>,
+    /// `buckets.len() - 1`, as u64 for masking cycle numbers.
+    mask: u64,
+    /// Width of one bucket in virtual seconds (performance knob only).
+    width: f64,
+    /// Calendar cycle the cursor is draining: events with
+    /// `cycle_of(time) == cur_k` live in `buckets[(cur_k & mask)]`.
+    cur_k: u64,
+    len: usize,
     now: f64,
     seq: u64,
+    clamped_past: u64,
+    pops_since_rehash: usize,
+}
+
+/// Bucket count for a queue currently holding `len` events (load factor
+/// ~1, power of two, never below [`MIN_BUCKETS`]).
+fn target_buckets(len: usize) -> usize {
+    len.next_power_of_two().max(MIN_BUCKETS)
 }
 
 impl<E> Default for EventQueue<E> {
@@ -83,10 +144,18 @@ impl<E> Default for EventQueue<E> {
 impl<E> EventQueue<E> {
     /// An empty queue at virtual time 0.
     pub fn new() -> Self {
+        let mut buckets = Vec::with_capacity(MIN_BUCKETS);
+        buckets.resize_with(MIN_BUCKETS, Vec::new);
         Self {
-            heap: BinaryHeap::new(),
+            buckets,
+            mask: (MIN_BUCKETS - 1) as u64,
+            width: INITIAL_WIDTH,
+            cur_k: 0,
+            len: 0,
             now: 0.0,
             seq: 0,
+            clamped_past: 0,
+            pops_since_rehash: 0,
         }
     }
 
@@ -95,15 +164,45 @@ impl<E> EventQueue<E> {
         self.now
     }
 
-    /// Schedule `event` at absolute time `at` (must be >= now).
+    /// Past-time schedules saturated to `now` because they fell within the
+    /// clamping epsilon (see [`EventQueue::try_schedule_at`]). A non-zero
+    /// count is benign floating-point jitter; it is surfaced in
+    /// [`cluster::ClusterReport`] so silent clamping is visible.
+    pub fn clamped_past_schedules(&self) -> u64 {
+        self.clamped_past
+    }
+
+    /// Schedule `event` at absolute time `at`.
+    ///
+    /// Timestamps within a relative epsilon *behind* the clock are
+    /// saturated to `now` and counted in
+    /// [`EventQueue::clamped_past_schedules`]; anything further in the
+    /// past — or NaN — is rejected with [`PastScheduleError`].
+    pub fn try_schedule_at(&mut self, at: f64, event: E) -> Result<(), PastScheduleError> {
+        if at.is_nan() {
+            return Err(PastScheduleError { at, now: self.now });
+        }
+        let time = if at < self.now {
+            let eps = PAST_EPSILON * self.now.abs().max(1.0);
+            if self.now - at > eps {
+                return Err(PastScheduleError { at, now: self.now });
+            }
+            self.clamped_past += 1;
+            self.now
+        } else {
+            at
+        };
+        self.push(time, event);
+        Ok(())
+    }
+
+    /// Schedule `event` at absolute time `at` (must be >= now, up to the
+    /// clamping epsilon). Panics where [`EventQueue::try_schedule_at`]
+    /// would return an error.
     pub fn schedule_at(&mut self, at: f64, event: E) {
-        debug_assert!(at >= self.now, "cannot schedule in the past");
-        self.heap.push(Scheduled {
-            time: at.max(self.now),
-            seq: self.seq,
-            event,
-        });
-        self.seq += 1;
+        if let Err(e) = self.try_schedule_at(at, event) {
+            panic!("{e}");
+        }
     }
 
     /// Schedule `event` after a relative delay.
@@ -111,22 +210,163 @@ impl<E> EventQueue<E> {
         self.schedule_at(self.now + delay, event);
     }
 
+    /// Calendar cycle of timestamp `t`. The saturating cast sends
+    /// anything beyond `u64` cycles to the last cycle, where the
+    /// direct-search fallback keeps pop order exact.
+    fn cycle_of(&self, t: f64) -> u64 {
+        (t / self.width).floor() as u64
+    }
+
+    fn push(&mut self, time: f64, event: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        let k = self.cycle_of(time);
+        // An empty queue lets the cursor jump straight to the new event;
+        // an insert behind the cursor (legal: `now` can sit mid-cycle
+        // after the cursor moved past an empty stretch) pulls it back so
+        // no due event is ever skipped.
+        if self.len == 0 || k < self.cur_k {
+            self.cur_k = k;
+        }
+        let b = (k & self.mask) as usize;
+        self.buckets[b].push(Scheduled { time, seq, event });
+        self.len += 1;
+        if self.len > self.buckets.len() * 2 {
+            self.rehash(target_buckets(self.len));
+        }
+    }
+
     /// Pop the earliest event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(f64, E)> {
-        self.heap.pop().map(|s| {
-            self.now = s.time;
-            (s.time, s.event)
-        })
+        let (b, i) = self.find_min()?;
+        Some(self.take(b, i))
+    }
+
+    /// Timestamp of the earliest event without popping it (the epoch-based
+    /// sharded runner uses this to stop exactly at an epoch boundary
+    /// without disturbing insertion order). Cursor advancement is the only
+    /// state this touches — a pure performance effect.
+    pub fn peek_time(&mut self) -> Option<f64> {
+        let (b, i) = self.find_min()?;
+        Some(self.buckets[b][i].time)
+    }
+
+    /// Locate the earliest event as (bucket, slot), advancing the cursor
+    /// past verified-empty cycles.
+    fn find_min(&mut self) -> Option<(usize, usize)> {
+        if self.len == 0 {
+            return None;
+        }
+        // Drain cycles in order: scan the cursor's bucket for the minimum
+        // (time, seq) among events due this cycle. All events of one cycle
+        // share one bucket, and no event of an earlier cycle can remain
+        // (the cursor only advances through verified-empty cycles and is
+        // pulled back by behind-cursor inserts), so a hit here is the
+        // global minimum.
+        for _ in 0..self.buckets.len() {
+            let b = (self.cur_k & self.mask) as usize;
+            let mut best: Option<(f64, u64, usize)> = None;
+            for (i, it) in self.buckets[b].iter().enumerate() {
+                if self.cycle_of(it.time) != self.cur_k {
+                    continue;
+                }
+                let better = match &best {
+                    None => true,
+                    Some((bt, bs, _)) => {
+                        it.time.total_cmp(bt).then(it.seq.cmp(bs)) == Ordering::Less
+                    }
+                };
+                if better {
+                    best = Some((it.time, it.seq, i));
+                }
+            }
+            if let Some((_, _, i)) = best {
+                return Some((b, i));
+            }
+            if self.cur_k == u64::MAX {
+                break; // saturated tail: only the direct search helps
+            }
+            self.cur_k += 1;
+        }
+        // Sparse stretch: nothing due within a full calendar rotation.
+        // Find the global minimum directly and jump the cursor to it.
+        let mut best: Option<(f64, u64, usize, usize)> = None;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            for (i, it) in bucket.iter().enumerate() {
+                let better = match &best {
+                    None => true,
+                    Some((bt, bs, _, _)) => {
+                        it.time.total_cmp(bt).then(it.seq.cmp(bs)) == Ordering::Less
+                    }
+                };
+                if better {
+                    best = Some((it.time, it.seq, b, i));
+                }
+            }
+        }
+        let (time, _, b, i) = best.expect("non-empty queue has a minimum event");
+        self.cur_k = self.cycle_of(time);
+        Some((b, i))
+    }
+
+    /// Remove slot `i` of bucket `b`, advance the clock, and run the
+    /// shrink / periodic-rehash policy.
+    fn take(&mut self, b: usize, i: usize) -> (f64, E) {
+        let s = self.buckets[b].swap_remove(i);
+        self.len -= 1;
+        self.now = s.time;
+        self.pops_since_rehash += 1;
+        if self.len * 8 < self.buckets.len() && self.buckets.len() > MIN_BUCKETS {
+            self.rehash(target_buckets(self.len));
+        } else if self.pops_since_rehash >= REHASH_INTERVAL && self.len >= 2 {
+            self.rehash(target_buckets(self.len));
+        }
+        (s.time, s.event)
+    }
+
+    /// Re-bucket every live event into `new_len` buckets, re-measuring
+    /// the event span to pick a width that spreads ~1 event per bucket.
+    fn rehash(&mut self, new_len: usize) {
+        let mut items: Vec<Scheduled<E>> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            items.append(b);
+        }
+        if new_len < self.buckets.len() {
+            self.buckets.truncate(new_len);
+        } else {
+            self.buckets.resize_with(new_len, Vec::new);
+        }
+        self.mask = new_len as u64 - 1;
+        if items.len() >= 2 {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for it in &items {
+                lo = lo.min(it.time);
+                hi = hi.max(it.time);
+            }
+            let span = hi - lo;
+            if span.is_finite() && span > 0.0 {
+                self.width = span / items.len() as f64;
+            }
+        }
+        // Remaining events are all >= now, so no live cycle precedes
+        // cycle_of(now): restarting the cursor there cannot skip events.
+        self.cur_k = self.cycle_of(self.now);
+        for it in items {
+            let b = (self.cycle_of(it.time) & self.mask) as usize;
+            self.buckets[b].push(it);
+        }
+        self.pops_since_rehash = 0;
     }
 
     /// No scheduled events remain.
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 
     /// Scheduled events currently outstanding.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 }
 
@@ -170,11 +410,100 @@ mod tests {
 
     #[test]
     #[should_panic(expected = "cannot schedule in the past")]
-    #[cfg(debug_assertions)]
-    fn past_scheduling_panics_in_debug() {
+    fn far_past_scheduling_panics() {
         let mut q = EventQueue::new();
         q.schedule_at(2.0, ());
         q.pop();
         q.schedule_at(1.0, ());
+    }
+
+    #[test]
+    fn within_epsilon_past_clamps_to_now_and_counts() {
+        let mut q = EventQueue::new();
+        q.schedule_at(1.0, "first");
+        q.pop();
+        assert_eq!(q.clamped_past_schedules(), 0);
+        // 1e-12 behind a clock at 1.0 is within the 1e-9 relative epsilon.
+        q.schedule_at(1.0 - 1e-12, "jitter");
+        assert_eq!(q.clamped_past_schedules(), 1);
+        let (t, e) = q.pop().unwrap();
+        assert_eq!(t, 1.0, "clamped event saturates to now");
+        assert_eq!(e, "jitter");
+        assert_eq!(q.now(), 1.0);
+    }
+
+    #[test]
+    fn beyond_epsilon_past_is_a_hard_error() {
+        let mut q = EventQueue::new();
+        q.schedule_at(2.0, ());
+        q.pop();
+        let err = q.try_schedule_at(2.0 - 1e-3, ()).unwrap_err();
+        assert_eq!(err.now, 2.0);
+        assert_eq!(err.at, 2.0 - 1e-3);
+        // The rejected event was not enqueued and did not count as a clamp.
+        assert_eq!(q.clamped_past_schedules(), 0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn nan_schedule_is_rejected() {
+        let mut q = EventQueue::new();
+        assert!(q.try_schedule_at(f64::NAN, ()).is_err());
+        assert!(q.is_empty());
+        assert_eq!(q.clamped_past_schedules(), 0);
+    }
+
+    #[test]
+    fn interleaved_schedule_pop_stays_sorted_across_resizes() {
+        // Enough churn to cross grow + shrink thresholds and exercise the
+        // sparse direct-search path (far-future outlier).
+        let mut q = EventQueue::new();
+        let mut rng = SimRng::new(42);
+        let mut popped: Vec<f64> = Vec::new();
+        let mut scheduled = 0usize;
+        for round in 0..200 {
+            for _ in 0..40 {
+                let t = q.now() + rng.uniform() * 0.01;
+                q.schedule_at(t, scheduled);
+                scheduled += 1;
+            }
+            if round == 0 {
+                // Outlier an eternity past the working set.
+                q.schedule_at(1.0e9, usize::MAX);
+                scheduled += 1;
+            }
+            for _ in 0..30 {
+                if let Some((t, _)) = q.pop() {
+                    popped.push(t);
+                }
+            }
+        }
+        while let Some((t, _)) = q.pop() {
+            popped.push(t);
+        }
+        assert_eq!(popped.len(), scheduled);
+        assert!(
+            popped.windows(2).all(|w| w[0] <= w[1]),
+            "pops are globally time-ordered"
+        );
+        assert_eq!(*popped.last().unwrap(), 1.0e9);
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn same_time_burst_pops_in_insertion_order_after_resize() {
+        let mut q = EventQueue::new();
+        // A burst far larger than MIN_BUCKETS forces grow rehashes while
+        // every event shares one timestamp: order must stay insertion seq.
+        for i in 0..500u32 {
+            q.schedule_at(7.5, i);
+        }
+        for expect in 0..500u32 {
+            let (t, e) = q.pop().unwrap();
+            assert_eq!(t, 7.5);
+            assert_eq!(e, expect);
+        }
+        assert!(q.pop().is_none());
     }
 }

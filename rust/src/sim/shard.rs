@@ -1,0 +1,539 @@
+//! Deterministic sharded execution of the cluster engine.
+//!
+//! A disaggregated deployment at scale is a union of *independent*
+//! node-groups: each shard owns a slice of the attention, prefill and
+//! expert pools plus a slice of the aggregate decode batch, and there are
+//! no cross-shard M2N edges. [`run_sharded`] exploits that: the scenario
+//! is partitioned into `K` sub-clusters, the arrival stream is strided
+//! across them ([`crate::workload::StridedSource`]), and each sub-cluster
+//! runs its own [`ClusterEngine`] — stepped in lockstep virtual-time
+//! *epochs* on a pool of `std::thread` workers and merged into one
+//! [`ClusterReport`] at the end.
+//!
+//! # Determinism
+//!
+//! Reports are byte-identical for any worker count (and any epoch width)
+//! because
+//!
+//! * shards share no mutable state: each engine owns its event queue, its
+//!   RNG streams (seeded per shard through a SplitMix64 finalizer) and its
+//!   arrival source, so a shard's event sequence is a pure function of its
+//!   config — threads never exchange data mid-run;
+//! * epoch boundaries only *batch* work, they cannot reorder it: within a
+//!   shard, the engine's `step_until` pops events in exactly the order
+//!   the unbounded run would, and the next boundary is derived from the
+//!   minimum pending timestamp across shards (engine state), never from
+//!   thread scheduling;
+//! * the final merge folds per-shard reports in shard-index order, and
+//!   [`crate::metrics::Histogram`] merging is order-deterministic.
+//!
+//! Worker count therefore changes only wall-clock time. The epoch
+//! boundary exists purely so worker threads are joined at deterministic
+//! points; with fully independent shards any width gives the same answer,
+//! so [`DEFAULT_EPOCH`] is tuned for batching, not correctness.
+
+use std::thread;
+
+use crate::perf_model::prefill_node_gpus;
+use crate::workload::ArrivalSource;
+
+use super::cluster::{ClusterReport, ClusterSimConfig, EngineMode, TenantReport};
+use super::engine::ClusterEngine;
+
+/// Default epoch width in virtual seconds — coarse enough that each worker
+/// round carries thousands of events, fine enough to keep all workers busy.
+/// Purely a batching knob: any width yields the same report.
+pub const DEFAULT_EPOCH: f64 = 0.25;
+
+/// Sharding parameters for [`run_sharded`].
+#[derive(Debug, Clone, Copy)]
+pub struct ShardPlan {
+    /// Requested sub-cluster count. Clamped by [`effective_shards`] so
+    /// every shard keeps at least one attention node, one expert node and
+    /// — when the prefill pool is on — one prefill node.
+    pub shards: usize,
+    /// Worker threads stepping shards each epoch (clamped to the shard
+    /// count; 1 = serial, still epoch-stepped, byte-identical results).
+    pub workers: usize,
+    /// Epoch width in virtual seconds (non-positive or non-finite =
+    /// [`DEFAULT_EPOCH`]). A pure batching knob: any width yields the
+    /// same report.
+    pub epoch: f64,
+}
+
+impl ShardPlan {
+    /// `shards` sub-clusters stepped by all available cores.
+    pub fn new(shards: usize) -> Self {
+        Self {
+            shards,
+            workers: thread::available_parallelism().map_or(1, |n| n.get()),
+            epoch: DEFAULT_EPOCH,
+        }
+    }
+
+    /// Override the worker-thread count.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+}
+
+/// Derive shard `i`'s seed from the scenario seed (SplitMix64 finalizer —
+/// avalanches every bit so shard streams are uncorrelated even for
+/// adjacent base seeds).
+fn shard_seed(base: u64, shard: usize) -> u64 {
+    let mut z = base ^ (shard as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Largest usable shard count for `cfg` given `requested`: every shard
+/// must keep ≥1 attention node, ≥1 expert node and — when the prefill
+/// pool is on — ≥1 prefill node. Colocated scenarios never shard: their
+/// facade plan has no expert pool and the per-group inline-prefill path
+/// is already a single serving group per node.
+pub fn effective_shards(cfg: &ClusterSimConfig, requested: usize) -> usize {
+    if matches!(cfg.mode, EngineMode::Colocated(_)) {
+        return 1;
+    }
+    let mut s = requested
+        .max(1)
+        .min(cfg.plan.n_a.max(1))
+        .min(cfg.plan.n_e.max(1));
+    if cfg.prefill_nodes > 0 && cfg.prefill_chunk > 0 {
+        s = s.min(cfg.prefill_nodes);
+    }
+    s.max(1)
+}
+
+/// Shard `shard`-of-`shards` sub-scenario: the node pools and the
+/// aggregate decode batch split as evenly as possible (remainders going to
+/// low-index shards), with an independent derived seed. Everything else —
+/// model, hardware, routing, popularity, transport, tenants, horizon —
+/// is inherited verbatim.
+pub fn shard_config(cfg: &ClusterSimConfig, shard: usize, shards: usize) -> ClusterSimConfig {
+    assert!(shard < shards, "shard {shard} of {shards}");
+    let split = |total: usize| total / shards + usize::from(shard < total % shards);
+    let mut c = cfg.clone();
+    c.plan.n_a = split(cfg.plan.n_a.max(1)).max(1);
+    c.plan.n_e = split(cfg.plan.n_e.max(1)).max(1);
+    c.plan.n_p = split(cfg.plan.n_p);
+    c.plan.global_batch = split(cfg.plan.global_batch).max(1);
+    c.prefill_nodes = split(cfg.prefill_nodes);
+    c.seed = shard_seed(cfg.seed, shard);
+    c
+}
+
+/// GPUs a scenario occupies — mirrors the engine's per-GPU-throughput
+/// divisor, including its normalization of the prefill pool (off when
+/// `prefill_chunk == 0` or the mode is colocated, default node width from
+/// the model footprint when `tp_p == 0`).
+fn gpu_count(cfg: &ClusterSimConfig) -> f64 {
+    let plan = &cfg.plan;
+    let prefill_nodes = if cfg.prefill_chunk == 0 || matches!(cfg.mode, EngineMode::Colocated(_)) {
+        0
+    } else {
+        cfg.prefill_nodes
+    };
+    let prefill_tp = if plan.tp_p > 0 {
+        plan.tp_p
+    } else {
+        prefill_node_gpus(&cfg.model, &cfg.cluster)
+    };
+    (plan.tp_a * plan.n_a.max(1) + plan.tp_e * plan.n_e.max(1) + prefill_tp * prefill_nodes) as f64
+}
+
+/// Run `cfg` as `plan.shards` independent sub-clusters on `plan.workers`
+/// threads and merge their reports. `make_source(shard, shards)` builds
+/// each shard's arrival stream — typically a
+/// [`crate::workload::StridedSource`] over the scenario's stream, so the
+/// union of shard streams is exactly the unsharded workload.
+///
+/// With one effective shard this degrades to a plain
+/// [`ClusterEngine::run`]; otherwise the report is byte-identical for any
+/// worker count (see the module docs for the determinism argument).
+pub fn run_sharded<F>(cfg: &ClusterSimConfig, plan: ShardPlan, make_source: F) -> ClusterReport
+where
+    F: Fn(usize, usize) -> Box<dyn ArrivalSource>,
+{
+    let shards = effective_shards(cfg, plan.shards);
+    if shards == 1 {
+        return ClusterEngine::new(cfg.clone(), make_source(0, 1)).run();
+    }
+    let configs: Vec<ClusterSimConfig> =
+        (0..shards).map(|i| shard_config(cfg, i, shards)).collect();
+    let mut engines: Vec<ClusterEngine> = configs
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let mut e = ClusterEngine::new(c.clone(), make_source(i, shards));
+            e.prime();
+            e
+        })
+        .collect();
+    let workers = plan.workers.clamp(1, shards);
+    let epoch = if plan.epoch.is_finite() && plan.epoch > 0.0 {
+        plan.epoch
+    } else {
+        DEFAULT_EPOCH
+    };
+    let mut end = epoch;
+    loop {
+        let min_next = step_round(&mut engines, end, workers);
+        if !min_next.is_finite() {
+            break; // every shard quiescent (or horizon-cut)
+        }
+        // Next boundary: the epoch-grid point strictly after the earliest
+        // pending event, so idle stretches are skipped in one jump while
+        // boundaries stay deterministic (engine state only, no clocks).
+        end = ((min_next / epoch).floor() * epoch + epoch).max(end + epoch);
+    }
+    let reports: Vec<ClusterReport> = engines.into_iter().map(ClusterEngine::finalize).collect();
+    merge_reports(&configs, reports)
+}
+
+/// Step every engine up to the `until` boundary, striping engines across
+/// `workers` scoped threads; returns the minimum pending timestamp across
+/// shards (infinity when all are done). The per-thread fold and the final
+/// join-order reduction are both min-reductions, so the result does not
+/// depend on scheduling.
+fn step_round(engines: &mut [ClusterEngine], until: f64, workers: usize) -> f64 {
+    if workers <= 1 || engines.len() <= 1 {
+        let mut min_next = f64::INFINITY;
+        for e in engines.iter_mut() {
+            if let Some(t) = e.step_until(until) {
+                min_next = min_next.min(t);
+            }
+        }
+        return min_next;
+    }
+    let chunk = engines.len().div_ceil(workers);
+    let mut min_next = f64::INFINITY;
+    thread::scope(|s| {
+        let handles: Vec<_> = engines
+            .chunks_mut(chunk)
+            .map(|group| {
+                s.spawn(move || {
+                    let mut m = f64::INFINITY;
+                    for e in group {
+                        if let Some(t) = e.step_until(until) {
+                            m = m.min(t);
+                        }
+                    }
+                    m
+                })
+            })
+            .collect();
+        for h in handles {
+            min_next = min_next.min(h.join().expect("shard worker panicked"));
+        }
+    });
+    min_next
+}
+
+/// Fold per-shard reports (in shard-index order) into one aggregate.
+///
+/// Counters sum; `elapsed` is the max; rates are recomputed from the
+/// merged totals; pool utilizations and mean stage times are weighted
+/// means (by pool-GPU-seconds and by iterations respectively); histograms
+/// merge in shard order; per-node vectors concatenate in shard order;
+/// tenant slices zip-merge by index (every shard reports the same class
+/// list).
+fn merge_reports(configs: &[ClusterSimConfig], mut reports: Vec<ClusterReport>) -> ClusterReport {
+    let gpus: f64 = configs.iter().map(gpu_count).sum();
+    let elapsed = reports.iter().map(|r| r.elapsed).fold(0.0_f64, f64::max);
+    let (mut attn_num, mut attn_den) = (0.0, 0.0);
+    let (mut exp_num, mut exp_den) = (0.0, 0.0);
+    let (mut ta_num, mut te_num, mut tc_num, mut t_den) = (0.0, 0.0, 0.0, 0.0);
+    for (c, r) in configs.iter().zip(&reports) {
+        let wa = c.plan.n_a.max(1) as f64 * r.elapsed;
+        attn_num += r.attn_utilization * wa;
+        attn_den += wa;
+        let we = c.plan.n_e.max(1) as f64 * r.elapsed;
+        exp_num += r.expert_utilization * we;
+        exp_den += we;
+        let wi = r.iterations as f64;
+        ta_num += r.mean_t_a * wi;
+        te_num += r.mean_t_e * wi;
+        tc_num += r.mean_t_c * wi;
+        t_den += wi;
+    }
+    let mut acc = reports.remove(0);
+    for r in reports {
+        acc.completed += r.completed;
+        acc.tokens += r.tokens;
+        acc.iterations += r.iterations;
+        acc.ttft.merge(&r.ttft);
+        acc.ttft_queue.merge(&r.ttft_queue);
+        acc.ttft_prefill.merge(&r.ttft_prefill);
+        acc.ttft_transfer.merge(&r.ttft_transfer);
+        acc.ttft_decode.merge(&r.ttft_decode);
+        acc.tpot.merge(&r.tpot);
+        acc.e2e.merge(&r.e2e);
+        acc.per_node_tokens.extend(r.per_node_tokens);
+        acc.per_node_attn_busy.extend(r.per_node_attn_busy);
+        acc.per_node_expert_busy.extend(r.per_node_expert_busy);
+        acc.per_node_prefill_busy.extend(r.per_node_prefill_busy);
+        acc.prefilled_tokens += r.prefilled_tokens;
+        acc.kv_transferred_tokens += r.kv_transferred_tokens;
+        acc.kv_blocks_in_use_at_end += r.kv_blocks_in_use_at_end;
+        acc.rejected += r.rejected;
+        acc.unserved_queued += r.unserved_queued;
+        acc.peak_in_flight += r.peak_in_flight;
+        acc.peak_queue_events += r.peak_queue_events;
+        acc.dispatched_copies += r.dispatched_copies;
+        acc.combined_copies += r.combined_copies;
+        acc.processed_copies += r.processed_copies;
+        acc.rebalances += r.rebalances;
+        acc.clamped_past_schedules += r.clamped_past_schedules;
+        debug_assert_eq!(acc.tenants.len(), r.tenants.len(), "tenant lists align");
+        for (a, b) in acc.tenants.iter_mut().zip(r.tenants) {
+            merge_tenant(a, b);
+        }
+    }
+    acc.elapsed = elapsed;
+    acc.throughput = if elapsed > 0.0 {
+        acc.tokens as f64 / elapsed
+    } else {
+        0.0
+    };
+    acc.per_gpu_throughput = acc.throughput / gpus.max(1.0);
+    acc.attn_utilization = if attn_den > 0.0 { attn_num / attn_den } else { 0.0 };
+    acc.expert_utilization = if exp_den > 0.0 { exp_num / exp_den } else { 0.0 };
+    acc.mean_t_a = if t_den > 0.0 { ta_num / t_den } else { 0.0 };
+    acc.mean_t_e = if t_den > 0.0 { te_num / t_den } else { 0.0 };
+    acc.mean_t_c = if t_den > 0.0 { tc_num / t_den } else { 0.0 };
+    acc
+}
+
+fn merge_tenant(a: &mut TenantReport, b: TenantReport) {
+    debug_assert_eq!(a.name, b.name, "tenant order matches across shards");
+    a.completed += b.completed;
+    a.ttft.merge(&b.ttft);
+    a.ttft_queue.merge(&b.ttft_queue);
+    a.ttft_prefill.merge(&b.ttft_prefill);
+    a.ttft_transfer.merge(&b.ttft_transfer);
+    a.ttft_decode.merge(&b.ttft_decode);
+    a.e2e.merge(&b.e2e);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, GpuKind, ModelConfig};
+    use crate::plan::PlanSearcher;
+    use crate::workload::{RequestStream, StridedSource, WorkloadSpec};
+
+    fn shardable_setup() -> ClusterSimConfig {
+        let model = ModelConfig::tiny();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        let plan = PlanSearcher::new(model.clone(), cluster.clone(), 200.0)
+            .search()
+            .expect("tiny plan");
+        let mut cfg = ClusterSimConfig {
+            seed: 11,
+            ..ClusterSimConfig::new(model, cluster, plan)
+        };
+        // Enough pool width to split four ways.
+        cfg.plan.n_a = 4;
+        cfg.plan.n_e = 4;
+        cfg.plan.global_batch = cfg.plan.global_batch.max(8);
+        cfg.prefill_nodes = 4;
+        cfg.plan.n_p = 4;
+        cfg
+    }
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec {
+            median_input: 64.0,
+            median_output: 8.0,
+            sigma: 0.3,
+            arrival_rate: Some(120.0),
+            ..Default::default()
+        }
+    }
+
+    fn source_factory(
+        spec: WorkloadSpec,
+        n: usize,
+        seed: u64,
+    ) -> impl Fn(usize, usize) -> Box<dyn ArrivalSource> {
+        move |shard, shards| {
+            Box::new(StridedSource::new(
+                RequestStream::new(spec.clone(), n, seed),
+                shard,
+                shards,
+            ))
+        }
+    }
+
+    #[test]
+    fn effective_shards_respects_pool_widths() {
+        let mut cfg = shardable_setup();
+        assert_eq!(effective_shards(&cfg, 4), 4);
+        assert_eq!(effective_shards(&cfg, 99), 4, "clamped to pool width");
+        assert_eq!(effective_shards(&cfg, 0), 1);
+        cfg.plan.n_e = 2;
+        assert_eq!(effective_shards(&cfg, 4), 2, "expert pool limits");
+        cfg.prefill_nodes = 1;
+        assert_eq!(effective_shards(&cfg, 4), 1, "prefill pool limits");
+        cfg.prefill_chunk = 0; // prefill off: its width no longer binds
+        assert_eq!(effective_shards(&cfg, 4), 2);
+    }
+
+    #[test]
+    fn shard_config_splits_pools_and_derives_seeds() {
+        let cfg = shardable_setup();
+        let parts: Vec<ClusterSimConfig> = (0..3).map(|i| shard_config(&cfg, i, 3)).collect();
+        assert_eq!(parts.iter().map(|c| c.plan.n_a).sum::<usize>(), 4);
+        assert_eq!(parts.iter().map(|c| c.plan.n_e).sum::<usize>(), 4);
+        assert_eq!(parts.iter().map(|c| c.prefill_nodes).sum::<usize>(), 4);
+        assert_eq!(
+            parts.iter().map(|c| c.plan.global_batch).sum::<usize>(),
+            cfg.plan.global_batch
+        );
+        // Remainders go to low-index shards.
+        assert!(parts[0].plan.n_a >= parts[2].plan.n_a);
+        // Seeds are derived, distinct, and deterministic.
+        assert_ne!(parts[0].seed, parts[1].seed);
+        assert_ne!(parts[1].seed, parts[2].seed);
+        assert_eq!(parts[0].seed, shard_config(&cfg, 0, 3).seed);
+    }
+
+    #[test]
+    fn worker_count_never_changes_the_report() {
+        let cfg = shardable_setup();
+        let n = 160;
+        let base = run_sharded(
+            &cfg,
+            ShardPlan {
+                shards: 4,
+                workers: 1,
+                epoch: DEFAULT_EPOCH,
+            },
+            source_factory(spec(), n, cfg.seed),
+        );
+        assert_eq!(base.completed, n as u64, "sharded run serves everything");
+        for workers in [2, 4, 7] {
+            let rep = run_sharded(
+                &cfg,
+                ShardPlan {
+                    shards: 4,
+                    workers,
+                    epoch: DEFAULT_EPOCH,
+                },
+                source_factory(spec(), n, cfg.seed),
+            );
+            assert_eq!(
+                rep.to_json().to_string(),
+                base.to_json().to_string(),
+                "byte-identical report with {workers} workers"
+            );
+        }
+    }
+
+    #[test]
+    fn epoch_width_never_changes_the_report() {
+        let cfg = shardable_setup();
+        let n = 120;
+        let mk = |epoch| {
+            run_sharded(
+                &cfg,
+                ShardPlan {
+                    shards: 2,
+                    workers: 2,
+                    epoch,
+                },
+                source_factory(spec(), n, cfg.seed),
+            )
+        };
+        let base = mk(DEFAULT_EPOCH).to_json().to_string();
+        assert_eq!(mk(0.01).to_json().to_string(), base);
+        assert_eq!(mk(5.0).to_json().to_string(), base);
+        assert_eq!(mk(-1.0).to_json().to_string(), base, "invalid width → default");
+    }
+
+    #[test]
+    fn single_shard_matches_unsharded_run() {
+        let cfg = shardable_setup();
+        let n = 80;
+        let sharded = run_sharded(&cfg, ShardPlan::new(1), source_factory(spec(), n, cfg.seed));
+        let plain = ClusterEngine::new(
+            cfg.clone(),
+            Box::new(RequestStream::new(spec(), n, cfg.seed)),
+        )
+        .run();
+        assert_eq!(sharded.to_json().to_string(), plain.to_json().to_string());
+    }
+
+    #[test]
+    fn merged_totals_conserve_the_workload() {
+        let cfg = shardable_setup();
+        let n = 200;
+        let rep = run_sharded(
+            &cfg,
+            ShardPlan {
+                shards: 4,
+                workers: 4,
+                epoch: DEFAULT_EPOCH,
+            },
+            source_factory(spec(), n, cfg.seed),
+        );
+        let want: u64 = RequestStream::new(spec(), n, cfg.seed)
+            .map(|r| r.output_len as u64)
+            .sum();
+        assert_eq!(rep.completed, n as u64);
+        assert_eq!(rep.tokens, want, "every output token accounted once");
+        assert_eq!(rep.ttft.count(), n as u64);
+        assert_eq!(rep.e2e.count(), n as u64);
+        assert_eq!(rep.per_node_tokens.len(), 4, "per-node vectors concatenate");
+        assert!(rep.throughput > 0.0);
+        assert!(rep.per_gpu_throughput > 0.0);
+        assert!(rep.elapsed > 0.0);
+    }
+
+    #[test]
+    fn colocated_scenarios_refuse_to_shard() {
+        let model = ModelConfig::tiny();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        let plan = crate::baselines::ColocatedPlan::sized_to_match(
+            crate::baselines::BaselineKind::Vllm,
+            &model,
+            &cluster,
+            8,
+        );
+        let cfg = ClusterSimConfig::colocated(model, cluster, plan);
+        assert_eq!(effective_shards(&cfg, 8), 1);
+    }
+
+    /// Wall-clock scaling check (workers 4 vs 1 on a bigger run). Ignored
+    /// in the default suite — timing-sensitive; run explicitly with
+    /// `cargo test --release -- --ignored shard_speedup`.
+    #[test]
+    #[ignore]
+    fn shard_speedup_with_four_workers() {
+        let cfg = shardable_setup();
+        let n = 20_000;
+        let time = |workers| {
+            let t0 = std::time::Instant::now();
+            let rep = run_sharded(
+                &cfg,
+                ShardPlan {
+                    shards: 4,
+                    workers,
+                    epoch: DEFAULT_EPOCH,
+                },
+                source_factory(spec(), n, cfg.seed),
+            );
+            assert_eq!(rep.completed, n as u64);
+            t0.elapsed().as_secs_f64()
+        };
+        let serial = time(1);
+        let parallel = time(4);
+        assert!(
+            parallel * 2.0 <= serial,
+            "expected ≥2x speedup, got {serial:.3}s → {parallel:.3}s"
+        );
+    }
+}

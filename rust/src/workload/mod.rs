@@ -11,7 +11,7 @@
 mod arrivals;
 mod trace;
 
-pub use arrivals::{ArrivalSource, RequestStream, TraceSource};
+pub use arrivals::{ArrivalSource, RequestStream, StridedSource, TraceSource};
 pub use trace::{Trace, TraceStats};
 
 use anyhow::bail;
