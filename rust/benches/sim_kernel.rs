@@ -10,7 +10,9 @@
 //! (refreshed by `msi sweep --bench`, gated in CI by `--bench-compare`).
 
 use megascale_infer::metrics::Histogram;
-use megascale_infer::sim::{EventQueue, PipeEvent, PipelineCore, RequestTable, SimRng, StageTimes};
+use megascale_infer::sim::{
+    EventQueue, FusedQueue, PipeEvent, PipelineCore, RequestTable, SimRng, StageTimes,
+};
 use megascale_infer::util::bench::{bench, black_box, section};
 use megascale_infer::workload::Request;
 
@@ -106,6 +108,37 @@ fn main() {
                 let Some((now, ev)) = q.pop() else { break };
                 if let Some(stats) = core.on_event(now, ev, &mut times, &mut out) {
                     black_box(stats);
+                    break;
+                }
+            }
+        });
+    }
+
+    // ---- PipelineCore: the same pass on the fused local queue ----
+    // The engine's fast path: one recycled core + a flat-Vec FusedQueue
+    // instead of the global calendar. The gap between this and the
+    // stepwise bench above is the per-iteration win of fusing.
+    {
+        let mut core = PipelineCore::new(2, 8);
+        let mut q = FusedQueue::new();
+        let mut out: Vec<(f64, PipeEvent)> = Vec::new();
+        run("pipeline_core fused pass m=2 layers=8", quick, || {
+            core.reset(2, 8);
+            q.clear();
+            out.clear();
+            let mut times = |_now: f64, _mb: usize, _layer: usize| StageTimes {
+                t_a: 1.0e-3,
+                t_e: 1.4e-3,
+                t_c: 0.2e-3,
+            };
+            core.start(0.0, &mut out);
+            loop {
+                for (at, ev) in out.drain(..) {
+                    q.push(at, ev);
+                }
+                let Some((now, ev)) = q.pop() else { break };
+                if core.on_event_done(now, ev, &mut times, &mut out) {
+                    black_box(core.m);
                     break;
                 }
             }

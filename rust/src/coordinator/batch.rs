@@ -72,11 +72,21 @@ impl DecodeBatch {
     /// Split into `m` micro-batches of near-equal size (sizes differ by at
     /// most 1). Returns the token count of each micro-batch.
     pub fn micro_batch_sizes(&self, m: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(m);
+        self.micro_batch_sizes_into(m, &mut out);
+        out
+    }
+
+    /// [`DecodeBatch::micro_batch_sizes`] into a caller-recycled buffer
+    /// (cleared first) — the cluster engine calls this every iteration and
+    /// must not allocate in steady state.
+    pub fn micro_batch_sizes_into(&self, m: usize, out: &mut Vec<usize>) {
         debug_assert!(m >= 1);
         let n = self.requests.len();
         let base = n / m;
         let extra = n % m;
-        (0..m).map(|i| base + usize::from(i < extra)).collect()
+        out.clear();
+        out.extend((0..m).map(|i| base + usize::from(i < extra)));
     }
 
     /// Run one decode iteration over every request: returns ids of requests

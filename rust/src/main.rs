@@ -17,8 +17,8 @@
 //!               [--popularity-drift <s>] [--rebalance <s>] [--balance]
 //!               [--tenants name:weight:slo_s,...] [--simnet]
 //!               [--micro-batches m] [--prefill N] [--prefill-chunk 2048]
-//!               [--max-seconds <s>] [--shards K] [--shard-workers N]
-//!               [--seed 42] [--json report.json]
+//!               [--max-seconds <s>] [--shards K|auto] [--shard-workers N]
+//!               [--no-fuse] [--seed 42] [--json report.json]
 //! msi serve     --artifacts artifacts [--micro-batches 2] [--requests 16]
 //!               (requires the `pjrt` feature)
 //! msi sweep     [--model tiny] [--gpu ampere] [--requests 2000]
@@ -134,6 +134,7 @@ fn main() -> Result<()> {
             "smoke",
             "bench",
             "prompt-heavy",
+            "no-fuse",
         ],
     )?;
     match args.subcommand.as_str() {
@@ -457,11 +458,20 @@ fn cmd_replay(args: &Args) -> Result<()> {
         prefill_nodes,
         prefill_chunk,
         mode: EngineMode::Disaggregated,
+        fuse: !args.flag("no-fuse"),
     };
     let plan_json = cfg.plan.to_json();
     // --shards K: run as K independent sub-clusters stepped in parallel
     // (deterministic: byte-identical reports for any --shard-workers).
-    let shards = args.usize_or("shards", 1)?;
+    // `--shards auto` sizes K to the host's available parallelism; the
+    // pool-width clamp below still applies.
+    let shards = match args.get("shards") {
+        None => 1,
+        Some("auto") => std::thread::available_parallelism().map_or(1, |n| n.get()),
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--shards={v} is not an integer or `auto`"))?,
+    };
     let report = if shards > 1 {
         let eff = effective_shards(&cfg, shards);
         if eff != shards {

@@ -7,9 +7,16 @@
 //! the GEMMs turn compute-bound — exactly the transition MegaScale-Infer
 //! engineers by aggregating tokens from many attention replicas.
 
+use std::cell::RefCell;
+
 use crate::config::{GpuSpec, ModelConfig, DTYPE_BYTES};
 
 use super::gemm::{table2_gemms, GpuPerf};
+
+/// Largest integer batch size memoized by [`ExpertModel::time`]. Decode
+/// micro-batches are a few hundred tokens; the cap only bounds the lazily
+/// grown table against pathological inputs.
+const MEMO_CAP: usize = 1 << 16;
 
 /// Per-layer expert (FFN) time model.
 ///
@@ -28,6 +35,12 @@ pub struct ExpertModel {
     pub tp: usize,
     perf: GpuPerf,
     model: ModelConfig,
+    /// Lazy roofline table: `memo[b]` caches `time(b as f64)` for integer
+    /// `b < MEMO_CAP` (NaN = not computed yet). Every constant the roofline
+    /// depends on is fixed at construction, so entries never invalidate;
+    /// interior mutability keeps the `&self` signature, and `RefCell` is
+    /// `Send` — all the sharded engine needs (each engine owns its models).
+    memo: RefCell<Vec<f64>>,
 }
 
 impl ExpertModel {
@@ -66,12 +79,32 @@ impl ExpertModel {
             tp,
             perf,
             model: model.clone(),
+            memo: RefCell::new(Vec::new()),
         }
     }
 
     /// `T_e` for `b_e` tokens (one layer, seconds): exact roofline. The
-    /// up-projection GEMM occurs `ffn_matrices - 1` times (w1 and w3).
+    /// decode hot loop calls this with integer-valued batch sizes, which
+    /// hit a lazily grown memo table; fractional sizes (e.g. a balanced
+    /// makespan) fall through to the direct evaluation.
     pub fn time(&self, b_e: f64) -> f64 {
+        if b_e >= 0.0 && b_e.fract() == 0.0 && b_e < MEMO_CAP as f64 {
+            let b = b_e as usize;
+            let mut memo = self.memo.borrow_mut();
+            if memo.len() <= b {
+                memo.resize(b + 1, f64::NAN);
+            }
+            if memo[b].is_nan() {
+                memo[b] = self.evaluate(b_e);
+            }
+            return memo[b];
+        }
+        self.evaluate(b_e)
+    }
+
+    /// The uncached roofline evaluation behind [`ExpertModel::time`]. The
+    /// up-projection GEMM occurs `ffn_matrices - 1` times (w1 and w3).
+    fn evaluate(&self, b_e: f64) -> f64 {
         let (_, _, fin, fout) = table2_gemms(&self.model, 1.0, b_e, 1, self.tp);
         let ar = if self.tp > 1 {
             self.perf
@@ -111,6 +144,19 @@ mod tests {
             &GpuSpec::of(GpuKind::Ampere80G),
             2,
         )
+    }
+
+    #[test]
+    fn memoized_integer_batches_match_direct_evaluation() {
+        let m = mk();
+        for b in [0.0, 1.0, 8.0, 39.0, 156.0, 1024.0] {
+            assert_eq!(m.time(b), m.evaluate(b), "first call (fills table)");
+            assert_eq!(m.time(b), m.evaluate(b), "second call (table hit)");
+        }
+        // Fractional and beyond-cap batch sizes bypass the table entirely.
+        assert_eq!(m.time(12.5), m.evaluate(12.5));
+        let big = MEMO_CAP as f64 * 2.0;
+        assert_eq!(m.time(big), m.evaluate(big));
     }
 
     #[test]

@@ -66,6 +66,26 @@ impl PerfModel {
         }
     }
 
+    /// Rebuild only the attention-side model for a new average sequence
+    /// length, bit-identically to `PerfModel::new(model, cluster, tp_a,
+    /// tp_e, avg_seq)` — `avg_seq` feeds exclusively into
+    /// [`AttentionModel`], so the expert, comm, and model-config parts are
+    /// untouched. `attn_gpu` must be the cluster's
+    /// [`ClusterSpec::attention_gpu`] (callers cache it to keep this call
+    /// allocation-free). The cluster engine calls this once per decode
+    /// iteration instead of reconstructing the bundle, which both avoids
+    /// the `ModelConfig` clone and keeps [`ExpertModel`]'s memoized
+    /// roofline table warm across iterations.
+    pub fn set_avg_seq(
+        &mut self,
+        model: &ModelConfig,
+        attn_gpu: &crate::config::GpuSpec,
+        tp_a: usize,
+        avg_seq: f64,
+    ) {
+        self.attention = AttentionModel::new(model, attn_gpu, tp_a, avg_seq);
+    }
+
     /// `T_a`: attention-node time for a micro-batch of `b_a` tokens (one layer).
     pub fn t_a(&self, b_a: f64) -> f64 {
         self.attention.time(b_a)
@@ -95,6 +115,20 @@ mod tests {
         assert!(pm.t_a(64.0) < pm.t_a(256.0));
         assert!(pm.t_e(64.0) < pm.t_e(256.0));
         assert!(pm.t_c(64.0, 128.0) < pm.t_c(512.0, 1024.0));
+    }
+
+    #[test]
+    fn set_avg_seq_matches_fresh_construction() {
+        let model = ModelConfig::mixtral_8x22b();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        let mut pm = PerfModel::new(&model, &cluster, 4, 2, 300.0);
+        pm.set_avg_seq(&model, &cluster.attention_gpu(), 4, 730.0);
+        let fresh = PerfModel::new(&model, &cluster, 4, 2, 730.0);
+        for b in [1.0, 64.0, 256.0, 1024.0] {
+            assert_eq!(pm.t_a(b), fresh.t_a(b), "b={b}");
+            assert_eq!(pm.t_e(b), fresh.t_e(b), "b={b}");
+            assert_eq!(pm.t_c(b, 2.0 * b), fresh.t_c(b, 2.0 * b), "b={b}");
+        }
     }
 
     #[test]

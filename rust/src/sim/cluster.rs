@@ -150,6 +150,14 @@ pub struct ClusterSimConfig {
     /// Serving architecture: disaggregated (default) or a colocated
     /// monolithic baseline fleet (`msi compare`).
     pub mode: EngineMode,
+    /// Fused-iteration fast path (default on): compute each decode
+    /// iteration's whole ping-pong traversal analytically at the
+    /// iteration boundary and schedule ONE completion event, instead of
+    /// ~`3·m·layers` per-hop events through the global queue. Reports are
+    /// byte-identical either way (the fast path replays the global
+    /// queue's exact pop and RNG-draw order); `false` (`msi replay
+    /// --no-fuse`) keeps the stepwise reference path for A/B checks.
+    pub fuse: bool,
 }
 
 impl ClusterSimConfig {
@@ -171,6 +179,7 @@ impl ClusterSimConfig {
             prefill_nodes,
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             mode: EngineMode::Disaggregated,
+            fuse: true,
         }
     }
 
@@ -310,8 +319,11 @@ pub struct ClusterReport {
     /// High-water mark of concurrently in-flight requests (the engine's
     /// request table is O(this), not O(trace length)).
     pub peak_in_flight: u64,
-    /// High-water mark of the event queue (O(in-flight) by construction:
-    /// exactly one future Arrive event is outstanding at any time).
+    /// High-water mark of workload-driven events in the queue —
+    /// engine-internal events (pipeline hops, rebalances, fused iteration
+    /// ends) are excluded, so the metric is O(in-flight) by construction
+    /// (exactly one future Arrive event is outstanding at any time) and
+    /// identical between fused and stepwise runs.
     pub peak_queue_events: u64,
     /// Mean effective per-(micro-batch, layer) stage times actually fed to
     /// the pipeline engine — the DES-vs-Eq.5 cross-check anchors here.

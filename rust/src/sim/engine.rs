@@ -67,6 +67,7 @@
 use std::collections::VecDeque;
 
 use crate::baselines::ColocatedModel;
+use crate::config::GpuSpec;
 use crate::coordinator::{
     balance_experts, build_dispatch, BlockAllocator, ContinuousBatcher, ExpertPlacement,
     KvCacheConfig, Router, SchedulerConfig,
@@ -78,7 +79,7 @@ use crate::sim::cluster::{
     draw_gating, popularity_weights, ClusterReport, ClusterSimConfig, EngineMode,
     ExpertPopularity, TenantReport, Transport,
 };
-use crate::sim::pipeline::{PipeEvent, PipelineCore, PipelineStats, StageTimes};
+use crate::sim::pipeline::{FusedQueue, PipeEvent, PipelineCore, PipelineStats, StageTimes};
 use crate::sim::{EventQueue, SimRng};
 use crate::workload::{ArrivalSource, Request};
 
@@ -107,6 +108,11 @@ pub enum Event {
     Rebalance,
     /// One ping-pong pipeline hop (shared core).
     Pipe(PipeEvent),
+    /// A fused iteration completes: the fast path computed the whole
+    /// ping-pong traversal analytically inside `IterBegin` and scheduled
+    /// this single event at the completion time instead of ~3·m·L `Pipe`
+    /// hops (never emitted with `fuse` off).
+    IterEnd,
 }
 
 /// Lifecycle phase of an in-flight request — the explicit state machine
@@ -131,13 +137,19 @@ pub enum RequestPhase {
     Done,
 }
 
-/// One in-flight request plus its routing and lifecycle state.
-struct InFlight {
-    req: Request,
-    /// Attention node the router placed the request on (None while queued).
-    placed_on: Option<usize>,
-    /// Current lifecycle phase.
+/// Per-slot lifecycle metadata, kept in its own dense array alongside the
+/// request payloads (structure-of-arrays): the hot end-of-iteration path
+/// reads phases and transition timestamps for many slots, and packing them
+/// without the `Request` payload (or a discriminant per slot) keeps those
+/// reads on a few cache lines. A vacant (recycled) slot is marked by
+/// `RequestPhase::Done`.
+#[derive(Debug, Clone, Copy)]
+struct SlotMeta {
+    /// Current lifecycle phase (`Done` doubles as the vacancy marker).
     phase: RequestPhase,
+    /// Attention node the router placed the request on (`u32::MAX` while
+    /// unplaced — node counts are far below the sentinel).
+    placed: u32,
     /// When the first prefill chunk started (end of `Queued`).
     prefill_start: f64,
     /// When the last prefill chunk finished (start of `KvTransfer`).
@@ -146,6 +158,8 @@ struct InFlight {
     decode_entry: f64,
 }
 
+const UNPLACED: u32 = u32::MAX;
+
 /// Dense free-list table of in-flight requests. A request occupies a slot
 /// from the moment the engine pulls it off the [`ArrivalSource`] until it
 /// fully decodes; slots are recycled, so memory is O(in-flight), not
@@ -153,7 +167,10 @@ struct InFlight {
 /// router's overflow FIFO, the batchers' live ids — refers to requests by
 /// slot.
 pub struct RequestTable {
-    slots: Vec<Option<InFlight>>,
+    /// Request payloads, indexed by slot (parallel to `meta`).
+    reqs: Vec<Request>,
+    /// Lifecycle metadata, indexed by slot (parallel to `reqs`).
+    meta: Vec<SlotMeta>,
     free: Vec<usize>,
     live: usize,
     peak: usize,
@@ -169,7 +186,8 @@ impl RequestTable {
     /// An empty table (slots are allocated lazily and recycled).
     pub fn new() -> Self {
         Self {
-            slots: Vec::new(),
+            reqs: Vec::new(),
+            meta: Vec::new(),
             free: Vec::new(),
             live: 0,
             peak: 0,
@@ -178,22 +196,23 @@ impl RequestTable {
 
     /// Claim a slot for a newly-pulled request.
     pub fn insert(&mut self, req: Request) -> usize {
-        let entry = InFlight {
-            req,
-            placed_on: None,
+        let meta = SlotMeta {
             phase: RequestPhase::Queued,
+            placed: UNPLACED,
             prefill_start: 0.0,
             prefill_end: 0.0,
             decode_entry: 0.0,
         };
         let slot = match self.free.pop() {
             Some(s) => {
-                self.slots[s] = Some(entry);
+                self.reqs[s] = req;
+                self.meta[s] = meta;
                 s
             }
             None => {
-                self.slots.push(Some(entry));
-                self.slots.len() - 1
+                self.reqs.push(req);
+                self.meta.push(meta);
+                self.reqs.len() - 1
             }
         };
         self.live += 1;
@@ -201,15 +220,20 @@ impl RequestTable {
         slot
     }
 
-    /// The request occupying `slot` (panics on a dead slot — the engine
-    /// never holds a slot id past completion).
+    /// The request occupying `slot` (the engine never holds a slot id past
+    /// completion; debug builds still catch a dead-slot read via the
+    /// `Done`-as-vacancy marker).
     pub fn get(&self, slot: usize) -> &Request {
-        &self.slots[slot].as_ref().expect("live request slot").req
+        debug_assert!(
+            self.meta[slot].phase != RequestPhase::Done,
+            "dead request slot"
+        );
+        &self.reqs[slot]
     }
 
     /// Current lifecycle phase of the request in `slot`.
     pub fn phase(&self, slot: usize) -> RequestPhase {
-        self.slots[slot].as_ref().expect("live request slot").phase
+        self.meta[slot].phase
     }
 
     /// Advance the slot's lifecycle phase ONE step along
@@ -218,7 +242,7 @@ impl RequestTable {
     /// time. Skipped stages are driven through with zero duration by the
     /// callers (e.g. no-prefill placement), never jumped over.
     fn advance(&mut self, slot: usize, to: RequestPhase, now: f64) {
-        let e = self.slots[slot].as_mut().expect("live request slot");
+        let e = &mut self.meta[slot];
         debug_assert!(
             matches!(
                 (e.phase, to),
@@ -243,28 +267,27 @@ impl RequestTable {
     /// Phase-transition timestamps `(prefill_start, prefill_end,
     /// decode_entry)` of a request that reached the `Decode` phase.
     fn timings(&self, slot: usize) -> (f64, f64, f64) {
-        let e = self.slots[slot].as_ref().expect("live request slot");
+        let e = &self.meta[slot];
         (e.prefill_start, e.prefill_end, e.decode_entry)
     }
 
     fn set_placed(&mut self, slot: usize, node: usize) {
-        self.slots[slot].as_mut().expect("live request slot").placed_on = Some(node);
+        self.meta[slot].placed = node as u32;
     }
 
     fn take_placed(&mut self, slot: usize) -> Option<usize> {
-        self.slots[slot]
-            .as_mut()
-            .expect("live request slot")
-            .placed_on
-            .take()
+        let p = self.meta[slot].placed;
+        self.meta[slot].placed = UNPLACED;
+        (p != UNPLACED).then_some(p as usize)
     }
 
     /// Release a completed request's slot for reuse.
     pub fn remove(&mut self, slot: usize) -> Request {
-        let entry = self.slots[slot].take().expect("live request slot");
+        debug_assert!(self.live > 0, "remove on an empty table");
+        self.meta[slot].phase = RequestPhase::Done;
         self.free.push(slot);
         self.live -= 1;
-        entry.req
+        self.reqs[slot]
     }
 
     /// Requests currently in flight.
@@ -692,26 +715,6 @@ struct AttnNode {
     backlog: VecDeque<(usize, usize)>,
 }
 
-/// Result of advancing the colocated inline-prefill backlogs one chunk.
-struct PrefillAdvance {
-    /// Per-node per-layer prefill time charged to this iteration.
-    node_time: Vec<f64>,
-    /// Per-node requests whose prompts finish when this iteration ends.
-    finish: Vec<Vec<usize>>,
-    /// Prompt tokens taken this iteration across the pool.
-    tokens: u64,
-}
-
-impl PrefillAdvance {
-    fn none(nodes: usize) -> Self {
-        Self {
-            node_time: vec![0.0; nodes],
-            finish: vec![Vec::new(); nodes],
-            tokens: 0,
-        }
-    }
-}
-
 /// What one attention node produced in one decode iteration.
 struct NodeIterOutcome {
     /// Requests that decoded their FIRST token this iteration.
@@ -804,28 +807,27 @@ impl AttentionPool {
     /// off each node's backlog for this iteration (packing across request
     /// boundaries), pricing each node's pass via `time(tokens, mean_ctx)`
     /// — the per-layer chunk cost charged on top of the decode layer time.
+    /// Fills the caller's recycled per-node `node_time`/`finish` buffers
+    /// (pre-sized and cleared) and returns the tokens taken pool-wide.
     fn advance_prefill(
         &mut self,
         chunk: usize,
         now: f64,
-        ctx: &mut SimCtx,
+        table: &mut RequestTable,
         time: &dyn Fn(f64, f64) -> f64,
-    ) -> PrefillAdvance {
-        let mut adv = PrefillAdvance::none(self.nodes.len());
+        node_time: &mut [f64],
+        finish: &mut [Vec<usize>],
+    ) -> u64 {
+        let mut tokens = 0u64;
         for (nid, node) in self.nodes.iter_mut().enumerate() {
-            let (total, mean_ctx) = take_prefill_chunk(
-                &mut node.backlog,
-                chunk,
-                now,
-                &mut ctx.table,
-                &mut adv.finish[nid],
-            );
+            let (total, mean_ctx) =
+                take_prefill_chunk(&mut node.backlog, chunk, now, table, &mut finish[nid]);
             if total > 0 {
-                adv.node_time[nid] = time(total as f64, mean_ctx);
-                adv.tokens += total as u64;
+                node_time[nid] = time(total as f64, mean_ctx);
+                tokens += total as u64;
             }
         }
-        adv
+        tokens
     }
 
     /// Live-batch mean sequence length, weighted by per-node batch size.
@@ -842,12 +844,14 @@ impl AttentionPool {
         (sum / total as f64).max(1.0)
     }
 
-    /// Per-node micro-batch splits for this iteration.
-    fn splits(&self, m: usize) -> Vec<Vec<usize>> {
-        self.nodes
-            .iter()
-            .map(|n| n.batcher.batch.micro_batch_sizes(m))
-            .collect()
+    /// Per-node micro-batch splits for this iteration, written into the
+    /// recycled `share` buffers (inner capacity survives across
+    /// iterations, so the steady state does not allocate).
+    fn splits_into(&self, m: usize, share: &mut Vec<Vec<usize>>) {
+        share.resize_with(self.nodes.len(), Vec::new);
+        for (n, s) in self.nodes.iter().zip(share.iter_mut()) {
+            n.batcher.batch.micro_batch_sizes_into(m, s);
+        }
     }
 
     /// Attention stage time for hop `mb`: the slowest node paces the pool;
@@ -909,7 +913,7 @@ impl Component for AttentionPool {
         // id, so KV accounting and completion callbacks come back
         // slot-keyed; slots are unique among in-flight requests and only
         // recycled after completion.
-        let mut r = ctx.table.get(req).clone();
+        let mut r = *ctx.table.get(req);
         r.id = req as u64;
         self.nodes[node].batcher.submit(r);
         // A KV arrival while the pool is idle re-arms the iteration clock.
@@ -1184,7 +1188,32 @@ pub struct ClusterEngine {
     link: M2nLink,
     experts: ExpertPool,
     pipeline: Option<PipelineCore>,
-    /// High-water mark of the event queue (O(in-flight) by construction).
+    /// Recycled pipeline core: a completed iteration parks its core here
+    /// so the next `IterBegin` resets it in place instead of reallocating
+    /// the per-(micro-batch, layer) state.
+    spare: Option<PipelineCore>,
+    /// Recycled stage context — its per-iteration buffers (`share`,
+    /// `b_a`, `tok`, prefill lists) keep their capacity across iterations.
+    stage_spare: Option<StageCtx>,
+    /// Reusable iteration-stats buffer: the stepwise path fills it on the
+    /// last hop, the fused path at `IterBegin` (it then carries the
+    /// pending stats until the `IterEnd` pop); `end_iteration` borrows it.
+    iter_stats: Option<PipelineStats>,
+    /// Local replay queue of the fused fast path (reused every iteration).
+    fused: FusedQueue,
+    /// Reusable buffer for pipe events emitted by the core.
+    pipe_scratch: Vec<(f64, PipeEvent)>,
+    /// Cached attention-GPU spec ([`ClusterSpec::attention_gpu`] clones a
+    /// name `String`; the per-iteration `set_avg_seq` refresh must not).
+    ///
+    /// [`ClusterSpec::attention_gpu`]: crate::config::ClusterSpec::attention_gpu
+    attn_gpu: GpuSpec,
+    /// Engine-internal events (`Pipe`, `Rebalance`, `IterEnd`) currently
+    /// in the queue — subtracted from the peak-events sample so the
+    /// metric counts workload-driven events only and is identical between
+    /// fused and stepwise runs.
+    internal: usize,
+    /// High-water mark of workload-driven events in the queue.
     peak_events: usize,
     /// Reusable scratch buffer for events emitted by component handlers —
     /// held on the engine (rather than rebuilt per step batch) so
@@ -1354,6 +1383,13 @@ impl ClusterEngine {
             },
             q: EventQueue::new(),
             pipeline: None,
+            spare: None,
+            stage_spare: None,
+            iter_stats: Some(PipelineStats::default()),
+            fused: FusedQueue::new(),
+            pipe_scratch: Vec::new(),
+            attn_gpu,
+            internal: 0,
             peak_events: 0,
             out: Vec::new(),
             cut: false,
@@ -1413,6 +1449,11 @@ impl ClusterEngine {
                 break Some(t);
             }
             let (now, ev) = self.q.pop().expect("peeked event pops");
+            if matches!(ev, Event::Pipe(_) | Event::Rebalance | Event::IterEnd) {
+                // The event left the queue — decrement before the horizon
+                // check so a cut does not strand the counter.
+                self.internal -= 1;
+            }
             if now > horizon {
                 // Horizon cutoff: the popped event is dropped (matching
                 // the original run loop) and whatever is still queued
@@ -1429,11 +1470,19 @@ impl ClusterEngine {
                 Event::Rebalance => self.experts.handle(now, &ev, &mut self.ctx, &mut out),
                 Event::IterBegin => self.begin_iteration(now, &mut out),
                 Event::Pipe(pe) => self.on_pipe(now, pe, &mut out),
+                Event::IterEnd => {
+                    let st = self.iter_stats.take().expect("fused stats pending");
+                    self.end_iteration(now, &st, &mut out);
+                    self.iter_stats = Some(st);
+                }
             }
             for (at, e) in out.drain(..) {
+                if matches!(e, Event::Pipe(_) | Event::Rebalance | Event::IterEnd) {
+                    self.internal += 1;
+                }
                 self.q.schedule_at(at, e);
             }
-            self.peak_events = self.peak_events.max(self.q.len());
+            self.peak_events = self.peak_events.max(self.q.len() - self.internal);
         };
         self.out = out;
         next
@@ -1569,10 +1618,18 @@ impl ClusterEngine {
             return;
         }
         // Periodic §6 online re-balancing, applied before this iteration's
-        // hops draw their expert loads.
+        // hops draw their expert loads. The stepwise path schedules the
+        // event (it pops before the first hop: same timestamp, earlier
+        // insertion seq); the fused path applies it inline — the handler
+        // reads only expert-pool state and emits nothing, so the two
+        // orders are indistinguishable.
         if let Some(period) = self.cfg.rebalance_period {
             if now >= self.next_rebalance {
-                out.push((now, Event::Rebalance));
+                if self.cfg.fuse {
+                    self.experts.handle(now, &Event::Rebalance, &mut self.ctx, out);
+                } else {
+                    out.push((now, Event::Rebalance));
+                }
                 while self.next_rebalance <= now {
                     self.next_rebalance += period;
                 }
@@ -1586,12 +1643,184 @@ impl ClusterEngine {
         let experts = self.cfg.model.experts.max(1);
 
         let avg_seq = self.attention.avg_seq();
-        let pm = match &self.cfg.mode {
+        // Recycle the previous iteration's stage context: the buffers keep
+        // their capacity, and the disaggregated perf-model bundle only
+        // needs its attention side refreshed at the live mean sequence
+        // length (`set_avg_seq` is bit-identical to a fresh build and
+        // keeps the expert model's memoized roofline table warm).
+        let mut sc = match self.stage_spare.take() {
+            Some(mut sc) => {
+                let refreshed = match (&mut sc.pm, &self.cfg.mode) {
+                    (StageModel::Disaggregated(pm), EngineMode::Disaggregated) => {
+                        pm.set_avg_seq(&self.cfg.model, &self.attn_gpu, plan.tp_a, avg_seq);
+                        true
+                    }
+                    _ => false,
+                };
+                if !refreshed {
+                    sc.pm = self.build_stage_model(avg_seq);
+                }
+                sc
+            }
+            None => StageCtx {
+                pm: self.build_stage_model(avg_seq),
+                share: Vec::new(),
+                b_a: Vec::new(),
+                tok: Vec::new(),
+                extra_weight_loads: 0.0,
+                has_decode: false,
+                prefill_node_time: Vec::new(),
+                prefill_finish: Vec::new(),
+                prefill_tokens: 0,
+            },
+        };
+        let n_nodes = self.attention.len();
+        sc.prefill_node_time.clear();
+        sc.prefill_node_time.resize(n_nodes, 0.0);
+        sc.prefill_finish.resize_with(n_nodes, Vec::new);
+        for f in &mut sc.prefill_finish {
+            f.clear();
+        }
+        sc.prefill_tokens = 0;
+        // Colocated inline chunked prefill: take this iteration's chunk
+        // off each node's backlog; the per-node pass times ride on hop 0
+        // and the finished prompts join the batchers at end-of-iteration.
+        if has_backlog {
+            let ipm = self
+                .inline_prefill_model
+                .as_ref()
+                .expect("inline prefill implies a colocated prefill model");
+            let pm = &sc.pm;
+            sc.prefill_tokens = self.attention.advance_prefill(
+                self.cfg.prefill_chunk,
+                now,
+                &mut self.ctx.table,
+                &|tokens, ctx| pm.prefill_layer_time(ipm, tokens, ctx),
+                &mut sc.prefill_node_time,
+                &mut sc.prefill_finish,
+            );
+        }
+
+        self.attention.splits_into(m, &mut sc.share);
+        {
+            let share = &sc.share;
+            sc.b_a.clear();
+            sc.b_a
+                .extend((0..m).map(|j| share.iter().map(|s| s[j]).max().unwrap_or(0) as f64));
+            sc.tok.clear();
+            sc.tok
+                .extend((0..m).map(|j| share.iter().map(|s| s[j]).sum::<usize>()));
+        }
+        // The T_e model (k3·b_e + k4) is calibrated per *expert*; a node
+        // hosting several experts streams each one's weight panels, so
+        // charge the extra k4 floors when n_e < experts.
+        sc.extra_weight_loads =
+            (experts.div_ceil(n_e).saturating_sub(1)) as f64 * sc.pm.expert_weight_floor();
+        sc.has_decode = self.attention.batch_total() > 0;
+        self.ctx.stage = Some(sc);
+        self.ctx.in_iteration = true;
+
+        let mut core = match self.spare.take() {
+            Some(mut c) => {
+                c.reset(m, layers);
+                c
+            }
+            None => PipelineCore::new(m, layers),
+        };
+        let mut pipe_out = std::mem::take(&mut self.pipe_scratch);
+        pipe_out.clear();
+        core.start(now, &mut pipe_out);
+
+        if !self.cfg.fuse {
+            for (at, pe) in pipe_out.drain(..) {
+                out.push((at, Event::Pipe(pe)));
+            }
+            self.pipe_scratch = pipe_out;
+            self.pipeline = Some(core);
+            return;
+        }
+
+        // Fused fast path: within an iteration the per-hop stage times are
+        // state-independent (the `hop_times` providers mutate only pool
+        // busy clocks and the gating RNG — never pipeline state — and no
+        // mid-iteration external event touches either), so the whole
+        // ping-pong traversal is replayed here on a local queue with the
+        // global queue's exact (time, insertion-seq) pop discipline. The
+        // gating draws happen in the identical order the stepwise path
+        // would make them: once per (micro-batch, layer), at first need,
+        // through the core's stage-time memo. One `IterEnd` event lands on
+        // the global queue instead of ~3·m·layers `Pipe` hops.
+        let horizon = self.cfg.max_sim_seconds.unwrap_or(f64::INFINITY);
+        self.fused.clear();
+        for (at, pe) in pipe_out.drain(..) {
+            self.fused.push(at, pe);
+        }
+        let mut done_at = now;
+        let mut finished = false;
+        while let Some((t, pe)) = self.fused.pop() {
+            if t > horizon {
+                // The stepwise path would pop this hop off the global
+                // queue and cut the run; schedule the (internal) IterEnd
+                // at the same time so the global pop trips the identical
+                // cut, and park the core with the iteration still in
+                // flight — `finalize` counts its pending prefill finishes.
+                done_at = t;
+                break;
+            }
+            self.elapsed = self.elapsed.max(t);
+            // Conservation observers see every hop, as in stepwise mode
+            // (they read the stage context and never emit events).
+            let ev = Event::Pipe(pe);
+            self.link.handle(t, &ev, &mut self.ctx, out);
+            self.experts.handle(t, &ev, &mut self.ctx, out);
+            let done = {
+                let ctx = &mut self.ctx;
+                let attention = &mut self.attention;
+                let experts = &mut self.experts;
+                let link = &mut self.link;
+                core.on_event_done(
+                    t,
+                    pe,
+                    &mut |tt, mb, layer| hop_times(attention, experts, link, ctx, tt, mb, layer),
+                    &mut pipe_out,
+                )
+            };
+            for (at, e) in pipe_out.drain(..) {
+                self.fused.push(at, e);
+            }
+            if done {
+                // Capture the exact completion time of the last hop:
+                // recomputing it as `now + total_time` would round-trip
+                // through a float subtraction and not bit-match stepwise.
+                done_at = t;
+                finished = true;
+                break;
+            }
+        }
+        self.pipe_scratch = pipe_out;
+        if finished {
+            debug_assert!(self.fused.is_empty(), "hops past iteration completion");
+            let mut st = self.iter_stats.take().expect("one iteration in flight");
+            core.stats_into(&mut st);
+            self.iter_stats = Some(st);
+            self.spare = Some(core);
+        } else {
+            debug_assert!(done_at > horizon, "fused queue drained without completion");
+            self.pipeline = Some(core);
+        }
+        out.push((done_at, Event::IterEnd));
+    }
+
+    /// This iteration's stage-time provider, built fresh (the recycled
+    /// disaggregated bundle instead refreshes in place via
+    /// [`PerfModel::set_avg_seq`]).
+    fn build_stage_model(&self, avg_seq: f64) -> StageModel {
+        match &self.cfg.mode {
             EngineMode::Disaggregated => StageModel::Disaggregated(PerfModel::new(
                 &self.cfg.model,
                 &self.cfg.cluster,
-                plan.tp_a,
-                plan.tp_e,
+                self.cfg.plan.tp_a,
+                self.cfg.plan.tp_e,
                 avg_seq,
             )),
             EngineMode::Colocated(cp) => StageModel::Colocated(ColocatedModel::new(
@@ -1600,59 +1829,12 @@ impl ClusterEngine {
                 &self.cfg.cluster,
                 avg_seq,
             )),
-        };
-        // Colocated inline chunked prefill: take this iteration's chunk
-        // off each node's backlog; the per-node pass times ride on hop 0
-        // and the finished prompts join the batchers at end-of-iteration.
-        let adv = if has_backlog {
-            let ipm = self
-                .inline_prefill_model
-                .as_ref()
-                .expect("inline prefill implies a colocated prefill model");
-            self.attention.advance_prefill(
-                self.cfg.prefill_chunk,
-                now,
-                &mut self.ctx,
-                &|tokens, ctx| pm.prefill_layer_time(ipm, tokens, ctx),
-            )
-        } else {
-            PrefillAdvance::none(self.attention.len())
-        };
-
-        let share = self.attention.splits(m);
-        let b_a: Vec<f64> = (0..m)
-            .map(|j| share.iter().map(|s| s[j]).max().unwrap_or(0) as f64)
-            .collect();
-        let tok: Vec<usize> = (0..m).map(|j| share.iter().map(|s| s[j]).sum()).collect();
-        // The T_e model (k3·b_e + k4) is calibrated per *expert*; a node
-        // hosting several experts streams each one's weight panels, so
-        // charge the extra k4 floors when n_e < experts.
-        let extra_weight_loads =
-            (experts.div_ceil(n_e).saturating_sub(1)) as f64 * pm.expert_weight_floor();
-        self.ctx.stage = Some(StageCtx {
-            pm,
-            share,
-            b_a,
-            tok,
-            extra_weight_loads,
-            has_decode: self.attention.batch_total() > 0,
-            prefill_node_time: adv.node_time,
-            prefill_finish: adv.finish,
-            prefill_tokens: adv.tokens,
-        });
-        self.ctx.in_iteration = true;
-
-        let mut core = PipelineCore::new(m, layers);
-        let mut pipe_out: Vec<(f64, PipeEvent)> = Vec::new();
-        core.start(now, &mut pipe_out);
-        for (at, pe) in pipe_out {
-            out.push((at, Event::Pipe(pe)));
         }
-        self.pipeline = Some(core);
     }
 
-    /// One pipeline hop: conservation observers first, then the shared
-    /// scheduling core with the components as the stage-time providers.
+    /// One pipeline hop (stepwise mode): conservation observers first, then
+    /// the shared scheduling core with the components as the stage-time
+    /// providers.
     fn on_pipe(&mut self, now: f64, pe: PipeEvent, out: &mut Vec<(f64, Event)>) {
         let ev = Event::Pipe(pe);
         self.link.handle(now, &ev, &mut self.ctx, out);
@@ -1661,25 +1843,32 @@ impl ClusterEngine {
         let Some(mut core) = self.pipeline.take() else {
             return;
         };
-        let mut pipe_out: Vec<(f64, PipeEvent)> = Vec::new();
-        let stats = {
+        let mut pipe_out = std::mem::take(&mut self.pipe_scratch);
+        pipe_out.clear();
+        let done = {
             let ctx = &mut self.ctx;
             let attention = &mut self.attention;
             let experts = &mut self.experts;
             let link = &mut self.link;
-            core.on_event(
+            core.on_event_done(
                 now,
                 pe,
                 &mut |t, mb, layer| hop_times(attention, experts, link, ctx, t, mb, layer),
                 &mut pipe_out,
             )
         };
-        for (at, e) in pipe_out {
+        for (at, e) in pipe_out.drain(..) {
             out.push((at, Event::Pipe(e)));
         }
-        match stats {
-            None => self.pipeline = Some(core),
-            Some(stats) => self.end_iteration(now, stats, out),
+        self.pipe_scratch = pipe_out;
+        if done {
+            let mut st = self.iter_stats.take().expect("one iteration in flight");
+            core.stats_into(&mut st);
+            self.spare = Some(core);
+            self.end_iteration(now, &st, out);
+            self.iter_stats = Some(st);
+        } else {
+            self.pipeline = Some(core);
         }
     }
 
@@ -1687,7 +1876,7 @@ impl ClusterEngine {
     /// completions into the batchers, per-node token accounting,
     /// completions back to the router, FIFO overflow drain into the freed
     /// capacity, and the next iteration boundary.
-    fn end_iteration(&mut self, now: f64, stats: PipelineStats, out: &mut Vec<(f64, Event)>) {
+    fn end_iteration(&mut self, now: f64, stats: &PipelineStats, out: &mut Vec<(f64, Event)>) {
         let stage = self.ctx.stage.take().expect("iteration stage context");
         let t_iter = stats.total_time;
         self.attn_util.add_busy(stats.attn_utilization * t_iter);
@@ -1710,7 +1899,7 @@ impl ClusterEngine {
             for &slot in slots {
                 self.ctx.table.advance(slot, RequestPhase::KvTransfer, now);
                 self.ctx.table.advance(slot, RequestPhase::Decode, now);
-                let mut r = self.ctx.table.get(slot).clone();
+                let mut r = *self.ctx.table.get(slot);
                 r.id = slot as u64;
                 self.attention.submit_to(nid, r);
             }
@@ -1785,6 +1974,8 @@ impl ClusterEngine {
             self.ctx.iter_pending = true;
             out.push((now, Event::IterBegin));
         }
+        // Park the stage context for the next iteration to recycle.
+        self.stage_spare = Some(stage);
     }
 
     /// Fold the engine's terminal state into a [`ClusterReport`].

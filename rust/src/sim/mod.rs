@@ -44,7 +44,7 @@ pub use cluster::{
 pub use engine::{
     ClusterEngine, Component, Event, PrefillPool, RequestPhase, RequestTable, StageModel,
 };
-pub use pipeline::{PipeEvent, PipelineCore, PipelineStats, StageTimes};
+pub use pipeline::{FusedQueue, PipeEvent, PipelineCore, PipelineStats, StageTimes};
 pub use rng::SimRng;
 pub use shard::{run_sharded, ShardPlan};
 pub use sweep::{run_sim_bench, run_sweep, SweepCell, SweepGrid};

@@ -19,7 +19,7 @@
 use std::collections::VecDeque;
 
 /// Per-stage/per-run statistics.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct PipelineStats {
     /// Completion time of the last micro-batch, relative to pipeline start
     /// (seconds).
@@ -103,6 +103,77 @@ impl Stage {
     pub fn busy_time(&self) -> f64 {
         self.busy
     }
+
+    /// Return the stage to its initial state, keeping the ready-FIFO's
+    /// allocation for reuse.
+    fn reset(&mut self) {
+        self.free_at = 0.0;
+        self.busy = 0.0;
+        self.ready.clear();
+    }
+}
+
+/// A reusable local event queue for fused in-place pipeline traversals.
+///
+/// Replays the EXACT pop discipline of the global [`crate::sim::EventQueue`]
+/// — strictly increasing insertion sequence numbers, pops ordered by
+/// `(time, seq)` with `f64::total_cmp` on time — on a flat `Vec`, so a
+/// whole ping-pong pass can be stepped without touching the global
+/// calendar. At most ~2·m+2 events are ever pending at once, so a linear
+/// min-scan beats heap or calendar bookkeeping, and the buffer is reused
+/// across iterations (zero steady-state allocation).
+#[derive(Debug, Clone, Default)]
+pub struct FusedQueue {
+    items: Vec<(f64, u64, PipeEvent)>,
+    seq: u64,
+}
+
+impl FusedQueue {
+    /// An empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop all pending events (keeps the allocation).
+    pub fn clear(&mut self) {
+        self.items.clear();
+        self.seq = 0;
+    }
+
+    /// Schedule `ev` at virtual time `at`.
+    pub fn push(&mut self, at: f64, ev: PipeEvent) {
+        debug_assert!(at.is_finite(), "fused schedule at non-finite time {at}");
+        self.items.push((at, self.seq, ev));
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event: smallest time, FIFO within a time tie —
+    /// exactly the global queue's ordering contract.
+    pub fn pop(&mut self) -> Option<(f64, PipeEvent)> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let mut best = 0;
+        for i in 1..self.items.len() {
+            let (t, s, _) = self.items[i];
+            let (bt, bs, _) = self.items[best];
+            if t.total_cmp(&bt).then(s.cmp(&bs)).is_lt() {
+                best = i;
+            }
+        }
+        let (t, _, ev) = self.items.swap_remove(best);
+        Some((t, ev))
+    }
+
+    /// Pending event count.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Whether no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
 }
 
 /// The ping-pong scheduling policy over two stage resources and a link.
@@ -140,6 +211,25 @@ impl PipelineCore {
             remaining: m,
             started_at: 0.0,
         }
+    }
+
+    /// Re-arm an already-constructed core for a fresh pass of `m`
+    /// micro-batches over `layers` layers, reusing every internal
+    /// allocation. Equivalent to `*self = PipelineCore::new(m, layers)`
+    /// without the four heap allocations — the engine recycles one core
+    /// across iterations so the steady-state decode loop stays alloc-free.
+    pub fn reset(&mut self, m: usize, layers: usize) {
+        assert!(m >= 1 && layers >= 1);
+        self.m = m;
+        self.layers = layers;
+        self.attn.reset();
+        self.expert.reset();
+        self.cache.clear();
+        self.cache.resize(m * layers, None);
+        self.mb_done.clear();
+        self.mb_done.resize(m, 0.0);
+        self.remaining = m;
+        self.started_at = 0.0;
     }
 
     /// Inject the `m` micro-batches at virtual time `at`.
@@ -209,6 +299,21 @@ impl PipelineCore {
         times: &mut dyn FnMut(f64, usize, usize) -> StageTimes,
         out: &mut Vec<(f64, PipeEvent)>,
     ) -> Option<PipelineStats> {
+        self.on_event_done(now, ev, times, out).then(|| self.stats())
+    }
+
+    /// Allocation-free variant of [`PipelineCore::on_event`]: returns
+    /// `true` when the last micro-batch completes its final layer; read
+    /// the pass statistics with [`PipelineCore::stats_into`]. The engine's
+    /// hot loop uses this so completing an iteration never clones
+    /// `mb_done`.
+    pub fn on_event_done(
+        &mut self,
+        now: f64,
+        ev: PipeEvent,
+        times: &mut dyn FnMut(f64, usize, usize) -> StageTimes,
+        out: &mut Vec<(f64, PipeEvent)>,
+    ) -> bool {
         match ev {
             PipeEvent::AttnReady { mb, layer } => {
                 self.attn.offer(mb, layer);
@@ -241,15 +346,17 @@ impl PipelineCore {
                     self.mb_done[mb] = now - self.started_at;
                     self.remaining -= 1;
                     if self.remaining == 0 {
-                        return Some(self.stats());
+                        return true;
                     }
                 }
             }
         }
-        None
+        false
     }
 
-    fn stats(&self) -> PipelineStats {
+    /// Write the completed pass's statistics into `out`, reusing its
+    /// `mb_done` buffer (no allocation once the buffer has capacity `m`).
+    pub fn stats_into(&self, out: &mut PipelineStats) {
         let total_time = self.mb_done.iter().copied().fold(0.0, f64::max);
         // A zero-duration pass (every stage time 0, e.g. a degenerate
         // scenario sweep cell) must report 0 utilization, not NaN — the
@@ -261,12 +368,17 @@ impl PipelineCore {
                 0.0
             }
         };
-        PipelineStats {
-            total_time,
-            attn_utilization: util(self.attn.busy_time()),
-            expert_utilization: util(self.expert.busy_time()),
-            mb_done: self.mb_done.clone(),
-        }
+        out.total_time = total_time;
+        out.attn_utilization = util(self.attn.busy_time());
+        out.expert_utilization = util(self.expert.busy_time());
+        out.mb_done.clear();
+        out.mb_done.extend_from_slice(&self.mb_done);
+    }
+
+    fn stats(&self) -> PipelineStats {
+        let mut s = PipelineStats::default();
+        self.stats_into(&mut s);
+        s
     }
 }
 
@@ -332,6 +444,82 @@ mod tests {
         assert_eq!(stats.attn_utilization, 0.0, "no NaN: {stats:?}");
         assert_eq!(stats.expert_utilization, 0.0, "no NaN: {stats:?}");
         assert!(stats.mb_done.iter().all(|&t| t == 0.0));
+    }
+
+    /// Drive the same pass on a [`FusedQueue`] instead of the global
+    /// [`EventQueue`] — the two must agree exactly (the fused fast path's
+    /// correctness hinges on the identical `(time, seq)` pop discipline).
+    fn drive_fused(core: &mut PipelineCore, at: f64, st: StageTimes) -> PipelineStats {
+        let mut q = FusedQueue::new();
+        let mut out = Vec::new();
+        core.start(at, &mut out);
+        for (t, e) in out.drain(..) {
+            q.push(t, e);
+        }
+        while let Some((now, ev)) = q.pop() {
+            if core.on_event_done(now, ev, &mut |_, _, _| st, &mut out) {
+                let mut stats = PipelineStats::default();
+                core.stats_into(&mut stats);
+                return stats;
+            }
+            for (t, e) in out.drain(..) {
+                q.push(t, e);
+            }
+        }
+        panic!("fused pipeline drained without completing");
+    }
+
+    #[test]
+    fn fused_queue_matches_global_queue_exactly() {
+        for (m, layers) in [(1, 1), (2, 8), (3, 4), (4, 2)] {
+            let st = StageTimes {
+                t_a: 1.0e-3,
+                t_e: 1.4e-3,
+                t_c: 0.2e-3,
+            };
+            let reference = drive(m, layers, st);
+            let mut core = PipelineCore::new(m, layers);
+            let fused = drive_fused(&mut core, 0.0, st);
+            assert_eq!(reference, fused, "m={m} layers={layers}");
+        }
+    }
+
+    #[test]
+    fn reset_reuses_like_fresh() {
+        let st = StageTimes {
+            t_a: 0.7e-3,
+            t_e: 1.1e-3,
+            t_c: 0.3e-3,
+        };
+        let mut core = PipelineCore::new(4, 6);
+        let first = drive_fused(&mut core, 0.0, st);
+        // Re-arm with a DIFFERENT shape: must match a brand-new core,
+        // including relative completion times at a nonzero start offset.
+        core.reset(2, 8);
+        let reused = drive_fused(&mut core, 42.0, st);
+        let fresh = drive(2, 8, st);
+        assert_eq!(fresh.mb_done.len(), 2);
+        for (a, b) in reused.mb_done.iter().zip(&fresh.mb_done) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        assert!((reused.total_time - fresh.total_time).abs() < 1e-9);
+        assert!((reused.attn_utilization - fresh.attn_utilization).abs() < 1e-12);
+        assert!((reused.expert_utilization - fresh.expert_utilization).abs() < 1e-12);
+        assert_eq!(first.mb_done.len(), 4);
+    }
+
+    #[test]
+    fn fused_queue_breaks_time_ties_by_insertion_order() {
+        let mut q = FusedQueue::new();
+        q.push(1.0, PipeEvent::AttnReady { mb: 0, layer: 0 });
+        q.push(0.5, PipeEvent::AttnReady { mb: 1, layer: 0 });
+        q.push(0.5, PipeEvent::AttnReady { mb: 2, layer: 0 });
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(), Some((0.5, PipeEvent::AttnReady { mb: 1, layer: 0 })));
+        assert_eq!(q.pop(), Some((0.5, PipeEvent::AttnReady { mb: 2, layer: 0 })));
+        assert_eq!(q.pop(), Some((1.0, PipeEvent::AttnReady { mb: 0, layer: 0 })));
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

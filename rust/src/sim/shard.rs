@@ -494,6 +494,31 @@ mod tests {
     }
 
     #[test]
+    fn fused_and_stepwise_sharded_reports_are_byte_identical() {
+        // The fused fast path changes the step_until return values at epoch
+        // boundaries (one IterEnd timestamp instead of many Pipe hops), but
+        // epoch boundaries are a pure batching knob — so the merged report
+        // must not move, fused or stepwise, sharded or not.
+        let cfg = shardable_setup();
+        assert!(cfg.fuse, "fast path is the default");
+        let n = 160;
+        let plan = ShardPlan {
+            shards: 4,
+            workers: 4,
+            epoch: DEFAULT_EPOCH,
+        };
+        let fused = run_sharded(&cfg, plan, source_factory(spec(), n, cfg.seed));
+        let mut scfg = cfg.clone();
+        scfg.fuse = false;
+        let stepwise = run_sharded(&scfg, plan, source_factory(spec(), n, cfg.seed));
+        assert_eq!(
+            fused.to_json().to_string(),
+            stepwise.to_json().to_string(),
+            "fused and stepwise sharded runs must agree byte-for-byte"
+        );
+    }
+
+    #[test]
     fn colocated_scenarios_refuse_to_shard() {
         let model = ModelConfig::tiny();
         let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);

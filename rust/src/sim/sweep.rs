@@ -242,6 +242,7 @@ fn run_cell(
                 prefill_nodes,
                 prefill_chunk: DEFAULT_PREFILL_CHUNK,
                 mode: crate::sim::cluster::EngineMode::Disaggregated,
+                fuse: true,
             }
         }
     };
@@ -398,8 +399,11 @@ pub fn sweep_to_json(grid: &SweepGrid, cells: &[SweepCell]) -> Json {
 }
 
 /// Serialize a sweep as CSV (one row per cell, header first). Per-tenant
-/// attainments are folded into one `name=value;...` column.
+/// attainments are folded into one `name=value;...` column. Rows are
+/// `write!`-formatted straight into the one output `String` — no per-row
+/// or per-column intermediate allocations.
 pub fn sweep_to_csv(cells: &[SweepCell]) -> String {
+    use std::fmt::Write as _;
     let mut s = String::from(
         "rate,skew,micro_batches,prompt_len,tenant_mix,system,seed,completed,tokens,\
          simulated_seconds,throughput,per_gpu_throughput,ttft_p50_s,ttft_p99_s,\
@@ -408,13 +412,11 @@ pub fn sweep_to_csv(cells: &[SweepCell]) -> String {
          peak_in_flight,attainments\n",
     );
     for c in cells {
-        let atts: Vec<String> = c
-            .tenants
-            .iter()
-            .map(|(name, a)| format!("{name}={a}"))
-            .collect();
-        s.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+        // Writing into a String is infallible: `fmt::Write` for `String`
+        // never errors.
+        let _ = write!(
+            s,
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},",
             c.rate,
             c.skew,
             c.m,
@@ -438,8 +440,12 @@ pub fn sweep_to_csv(cells: &[SweepCell]) -> String {
             c.rejected,
             c.unserved_queued,
             c.peak_in_flight,
-            atts.join(";"),
-        ));
+        );
+        for (i, (name, a)) in c.tenants.iter().enumerate() {
+            let sep = if i == 0 { "" } else { ";" };
+            let _ = write!(s, "{sep}{name}={a}");
+        }
+        s.push('\n');
     }
     s
 }

@@ -18,8 +18,9 @@ use anyhow::bail;
 
 use crate::sim::SimRng;
 
-/// One inference request.
-#[derive(Debug, Clone, PartialEq)]
+/// One inference request. All fields are scalars, so the struct is `Copy`
+/// — the request table and batchers move it by value with no heap traffic.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
     /// Unique request id (generator index or trace id).
     pub id: u64,

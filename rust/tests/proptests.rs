@@ -563,6 +563,70 @@ fn prop_histogram_accuracy() {
     }
 }
 
+/// The fused-iteration fast path is BYTE-identical to the stepwise
+/// reference: for arbitrary workloads (open and closed loop), expert
+/// popularity skews, micro-batch counts, rebalance cadences, prefill chunk
+/// budgets, engine modes, and horizon cuts, running the same trace with
+/// `fuse: true` and `fuse: false` must serialize to the exact same JSON
+/// report — same token counts, same RNG-driven expert loads, same latency
+/// percentiles, same peak queue depth. This is the contract that lets the
+/// fast path replace ~3·m·L pipe events per iteration with one `IterEnd`.
+#[test]
+fn prop_fused_matches_stepwise_byte_identical() {
+    let model = ModelConfig::tiny();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let base_plan = PlanSearcher::new(model.clone(), cluster.clone(), 200.0)
+        .search()
+        .expect("tiny plan");
+    for (seed, mut rng) in cases(40) {
+        let n = 2 + rng.below(40);
+        let open = rng.chance(0.5);
+        let spec = WorkloadSpec {
+            median_input: 16.0 + rng.uniform() * 96.0,
+            median_output: 2.0 + rng.uniform() * 10.0,
+            sigma: 0.3,
+            arrival_rate: open.then(|| 30.0 + rng.uniform() * 300.0),
+            burst_sigma: if open { rng.uniform() } else { 0.0 },
+            ..Default::default()
+        };
+        let reqs = spec.generate(n, seed.wrapping_add(13));
+        let colocated = rng.chance(0.25);
+        let mut cfg = if colocated {
+            let cplan = ColocatedPlan::sized_to_match(BaselineKind::Vllm, &model, &cluster, 8);
+            ClusterSimConfig::colocated(model.clone(), cluster.clone(), cplan)
+        } else {
+            let mut plan = base_plan.clone();
+            plan.m = 1 + rng.below(4);
+            ClusterSimConfig::new(model.clone(), cluster.clone(), plan)
+        };
+        cfg.seed = seed.wrapping_mul(29).wrapping_add(5);
+        cfg.popularity = match rng.below(4) {
+            0 => ExpertPopularity::Uniform,
+            1 => ExpertPopularity::Zipf(0.5 + rng.uniform()),
+            2 => ExpertPopularity::ZipfBalanced(0.5 + rng.uniform()),
+            _ => ExpertPopularity::ZipfDrifting {
+                alpha: 0.5 + rng.uniform(),
+                period: 0.01 + rng.uniform() * 0.1,
+            },
+        };
+        cfg.rebalance_period = rng.chance(0.4).then(|| 0.005 + rng.uniform() * 0.05);
+        cfg.prefill_chunk = [0usize, 64, 1024][rng.below(3)];
+        if rng.chance(0.3) {
+            cfg.max_sim_seconds = Some(1e-4 + rng.uniform() * 0.05);
+        }
+        assert!(cfg.fuse, "seed {seed}: fast path is the default");
+
+        let fused = ClusterSim::new(cfg.clone()).run(&reqs);
+        cfg.fuse = false;
+        let stepwise = ClusterSim::new(cfg).run(&reqs);
+        assert_eq!(
+            fused.to_json().to_string(),
+            stepwise.to_json().to_string(),
+            "seed {seed}: fused and stepwise reports must be byte-identical"
+        );
+    }
+}
+
 /// Reference event queue for the equivalence property below: the seed's
 /// original `BinaryHeap` implementation, kept verbatim in spirit —
 /// earliest time first, insertion order among equal timestamps.
