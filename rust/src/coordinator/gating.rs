@@ -159,7 +159,7 @@ mod tests {
             let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
             let exps: Vec<f32> = row.iter().map(|&x| (x - mx).exp()).collect();
             let mut idx: Vec<usize> = (0..16).collect();
-            idx.sort_by(|&a, &b| exps[b].partial_cmp(&exps[a]).unwrap().then(a.cmp(&b)));
+            idx.sort_by(|&a, &b| exps[b].total_cmp(&exps[a]).then(a.cmp(&b)));
             let denom: f32 = idx[..4].iter().map(|&e| exps[e]).sum();
             for (i, &e) in idx[..4].iter().enumerate() {
                 assert_eq!(g.experts_of(t)[i] as usize, e, "token {t} slot {i}");

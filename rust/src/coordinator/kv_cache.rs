@@ -3,7 +3,7 @@
 //! architecture (§3); the allocator tracks block budgets so the scheduler
 //! can enforce the Eq. 8 memory constraint online.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Allocator configuration.
 #[derive(Debug, Clone)]
@@ -35,9 +35,11 @@ impl KvCacheConfig {
 pub struct BlockAllocator {
     config: KvCacheConfig,
     free: Vec<u32>,
-    owned: HashMap<u64, Vec<u32>>,
+    // BTreeMap, not HashMap: request iteration order feeds scheduler
+    // decisions and reports, and must not depend on hasher seeding.
+    owned: BTreeMap<u64, Vec<u32>>,
     /// Tokens stored per request (to size partial blocks).
-    tokens: HashMap<u64, usize>,
+    tokens: BTreeMap<u64, usize>,
 }
 
 impl BlockAllocator {
@@ -47,8 +49,8 @@ impl BlockAllocator {
         Self {
             config,
             free,
-            owned: HashMap::new(),
-            tokens: HashMap::new(),
+            owned: BTreeMap::new(),
+            tokens: BTreeMap::new(),
         }
     }
 
@@ -124,6 +126,13 @@ impl BlockAllocator {
     pub fn num_requests(&self) -> usize {
         self.owned.len()
     }
+
+    /// Ids of requests currently holding blocks, in ascending id order —
+    /// the deterministic iteration order any report-affecting caller
+    /// (preemption sweeps, leak accounting) must use.
+    pub fn request_ids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.owned.keys().copied()
+    }
 }
 
 #[cfg(test)]
@@ -180,6 +189,28 @@ mod tests {
         assert!(!a.admit(1, 16), "duplicate id");
         assert!(!a.admit(2, 33), "needs 3 blocks, 1 free");
         assert!(a.admit(3, 10));
+    }
+
+    #[test]
+    fn request_iteration_order_is_sorted_and_insertion_independent() {
+        // Determinism regression for the nondeterministic-iteration lint
+        // fix: iteration order is ascending id, regardless of the order
+        // (or history) of admissions.
+        let mut a = alloc(64);
+        for id in [9u64, 2, 7, 1, 8, 3] {
+            assert!(a.admit(id, 16));
+        }
+        assert_eq!(a.request_ids().collect::<Vec<_>>(), vec![1, 2, 3, 7, 8, 9]);
+        a.release(7);
+        let mut b = alloc(64);
+        for id in [1u64, 2, 3, 8, 9] {
+            assert!(b.admit(id, 16));
+        }
+        assert_eq!(
+            a.request_ids().collect::<Vec<_>>(),
+            b.request_ids().collect::<Vec<_>>(),
+            "same live set, same order, different histories"
+        );
     }
 
     #[test]

@@ -37,14 +37,23 @@ impl ExpertPlacement {
     /// how the periodic online re-balancer scores a stale placement against
     /// traffic that has drifted since it was computed.
     pub fn node_loads(&self, costs: &[f64]) -> Vec<f64> {
-        debug_assert_eq!(costs.len(), self.assignments.len());
         let mut out = vec![0.0f64; self.node_cost.len()];
+        self.node_loads_into(costs, &mut out);
+        out
+    }
+
+    /// Allocation-free form of [`Self::node_loads`]: accumulate into a
+    /// caller-owned buffer already sized and zeroed to the node count. The
+    /// decode hot loop recycles its buffer across hops, so the steady
+    /// state never touches the allocator.
+    pub fn node_loads_into(&self, costs: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(costs.len(), self.assignments.len());
+        debug_assert_eq!(out.len(), self.node_cost.len());
         for (i, asg) in self.assignments.iter().enumerate() {
             for &(node, frac) in asg {
                 out[node] += costs[i] * frac;
             }
         }
-        out
     }
 }
 

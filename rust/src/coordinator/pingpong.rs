@@ -44,11 +44,13 @@ impl PingPongEngine {
         let mut out: Vec<(f64, PipeEvent)> = Vec::new();
         core.start(0.0, &mut out);
         for (at, e) in out.drain(..) {
+            // msi-lint: allow(raw-schedule) -- standalone queue built at t=0; stage times are nonnegative so no insert is ever past
             q.schedule_at(at, e);
         }
         while let Some((now, ev)) = q.pop() {
             let stats = core.on_event(now, ev, &mut |_, mb, layer| times(mb, layer), &mut out);
             for (at, e) in out.drain(..) {
+                // msi-lint: allow(raw-schedule) -- same standalone queue; handler outputs are now + nonnegative durations
                 q.schedule_at(at, e);
             }
             if let Some(stats) = stats {

@@ -34,6 +34,7 @@
 //!               [--receivers 8] [--size-kib 256] [--rounds 1000]
 //! msi hardware
 //! msi trace     --out trace.jsonl [--requests 1000] [--seed 42]
+//! msi lint      [--path rust/src] [--json lint.json] [--waivers]
 //! ```
 
 use std::path::PathBuf;
@@ -64,7 +65,7 @@ use megascale_infer::workload::{
 };
 
 const USAGE: &str =
-    "usage: msi <plan|compare|simulate|replay|sweep|serve|m2n|hardware|trace> [--options]
+    "usage: msi <plan|compare|simulate|replay|sweep|serve|m2n|hardware|trace|lint> [--options]
 run `msi help` or see README.md for details";
 
 fn parse_model(name: &str) -> Result<ModelConfig> {
@@ -135,6 +136,7 @@ fn main() -> Result<()> {
             "bench",
             "prompt-heavy",
             "no-fuse",
+            "waivers",
         ],
     )?;
     match args.subcommand.as_str() {
@@ -153,6 +155,7 @@ fn main() -> Result<()> {
         "m2n" => cmd_m2n(&args),
         "hardware" => cmd_hardware(),
         "trace" => cmd_trace(&args),
+        "lint" => cmd_lint(&args),
         "" | "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -823,6 +826,45 @@ fn cmd_hardware() -> Result<()> {
             g.bw_per_cost(),
             g.tflops_per_cost()
         );
+    }
+    Ok(())
+}
+
+/// Run the determinism & event-kernel invariant linter (`tools/msi-lint`)
+/// over the tree. Exits nonzero on unwaived findings; `--json FILE` writes
+/// the machine-readable report and `--waivers` prints the exception
+/// inventory with its recorded reasons.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let path = PathBuf::from(args.str_or("path", "rust/src"));
+    let report = msi_lint::lint_paths(&[path.clone()])
+        .with_context(|| format!("linting {}", path.display()))?;
+    for f in report.active() {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+    }
+    if args.flag("waivers") {
+        for f in report.waived() {
+            println!(
+                "waived {}:{}: [{}] -- {}",
+                f.file,
+                f.line,
+                f.rule,
+                f.waiver.as_deref().unwrap_or("")
+            );
+        }
+    }
+    let active = report.active().count();
+    println!(
+        "msi-lint: {} files, {} active, {} waived",
+        report.files,
+        active,
+        report.waived().count()
+    );
+    if let Some(p) = args.get("json") {
+        std::fs::write(p, report.to_json()).with_context(|| format!("writing {p}"))?;
+        println!("wrote lint report to {p}");
+    }
+    if active > 0 {
+        bail!("msi lint: {active} unwaived finding(s)");
     }
     Ok(())
 }

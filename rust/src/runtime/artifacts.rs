@@ -10,7 +10,9 @@
 //!   (name/shape/offset into `weights.bin`), and test vectors for the
 //!   numerics integration test.
 
-use std::collections::HashMap;
+// BTreeMap, not HashMap: manifest and tensor listings reach compile order
+// and diagnostics, and must not depend on hasher seeding.
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
@@ -122,7 +124,7 @@ pub struct TestVector {
 pub struct ArtifactManifest {
     pub model: ArtifactModel,
     /// Logical executable name -> HLO text file (relative to the dir).
-    pub executables: HashMap<String, String>,
+    pub executables: BTreeMap<String, String>,
     pub weights_file: String,
     pub tensors: Vec<TensorEntry>,
     pub test_vectors: Vec<TestVector>,
@@ -142,7 +144,7 @@ impl ArtifactManifest {
         let v = Json::parse(text).context("parsing manifest.json")?;
         let model = ArtifactModel::from_json(v.get("model")?)?;
 
-        let mut executables = HashMap::new();
+        let mut executables = BTreeMap::new();
         if let Json::Obj(m) = v.get("executables")? {
             for (k, f) in m {
                 executables.insert(k.clone(), f.as_str()?.to_string());
@@ -211,7 +213,7 @@ impl ArtifactManifest {
 /// All weights, loaded into host memory and indexed by name.
 #[derive(Debug)]
 pub struct WeightStore {
-    tensors: HashMap<String, HostTensor>,
+    tensors: BTreeMap<String, HostTensor>,
 }
 
 impl WeightStore {
@@ -224,7 +226,7 @@ impl WeightStore {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        let mut tensors = HashMap::new();
+        let mut tensors = BTreeMap::new();
         for e in &manifest.tensors {
             let n: usize = e.shape.iter().product();
             anyhow::ensure!(

@@ -4,7 +4,9 @@
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly).
 
-use std::collections::HashMap;
+// BTreeMap, not HashMap: `names()` feeds logs and replay traces, so the
+// executable listing must be hasher-independent.
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{Context, Result};
@@ -14,7 +16,7 @@ use super::artifacts::ArtifactManifest;
 /// A PJRT client with named, cached executables.
 pub struct Engine {
     client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Engine {
@@ -23,7 +25,7 @@ impl Engine {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self {
             client,
-            executables: HashMap::new(),
+            executables: BTreeMap::new(),
         })
     }
 

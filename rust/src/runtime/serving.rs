@@ -12,7 +12,9 @@
 //! admitted into free slots; prefill replays the prompt through the decode
 //! step (passive slots re-write their last KV entry, which is idempotent).
 
-use std::collections::{HashMap, VecDeque};
+// BTreeMap, not HashMap: executable and weight lookup order shows up in
+// logs and replay traces, and must not depend on hasher seeding.
+use std::collections::{BTreeMap, VecDeque};
 use std::path::Path;
 use std::time::Instant;
 
@@ -74,7 +76,7 @@ pub struct ServingEngine {
     manifest: ArtifactManifest,
     /// Weight device-buffers uploaded once at load time (no host→device
     /// copy on the hot path — §Perf).
-    wbuf: HashMap<String, xla::PjRtBuffer>,
+    wbuf: BTreeMap<String, xla::PjRtBuffer>,
     /// Stacked per-layer expert weights `[E,h,f]/[E,f,h]` for the grouped
     /// expert executable (one PJRT call per layer instead of up to E —
     /// §Perf). None when the artifacts predate the grouped kernel.
@@ -97,7 +99,7 @@ impl ServingEngine {
         engine.load_manifest(&manifest)?;
 
         // Upload all weights to device buffers once.
-        let mut wbuf = HashMap::new();
+        let mut wbuf = BTreeMap::new();
         for e in &manifest.tensors {
             let lit = weights.get(&e.name)?.to_literal()?;
             wbuf.insert(e.name.clone(), engine.upload(&lit)?);

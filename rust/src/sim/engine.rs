@@ -430,6 +430,26 @@ pub struct StageCtx {
     pub prefill_tokens: u64,
 }
 
+impl StageCtx {
+    /// Cold-start stage context. Runs once per engine (and again only
+    /// after a mode switch); every later iteration recycles the spare, so
+    /// the empty buffers grown here are the decode loop's only allocation
+    /// site — keeping them out of the `hot`-marked `begin_iteration`.
+    fn cold(pm: StageModel) -> Self {
+        StageCtx {
+            pm,
+            share: Vec::new(),
+            b_a: Vec::new(),
+            tok: Vec::new(),
+            extra_weight_loads: 0.0,
+            has_decode: false,
+            prefill_node_time: Vec::new(),
+            prefill_finish: Vec::new(),
+            prefill_tokens: 0,
+        }
+    }
+}
+
 /// A simulation component: consumes an event addressed to it, mutates its
 /// local state, and emits scheduled `(time, event)` follow-ups.
 pub trait Component {
@@ -555,6 +575,7 @@ impl RouterFront {
 /// `Queued → Prefill` on a prompt's first touch, pops finished prompts
 /// into `finish`, and returns `(tokens_taken, token-weighted mean
 /// attended context)`.
+// msi-lint: hot
 fn take_prefill_chunk(
     queue: &mut VecDeque<(usize, usize)>,
     budget: usize,
@@ -566,13 +587,17 @@ fn take_prefill_chunk(
     let mut total = 0usize;
     let mut wctx = 0.0f64;
     while budget > 0 {
-        let Some(&(req, remaining)) = queue.front() else {
+        let Some(front) = queue.front_mut() else {
             break;
         };
+        let (req, remaining) = *front;
+        let take = remaining.min(budget);
+        if take < remaining {
+            front.1 -= take;
+        }
         if table.phase(req) == RequestPhase::Queued {
             table.advance(req, RequestPhase::Prefill, now);
         }
-        let take = remaining.min(budget);
         let done = table.get(req).input_len.saturating_sub(remaining);
         wctx += take as f64 * (done as f64 + take as f64 / 2.0);
         budget -= take;
@@ -580,8 +605,6 @@ fn take_prefill_chunk(
         if take == remaining {
             queue.pop_front();
             finish.push(req);
-        } else {
-            queue.front_mut().expect("front exists").1 -= take;
         }
     }
     let mean_ctx = if total > 0 {
@@ -651,6 +674,7 @@ impl PrefillPool {
         debug_assert!(tokens > 0, "empty prompts skip the prefill pool");
         let node = (0..self.queues.len())
             .min_by_key(|&i| (self.pending[i], i))
+            // msi-lint: allow(unwrap-in-engine) -- PrefillPool::new requires >= 1 node, so the range is never empty
             .expect("at least one prefill node");
         self.queues[node].push_back((req, tokens));
         self.pending[node] += tokens as u64;
@@ -686,6 +710,7 @@ impl PrefillPool {
     /// A pass completed: advance its finished prompts into `KvTransfer`
     /// and return them for routing to decode nodes.
     fn finish_pass(&mut self, node: usize, now: f64, ctx: &mut SimCtx) -> Vec<usize> {
+        // msi-lint: allow(unwrap-in-engine) -- a PrefillPass event exists only while start_pass has a pass parked here
         let pass = self.pass[node].take().expect("pass in flight");
         // The pass's tokens stop counting toward the node's load only now
         // that they are done.
@@ -809,6 +834,7 @@ impl AttentionPool {
     /// — the per-layer chunk cost charged on top of the decode layer time.
     /// Fills the caller's recycled per-node `node_time`/`finish` buffers
     /// (pre-sized and cleared) and returns the tokens taken pool-wide.
+    // msi-lint: hot
     fn advance_prefill(
         &mut self,
         chunk: usize,
@@ -847,7 +873,9 @@ impl AttentionPool {
     /// Per-node micro-batch splits for this iteration, written into the
     /// recycled `share` buffers (inner capacity survives across
     /// iterations, so the steady state does not allocate).
+    // msi-lint: hot
     fn splits_into(&self, m: usize, share: &mut Vec<Vec<usize>>) {
+        // msi-lint: allow(hot-path-alloc) -- grow-once: allocates only on the first iteration after a topology change
         share.resize_with(self.nodes.len(), Vec::new);
         for (n, s) in self.nodes.iter().zip(share.iter_mut()) {
             n.batcher.batch.micro_batch_sizes_into(m, s);
@@ -861,6 +889,7 @@ impl AttentionPool {
     /// group, so the pace is the per-node max of `t_a(share) + chunk
     /// time` (not the sum of the two maxima — the slowest decode node and
     /// the heaviest chunk may be different groups).
+    // msi-lint: hot
     fn hop_t_a(&mut self, stage: &StageCtx, mb: usize) -> f64 {
         // Empty-micro-batch floor: a hop with b_a = 0 still paces at k2
         // while any decode is live (the historical behavior the Eq. 4–6
@@ -887,6 +916,7 @@ impl AttentionPool {
 
     /// End-of-iteration bookkeeping for one node: extend KV, retire
     /// finished requests, report first-token and completion ids.
+    // msi-lint: hot
     fn finish_node_iteration(&mut self, nid: usize) -> NodeIterOutcome {
         let node = &mut self.nodes[nid];
         let tokens = node.batcher.batch.len() as u64;
@@ -897,6 +927,7 @@ impl AttentionPool {
             .iter()
             .filter(|r| r.decoded == 0)
             .map(|r| r.id)
+            // msi-lint: allow(hot-path-alloc) -- bounded by new admissions this iteration; empty (no alloc) in steady-state decode
             .collect();
         let done = node.batcher.complete_iteration(&mut node.kv);
         self.node_tokens[nid] += tokens;
@@ -950,6 +981,7 @@ impl M2nLink {
 
     /// One-direction transfer time for hop `mb` given the hottest expert
     /// node's token load.
+    // msi-lint: hot
     fn hop_t_c(&self, stage: &StageCtx, mb: usize, hot_tokens: f64) -> f64 {
         match &self.transfer {
             None => stage.pm.t_c(stage.b_a[mb], hot_tokens),
@@ -1001,6 +1033,10 @@ pub struct ExpertPool {
     observed: Vec<f64>,
     /// Per-expert-node cumulative busy seconds (per-rank clocks).
     node_busy: Vec<f64>,
+    /// Recycled per-hop scratch: per-expert token loads of the current draw.
+    loads: Vec<f64>,
+    /// Recycled per-hop scratch: per-node token loads of the current draw.
+    node_load: Vec<f64>,
     /// Token copies that completed expert compute.
     pub processed_copies: u64,
     /// Number of `Rebalance` events applied.
@@ -1027,6 +1063,8 @@ impl ExpertPool {
             placement: None,
             observed: vec![0.0; experts],
             node_busy: vec![0.0; n_e],
+            loads: Vec::with_capacity(experts),
+            node_load: vec![0.0; n_e],
             processed_copies: 0,
             rebalances: 0,
         }
@@ -1034,7 +1072,9 @@ impl ExpertPool {
 
     /// Fill `scratch` with the popularity weights in effect at virtual time
     /// `now` (drifting Zipf rotates which experts are hot as time passes).
+    // msi-lint: hot
     fn refresh_weights(&mut self, now: f64) {
+        // msi-lint: allow(unwrap-in-engine) -- hop_t_e calls this only behind its weights.is_none() early return
         let w = self.weights.as_ref().expect("weighted popularity");
         let rot = match self.popularity {
             ExpertPopularity::ZipfDrifting { period, .. } if period > 0.0 => {
@@ -1050,6 +1090,7 @@ impl ExpertPool {
     /// Expert stage time for hop `mb`: the hottest expert node paces the
     /// stage; per-rank clocks charge each node its own share. Returns
     /// `(stage_time, hot_tokens)` — the latter also feeds the M2N model.
+    // msi-lint: hot
     fn hop_t_e(
         &mut self,
         stage: &StageCtx,
@@ -1071,31 +1112,33 @@ impl ExpertPool {
         self.refresh_weights(now);
         let g = draw_gating(rng, tok, &self.scratch, self.top_k);
         let dp = build_dispatch(&g, self.experts);
-        let loads: Vec<f64> = (0..self.experts)
-            .map(|e| dp.expert_load(e) as f64)
-            .collect();
-        for (o, l) in self.observed.iter_mut().zip(&loads) {
+        // Recycled scratch: `loads`/`node_load` keep their capacity across
+        // hops, so the per-hop gating draw stays allocation-free.
+        self.loads.clear();
+        self.loads
+            .extend((0..self.experts).map(|e| dp.expert_load(e) as f64));
+        for (o, l) in self.observed.iter_mut().zip(&self.loads) {
             *o += *l;
         }
-        let node_load: Vec<f64> = match &self.placement {
-            Some(p) => p.node_loads(&loads),
+        self.node_load.clear();
+        self.node_load.resize(self.n_e, 0.0);
+        match &self.placement {
+            Some(p) => p.node_loads_into(&self.loads, &mut self.node_load),
             None => {
-                let mut nl = vec![0.0f64; self.n_e];
-                for (e, l) in loads.iter().enumerate() {
-                    nl[e % self.n_e] += *l;
+                for (e, l) in self.loads.iter().enumerate() {
+                    self.node_load[e % self.n_e] += *l;
                 }
-                nl
             }
-        };
+        }
         let hot = if self.oracle_balance {
-            let mean = node_load.iter().sum::<f64>() / self.n_e as f64;
-            balance_experts(&node_load, self.n_e, 0.1 * mean).makespan
+            let mean = self.node_load.iter().sum::<f64>() / self.n_e as f64;
+            balance_experts(&self.node_load, self.n_e, 0.1 * mean).makespan
         } else {
-            node_load.iter().copied().fold(0.0, f64::max)
+            self.node_load.iter().copied().fold(0.0, f64::max)
         };
         for (j, busy) in self.node_busy.iter_mut().enumerate() {
-            if node_load[j] > 0.0 {
-                *busy += stage.pm.t_e(node_load[j]) + stage.extra_weight_loads;
+            if self.node_load[j] > 0.0 {
+                *busy += stage.pm.t_e(self.node_load[j]) + stage.extra_weight_loads;
             }
         }
         (stage.pm.t_e(hot) + stage.extra_weight_loads, hot)
@@ -1425,6 +1468,7 @@ impl ClusterEngine {
         if let Some(r) = self.source.next_request() {
             let at = r.arrival.max(0.0);
             let slot = self.ctx.table.insert(r);
+            // msi-lint: allow(raw-schedule) -- engine-owned queue starting at t=0 with arrivals clamped to >= 0 (PR-6 audit)
             self.q.schedule_at(at, Event::Arrive(slot));
         }
     }
@@ -1435,6 +1479,7 @@ impl ClusterEngine {
     /// engine is done (quiescent or horizon-cut). The sharded runner steps
     /// engines epoch by epoch through this; `run` calls it once with an
     /// infinite epoch — both paths execute the identical event sequence.
+    // msi-lint: hot
     pub(crate) fn step_until(&mut self, until: f64) -> Option<f64> {
         if self.cut {
             return None;
@@ -1448,6 +1493,7 @@ impl ClusterEngine {
             if t > until {
                 break Some(t);
             }
+            // msi-lint: allow(unwrap-in-engine) -- peek_time returned Some on this queue two lines up; nothing popped since
             let (now, ev) = self.q.pop().expect("peeked event pops");
             if matches!(ev, Event::Pipe(_) | Event::Rebalance | Event::IterEnd) {
                 // The event left the queue — decrement before the horizon
@@ -1471,6 +1517,7 @@ impl ClusterEngine {
                 Event::IterBegin => self.begin_iteration(now, &mut out),
                 Event::Pipe(pe) => self.on_pipe(now, pe, &mut out),
                 Event::IterEnd => {
+                    // msi-lint: allow(unwrap-in-engine) -- IterEnd is only emitted by paths that parked iter_stats first
                     let st = self.iter_stats.take().expect("fused stats pending");
                     self.end_iteration(now, &st, &mut out);
                     self.iter_stats = Some(st);
@@ -1480,6 +1527,7 @@ impl ClusterEngine {
                 if matches!(e, Event::Pipe(_) | Event::Rebalance | Event::IterEnd) {
                     self.internal += 1;
                 }
+                // msi-lint: allow(raw-schedule) -- handler outputs are now + nonnegative durations into the engine's own queue (PR-6 audit)
                 self.q.schedule_at(at, e);
             }
             self.peak_events = self.peak_events.max(self.q.len() - self.internal);
@@ -1535,11 +1583,13 @@ impl ClusterEngine {
     /// A prefill node finished a packed pass: route the completed prompts
     /// toward decode nodes and start the node's next pass.
     fn on_prefill_pass(&mut self, now: f64, node: usize, out: &mut Vec<(f64, Event)>) {
+        // msi-lint: allow(unwrap-in-engine) -- PrefillPass events are only scheduled when the dedicated pool exists
         let pool = self.prefill.as_mut().expect("prefill pass without a pool");
         let finished = pool.finish_pass(node, now, &mut self.ctx);
         for req in finished {
             self.router.place_or_queue(now, req, &mut self.ctx, out);
         }
+        // msi-lint: allow(unwrap-in-engine) -- the pool is engine-owned and never dropped mid-run
         let pool = self.prefill.as_mut().expect("pool still present");
         pool.start_pass(node, now, &mut self.ctx, out);
     }
@@ -1610,6 +1660,7 @@ impl ClusterEngine {
     /// selection (colocated), stage-context build, pipeline kickoff. A
     /// boundary with neither decode nor backlog work simply goes idle —
     /// the next KV arrival or placement re-arms the clock.
+    // msi-lint: hot
     fn begin_iteration(&mut self, now: f64, out: &mut Vec<(f64, Event)>) {
         self.ctx.iter_pending = false;
         self.attention.admit_all(now);
@@ -1662,21 +1713,12 @@ impl ClusterEngine {
                 }
                 sc
             }
-            None => StageCtx {
-                pm: self.build_stage_model(avg_seq),
-                share: Vec::new(),
-                b_a: Vec::new(),
-                tok: Vec::new(),
-                extra_weight_loads: 0.0,
-                has_decode: false,
-                prefill_node_time: Vec::new(),
-                prefill_finish: Vec::new(),
-                prefill_tokens: 0,
-            },
+            None => StageCtx::cold(self.build_stage_model(avg_seq)),
         };
         let n_nodes = self.attention.len();
         sc.prefill_node_time.clear();
         sc.prefill_node_time.resize(n_nodes, 0.0);
+        // msi-lint: allow(hot-path-alloc) -- grow-once: allocates only on the first iteration after a topology change
         sc.prefill_finish.resize_with(n_nodes, Vec::new);
         for f in &mut sc.prefill_finish {
             f.clear();
@@ -1689,6 +1731,7 @@ impl ClusterEngine {
             let ipm = self
                 .inline_prefill_model
                 .as_ref()
+                // msi-lint: allow(unwrap-in-engine) -- has_backlog is only true when the colocated config installed the model
                 .expect("inline prefill implies a colocated prefill model");
             let pm = &sc.pm;
             sc.prefill_tokens = self.attention.advance_prefill(
@@ -1800,6 +1843,7 @@ impl ClusterEngine {
         self.pipe_scratch = pipe_out;
         if finished {
             debug_assert!(self.fused.is_empty(), "hops past iteration completion");
+            // msi-lint: allow(unwrap-in-engine) -- IterBegin parked the stats; the fused drain completes at most one iteration
             let mut st = self.iter_stats.take().expect("one iteration in flight");
             core.stats_into(&mut st);
             self.iter_stats = Some(st);
@@ -1835,6 +1879,7 @@ impl ClusterEngine {
     /// One pipeline hop (stepwise mode): conservation observers first, then
     /// the shared scheduling core with the components as the stage-time
     /// providers.
+    // msi-lint: hot
     fn on_pipe(&mut self, now: f64, pe: PipeEvent, out: &mut Vec<(f64, Event)>) {
         let ev = Event::Pipe(pe);
         self.link.handle(now, &ev, &mut self.ctx, out);
@@ -1862,6 +1907,7 @@ impl ClusterEngine {
         }
         self.pipe_scratch = pipe_out;
         if done {
+            // msi-lint: allow(unwrap-in-engine) -- IterBegin parked the stats before any Pipe event could complete the iteration
             let mut st = self.iter_stats.take().expect("one iteration in flight");
             core.stats_into(&mut st);
             self.spare = Some(core);
@@ -1876,7 +1922,9 @@ impl ClusterEngine {
     /// completions into the batchers, per-node token accounting,
     /// completions back to the router, FIFO overflow drain into the freed
     /// capacity, and the next iteration boundary.
+    // msi-lint: hot
     fn end_iteration(&mut self, now: f64, stats: &PipelineStats, out: &mut Vec<(f64, Event)>) {
+        // msi-lint: allow(unwrap-in-engine) -- begin_iteration installs the stage context before any path can reach here
         let stage = self.ctx.stage.take().expect("iteration stage context");
         let t_iter = stats.total_time;
         self.attn_util.add_busy(stats.attn_utilization * t_iter);
@@ -2092,6 +2140,7 @@ impl ClusterEngine {
 /// Compose the components' duration models into the per-hop stage times the
 /// pipeline core memoizes. Consulted exactly once per (micro-batch, layer),
 /// in deterministic event order.
+// msi-lint: hot
 fn hop_times(
     attention: &mut AttentionPool,
     experts: &mut ExpertPool,
@@ -2111,6 +2160,7 @@ fn hop_times(
         stage_samples,
         ..
     } = ctx;
+    // msi-lint: allow(unwrap-in-engine) -- Pipe handlers only run between IterBegin and IterEnd, which bound the stage context
     let stage = stage.as_ref().expect("pipeline hop outside an iteration");
     let t_a = attention.hop_t_a(stage, mb);
     let (t_e, hot_tokens) = experts.hop_t_e(stage, rng, now, mb);

@@ -178,6 +178,7 @@ impl<E> EventQueue<E> {
     /// saturated to `now` and counted in
     /// [`EventQueue::clamped_past_schedules`]; anything further in the
     /// past — or NaN — is rejected with [`PastScheduleError`].
+    // msi-lint: hot
     pub fn try_schedule_at(&mut self, at: f64, event: E) -> Result<(), PastScheduleError> {
         if at.is_nan() {
             return Err(PastScheduleError { at, now: self.now });
@@ -217,6 +218,7 @@ impl<E> EventQueue<E> {
         (t / self.width).floor() as u64
     }
 
+    // msi-lint: hot
     fn push(&mut self, time: f64, event: E) {
         let seq = self.seq;
         self.seq += 1;
@@ -237,6 +239,7 @@ impl<E> EventQueue<E> {
     }
 
     /// Pop the earliest event, advancing the clock to its timestamp.
+    // msi-lint: hot
     pub fn pop(&mut self) -> Option<(f64, E)> {
         let (b, i) = self.find_min()?;
         Some(self.take(b, i))
@@ -253,6 +256,7 @@ impl<E> EventQueue<E> {
 
     /// Locate the earliest event as (bucket, slot), advancing the cursor
     /// past verified-empty cycles.
+    // msi-lint: hot
     fn find_min(&mut self) -> Option<(usize, usize)> {
         if self.len == 0 {
             return None;
@@ -304,6 +308,7 @@ impl<E> EventQueue<E> {
                 }
             }
         }
+        // msi-lint: allow(unwrap-in-engine) -- guarded by the len == 0 early return at function entry
         let (time, _, b, i) = best.expect("non-empty queue has a minimum event");
         self.cur_k = self.cycle_of(time);
         Some((b, i))
@@ -311,6 +316,7 @@ impl<E> EventQueue<E> {
 
     /// Remove slot `i` of bucket `b`, advance the clock, and run the
     /// shrink / periodic-rehash policy.
+    // msi-lint: hot
     fn take(&mut self, b: usize, i: usize) -> (f64, E) {
         let s = self.buckets[b].swap_remove(i);
         self.len -= 1;

@@ -141,6 +141,7 @@ impl FusedQueue {
     }
 
     /// Schedule `ev` at virtual time `at`.
+    // msi-lint: hot
     pub fn push(&mut self, at: f64, ev: PipeEvent) {
         debug_assert!(at.is_finite(), "fused schedule at non-finite time {at}");
         self.items.push((at, self.seq, ev));
@@ -149,6 +150,7 @@ impl FusedQueue {
 
     /// Pop the earliest event: smallest time, FIFO within a time tie —
     /// exactly the global queue's ordering contract.
+    // msi-lint: hot
     pub fn pop(&mut self) -> Option<(f64, PipeEvent)> {
         if self.items.is_empty() {
             return None;
@@ -218,6 +220,7 @@ impl PipelineCore {
     /// allocation. Equivalent to `*self = PipelineCore::new(m, layers)`
     /// without the four heap allocations — the engine recycles one core
     /// across iterations so the steady-state decode loop stays alloc-free.
+    // msi-lint: hot
     pub fn reset(&mut self, m: usize, layers: usize) {
         assert!(m >= 1 && layers >= 1);
         self.m = m;
@@ -241,6 +244,7 @@ impl PipelineCore {
         }
     }
 
+    // msi-lint: hot
     fn times_of(
         &mut self,
         now: f64,
@@ -249,12 +253,15 @@ impl PipelineCore {
         times: &mut dyn FnMut(f64, usize, usize) -> StageTimes,
     ) -> StageTimes {
         let idx = mb * self.layers + layer;
-        if self.cache[idx].is_none() {
-            self.cache[idx] = Some(times(now, mb, layer));
+        if let Some(t) = self.cache[idx] {
+            return t;
         }
-        self.cache[idx].unwrap()
+        let t = times(now, mb, layer);
+        self.cache[idx] = Some(t);
+        t
     }
 
+    // msi-lint: hot
     fn try_start_attn(
         &mut self,
         now: f64,
@@ -272,6 +279,7 @@ impl PipelineCore {
         out.push((end, PipeEvent::AttnDone { mb, layer }));
     }
 
+    // msi-lint: hot
     fn try_start_expert(
         &mut self,
         now: f64,
@@ -307,6 +315,7 @@ impl PipelineCore {
     /// the pass statistics with [`PipelineCore::stats_into`]. The engine's
     /// hot loop uses this so completing an iteration never clones
     /// `mb_done`.
+    // msi-lint: hot
     pub fn on_event_done(
         &mut self,
         now: f64,
@@ -356,6 +365,7 @@ impl PipelineCore {
 
     /// Write the completed pass's statistics into `out`, reusing its
     /// `mb_done` buffer (no allocation once the buffer has capacity `m`).
+    // msi-lint: hot
     pub fn stats_into(&self, out: &mut PipelineStats) {
         let total_time = self.mb_done.iter().copied().fold(0.0, f64::max);
         // A zero-duration pass (every stage time 0, e.g. a degenerate

@@ -541,6 +541,7 @@ mod tests {
         let cfg = shardable_setup();
         let n = 20_000;
         let time = |workers| {
+            // msi-lint: allow(wall-clock-in-sim) -- ignored speedup test times real execution; reports are compared bytewise elsewhere
             let t0 = std::time::Instant::now();
             let rep = run_sharded(
                 &cfg,

@@ -1,0 +1,370 @@
+//! Hand-rolled Rust token scanner.
+//!
+//! The linter's rules are token-pattern matches, so the one hard
+//! requirement on the lexer is that rule-pattern text inside string
+//! literals, raw strings, char literals and comments must NEVER surface as
+//! code tokens. String/char contents are dropped outright; comments are
+//! kept as single tokens (waivers and `hot` markers live in them) but are
+//! excluded from every code-pattern scan.
+//!
+//! The scanner never fails: unterminated constructs close at end of file,
+//! because a linter must keep scanning whatever it is fed.
+
+/// Kind of a lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Punctuation or operator (maximal munch for two-char operators, so
+    /// `==` and `!=` are single tokens).
+    Punct,
+    /// Numeric literal.
+    Num,
+    /// String literal — regular, raw, byte or raw-byte. Contents dropped.
+    Str,
+    /// Character literal. Contents dropped.
+    Char,
+    /// Lifetime such as `'a`.
+    Lifetime,
+    /// Line or block comment, full text retained (directives are parsed
+    /// out of comments).
+    Comment,
+}
+
+/// One lexed token: kind, text and 1-based line of its first character.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Token kind.
+    pub kind: TokKind,
+    /// Source text. Empty for string/char literals (contents must never
+    /// match rule patterns); full text, delimiters included, for comments.
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+/// Two-character operators lexed as single punctuation tokens. The rules
+/// match `==`/`!=` as whole tokens, so maximal munch matters here.
+const TWO_CHAR_OPS: [&str; 16] = [
+    "==", "!=", "<=", ">=", "::", "->", "=>", "&&", "||", "+=", "-=", "*=", "/=", "..", "<<", ">>",
+];
+
+/// Lex `src` into tokens.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Comment,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::Comment,
+                text: b[start..i].iter().collect(),
+                line: start_line,
+            });
+            continue;
+        }
+        // Raw and byte strings: r"..", r#".."#, b"..", br#".."#.
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            if c == 'b' && j < n && b[j] == 'r' {
+                j += 1;
+            }
+            let raw = c == 'r' || (j > i + 1);
+            let mut hashes = 0usize;
+            while raw && j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                let start_line = line;
+                j += 1;
+                if raw {
+                    while j < n {
+                        if b[j] == '\n' {
+                            line += 1;
+                            j += 1;
+                        } else if b[j] == '"' && closes_raw(&b, j, hashes) {
+                            j += 1 + hashes;
+                            break;
+                        } else {
+                            j += 1;
+                        }
+                    }
+                } else {
+                    j = scan_cooked_string(&b, j, &mut line);
+                }
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: String::new(),
+                    line: start_line,
+                });
+                i = j;
+                continue;
+            }
+            // Not a string: fall through to identifier lexing below.
+        }
+        // Regular string literal.
+        if c == '"' {
+            let start_line = line;
+            i = scan_cooked_string(&b, i + 1, &mut line);
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: String::new(),
+                line: start_line,
+            });
+            continue;
+        }
+        // Char literal or lifetime.
+        if c == '\'' {
+            if i + 1 < n && (b[i + 1].is_alphanumeric() || b[i + 1] == '_') {
+                let mut j = i + 1;
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                if j < n && b[j] == '\'' {
+                    // 'a' — a char literal.
+                    toks.push(Tok {
+                        kind: TokKind::Char,
+                        text: String::new(),
+                        line,
+                    });
+                    i = j + 1;
+                } else {
+                    // 'a not followed by a closing quote — a lifetime.
+                    toks.push(Tok {
+                        kind: TokKind::Lifetime,
+                        text: b[i..j].iter().collect(),
+                        line,
+                    });
+                    i = j;
+                }
+                continue;
+            }
+            // Escaped or punctuation char literal: scan to the closing
+            // quote (handles '\n', '\u{..}', '(' and friends).
+            let start_line = line;
+            let mut j = i + 1;
+            if j < n && b[j] == '\\' {
+                j += 2;
+            }
+            while j < n && b[j] != '\'' {
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Char,
+                text: String::new(),
+                line: start_line,
+            });
+            i = (j + 1).min(n);
+            continue;
+        }
+        // Numeric literal (digits, suffixes, and interior dots as in 1.5;
+        // `0..n` stays three tokens because the dot needs a trailing digit).
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n
+                && (b[i].is_alphanumeric()
+                    || b[i] == '_'
+                    || (b[i] == '.' && i + 1 < n && b[i + 1].is_ascii_digit()))
+            {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Identifier or keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Punctuation, two-char operators first.
+        if i + 1 < n {
+            let two: String = [b[i], b[i + 1]].iter().collect();
+            if TWO_CHAR_OPS.contains(&two.as_str()) {
+                toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: two,
+                    line,
+                });
+                i += 2;
+                continue;
+            }
+        }
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    toks
+}
+
+/// Whether the quote at `j` is followed by `hashes` `#` characters — the
+/// terminator of a raw string opened with that many hashes.
+fn closes_raw(b: &[char], j: usize, hashes: usize) -> bool {
+    let mut k = 0usize;
+    while k < hashes {
+        if j + 1 + k >= b.len() || b[j + 1 + k] != '#' {
+            return false;
+        }
+        k += 1;
+    }
+    true
+}
+
+/// Scan a cooked (escape-processing) string body starting just past the
+/// opening quote; returns the index just past the closing quote and keeps
+/// the line counter honest across multi-line strings.
+fn scan_cooked_string(b: &[char], mut j: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    while j < n {
+        match b[j] {
+            '\\' => {
+                if j + 1 < n && b[j + 1] == '\n' {
+                    *line += 1;
+                }
+                j += 2;
+            }
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            '"' => {
+                j += 1;
+                break;
+            }
+            _ => {
+                j += 1;
+            }
+        }
+    }
+    j.min(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_ops_and_numbers() {
+        let t = kinds("let x = a.total_cmp(&b) != c;");
+        assert!(t.contains(&(TokKind::Ident, "total_cmp".to_string())));
+        assert!(t.contains(&(TokKind::Punct, "!=".to_string())));
+        assert!(!t.iter().any(|(_, s)| s == "!"), "maximal munch on !=");
+    }
+
+    #[test]
+    fn string_contents_never_become_code_tokens() {
+        let t = kinds("let s = \"HashMap Instant::now() .unwrap()\";");
+        assert!(!t.iter().any(|(_, s)| s == "HashMap" || s == "unwrap"));
+        assert_eq!(t.iter().filter(|(k, _)| *k == TokKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn raw_string_with_hashes_and_embedded_quote() {
+        let t = kinds("let s = r#\"schedule_at \" SystemTime\"#; let z = 1;");
+        assert!(!t.iter().any(|(_, s)| s == "schedule_at" || s == "SystemTime"));
+        assert!(
+            t.contains(&(TokKind::Ident, "z".to_string())),
+            "lexing resumes after the raw string"
+        );
+    }
+
+    #[test]
+    fn byte_strings_and_prefixed_idents() {
+        let t = kinds("let a = b\"partial_cmp\"; let broken = rate;");
+        assert!(!t.iter().any(|(_, s)| s == "partial_cmp"));
+        assert!(t.contains(&(TokKind::Ident, "broken".to_string())));
+        assert!(t.contains(&(TokKind::Ident, "rate".to_string())));
+    }
+
+    #[test]
+    fn comments_are_single_tokens_with_text() {
+        let t = lex("x; // msi-lint: hot\n/* HashMap\nin block */ y;");
+        let comments: Vec<&Tok> = t.iter().filter(|t| t.kind == TokKind::Comment).collect();
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].text.contains("msi-lint: hot"));
+        assert_eq!(comments[1].line, 2);
+        let y = t.iter().find(|t| t.text == "y").expect("y survives");
+        assert_eq!(y.line, 3, "line count tracks through block comments");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let t = kinds("let c = 'a'; fn f<'a>(x: &'a str) {} let n = '\\n'; let p = '(';");
+        assert_eq!(t.iter().filter(|(k, _)| *k == TokKind::Char).count(), 3);
+        assert!(t.contains(&(TokKind::Lifetime, "'a".to_string())));
+    }
+
+    #[test]
+    fn lines_are_one_based_and_accurate() {
+        let t = lex("a\nb\n\nc");
+        let lines: Vec<u32> = t.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+}

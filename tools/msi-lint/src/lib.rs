@@ -1,0 +1,184 @@
+//! `msi-lint` — determinism and event-kernel invariant checker for the
+//! MegaScale-Infer reproduction.
+//!
+//! The simulator's correctness contract (byte-identical `ClusterReport`s
+//! across fused/stepwise paths, shard counts and reruns) rests on textual
+//! conventions: `total_cmp` ordering, no wall clock or unordered-map
+//! iteration in report-affecting code, `try_schedule_at` discipline, an
+//! allocation-free decode loop, and no panic shortcuts in the event
+//! kernel. This crate turns those conventions into enforced rules with
+//! file/line diagnostics, JSON output, and an inline waiver syntax:
+//!
+//! ```text
+//! // msi-lint: allow(<rule>[, <rule>...]) -- <mandatory reason>
+//! // msi-lint: hot            (marks the next fn as a hot decode path)
+//! ```
+//!
+//! A trailing waiver covers its own line; a standalone-comment waiver
+//! covers the next code line. Unused or malformed waivers are themselves
+//! findings, so the exception inventory can only shrink by deletion.
+//!
+//! Dependency-free by design: the linter is part of the correctness
+//! contract and must never be the thing that drags a dependency tree
+//! into CI.
+
+#![warn(missing_docs)]
+
+pub mod lexer;
+mod rules;
+
+pub use rules::{Finding, RuleInfo, RULES, WAIVER_RULE};
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Result of linting a set of files.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Number of files scanned.
+    pub files: usize,
+    /// Every finding, active and waived, in file-then-line order.
+    pub findings: Vec<Finding>,
+}
+
+impl LintReport {
+    /// Findings not covered by a waiver — these fail the lint.
+    pub fn active(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.waiver.is_none())
+    }
+
+    /// Findings covered by an inline waiver.
+    pub fn waived(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.waiver.is_some())
+    }
+
+    /// Whether the lint passes (no active findings).
+    pub fn is_clean(&self) -> bool {
+        self.active().next().is_none()
+    }
+
+    /// `(rule, active, waived)` counts in registry order.
+    pub fn rule_counts(&self) -> Vec<(&'static str, usize, usize)> {
+        RULES
+            .iter()
+            .map(|r| {
+                let active = self
+                    .findings
+                    .iter()
+                    .filter(|f| f.rule == r.id && f.waiver.is_none())
+                    .count();
+                let waived = self
+                    .findings
+                    .iter()
+                    .filter(|f| f.rule == r.id && f.waiver.is_some())
+                    .count();
+                (r.id, active, waived)
+            })
+            .collect()
+    }
+
+    /// Render the report as a JSON document (hand-rolled, no deps).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(4096);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"files\": {},\n", self.files));
+        s.push_str(&format!("  \"active\": {},\n", self.active().count()));
+        s.push_str(&format!("  \"waived\": {},\n", self.waived().count()));
+        s.push_str("  \"counts\": {\n");
+        let counts = self.rule_counts();
+        for (i, (rule, active, waived)) in counts.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {{\"active\": {}, \"waived\": {}}}{}\n",
+                json_escape(rule),
+                active,
+                waived,
+                if i + 1 < counts.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  },\n");
+        s.push_str("  \"findings\": [\n");
+        for (i, f) in self.findings.iter().enumerate() {
+            let waiver = match &f.waiver {
+                Some(r) => format!("\"{}\"", json_escape(r)),
+                None => "null".to_string(),
+            };
+            s.push_str(&format!(
+                "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\", \"waiver\": {}}}{}\n",
+                json_escape(f.rule),
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.message),
+                waiver,
+                if i + 1 < self.findings.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Escape a string for embedding in a JSON document.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Lint one in-memory source file. `path` (with `/` separators) decides
+/// rule scoping — e.g. anything under `sim/` is report-affecting.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let toks = lexer::lex(src);
+    rules::run_rules(path, &toks)
+}
+
+/// Recursively collect `.rs` files under each path (a file argument is
+/// taken as-is), sorted so diagnostics are deterministic.
+pub fn collect_rs_files(paths: &[PathBuf]) -> io::Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+        let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+            .map(|e| e.map(|e| e.path()))
+            .collect::<io::Result<Vec<_>>>()?;
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                walk(&p, out)?;
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    for p in paths {
+        if p.is_dir() {
+            walk(p, &mut out)?;
+        } else {
+            out.push(p.clone());
+        }
+    }
+    Ok(out)
+}
+
+/// Lint a set of files and/or directories.
+pub fn lint_paths(paths: &[PathBuf]) -> io::Result<LintReport> {
+    let files = collect_rs_files(paths)?;
+    let mut rep = LintReport::default();
+    for f in &files {
+        let src = fs::read_to_string(f)?;
+        let label = f.to_string_lossy().replace('\\', "/");
+        rep.findings.extend(lint_source(&label, &src));
+        rep.files += 1;
+    }
+    Ok(rep)
+}

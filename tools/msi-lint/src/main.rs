@@ -1,0 +1,123 @@
+//! CLI entry point for `msi-lint`.
+//!
+//! Usage: `cargo run -p msi-lint -- rust/src [--json lint.json] [--waivers]`.
+//! Exits 0 when every finding is waived, 1 when any active finding
+//! remains, 2 on usage or I/O errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+msi-lint — determinism & event-kernel invariant checker
+
+usage: msi-lint [options] [path...]
+
+  path          files or directories to lint (default: rust/src)
+  --json FILE   write the full report as JSON (use `-` for stdout)
+  --waivers     print the waiver inventory (per-rule counts + reasons)
+  --list-rules  list the rule registry and exit
+  -q, --quiet   suppress the per-finding listing, keep the summary
+  -h, --help    this text
+
+exit status: 0 clean, 1 active findings, 2 usage/io error";
+
+fn main() -> ExitCode {
+    let mut json_out: Option<String> = None;
+    let mut show_waivers = false;
+    let mut list_rules = false;
+    let mut quiet = false;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_out = Some(p),
+                None => {
+                    eprintln!("msi-lint: --json expects a file path\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--waivers" => show_waivers = true,
+            "--list-rules" => list_rules = true,
+            "-q" | "--quiet" => quiet = true,
+            "-h" | "--help" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with('-') => {
+                eprintln!("msi-lint: unknown option `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            other => paths.push(PathBuf::from(other)),
+        }
+    }
+
+    if list_rules {
+        for r in msi_lint::RULES {
+            println!("{:<28} {}", r.id, r.summary);
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    if paths.is_empty() {
+        paths.push(PathBuf::from("rust/src"));
+    }
+
+    let report = match msi_lint::lint_paths(&paths) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("msi-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if !quiet {
+        for f in report.active() {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+        }
+    }
+
+    if show_waivers {
+        println!("waiver inventory:");
+        for f in report.waived() {
+            println!(
+                "  {}:{}: [{}] waived -- {}",
+                f.file,
+                f.line,
+                f.rule,
+                f.waiver.as_deref().unwrap_or("")
+            );
+        }
+        for (rule, _, waived) in report.rule_counts() {
+            if waived > 0 {
+                println!("  {rule}: {waived} waiver(s)");
+            }
+        }
+    }
+
+    if let Some(dest) = json_out {
+        let doc = report.to_json();
+        if dest == "-" {
+            print!("{doc}");
+        } else if let Err(e) = std::fs::write(&dest, doc) {
+            eprintln!("msi-lint: writing {dest}: {e}");
+            return ExitCode::from(2);
+        }
+    }
+
+    let active = report.active().count();
+    let waived = report.waived().count();
+    if active > 0 {
+        eprintln!(
+            "msi-lint: {active} active finding(s), {waived} waived, {} file(s)",
+            report.files
+        );
+        ExitCode::FAILURE
+    } else {
+        println!(
+            "msi-lint: clean — {} file(s), {waived} waived finding(s)",
+            report.files
+        );
+        ExitCode::SUCCESS
+    }
+}

@@ -1,0 +1,595 @@
+//! The rule registry and the token-stream analyses the rules share.
+//!
+//! Every rule is a token-pattern match scoped by a light structural pass:
+//! brace-matched `#[cfg(test)]` spans, function spans (with `hot` markers
+//! attached), and `impl Component for ...` spans. That is deliberately far
+//! short of a parser — the invariants being enforced are textual
+//! conventions, and a scanner that cannot be confused by macro soup is
+//! worth more here than AST fidelity.
+
+use crate::lexer::{Tok, TokKind};
+
+/// A single diagnostic produced by a rule.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule identifier (one of [`RULES`]).
+    pub rule: &'static str,
+    /// File the finding is in, as the path was passed to the linter.
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Human-readable explanation.
+    pub message: String,
+    /// Waiver reason when an inline `msi-lint: allow(...)` covers this
+    /// finding; `None` means the finding is active and fails the lint.
+    pub waiver: Option<String>,
+}
+
+/// Descriptor of one lint rule.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    /// Stable identifier used in diagnostics and waivers.
+    pub id: &'static str,
+    /// One-line summary of the invariant the rule enforces.
+    pub summary: &'static str,
+}
+
+/// Rule id of the linter's own meta-rule: malformed or unused waivers.
+/// It cannot itself be waived.
+pub const WAIVER_RULE: &str = "lint-waiver";
+
+/// The registry: every determinism / event-kernel invariant the linter
+/// enforces, plus the unwaivable meta-rule for broken waivers.
+pub const RULES: [RuleInfo; 7] = [
+    RuleInfo {
+        id: "nondeterministic-iteration",
+        summary: "HashMap/HashSet in report-affecting modules; use BTreeMap or sorted keys",
+    },
+    RuleInfo {
+        id: "wall-clock-in-sim",
+        summary: "Instant/SystemTime in simulation code; virtual time only",
+    },
+    RuleInfo {
+        id: "raw-schedule",
+        summary: "schedule_at outside sim/mod.rs; use try_schedule_at (epsilon discipline)",
+    },
+    RuleInfo {
+        id: "float-time-compare",
+        summary: "==/!=/partial_cmp on virtual-time values; use total_cmp",
+    },
+    RuleInfo {
+        id: "hot-path-alloc",
+        summary: "allocating call inside a `// msi-lint: hot` function",
+    },
+    RuleInfo {
+        id: "unwrap-in-engine",
+        summary: ".unwrap()/.expect() in event-kernel files or Component::handle paths",
+    },
+    RuleInfo {
+        id: WAIVER_RULE,
+        summary: "malformed or unused msi-lint waiver (not waivable)",
+    },
+];
+
+/// Inclusive raw-token index range.
+#[derive(Debug, Clone, Copy)]
+struct Span {
+    start: usize,
+    end: usize,
+}
+
+impl Span {
+    fn contains(&self, idx: usize) -> bool {
+        self.start <= idx && idx <= self.end
+    }
+}
+
+/// A function body span with its name and `hot` marking.
+#[derive(Debug, Clone)]
+struct FnSpan {
+    name: String,
+    span: Span,
+    hot: bool,
+}
+
+/// One parsed `// msi-lint: allow(rule, ...) -- reason` comment.
+#[derive(Debug)]
+struct Waiver {
+    rules: Vec<String>,
+    reason: String,
+    /// Line whose findings this waiver covers.
+    covers: u32,
+    /// Line the waiver comment itself is on.
+    at: u32,
+    used: bool,
+}
+
+/// Modules whose contents feed `ClusterReport` or any other artifact that
+/// must be byte-identical across reruns.
+const REPORT_MODULES: [&str; 6] = [
+    "sim/", "coordinator/", "plan/", "workload/", "metrics/", "baselines/",
+];
+
+/// The event-kernel files where rule 6 applies to every non-test panic
+/// site, not just `Component::handle` bodies.
+const ENGINE_FILES: [&str; 3] = ["sim/mod.rs", "sim/engine.rs", "sim/pipeline.rs"];
+
+/// Whether `path` (with `/` separators) is report-affecting.
+fn report_scope(path: &str) -> bool {
+    REPORT_MODULES
+        .iter()
+        .any(|m| path.starts_with(m) || path.contains(&format!("/{m}")))
+}
+
+/// Whether `path` is one of the event-kernel files.
+fn engine_file(path: &str) -> bool {
+    ENGINE_FILES.iter().any(|f| path.ends_with(f))
+}
+
+/// Identifiers the float-time-compare rule treats as virtual-time values.
+fn timeish(s: &str) -> bool {
+    s == "now" || s == "time" || s.starts_with("t_") || s.ends_with("_time")
+}
+
+/// Container types whose `::new`/`::with_capacity`/`::from` allocate.
+const ALLOC_CONTAINERS: [&str; 9] = [
+    "Vec",
+    "VecDeque",
+    "String",
+    "Box",
+    "HashMap",
+    "HashSet",
+    "BTreeMap",
+    "BTreeSet",
+    "BinaryHeap",
+];
+
+/// Method calls that allocate when invoked on a container or iterator.
+const ALLOC_METHODS: [&str; 5] = ["collect", "to_vec", "to_string", "to_owned", "clone"];
+
+/// Find the raw index of the `}` matching the `{` at raw index `open`.
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth: i64 = 0;
+    let mut i = open;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            if t.text == "{" {
+                depth += 1;
+            } else if t.text == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Structural facts about one file's token stream.
+struct Analysis {
+    /// Raw indices of non-comment tokens, in order.
+    code: Vec<usize>,
+    test_spans: Vec<Span>,
+    fn_spans: Vec<FnSpan>,
+    component_spans: Vec<Span>,
+}
+
+impl Analysis {
+    fn in_test(&self, idx: usize) -> bool {
+        self.test_spans.iter().any(|s| s.contains(idx))
+    }
+
+    fn in_component(&self, idx: usize) -> bool {
+        self.component_spans.iter().any(|s| s.contains(idx))
+    }
+}
+
+/// Run the structural pass: code-token index, `#[cfg(test)]` spans,
+/// function spans with hot markers, and `impl Component for` spans.
+fn analyze(toks: &[Tok]) -> Analysis {
+    let code: Vec<usize> = (0..toks.len())
+        .filter(|&i| toks[i].kind != TokKind::Comment)
+        .collect();
+    let is = |k: usize, text: &str| -> bool {
+        let t = &toks[code[k]];
+        t.text == text
+    };
+
+    // #[cfg(test)] spans: the token run `# [ cfg ( test ) ]`, then the
+    // next `{` opens the guarded item.
+    let mut test_spans = Vec::new();
+    let mut k = 0usize;
+    while k + 6 < code.len() {
+        if is(k, "#")
+            && is(k + 1, "[")
+            && is(k + 2, "cfg")
+            && is(k + 3, "(")
+            && is(k + 4, "test")
+            && is(k + 5, ")")
+            && is(k + 6, "]")
+        {
+            let mut m = k + 7;
+            while m < code.len() && !is(m, "{") {
+                m += 1;
+            }
+            if m < code.len() {
+                let open = code[m];
+                test_spans.push(Span {
+                    start: open,
+                    end: match_brace(toks, open),
+                });
+            }
+        }
+        k += 1;
+    }
+
+    // `impl Component for Foo { .. }` spans.
+    let mut component_spans = Vec::new();
+    let mut k = 0usize;
+    while k + 2 < code.len() {
+        if is(k, "impl") && is(k + 1, "Component") && is(k + 2, "for") {
+            let mut m = k + 3;
+            while m < code.len() && !is(m, "{") {
+                m += 1;
+            }
+            if m < code.len() {
+                let open = code[m];
+                component_spans.push(Span {
+                    start: open,
+                    end: match_brace(toks, open),
+                });
+            }
+        }
+        k += 1;
+    }
+
+    // `// msi-lint: hot` markers. A marker applies to the next `fn`
+    // keyword, provided only signature-prefix tokens (doc comments,
+    // attributes, visibility) separate them — a `{`, `}` or `;` in
+    // between means the marker dangles and is ignored.
+    let mut hot_fns: Vec<usize> = Vec::new();
+    for (m, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Comment && t.text.contains("msi-lint: hot") {
+            let mut j = m + 1;
+            while j < toks.len() {
+                let u = &toks[j];
+                if u.kind == TokKind::Ident && u.text == "fn" {
+                    hot_fns.push(j);
+                    break;
+                }
+                if u.kind == TokKind::Punct && (u.text == "{" || u.text == "}" || u.text == ";") {
+                    break;
+                }
+                j += 1;
+            }
+        }
+    }
+
+    // Function spans: `fn <name> .. { body }`. A trailing-semicolon form
+    // (trait method declaration) has no body and is skipped.
+    let mut fn_spans = Vec::new();
+    let mut k = 0usize;
+    while k < code.len() {
+        if is(k, "fn") && toks[code[k]].kind == TokKind::Ident {
+            let fn_raw = code[k];
+            let name = if k + 1 < code.len() && toks[code[k + 1]].kind == TokKind::Ident {
+                toks[code[k + 1]].text.clone()
+            } else {
+                String::from("<anonymous>")
+            };
+            let mut m = k + 1;
+            while m < code.len() && !is(m, "{") && !is(m, ";") {
+                m += 1;
+            }
+            if m < code.len() && is(m, "{") {
+                let open = code[m];
+                fn_spans.push(FnSpan {
+                    name,
+                    span: Span {
+                        start: open,
+                        end: match_brace(toks, open),
+                    },
+                    hot: hot_fns.contains(&fn_raw),
+                });
+            }
+        }
+        k += 1;
+    }
+
+    Analysis {
+        code,
+        test_spans,
+        fn_spans,
+        component_spans,
+    }
+}
+
+/// Parse waiver directives out of the comment tokens. Malformed waivers
+/// (unknown rule, missing reason, unparseable syntax) come back as
+/// immediate `lint-waiver` findings.
+fn parse_waivers(file: &str, toks: &[Tok]) -> (Vec<Waiver>, Vec<Finding>) {
+    let mut waivers = Vec::new();
+    let mut findings = Vec::new();
+    for t in toks {
+        if t.kind != TokKind::Comment {
+            continue;
+        }
+        let Some(pos) = t.text.find("msi-lint:") else {
+            continue;
+        };
+        let rest = t.text[pos + "msi-lint:".len()..].trim_start();
+        if rest.starts_with("hot") {
+            continue; // hot markers are handled by the structural pass
+        }
+        let mut malformed = |why: &str| {
+            findings.push(Finding {
+                rule: WAIVER_RULE,
+                file: file.to_string(),
+                line: t.line,
+                message: format!("malformed waiver: {why}"),
+                waiver: None,
+            });
+        };
+        let Some(inner) = rest.strip_prefix("allow(") else {
+            malformed("expected `allow(<rule>) -- <reason>` or `hot` after `msi-lint:`");
+            continue;
+        };
+        let Some(close) = inner.find(')') else {
+            malformed("missing `)` after rule list");
+            continue;
+        };
+        let rule_list = &inner[..close];
+        let mut rules = Vec::new();
+        let mut bad_rule = false;
+        for r in rule_list.split(',') {
+            let r = r.trim();
+            if r.is_empty() {
+                continue;
+            }
+            let known = RULES.iter().any(|info| info.id == r);
+            if !known || r == WAIVER_RULE {
+                malformed(&format!("unknown or unwaivable rule `{r}`"));
+                bad_rule = true;
+                break;
+            }
+            rules.push(r.to_string());
+        }
+        if bad_rule {
+            continue;
+        }
+        if rules.is_empty() {
+            malformed("empty rule list");
+            continue;
+        }
+        let after = inner[close + 1..].trim_start();
+        let Some(reason) = after.strip_prefix("--") else {
+            malformed("missing ` -- <reason>` (a reason is mandatory)");
+            continue;
+        };
+        let reason = reason.trim().trim_end_matches("*/").trim();
+        if reason.is_empty() {
+            malformed("empty reason (a reason is mandatory)");
+            continue;
+        }
+        // A trailing waiver covers its own line; a standalone-comment
+        // waiver covers the first code line after it.
+        let covers = if toks.iter().any(|u| u.kind != TokKind::Comment && u.line == t.line) {
+            t.line
+        } else {
+            toks.iter()
+                .filter(|u| u.kind != TokKind::Comment && u.line > t.line)
+                .map(|u| u.line)
+                .next()
+                .unwrap_or(t.line + 1)
+        };
+        waivers.push(Waiver {
+            rules,
+            reason: reason.to_string(),
+            covers,
+            at: t.line,
+            used: false,
+        });
+    }
+    (waivers, findings)
+}
+
+/// Run every rule over one file's token stream and resolve waivers.
+pub fn run_rules(file: &str, toks: &[Tok]) -> Vec<Finding> {
+    let a = analyze(toks);
+    let (mut waivers, mut broken) = parse_waivers(file, toks);
+    let in_report = report_scope(file);
+    let in_engine = engine_file(file);
+    let queue_owner = file.ends_with("sim/mod.rs");
+
+    // (rule, line, message) triples before waiver resolution.
+    let mut raw: Vec<(&'static str, u32, String)> = Vec::new();
+    let code = &a.code;
+
+    for k in 0..code.len() {
+        let idx = code[k];
+        let t = &toks[idx];
+        let prev1 = k.checked_sub(1).map(|j| &toks[code[j]]);
+        let next1 = code.get(k + 1).map(|&i| &toks[i]);
+        let next2 = code.get(k + 2).map(|&i| &toks[i]);
+        let next3 = code.get(k + 3).map(|&i| &toks[i]);
+
+        // Rule 1: unordered maps anywhere in report-affecting modules
+        // (tests included — a test that iterates a HashMap to build an
+        // expectation is itself order-dependent).
+        if in_report && t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+            raw.push((
+                "nondeterministic-iteration",
+                t.line,
+                format!("`{}` in report module; use BTreeMap/BTreeSet or sorted keys", t.text),
+            ));
+        }
+
+        // Rule 2: wall-clock time sources in simulation scope, tests
+        // included (the two legitimate self-bench sites carry waivers).
+        if in_report
+            && t.kind == TokKind::Ident
+            && (t.text == "Instant" || t.text == "SystemTime")
+        {
+            raw.push((
+                "wall-clock-in-sim",
+                t.line,
+                format!("`{}` in simulation code; virtual time only", t.text),
+            ));
+        }
+
+        // Rule 3: raw schedule calls outside the queue-owning module.
+        // Test code is exempt (tests exercise the panic discipline).
+        if !queue_owner
+            && t.kind == TokKind::Ident
+            && (t.text == "schedule_at" || t.text == "schedule_in")
+            && !a.in_test(idx)
+        {
+            raw.push((
+                "raw-schedule",
+                t.line,
+                format!("`{}` outside sim/mod.rs; route through try_schedule_at", t.text),
+            ));
+        }
+
+        // Rule 4: float comparisons on virtual time outside tests.
+        if in_report && !a.in_test(idx) {
+            if t.kind == TokKind::Ident && t.text == "partial_cmp" {
+                raw.push((
+                    "float-time-compare",
+                    t.line,
+                    "`partial_cmp` on floats; use the total order `total_cmp`".to_string(),
+                ));
+            }
+            if t.kind == TokKind::Punct && (t.text == "==" || t.text == "!=") {
+                let prev_timeish =
+                    prev1.is_some_and(|p| p.kind == TokKind::Ident && timeish(&p.text));
+                // `x == self.now` / `x == sc.t_done`: look through one
+                // receiver-dot pair on the right-hand side.
+                let next_timeish = match (next1, next2, next3) {
+                    (Some(n1), _, _) if n1.kind == TokKind::Ident && timeish(&n1.text) => true,
+                    (Some(n1), Some(n2), Some(n3)) => {
+                        n1.kind == TokKind::Ident
+                            && n2.text == "."
+                            && n3.kind == TokKind::Ident
+                            && timeish(&n3.text)
+                    }
+                    _ => false,
+                };
+                if prev_timeish || next_timeish {
+                    raw.push((
+                        "float-time-compare",
+                        t.line,
+                        format!("`{}` compares virtual time exactly; use `total_cmp`", t.text),
+                    ));
+                }
+            }
+        }
+
+        // Rule 6: panic sites in the event kernel. Applies to every
+        // non-test site in the three kernel files, and to any
+        // `impl Component for` block in any file.
+        if t.kind == TokKind::Ident
+            && (t.text == "unwrap" || t.text == "expect")
+            && prev1.is_some_and(|p| p.text == ".")
+            && next1.is_some_and(|n| n.text == "(")
+            && !a.in_test(idx)
+            && (in_engine || a.in_component(idx))
+        {
+            raw.push((
+                "unwrap-in-engine",
+                t.line,
+                format!("`.{}()` in event-kernel code; handle it or waive with reason", t.text),
+            ));
+        }
+    }
+
+    // Rule 5: allocating calls inside `// msi-lint: hot` functions.
+    for f in a.fn_spans.iter().filter(|f| f.hot) {
+        for k in 0..code.len() {
+            let idx = code[k];
+            if !f.span.contains(idx) {
+                continue;
+            }
+            let t = &toks[idx];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let prev = k.checked_sub(1).map(|j| &toks[code[j]]);
+            let next1 = code.get(k + 1).map(|&i| &toks[i]);
+            let next2 = code.get(k + 2).map(|&i| &toks[i]);
+            let mut hit: Option<String> = None;
+            if (t.text == "vec" || t.text == "format") && next1.is_some_and(|n| n.text == "!") {
+                hit = Some(format!("`{}!` allocates", t.text));
+            } else if ALLOC_CONTAINERS.contains(&t.text.as_str())
+                && next1.is_some_and(|n| n.text == "::")
+                && next2.is_some_and(|n| {
+                    n.text == "new" || n.text == "with_capacity" || n.text == "from"
+                })
+            {
+                hit = Some(format!(
+                    "`{}::{}` allocates",
+                    t.text,
+                    next2.map_or("", |n| n.text.as_str())
+                ));
+            } else if ALLOC_METHODS.contains(&t.text.as_str())
+                && prev.is_some_and(|p| p.text == ".")
+                && next1.is_some_and(|n| n.text == "(")
+            {
+                hit = Some(format!("`.{}()` allocates", t.text));
+            }
+            if let Some(what) = hit {
+                raw.push((
+                    "hot-path-alloc",
+                    t.line,
+                    format!("{what} inside hot function `{}`", f.name),
+                ));
+            }
+        }
+    }
+
+    // Resolve waivers: a finding on a covered line with a matching rule
+    // is downgraded to waived.
+    let mut findings: Vec<Finding> = Vec::new();
+    for (rule, line, message) in raw {
+        let mut waived: Option<String> = None;
+        for w in waivers.iter_mut() {
+            if w.covers == line && w.rules.iter().any(|r| r == rule) {
+                w.used = true;
+                waived = Some(w.reason.clone());
+                break;
+            }
+        }
+        findings.push(Finding {
+            rule,
+            file: file.to_string(),
+            line,
+            message,
+            waiver: waived,
+        });
+    }
+
+    // Unused waivers are findings too: a waiver that matches nothing is
+    // either stale or mis-addressed, and both should be visible.
+    for w in &waivers {
+        if !w.used {
+            findings.push(Finding {
+                rule: WAIVER_RULE,
+                file: file.to_string(),
+                line: w.at,
+                message: format!(
+                    "unused waiver for [{}] (covers line {}); remove it or fix its placement",
+                    w.rules.join(", "),
+                    w.covers
+                ),
+                waiver: None,
+            });
+        }
+    }
+
+    findings.append(&mut broken);
+    findings.sort_by(|x, y| x.line.cmp(&y.line).then_with(|| x.rule.cmp(y.rule)));
+    findings
+}

@@ -1,0 +1,6 @@
+//! Positive fixture: `unwrap-in-engine` must fire anywhere in a file whose
+//! path ends in an engine file name (here `sim/engine.rs`), even outside a
+//! `Component` impl.
+pub fn drain(q: &mut Vec<u64>) -> u64 {
+    q.pop().expect("queue is non-empty")
+}

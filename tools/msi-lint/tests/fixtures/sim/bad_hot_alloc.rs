@@ -1,0 +1,17 @@
+//! Positive fixture: `hot-path-alloc` must fire on allocating calls inside
+//! a function marked `// msi-lint: hot`.
+
+// msi-lint: hot
+pub fn hop(xs: &[u64]) -> Vec<u64> {
+    let mut out = Vec::new();
+    let doubled: Vec<u64> = xs.iter().map(|x| x * 2).collect();
+    out.extend(doubled);
+    let label = format!("{} items", out.len());
+    drop(label);
+    out
+}
+
+pub fn cold(xs: &[u64]) -> Vec<u64> {
+    // Unmarked function: the same calls are fine here.
+    xs.to_vec()
+}

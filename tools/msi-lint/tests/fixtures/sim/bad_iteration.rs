@@ -1,0 +1,13 @@
+//! Positive fixture: `nondeterministic-iteration` must fire on HashMap and
+//! HashSet mentions inside a report-affecting module path (`sim/...`).
+use std::collections::{HashMap, HashSet};
+
+pub fn tally(loads: &HashMap<u64, f64>, seen: &HashSet<u64>) -> f64 {
+    let mut sum = 0.0;
+    for (id, l) in loads.iter() {
+        if seen.contains(id) {
+            sum += l;
+        }
+    }
+    sum
+}

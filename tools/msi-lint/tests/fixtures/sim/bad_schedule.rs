@@ -1,0 +1,8 @@
+//! Positive fixture: `raw-schedule` must fire on schedule_at/schedule_in
+//! outside the queue-owning module.
+use crate::sim::EventQueue;
+
+pub fn drive(q: &mut EventQueue<u32>) {
+    q.schedule_at(1.0, 7);
+    q.schedule_in(0.5, 8);
+}

@@ -1,0 +1,10 @@
+//! Positive fixture: `float-time-compare` must fire on ==/!= against
+//! time-ish identifiers and on partial_cmp in non-test code.
+pub fn same_tick(now: f64, t_end: f64, xs: &mut [f64]) -> bool {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    now == t_end
+}
+
+pub fn not_yet(now: f64, wake_time: f64) -> bool {
+    wake_time != now
+}

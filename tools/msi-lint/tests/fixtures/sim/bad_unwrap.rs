@@ -1,0 +1,17 @@
+//! Positive fixture: `unwrap-in-engine` must fire inside any
+//! `impl Component for ...` block, whatever the file.
+use crate::sim::{Component, Event, SimCtx};
+
+pub struct Gate;
+
+impl Component for Gate {
+    fn handle(&mut self, now: f64, ev: &Event, ctx: &mut SimCtx, out: &mut Vec<(f64, Event)>) {
+        let t = ctx.stage.as_ref().unwrap();
+        out.push((now + t.dt, ev.clone()));
+    }
+}
+
+pub fn outside_the_impl(x: Option<u32>) -> u32 {
+    // Not an engine file and not a Component impl: unwrap is tolerated.
+    x.unwrap_or(0)
+}

@@ -1,0 +1,16 @@
+//! Positive fixture: the `lint-waiver` meta-rule — waivers missing a
+//! reason, naming an unknown rule, or covering nothing are findings.
+
+// msi-lint: allow(raw-schedule)
+pub fn missing_reason(q: &mut EventQueue<u8>) {
+    q.schedule_at(1.0, 2);
+}
+
+// msi-lint: allow(not-a-rule) -- the rule name is wrong
+pub fn unknown_rule() {}
+
+pub fn unused() {
+    // msi-lint: allow(wall-clock-in-sim) -- nothing on the covered line matches
+    let x = 1 + 1;
+    let _ = x;
+}

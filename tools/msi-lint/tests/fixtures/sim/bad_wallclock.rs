@@ -1,0 +1,7 @@
+//! Positive fixture: `wall-clock-in-sim` must fire on Instant/SystemTime
+//! inside a report-affecting module path.
+pub fn stamp() -> f64 {
+    let t0 = std::time::Instant::now();
+    let _epoch = std::time::SystemTime::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,48 @@
+//! Negative fixture: rule-pattern text inside strings, raw strings,
+//! comments and char literals must never fire; the code itself is clean.
+
+use std::collections::BTreeMap;
+
+// A line comment mentioning HashMap, Instant::now(), schedule_at and
+// .unwrap() must not trip anything.
+/* Nor a block comment: SystemTime, partial_cmp, vec![0; 8], format!("x")
+   /* nested: HashSet::new() */ still fine after the inner close. */
+
+pub fn describe(map: &BTreeMap<u64, f64>) -> String {
+    let plain = "HashMap Instant SystemTime schedule_at .unwrap() partial_cmp";
+    let raw = r#"q.schedule_at(0.0, "Instant::now()") != now"#;
+    let rawh = r##"nested "# quote: HashSet vec![1] "##;
+    let bytes = b"schedule_at SystemTime";
+    let braw = br#"partial_cmp .expect("x")"#;
+    let tricky = "escaped \" quote then Instant::now()";
+    let quote_char = '"';
+    let escaped_char = '\'';
+    let lt: &'static str = "lifetime 'a is not a char literal";
+    let mut s = String::new();
+    s.push(quote_char);
+    s.push(escaped_char);
+    s.push_str(plain);
+    s.push_str(raw);
+    s.push_str(rawh);
+    s.push_str(tricky);
+    s.push_str(lt);
+    let _ = (bytes, braw);
+    let n = map.len();
+    let mut best = f64::NEG_INFINITY;
+    for (_, v) in map.iter() {
+        if v.total_cmp(&best).is_gt() {
+            best = *v;
+        }
+    }
+    format!("{n} entries, max {best}, notes {s}")
+}
+
+// msi-lint: hot
+pub fn hot_and_clean(acc: &mut [f64], x: f64) -> f64 {
+    let mut sum = 0.0;
+    for a in acc.iter_mut() {
+        *a += x;
+        sum += *a;
+    }
+    sum
+}

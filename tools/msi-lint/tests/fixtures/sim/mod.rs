@@ -1,0 +1,6 @@
+//! Negative fixture: schedule_at/schedule_in are legal inside the
+//! queue-owning module (`sim/mod.rs`).
+pub fn prime(q: &mut EventQueue<u8>) {
+    q.schedule_at(0.0, 1);
+    q.schedule_in(0.5, 2);
+}

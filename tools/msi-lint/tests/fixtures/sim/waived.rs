@@ -1,0 +1,30 @@
+//! Negative fixture: one waived finding per rule. Every waiver carries a
+//! reason and covers its line, so nothing here is active.
+use std::collections::HashMap; // msi-lint: allow(nondeterministic-iteration) -- fixture: documented exception
+
+pub fn bench() -> f64 {
+    // msi-lint: allow(wall-clock-in-sim) -- fixture: wall-time bench site
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn drive(q: &mut EventQueue<u8>, now: f64, t_end: f64) -> bool {
+    // msi-lint: allow(raw-schedule) -- fixture: audited schedule site
+    q.schedule_at(1.0, 3);
+    // msi-lint: allow(float-time-compare) -- fixture: exact tie intended
+    now == t_end
+}
+
+// msi-lint: hot
+pub fn hot_with_waiver(n: usize) -> Vec<u64> {
+    // msi-lint: allow(hot-path-alloc) -- fixture: grow-once buffer
+    Vec::with_capacity(n)
+}
+
+impl Component for Probe {
+    fn handle(&mut self, _now: f64, ev: &Event, ctx: &mut SimCtx, _out: &mut Vec<(f64, Event)>) {
+        // msi-lint: allow(unwrap-in-engine) -- fixture: invariant documented here
+        let _stage = ctx.stage.as_ref().unwrap();
+        let _ = ev;
+    }
+}

@@ -1,0 +1,9 @@
+//! Negative fixture: HashMap/Instant are tolerated outside the
+//! report-affecting module paths (this file sits under `util/`).
+use std::collections::HashMap;
+
+pub fn cache() -> HashMap<String, std::time::Instant> {
+    let mut m = HashMap::new();
+    m.insert("start".to_string(), std::time::Instant::now());
+    m
+}

@@ -1,0 +1,150 @@
+//! Integration tests for msi-lint: a fixture corpus exercising every rule
+//! (positive and negative, including lexer traps), waiver semantics, and a
+//! self-run gate asserting the repository's own tree lints clean.
+
+use msi_lint::{lint_paths, lint_source, Finding, LintReport};
+use std::path::{Path, PathBuf};
+
+/// Lint a fixture under its corpus-relative label so module scoping sees
+/// the `sim/` (etc.) prefixes rather than the absolute checkout path.
+fn fixture(rel: &str) -> Vec<Finding> {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(rel);
+    let src = std::fs::read_to_string(&path).expect("fixture file exists");
+    lint_source(rel, &src)
+}
+
+fn count_active(findings: &[Finding], rule: &str) -> usize {
+    findings
+        .iter()
+        .filter(|f| f.rule == rule && f.waiver.is_none())
+        .count()
+}
+
+#[test]
+fn nondeterministic_iteration_fires_in_report_modules() {
+    let f = fixture("sim/bad_iteration.rs");
+    assert_eq!(count_active(&f, "nondeterministic-iteration"), 4, "{f:?}");
+}
+
+#[test]
+fn wall_clock_fires_in_sim_code() {
+    let f = fixture("sim/bad_wallclock.rs");
+    assert_eq!(count_active(&f, "wall-clock-in-sim"), 2, "{f:?}");
+}
+
+#[test]
+fn raw_schedule_fires_outside_queue_owner() {
+    let f = fixture("sim/bad_schedule.rs");
+    assert_eq!(count_active(&f, "raw-schedule"), 2, "{f:?}");
+}
+
+#[test]
+fn float_time_compare_fires_on_eq_and_partial_cmp() {
+    let f = fixture("sim/bad_time_cmp.rs");
+    assert_eq!(count_active(&f, "float-time-compare"), 3, "{f:?}");
+    // The `.unwrap()` on that partial_cmp is NOT an engine finding here:
+    // the fixture is neither an engine file nor a Component impl.
+    assert_eq!(count_active(&f, "unwrap-in-engine"), 0, "{f:?}");
+}
+
+#[test]
+fn hot_path_alloc_fires_only_in_marked_functions() {
+    let f = fixture("sim/bad_hot_alloc.rs");
+    assert_eq!(count_active(&f, "hot-path-alloc"), 3, "{f:?}");
+    // `cold()` calls to_vec() with no hot marker: silent.
+    assert!(f.iter().all(|x| x.line < 14), "{f:?}");
+}
+
+#[test]
+fn unwrap_fires_inside_component_impls() {
+    let f = fixture("sim/bad_unwrap.rs");
+    assert_eq!(count_active(&f, "unwrap-in-engine"), 1, "{f:?}");
+}
+
+#[test]
+fn unwrap_fires_anywhere_in_engine_files() {
+    let f = fixture("kernel/sim/engine.rs");
+    assert_eq!(count_active(&f, "unwrap-in-engine"), 1, "{f:?}");
+}
+
+#[test]
+fn pattern_text_in_literals_and_comments_is_silent() {
+    let f = fixture("sim/good_clean.rs");
+    assert!(f.is_empty(), "unexpected findings: {f:?}");
+}
+
+#[test]
+fn schedule_calls_are_legal_in_the_queue_owner() {
+    let f = fixture("sim/mod.rs");
+    assert!(f.is_empty(), "unexpected findings: {f:?}");
+}
+
+#[test]
+fn scoped_rules_stay_quiet_outside_report_modules() {
+    let f = fixture("util/outside_scope.rs");
+    assert!(f.is_empty(), "unexpected findings: {f:?}");
+}
+
+#[test]
+fn cfg_test_spans_are_exempt_from_schedule_and_time_rules() {
+    let f = fixture("sim/test_only.rs");
+    assert!(f.is_empty(), "unexpected findings: {f:?}");
+}
+
+#[test]
+fn waivers_downgrade_one_finding_per_rule() {
+    let f = fixture("sim/waived.rs");
+    let active: Vec<_> = f.iter().filter(|x| x.waiver.is_none()).collect();
+    assert!(active.is_empty(), "everything should be waived: {active:?}");
+    assert_eq!(f.len(), 6, "one waived finding per substantive rule: {f:?}");
+    for x in &f {
+        let reason = x.waiver.as_deref().expect("waived");
+        assert!(reason.contains("fixture"), "reason recorded verbatim: {x:?}");
+    }
+}
+
+#[test]
+fn broken_waivers_are_findings_themselves() {
+    let f = fixture("sim/bad_waiver.rs");
+    assert_eq!(count_active(&f, "lint-waiver"), 3, "{f:?}");
+    // The waiver missing its reason does not suppress anything, so the
+    // schedule call it sat above stays active too.
+    assert_eq!(count_active(&f, "raw-schedule"), 1, "{f:?}");
+}
+
+#[test]
+fn fixture_corpus_fails_the_lint() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    let report = lint_paths(&[dir]).expect("fixtures readable");
+    assert!(
+        !report.is_clean(),
+        "the committed corpus must keep the linter honest"
+    );
+    assert!(report.active().count() >= 10);
+}
+
+#[test]
+fn json_report_counts_active_and_waived() {
+    let findings = lint_source("sim/x.rs", "use std::collections::HashMap;\n");
+    let report = LintReport { files: 1, findings };
+    let doc = report.to_json();
+    assert!(doc.contains("\"active\": 1"), "{doc}");
+    assert!(doc.contains("nondeterministic-iteration"), "{doc}");
+}
+
+#[test]
+fn repository_lints_clean() {
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
+    let report = lint_paths(&[src]).expect("rust/src readable");
+    let active: Vec<String> = report
+        .active()
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert!(
+        active.is_empty(),
+        "unwaived findings in the tree:\n{}",
+        active.join("\n")
+    );
+}
