@@ -32,6 +32,10 @@ pub struct InstanceState {
     pub outstanding_requests: u64,
     /// KV-token headroom (capacity minus committed prompt+output tokens).
     pub kv_headroom: u64,
+    /// Instance marked failed: excluded from placement until it recovers.
+    /// Completion accounting still applies, so a node that rejoins does so
+    /// with a consistent view of whatever it kept serving.
+    pub down: bool,
 }
 
 /// The fleet router.
@@ -53,6 +57,7 @@ impl Router {
                     outstanding_tokens: 0,
                     outstanding_requests: 0,
                     kv_headroom: c,
+                    down: false,
                 })
                 .collect(),
             rr_next: 0,
@@ -77,9 +82,9 @@ impl Router {
         let pick = match self.policy {
             RoutePolicy::RoundRobin => (0..n)
                 .map(|i| (self.rr_next + i) % n)
-                .find(|&i| self.instances[i].kv_headroom >= need),
+                .find(|&i| !self.instances[i].down && self.instances[i].kv_headroom >= need),
             RoutePolicy::LeastLoaded => (0..n)
-                .filter(|&i| self.instances[i].kv_headroom >= need)
+                .filter(|&i| !self.instances[i].down && self.instances[i].kv_headroom >= need)
                 .min_by_key(|&i| (self.instances[i].outstanding_tokens, i)),
         }?;
         if self.policy == RoutePolicy::RoundRobin {
@@ -90,6 +95,14 @@ impl Router {
         s.outstanding_requests += 1;
         s.kv_headroom -= need;
         Some(pick)
+    }
+
+    /// Mark an instance failed (`down = true`) or recovered (`false`).
+    /// A down instance is skipped by [`Router::route`]; its outstanding
+    /// accounting is untouched — the caller decides what happens to the
+    /// work it held (the cluster engine requeues it via `complete`).
+    pub fn set_down(&mut self, instance: usize, down: bool) {
+        self.instances[instance].down = down;
     }
 
     /// Completion callback: release the request's accounting.

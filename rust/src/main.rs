@@ -35,6 +35,9 @@
 //! msi hardware
 //! msi trace     --out trace.jsonl [--requests 1000] [--seed 42]
 //! msi lint      [--path rust/src] [--json lint.json] [--waivers]
+//! msi scenario  run <file.msc> [--no-fuse] [--shards K|auto]
+//!               [--shard-workers N] [--json report.json]
+//! msi scenario  check <file.msc>
 //! ```
 
 use std::path::PathBuf;
@@ -65,7 +68,7 @@ use megascale_infer::workload::{
 };
 
 const USAGE: &str =
-    "usage: msi <plan|compare|simulate|replay|sweep|serve|m2n|hardware|trace|lint> [--options]
+    "usage: msi <plan|compare|simulate|replay|sweep|serve|m2n|hardware|trace|lint|scenario> [--options]
 run `msi help` or see README.md for details";
 
 fn parse_model(name: &str) -> Result<ModelConfig> {
@@ -125,8 +128,14 @@ fn parse_cluster(args: &Args) -> Result<ClusterSpec> {
 }
 
 fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    // `msi scenario` takes positional operands (`run <file.msc>`), which the
+    // shared flag parser rejects; route it before `Args::parse` sees them.
+    if raw.first().map(String::as_str) == Some("scenario") {
+        return cmd_scenario(&raw[1..]);
+    }
     let args = Args::parse(
-        std::env::args().skip(1),
+        raw,
         &[
             "all",
             "baselines",
@@ -462,6 +471,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
         prefill_chunk,
         mode: EngineMode::Disaggregated,
         fuse: !args.flag("no-fuse"),
+        injections: Vec::new(),
     };
     let plan_json = cfg.plan.to_json();
     // --shards K: run as K independent sub-clusters stepped in parallel
@@ -500,6 +510,98 @@ fn cmd_replay(args: &Args) -> Result<()> {
             bail!("--shard-workers only applies with --shards > 1");
         }
         ClusterSim::new(cfg).run(&requests)
+    };
+    println!("{}", report.summary());
+    if let Some(path) = args.get("json") {
+        let payload = megascale_infer::util::json::Json::obj()
+            .set("plan", plan_json)
+            .set("report", report.to_json());
+        std::fs::write(path, format!("{payload}\n"))
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote JSON report to {path}");
+    }
+    Ok(())
+}
+
+/// `msi scenario run|check <file.msc>`: compile a declarative scenario
+/// (workload phases plus fault/elasticity injections) and run it through
+/// the cluster engine. `check` stops after compilation.
+fn cmd_scenario(rest: &[String]) -> Result<()> {
+    const SCENARIO_USAGE: &str = "usage: msi scenario <run|check> <file.msc> \
+[--no-fuse] [--shards K|auto] [--shard-workers N] [--json report.json]";
+    let verb = rest.first().map(String::as_str).unwrap_or("");
+    let check_only = match verb {
+        "run" => false,
+        "check" => true,
+        "" | "help" | "--help" | "-h" => {
+            println!("{SCENARIO_USAGE}");
+            return Ok(());
+        }
+        other => bail!("unknown scenario verb `{other}`\n{SCENARIO_USAGE}"),
+    };
+    let Some(file) = rest.get(1).filter(|f| !f.starts_with("--")) else {
+        bail!("`msi scenario {verb}` expects a .msc file\n{SCENARIO_USAGE}");
+    };
+    let args = Args::parse(
+        std::iter::once("scenario".to_string()).chain(rest[2..].iter().cloned()),
+        &["no-fuse"],
+    )?;
+    let compiled = megascale_infer::sim::scenario::load(file)?;
+    let mut cfg = compiled.cfg.clone();
+    cfg.fuse = !args.flag("no-fuse");
+    println!(
+        "scenario `{}`: {} phase(s), {} injection(s) | plan tp_a={} tp_e={} \
+         n_a={} m={} B={} | prefill {} nodes",
+        compiled.name,
+        compiled.phases.len(),
+        cfg.injections.len(),
+        cfg.plan.tp_a,
+        cfg.plan.tp_e,
+        cfg.plan.n_a,
+        cfg.plan.m,
+        cfg.plan.global_batch,
+        cfg.prefill_nodes,
+    );
+    if check_only {
+        println!("scenario OK");
+        return Ok(());
+    }
+    let plan_json = cfg.plan.to_json();
+    let shards = match args.get("shards") {
+        None => 1,
+        Some("auto") => std::thread::available_parallelism().map_or(1, |n| n.get()),
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--shards={v} is not an integer or `auto`"))?,
+    };
+    let report = if shards > 1 {
+        let eff = effective_shards(&cfg, shards);
+        if eff != shards {
+            println!(
+                "note: --shards {shards} clamped to {eff} \
+                 (pool widths and fault injections bound the shard count)"
+            );
+        }
+        let mut splan = ShardPlan::new(eff);
+        if let Some(w) = args.get("shard-workers") {
+            let w: usize = w
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--shard-workers={w} not an integer"))?;
+            splan = splan.with_workers(w);
+        }
+        println!(
+            "sharded run: {} sub-clusters on {} worker threads",
+            eff, splan.workers
+        );
+        let base = compiled.source();
+        run_sharded(&cfg, splan, move |shard, stride| -> Box<dyn ArrivalSource> {
+            Box::new(StridedSource::new(base.clone(), shard, stride))
+        })
+    } else {
+        if args.get("shard-workers").is_some() {
+            bail!("--shard-workers only applies with --shards > 1");
+        }
+        ClusterSim::new(cfg).run_streaming(Box::new(compiled.source()))
     };
     println!("{}", report.summary());
     if let Some(path) = args.get("json") {

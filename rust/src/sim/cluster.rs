@@ -107,6 +107,60 @@ pub enum Transport {
     Simnet(LibraryKind),
 }
 
+/// One scheduled fault or elasticity event, applied by the engine at
+/// virtual time `at`. Injections are quantized to iteration boundaries:
+/// an injection popping mid-iteration is deferred to the top of the next
+/// `IterBegin`, so the fused fast path and the stepwise reference path
+/// observe state changes at exactly the same points and reports stay
+/// byte-identical across `--no-fuse`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultInjection {
+    /// Virtual time (seconds) the event fires.
+    pub at: f64,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// The fault / elasticity event kinds the engine can inject mid-run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Attention node `node` fails: its in-flight KV is lost, every
+    /// request it held (live decode batch, admission queue, or KV in
+    /// flight toward it) re-enters the lifecycle at `Queued` and is
+    /// re-prefilled; the router stops placing on the node.
+    FailAttention {
+        /// Attention-node index (global, pre-sharding).
+        node: usize,
+    },
+    /// A previously failed attention node rejoins the placement set.
+    RecoverAttention {
+        /// Attention-node index (global, pre-sharding).
+        node: usize,
+    },
+    /// Attention node `node` runs its per-node clock `factor`× slower
+    /// (a straggler; `factor = 1.0` restores full speed). The whole
+    /// decode stage paces on the slowest node, per the pipeline model.
+    StraggleAttention {
+        /// Attention-node index (global, pre-sharding).
+        node: usize,
+        /// Per-node slowdown multiplier (> 0; 1.0 = healthy).
+        factor: f64,
+    },
+    /// All M2N dispatch/combine hops and prefill→decode KV transfers
+    /// take `factor`× longer (NIC degradation; `factor = 1.0` restores).
+    DegradeNic {
+        /// Link slowdown multiplier (> 0; 1.0 = healthy).
+        factor: f64,
+    },
+    /// The expert pool shrinks or grows to `n_e` nodes and immediately
+    /// re-places experts over the new pool with the §6 greedy balancer
+    /// (from observed loads when it has any, uniformly otherwise).
+    ResizeExperts {
+        /// New expert-pool width (absolute node count, ≥ 1).
+        n_e: usize,
+    },
+}
+
 /// Full scenario description.
 #[derive(Debug, Clone)]
 pub struct ClusterSimConfig {
@@ -158,6 +212,10 @@ pub struct ClusterSimConfig {
     /// queue's exact pop and RNG-draw order); `false` (`msi replay
     /// --no-fuse`) keeps the stepwise reference path for A/B checks.
     pub fuse: bool,
+    /// Scheduled fault / elasticity events (`msi scenario` `inject`
+    /// blocks). Node indices are global, so a non-empty list clamps
+    /// sharded runs to one shard (see [`crate::sim::effective_shards`]).
+    pub injections: Vec<FaultInjection>,
 }
 
 impl ClusterSimConfig {
@@ -180,6 +238,7 @@ impl ClusterSimConfig {
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             mode: EngineMode::Disaggregated,
             fuse: true,
+            injections: Vec::new(),
         }
     }
 
@@ -340,6 +399,30 @@ pub struct ClusterReport {
     pub processed_copies: u64,
     /// Periodic §6 re-placements applied during the run.
     pub rebalances: u64,
+    /// Scheduled fault / elasticity injections actually applied.
+    pub injections_applied: u64,
+    /// Attention-node failures applied (idempotent per node: failing an
+    /// already-down node is a no-op and does not count).
+    pub node_failures: u64,
+    /// Attention-node recoveries applied (idempotent, like failures).
+    pub node_recoveries: u64,
+    /// Requests sent back to `Queued` because their node failed or their
+    /// in-flight KV arrived at a failed node. Each re-enters through the
+    /// front door and — with prefill on — re-prefills its prompt.
+    pub requeued_requests: u64,
+    /// KV blocks freed from failed nodes (the lost in-flight KV).
+    pub lost_kv_blocks: u64,
+    /// Decode tokens already produced by requests that were mid-decode on
+    /// a failed node; those tokens are discarded and re-generated, so at
+    /// quiescence `tokens = Σ output_len(completed) + lost_decode_tokens`.
+    pub lost_decode_tokens: u64,
+    /// Prompt tokens prefilled a second (or later) time for requeued
+    /// requests; at quiescence with prefill on
+    /// `prefilled_tokens = Σ input_len(completed) + re_prefilled_tokens`.
+    pub re_prefilled_tokens: u64,
+    /// Expert-pool shrink/grow events applied (each with a §6
+    /// re-placement over the new pool width).
+    pub expert_resizes: u64,
     /// Event schedules that landed within the event-queue's epsilon
     /// *behind* the virtual clock and were saturated to `now` (see
     /// [`crate::sim::EventQueue::clamped_past_schedules`]). Nonzero counts
@@ -399,6 +482,22 @@ impl ClusterReport {
         }
         if self.rebalances > 0 {
             s.push_str(&format!("\nonline re-balances: {}", self.rebalances));
+        }
+        if self.injections_applied > 0 {
+            s.push_str(&format!(
+                "\ninjections: {} applied | {} node failures / {} recoveries | \
+                 {} expert resizes\nfault cost: {} requests requeued | \
+                 {} KV blocks lost | {} decode tokens lost | \
+                 {} prompt tokens re-prefilled",
+                self.injections_applied,
+                self.node_failures,
+                self.node_recoveries,
+                self.expert_resizes,
+                self.requeued_requests,
+                self.lost_kv_blocks,
+                self.lost_decode_tokens,
+                self.re_prefilled_tokens,
+            ));
         }
         for t in &self.tenants {
             s.push_str(&format!(
@@ -478,6 +577,14 @@ impl ClusterReport {
             .set("combined_copies", self.combined_copies)
             .set("processed_copies", self.processed_copies)
             .set("rebalances", self.rebalances)
+            .set("injections_applied", self.injections_applied)
+            .set("node_failures", self.node_failures)
+            .set("node_recoveries", self.node_recoveries)
+            .set("requeued_requests", self.requeued_requests)
+            .set("lost_kv_blocks", self.lost_kv_blocks)
+            .set("lost_decode_tokens", self.lost_decode_tokens)
+            .set("re_prefilled_tokens", self.re_prefilled_tokens)
+            .set("expert_resizes", self.expert_resizes)
             .set("clamped_past_schedules", self.clamped_past_schedules)
             .set("tenants", Json::Arr(tenants))
     }

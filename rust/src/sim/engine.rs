@@ -77,7 +77,7 @@ use crate::metrics::{Histogram, Utilization};
 use crate::perf_model::{bandwidth_util, prefill_node_gpus, PerfModel, PrefillModel};
 use crate::sim::cluster::{
     draw_gating, popularity_weights, ClusterReport, ClusterSimConfig, EngineMode,
-    ExpertPopularity, TenantReport, Transport,
+    ExpertPopularity, FaultKind, TenantReport, Transport,
 };
 use crate::sim::pipeline::{FusedQueue, PipeEvent, PipelineCore, PipelineStats, StageTimes};
 use crate::sim::{EventQueue, SimRng};
@@ -113,6 +113,11 @@ pub enum Event {
     /// this single event at the completion time instead of ~3·m·L `Pipe`
     /// hops (never emitted with `fuse` off).
     IterEnd,
+    /// The scheduled fault/elasticity injection `cfg.injections[i]` fires.
+    /// All injections are scheduled up front in `prime`, so their
+    /// insertion sequence precedes every runtime event — at a timestamp
+    /// tie they pop first in both fused and stepwise modes.
+    Inject(usize),
 }
 
 /// Lifecycle phase of an in-flight request — the explicit state machine
@@ -279,6 +284,21 @@ impl RequestTable {
         let p = self.meta[slot].placed;
         self.meta[slot].placed = UNPLACED;
         (p != UNPLACED).then_some(p as usize)
+    }
+
+    /// Reset a fault-displaced request to `Queued` for re-admission — the
+    /// one sanctioned jump backwards in the otherwise one-step lifecycle
+    /// (a node failure loses the KV, so the request re-earns its whole
+    /// prefill → transfer → decode walk; the TTFT decomposition restamps
+    /// from the retry).
+    fn reset_for_retry(&mut self, slot: usize) {
+        let e = &mut self.meta[slot];
+        debug_assert!(e.phase != RequestPhase::Done, "retry of a dead slot");
+        e.phase = RequestPhase::Queued;
+        e.placed = UNPLACED;
+        e.prefill_start = 0.0;
+        e.prefill_end = 0.0;
+        e.decode_entry = 0.0;
     }
 
     /// Release a completed request's slot for reuse.
@@ -492,6 +512,11 @@ impl RouterFront {
     /// Completion callback: release the request's routing accounting.
     fn complete(&mut self, node: usize, r: &Request) {
         self.router.complete(node, r);
+    }
+
+    /// Fault injection: exclude (or re-include) `node` from placement.
+    fn set_node_down(&mut self, node: usize, down: bool) {
+        self.router.set_down(node, down);
     }
 
     /// Front-door admission control: returns true when the request could
@@ -759,6 +784,10 @@ pub struct AttentionPool {
     node_tokens: Vec<u64>,
     /// Total output tokens decoded by the pool.
     decoded_tokens: u64,
+    /// Per-node straggler multiplier on the node's stage time (fault
+    /// injection; 1.0 = healthy, and multiplying by 1.0 is bit-exact, so
+    /// an injection-free run is unchanged).
+    slow: Vec<f64>,
 }
 
 impl AttentionPool {
@@ -780,6 +809,7 @@ impl AttentionPool {
             node_busy: vec![0.0; n_a],
             node_tokens: vec![0u64; n_a],
             decoded_tokens: 0,
+            slow: vec![1.0; n_a],
         }
     }
 
@@ -906,12 +936,40 @@ impl AttentionPool {
             if share > 0 {
                 t += stage.pm.t_a(share as f64);
             }
+            // Injected straggler: the node's own work runs `slow[n]`×
+            // slower (its clock is charged the slowed time, and a slow
+            // node can pace the whole pool — exactly the fault mode §6's
+            // re-balancing cannot fix on the attention side).
+            t *= self.slow[n];
             if t > 0.0 {
                 *busy += t;
             }
             pace = pace.max(t);
         }
         pace
+    }
+
+    /// Fault injection: tear down `node`, pushing every request it held —
+    /// live decode batch, admission queue, and inline-prefill backlog —
+    /// onto `slots` for re-admission. The batch's KV blocks are released
+    /// (the waiting queue and backlog hold none). Returns `(lost KV
+    /// blocks, lost decoded tokens)` for the conservation counters.
+    fn drain_node(&mut self, nid: usize, slots: &mut Vec<usize>) -> (u64, u64) {
+        let node = &mut self.nodes[nid];
+        let mut lost_blocks = 0u64;
+        let mut lost_tokens = 0u64;
+        for r in node.batcher.batch.requests.drain(..) {
+            lost_tokens += r.decoded as u64;
+            lost_blocks += node.kv.release(r.id) as u64;
+            slots.push(r.id as usize);
+        }
+        for r in node.batcher.waiting.drain(..) {
+            slots.push(r.id as usize);
+        }
+        for (slot, _) in node.backlog.drain(..) {
+            slots.push(slot);
+        }
+        (lost_blocks, lost_tokens)
     }
 
     /// End-of-iteration bookkeeping for one node: extend KV, retire
@@ -963,6 +1021,10 @@ impl Component for AttentionPool {
 pub struct M2nLink {
     transfer: Option<TransferModel>,
     top_k: usize,
+    /// NIC-degradation multiplier on every transfer time over this link —
+    /// M2N dispatch/combine and the prefill→decode KV shipment (fault
+    /// injection; 1.0 = healthy, bit-exact no-op).
+    degrade: f64,
     /// Token copies handed to the link on the dispatch direction.
     pub dispatched_copies: u64,
     /// Token copies handed back on the combine direction.
@@ -974,6 +1036,7 @@ impl M2nLink {
         Self {
             transfer,
             top_k,
+            degrade: 1.0,
             dispatched_copies: 0,
             combined_copies: 0,
         }
@@ -983,13 +1046,14 @@ impl M2nLink {
     /// node's token load.
     // msi-lint: hot
     fn hop_t_c(&self, stage: &StageCtx, mb: usize, hot_tokens: f64) -> f64 {
-        match &self.transfer {
+        let base = match &self.transfer {
             None => stage.pm.t_c(stage.b_a[mb], hot_tokens),
             Some(tm) => {
                 let pair_bytes = stage.pm.send_bytes(stage.b_a[mb]) / tm.receivers as f64;
                 tm.latency(pair_bytes)
             }
-        }
+        };
+        base * self.degrade
     }
 }
 
@@ -1041,6 +1105,8 @@ pub struct ExpertPool {
     pub processed_copies: u64,
     /// Number of `Rebalance` events applied.
     pub rebalances: u64,
+    /// Number of elastic pool resizes applied (fault injection).
+    pub resizes: u64,
 }
 
 impl ExpertPool {
@@ -1067,7 +1133,38 @@ impl ExpertPool {
             node_load: vec![0.0; n_e],
             processed_copies: 0,
             rebalances: 0,
+            resizes: 0,
         }
+    }
+
+    /// Elastic shrink/grow of the expert pool to `n_e` nodes, with an
+    /// immediate §6 greedy re-placement over the new node count (the same
+    /// rule the periodic `Rebalance` handler applies): from the loads
+    /// observed since the last re-placement when there are any, else from
+    /// uniform weights — experts must land *somewhere* on the resized
+    /// pool even before traffic has been seen. Ideal (round-robin)
+    /// popularity keeps its implicit `e % n_e` map and only changes the
+    /// divisor. Node clocks of surviving ranks are preserved; new ranks
+    /// start cold.
+    fn resize(&mut self, n_e: usize) {
+        let n_e = n_e.max(1);
+        self.n_e = n_e;
+        self.node_busy.resize(n_e, 0.0);
+        self.node_load.resize(n_e, 0.0);
+        if self.weights.is_some() {
+            let total: f64 = self.observed.iter().sum();
+            if total > 0.0 {
+                let cold = 0.1 * total / self.experts as f64;
+                self.placement = Some(balance_experts(&self.observed, n_e, cold));
+            } else {
+                let uniform = vec![1.0; self.experts];
+                self.placement = Some(balance_experts(&uniform, n_e, 0.0));
+            }
+            for o in &mut self.observed {
+                *o = 0.0;
+            }
+        }
+        self.resizes += 1;
     }
 
     /// Fill `scratch` with the popularity weights in effect at virtual time
@@ -1265,6 +1362,38 @@ pub struct ClusterEngine {
     /// The run hit its `max_sim_seconds` horizon: stepping is over even
     /// though events may remain queued.
     cut: bool,
+    // fault / elasticity injection
+    /// Per-attention-node down flags (mirrors the router's placement
+    /// exclusion; also intercepts KV arrivals to a dead node).
+    node_down: Vec<bool>,
+    /// Injection indices that fired mid-iteration, deferred to the next
+    /// iteration boundary: the fused path replays a whole iteration
+    /// inside `IterBegin`, so mutating pool state between hops would
+    /// desync it from stepwise — quantizing every injection to the
+    /// boundary keeps the two modes byte-identical.
+    pending_inject: Vec<usize>,
+    /// Recycled scratch for slots drained off a failed node.
+    requeue_scratch: Vec<usize>,
+    /// Injections applied (deferred firings count when applied).
+    injections_applied: u64,
+    /// Attention-node failures applied (redundant fails are no-ops).
+    node_failures: u64,
+    /// Attention-node recoveries applied (redundant recovers are no-ops).
+    node_recoveries: u64,
+    /// Requests re-admitted through the front door after losing their
+    /// node (or their in-flight KV shipment's destination).
+    requeued_requests: u64,
+    /// KV blocks freed by failures — `kv_blocks_in_use_at_end` stays a
+    /// pure leak detector because lost blocks are released on the spot.
+    lost_kv_blocks: u64,
+    /// Output tokens that had been decoded by requests a failure
+    /// displaced (`tokens = Σ output_len(completed) + lost_decode_tokens`
+    /// at quiescence).
+    lost_decode_tokens: u64,
+    /// Prompt tokens queued for a second prefill after a failure
+    /// (`prefilled_tokens = Σ input_len(completed) + re_prefilled_tokens`
+    /// at quiescence with the dedicated pool on).
+    re_prefilled_tokens: u64,
     // metrics
     ttft: Histogram,
     ttft_queue: Histogram,
@@ -1320,6 +1449,12 @@ impl ClusterEngine {
             cfg.transport = Transport::Analytic;
             cfg.rebalance_period = None;
             cfg.prefill_nodes = 0;
+            // Fault injection targets the disaggregated pools (attention
+            // nodes, the M2N/KV links, the elastic expert pool); none of
+            // those exist as separate entities in a colocated group, and
+            // a half-prefilled backlog prompt would break the re-prefill
+            // conservation identity — normalize injections off.
+            cfg.injections.clear();
         }
         let n_a = cfg.plan.n_a.max(1);
         let n_e = cfg.plan.n_e.max(1);
@@ -1436,6 +1571,16 @@ impl ClusterEngine {
             peak_events: 0,
             out: Vec::new(),
             cut: false,
+            node_down: vec![false; n_a],
+            pending_inject: Vec::new(),
+            requeue_scratch: Vec::new(),
+            injections_applied: 0,
+            node_failures: 0,
+            node_recoveries: 0,
+            requeued_requests: 0,
+            lost_kv_blocks: 0,
+            lost_decode_tokens: 0,
+            re_prefilled_tokens: 0,
             ttft: Histogram::new(),
             ttft_queue: Histogram::new(),
             ttft_prefill: Histogram::new(),
@@ -1465,6 +1610,15 @@ impl ClusterEngine {
     /// at any time; each firing pulls and schedules the next, so the
     /// queue never holds the whole trace. Call once before stepping.
     pub(crate) fn prime(&mut self) {
+        // Injections first: their insertion sequences precede every
+        // runtime event, so at a timestamp tie an `Inject` pops before
+        // the hop/IterEnd that shares its time — identically in fused
+        // and stepwise modes (both then defer it to the boundary).
+        for i in 0..self.cfg.injections.len() {
+            let at = self.cfg.injections[i].at.max(0.0);
+            // msi-lint: allow(raw-schedule) -- compile-validated non-negative injection times into the engine's own queue
+            self.q.schedule_at(at, Event::Inject(i));
+        }
         if let Some(r) = self.source.next_request() {
             let at = r.arrival.max(0.0);
             let slot = self.ctx.table.insert(r);
@@ -1522,6 +1676,7 @@ impl ClusterEngine {
                     self.end_iteration(now, &st, &mut out);
                     self.iter_stats = Some(st);
                 }
+                Event::Inject(i) => self.on_inject(now, i, &mut out),
             }
             for (at, e) in out.drain(..) {
                 if matches!(e, Event::Pipe(_) | Event::Rebalance | Event::IterEnd) {
@@ -1638,6 +1793,13 @@ impl ClusterEngine {
             self.in_transfer -= 1;
             self.kv_transferred_tokens += self.ctx.table.get(req).input_len as u64;
         }
+        if self.node_down[node] {
+            // The destination died between placement and KV arrival: the
+            // shipment is lost with the node, and the request re-enters
+            // the lifecycle at the front door.
+            self.requeue(now, req, out);
+            return;
+        }
         let ev = Event::KvArrive { req, node };
         self.attention.handle(now, &ev, &mut self.ctx, out);
     }
@@ -1648,12 +1810,99 @@ impl ClusterEngine {
     /// uses), or the analytic NIC bandwidth-utilization curve otherwise.
     fn kv_transfer_time(&self, input_len: usize) -> f64 {
         let bytes = (input_len.max(1) as f64) * self.cfg.model.kv_bytes_per_token();
-        match &self.link.transfer {
+        let base = match &self.link.transfer {
             Some(tm) => tm.latency(bytes),
             None => {
                 bytes / (self.kv_link_bw * bandwidth_util(bytes, self.kv_link_bw, 6e-6)).max(1e-9)
             }
+        };
+        // An injected NIC degradation slows the KV shipment along with
+        // the M2N traffic (same physical links).
+        base * self.link.degrade
+    }
+
+    // ------------------------------------------- fault / elasticity --
+
+    /// A scheduled injection fired. Outside an iteration it applies on
+    /// the spot; mid-iteration it is deferred to the next
+    /// `begin_iteration` (before admission) so the fused and stepwise
+    /// paths — which interleave hops differently in wall-clock order but
+    /// identically in virtual time — observe the state change at the
+    /// same point in the event sequence.
+    fn on_inject(&mut self, now: f64, idx: usize, out: &mut Vec<(f64, Event)>) {
+        if self.ctx.in_iteration {
+            self.pending_inject.push(idx);
+            return;
         }
+        self.apply_injection(now, idx, out);
+    }
+
+    /// Apply one injection (always at an iteration boundary or while
+    /// idle — never between hops).
+    fn apply_injection(&mut self, now: f64, idx: usize, out: &mut Vec<(f64, Event)>) {
+        self.injections_applied += 1;
+        match self.cfg.injections[idx].kind {
+            FaultKind::FailAttention { node } => self.fail_attention(now, node, out),
+            FaultKind::RecoverAttention { node } => {
+                if self.node_down[node] {
+                    self.node_down[node] = false;
+                    self.router.set_node_down(node, false);
+                    self.node_recoveries += 1;
+                    // The recovered node re-opens placement capacity for
+                    // the overflow FIFO right away.
+                    self.router.drain_overflow(now, &mut self.ctx, out);
+                }
+            }
+            FaultKind::StraggleAttention { node, factor } => {
+                self.attention.slow[node] = factor;
+            }
+            FaultKind::DegradeNic { factor } => {
+                self.link.degrade = factor;
+            }
+            FaultKind::ResizeExperts { n_e } => {
+                self.experts.resize(n_e);
+            }
+        }
+    }
+
+    /// Tear down attention node `node` (idempotent): exclude it from
+    /// placement, release its KV, and push every request it held back
+    /// through the front door — they re-enter the lifecycle at `Queued`
+    /// and (with the dedicated pool on) re-prefill their lost prompt KV.
+    fn fail_attention(&mut self, now: f64, node: usize, out: &mut Vec<(f64, Event)>) {
+        if self.node_down[node] {
+            return;
+        }
+        self.node_down[node] = true;
+        self.router.set_node_down(node, true);
+        self.node_failures += 1;
+        let mut slots = std::mem::take(&mut self.requeue_scratch);
+        slots.clear();
+        let (blocks, tokens) = self.attention.drain_node(node, &mut slots);
+        self.lost_kv_blocks += blocks;
+        self.lost_decode_tokens += tokens;
+        for &slot in &slots {
+            self.requeue(now, slot, out);
+        }
+        slots.clear();
+        self.requeue_scratch = slots;
+    }
+
+    /// Re-admit a fault-displaced request: release its routing
+    /// accounting, reset its lifecycle to `Queued`, and walk it through
+    /// the front door again. Admission control cannot re-reject it (its
+    /// KV footprint was feasible the first time and the bound is static),
+    /// so `requeued_requests` never leaks into `rejected`.
+    fn requeue(&mut self, now: f64, slot: usize, out: &mut Vec<(f64, Event)>) {
+        if let Some(node) = self.ctx.table.take_placed(slot) {
+            self.router.complete(node, self.ctx.table.get(slot));
+        }
+        self.ctx.table.reset_for_retry(slot);
+        self.requeued_requests += 1;
+        if self.prefill.is_some() && self.ctx.table.get(slot).input_len > 0 {
+            self.re_prefilled_tokens += self.ctx.table.get(slot).input_len as u64;
+        }
+        self.front_door(now, slot, out);
     }
 
     /// Iteration boundary: admission on every node, inline-prefill chunk
@@ -1663,6 +1912,17 @@ impl ClusterEngine {
     // msi-lint: hot
     fn begin_iteration(&mut self, now: f64, out: &mut Vec<(f64, Event)>) {
         self.ctx.iter_pending = false;
+        // Deferred injections first, in firing order, BEFORE admission:
+        // a node that died mid-iteration must not admit new work, and a
+        // resized expert pool must price this iteration's hops.
+        if !self.pending_inject.is_empty() {
+            let mut pending = std::mem::take(&mut self.pending_inject);
+            for &idx in &pending {
+                self.apply_injection(now, idx, out);
+            }
+            pending.clear();
+            self.pending_inject = pending;
+        }
         self.attention.admit_all(now);
         let has_backlog = self.inline_prefill() && self.attention.backlog_requests() > 0;
         if self.attention.batch_total() == 0 && !has_backlog {
@@ -1690,7 +1950,9 @@ impl ClusterEngine {
         let plan = &self.cfg.plan;
         let m = plan.m.max(1);
         let layers = self.cfg.model.layers.max(1);
-        let n_e = plan.n_e.max(1);
+        // Live pool size, not the plan's: elastic shrink/grow injections
+        // change how many nodes stream expert weight panels.
+        let n_e = self.experts.n_e.max(1);
         let experts = self.cfg.model.experts.max(1);
 
         let avg_seq = self.attention.avg_seq();
@@ -2018,7 +2280,11 @@ impl ClusterEngine {
         // Freed KV first, then strictly-FIFO admission of queued arrivals.
         self.router.drain_overflow(now, &mut self.ctx, out);
         let inline_pending = self.inline_prefill() && self.attention.backlog_requests() > 0;
-        if (self.attention.has_work() || inline_pending) && !self.ctx.iter_pending {
+        // A deferred injection with no decode work still needs the next
+        // boundary to fire so it gets applied.
+        if (self.attention.has_work() || inline_pending || !self.pending_inject.is_empty())
+            && !self.ctx.iter_pending
+        {
             self.ctx.iter_pending = true;
             out.push((now, Event::IterBegin));
         }
@@ -2131,6 +2397,14 @@ impl ClusterEngine {
             combined_copies: self.link.combined_copies,
             processed_copies: self.experts.processed_copies,
             rebalances: self.experts.rebalances,
+            injections_applied: self.injections_applied,
+            node_failures: self.node_failures,
+            node_recoveries: self.node_recoveries,
+            requeued_requests: self.requeued_requests,
+            lost_kv_blocks: self.lost_kv_blocks,
+            lost_decode_tokens: self.lost_decode_tokens,
+            re_prefilled_tokens: self.re_prefilled_tokens,
+            expert_resizes: self.experts.resizes,
             clamped_past_schedules: self.q.clamped_past_schedules(),
             tenants,
         }

@@ -15,6 +15,9 @@
 //!   `Queued → Prefill → KvTransfer → Decode → Done` lifecycle while
 //!   pulling arrivals from a streaming [`crate::workload::ArrivalSource`];
 //! * [`cluster`] — scenario configuration + reporting, the public facade;
+//! * [`scenario`] — the declarative `.msc` scenario language (`msi
+//!   scenario`): phased workload timelines plus fault / elasticity
+//!   injection, compiled onto the engine;
 //! * [`shard`] — deterministic sharded execution: independent sub-clusters
 //!   on worker threads with epoch-merged reports;
 //! * [`sweep`] — multi-threaded scenario-grid sweeps and the simulator
@@ -34,12 +37,13 @@ pub mod cluster;
 pub mod engine;
 pub mod pipeline;
 mod rng;
+pub mod scenario;
 pub mod shard;
 pub mod sweep;
 
 pub use cluster::{
-    ClusterReport, ClusterSim, ClusterSimConfig, EngineMode, ExpertPopularity, TenantReport,
-    Transport,
+    ClusterReport, ClusterSim, ClusterSimConfig, EngineMode, ExpertPopularity, FaultInjection,
+    FaultKind, TenantReport, Transport,
 };
 pub use engine::{
     ClusterEngine, Component, Event, PrefillPool, RequestPhase, RequestTable, StageModel,

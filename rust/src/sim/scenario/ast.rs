@@ -1,0 +1,232 @@
+//! Abstract syntax of `.msc` scenario files.
+//!
+//! The AST is a faithful, *resolved* image of the source: optional items
+//! carry `Option`, per-phase regime knobs are filled with their documented
+//! defaults at parse time, and [`ScenarioAst::pretty`] renders the
+//! canonical form. The pair is pinned by a round-trip property:
+//! `parse(pretty(ast)) == ast` for every AST the generator can produce
+//! (floats print via `{:?}`, Rust's shortest round-trip form).
+
+/// Default median prompt length (tokens) when a phase omits `input` —
+/// the paper's §7.1 production median.
+pub const DEFAULT_INPUT: f64 = 571.0;
+/// Default median output length (tokens) when a phase omits `output`.
+pub const DEFAULT_OUTPUT: f64 = 159.0;
+/// Default log-normal sigma when a phase omits `sigma`.
+pub const DEFAULT_SIGMA: f64 = 0.7;
+
+/// A parsed scenario file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioAst {
+    /// Scenario name (the string after the `scenario` keyword).
+    pub name: String,
+    /// RNG seed for every stream of the run (`seed`, default 0).
+    pub seed: u64,
+    /// Model name (`model`, default `tiny`), resolved by the compiler.
+    pub model: String,
+    /// Attention-side GPU kind (`gpu` / `attention-gpu`, default `ampere`).
+    pub attn_gpu: String,
+    /// Expert-side GPU kind (`expert-gpu`), `None` = same as attention.
+    pub expert_gpu: Option<String>,
+    /// Simulation horizon in seconds (`horizon`); `None` = run to
+    /// quiescence.
+    pub horizon: Option<f64>,
+    /// Ping-pong micro-batch override (`micro-batches`).
+    pub micro_batches: Option<usize>,
+    /// Prefill-pool node-count override (`prefill`).
+    pub prefill: Option<usize>,
+    /// Zipf expert-popularity skew (`skew`); `None` = uniform.
+    pub skew: Option<f64>,
+    /// Periodic §6 online re-balance interval in seconds (`rebalance`).
+    pub rebalance: Option<f64>,
+    /// Traffic classes (`tenant` items, in file order).
+    pub tenants: Vec<TenantAst>,
+    /// Workload timeline (`workload` block, in file order).
+    pub phases: Vec<PhaseAst>,
+    /// Fault / elasticity events (`inject` block, in file order; times
+    /// must be non-decreasing).
+    pub injects: Vec<InjectAst>,
+}
+
+/// One `tenant "name" weight W slo S` item.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantAst {
+    /// Class name used in reports.
+    pub name: String,
+    /// Relative traffic share.
+    pub weight: f64,
+    /// End-to-end SLO in seconds.
+    pub slo: f64,
+}
+
+/// One `phase "name" { ... }` block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseAst {
+    /// Phase name (reporting only).
+    pub name: String,
+    /// Phase length in seconds (`duration`, required).
+    pub duration: f64,
+    /// Arrival-rate curve (`rate`, required).
+    pub rate: RateAst,
+    /// Median prompt length (`input`, default [`DEFAULT_INPUT`]).
+    pub input: f64,
+    /// Median output length (`output`, default [`DEFAULT_OUTPUT`]).
+    pub output: f64,
+    /// Log-normal sigma for both length draws (`sigma`, default
+    /// [`DEFAULT_SIGMA`]).
+    pub sigma: f64,
+    /// Tenant-mix override (`mix`, one weight per declared tenant).
+    pub mix: Option<Vec<f64>>,
+}
+
+/// A `rate` clause.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RateAst {
+    /// `rate constant R` — R requests/s for the whole phase.
+    Constant(f64),
+    /// `rate ramp A -> B` — linear from A to B over the phase.
+    Ramp(f64, f64),
+    /// `rate sine M amplitude A period P` — diurnal-style oscillation.
+    Sine {
+        /// Mean rate.
+        mean: f64,
+        /// Relative swing in `[0, 1]`.
+        amplitude: f64,
+        /// Oscillation period (seconds).
+        period: f64,
+    },
+}
+
+/// One `at T <action>` statement in an `inject` block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InjectAst {
+    /// Virtual time the event fires (seconds).
+    pub at: f64,
+    /// What happens.
+    pub action: ActionAst,
+}
+
+/// Injectable fault / elasticity actions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ActionAst {
+    /// `fail attention N` — node N fails, its in-flight work requeues.
+    FailAttention(usize),
+    /// `recover attention N` — node N rejoins the placement set.
+    RecoverAttention(usize),
+    /// `straggle attention N factor F` — node N runs F× slower (1.0
+    /// restores).
+    StraggleAttention {
+        /// Attention-node index.
+        node: usize,
+        /// Slowdown multiplier (> 0).
+        factor: f64,
+    },
+    /// `degrade nic factor F` — M2N hops and KV transfers take F× longer.
+    DegradeNic {
+        /// Slowdown multiplier (> 0).
+        factor: f64,
+    },
+    /// `restore nic` — shorthand for `degrade nic factor 1.0`.
+    RestoreNic,
+    /// `shrink experts N` — remove N nodes from the expert pool.
+    ShrinkExperts(usize),
+    /// `grow experts N` — add N nodes back (never past the provisioned
+    /// pool).
+    GrowExperts(usize),
+}
+
+/// Shortest-round-trip float rendering (`{:?}`), so `pretty` → `parse`
+/// reproduces every `f64` bit for bit.
+fn num(x: f64) -> String {
+    format!("{x:?}")
+}
+
+impl ScenarioAst {
+    /// Canonical rendering: parsing it back yields an identical AST.
+    pub fn pretty(&self) -> String {
+        let mut s = format!("scenario \"{}\" {{\n", self.name);
+        s.push_str(&format!("  seed {}\n", self.seed));
+        s.push_str(&format!("  model {}\n", self.model));
+        match &self.expert_gpu {
+            None => s.push_str(&format!("  gpu {}\n", self.attn_gpu)),
+            Some(e) => {
+                s.push_str(&format!("  attention-gpu {}\n", self.attn_gpu));
+                s.push_str(&format!("  expert-gpu {e}\n"));
+            }
+        }
+        if let Some(h) = self.horizon {
+            s.push_str(&format!("  horizon {}\n", num(h)));
+        }
+        if let Some(m) = self.micro_batches {
+            s.push_str(&format!("  micro-batches {m}\n"));
+        }
+        if let Some(p) = self.prefill {
+            s.push_str(&format!("  prefill {p}\n"));
+        }
+        if let Some(a) = self.skew {
+            s.push_str(&format!("  skew {}\n", num(a)));
+        }
+        if let Some(r) = self.rebalance {
+            s.push_str(&format!("  rebalance {}\n", num(r)));
+        }
+        for t in &self.tenants {
+            s.push_str(&format!(
+                "  tenant \"{}\" weight {} slo {}\n",
+                t.name,
+                num(t.weight),
+                num(t.slo)
+            ));
+        }
+        s.push_str("  workload {\n");
+        for p in &self.phases {
+            s.push_str(&format!("    phase \"{}\" {{\n", p.name));
+            s.push_str(&format!("      duration {}\n", num(p.duration)));
+            let rate = match &p.rate {
+                RateAst::Constant(r) => format!("constant {}", num(*r)),
+                RateAst::Ramp(a, b) => format!("ramp {} -> {}", num(*a), num(*b)),
+                RateAst::Sine {
+                    mean,
+                    amplitude,
+                    period,
+                } => format!(
+                    "sine {} amplitude {} period {}",
+                    num(*mean),
+                    num(*amplitude),
+                    num(*period)
+                ),
+            };
+            s.push_str(&format!("      rate {rate}\n"));
+            s.push_str(&format!("      input {}\n", num(p.input)));
+            s.push_str(&format!("      output {}\n", num(p.output)));
+            s.push_str(&format!("      sigma {}\n", num(p.sigma)));
+            if let Some(mix) = &p.mix {
+                let w: Vec<String> = mix.iter().map(|&x| num(x)).collect();
+                s.push_str(&format!("      mix {}\n", w.join(" ")));
+            }
+            s.push_str("    }\n");
+        }
+        s.push_str("  }\n");
+        if !self.injects.is_empty() {
+            s.push_str("  inject {\n");
+            for i in &self.injects {
+                let action = match &i.action {
+                    ActionAst::FailAttention(n) => format!("fail attention {n}"),
+                    ActionAst::RecoverAttention(n) => format!("recover attention {n}"),
+                    ActionAst::StraggleAttention { node, factor } => {
+                        format!("straggle attention {node} factor {}", num(*factor))
+                    }
+                    ActionAst::DegradeNic { factor } => {
+                        format!("degrade nic factor {}", num(*factor))
+                    }
+                    ActionAst::RestoreNic => "restore nic".to_string(),
+                    ActionAst::ShrinkExperts(n) => format!("shrink experts {n}"),
+                    ActionAst::GrowExperts(n) => format!("grow experts {n}"),
+                };
+                s.push_str(&format!("    at {} {action}\n", num(i.at)));
+            }
+            s.push_str("  }\n");
+        }
+        s.push('}');
+        s
+    }
+}

@@ -1,0 +1,365 @@
+//! Scenario compiler: AST → a runnable cluster configuration.
+//!
+//! The compiler resolves model/GPU names, runs the Chapter-5 plan search
+//! for the deployment shape (honoring the scenario's overrides), folds
+//! relative `shrink`/`grow` expert elasticity into absolute
+//! [`FaultKind::ResizeExperts`] targets, and validates every semantic
+//! constraint the grammar cannot express (node indices in range, positive
+//! factors, tenant-mix arity, time-ordered injections). Validation errors
+//! are plain `anyhow` messages — positional diagnostics belong to the
+//! parser.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{ClusterSpec, GpuKind, ModelConfig, NodeSpec};
+use crate::plan::PlanSearcher;
+use crate::sim::cluster::{
+    ClusterSimConfig, EngineMode, ExpertPopularity, FaultInjection, FaultKind,
+};
+use crate::sim::engine::ClusterEngine;
+use crate::sim::ClusterReport;
+use crate::workload::{PhaseSpec, PhasedSource, RateCurve, TenantClass, WorkloadSpec};
+
+use super::ast::{ActionAst, RateAst, ScenarioAst};
+
+/// Workload-seed salt: decorrelates the arrival generator from the
+/// engine's gating stream, matching `msi sweep`'s discipline.
+const WL_SEED_SALT: u64 = 0xa076_1d64_78bd_642f;
+
+/// A compiled, runnable scenario.
+#[derive(Debug, Clone)]
+pub struct CompiledScenario {
+    /// Scenario name (from the file).
+    pub name: String,
+    /// Full engine configuration, injections included.
+    pub cfg: ClusterSimConfig,
+    /// Phased workload timeline.
+    pub phases: Vec<PhaseSpec>,
+    /// Base tenant weights (empty = single tenant).
+    pub tenant_mix: Vec<f64>,
+    /// Length clamp for the generated requests.
+    pub max_len: usize,
+}
+
+impl CompiledScenario {
+    /// A fresh arrival stream for the scenario (bit-identical each call).
+    pub fn source(&self) -> PhasedSource {
+        PhasedSource::new(
+            self.phases.clone(),
+            self.tenant_mix.clone(),
+            self.max_len,
+            self.cfg.seed ^ WL_SEED_SALT,
+        )
+    }
+
+    /// Run the scenario single-sharded with the configured engine mode.
+    pub fn run(&self) -> ClusterReport {
+        ClusterEngine::new(self.cfg.clone(), Box::new(self.source())).run()
+    }
+}
+
+fn parse_model(name: &str) -> Result<ModelConfig> {
+    Ok(match name.to_lowercase().as_str() {
+        "mixtral" | "mixtral-8x22b" => ModelConfig::mixtral_8x22b(),
+        "dbrx" => ModelConfig::dbrx(),
+        "scaled-moe" | "scaled_moe" | "scaled" => ModelConfig::scaled_moe(),
+        "tiny" => ModelConfig::tiny(),
+        other => bail!("unknown model `{other}`"),
+    })
+}
+
+fn parse_gpu(name: &str) -> Result<GpuKind> {
+    Ok(match name.to_lowercase().as_str() {
+        "ampere" | "a100" => GpuKind::Ampere80G,
+        "h20" => GpuKind::H20,
+        "l40s" => GpuKind::L40S,
+        "a800" => GpuKind::A800,
+        "h800" => GpuKind::H800,
+        "l20" => GpuKind::L20,
+        other => bail!("unknown gpu `{other}`"),
+    })
+}
+
+fn check_finite(what: &str, x: f64) -> Result<()> {
+    if !x.is_finite() {
+        bail!("{what} must be finite (got {x})");
+    }
+    Ok(())
+}
+
+/// Mean arrival rate of a curve over its phase (used only to weight the
+/// plan search's average-sequence estimate).
+fn mean_rate(rate: &RateAst) -> f64 {
+    match *rate {
+        RateAst::Constant(r) => r,
+        RateAst::Ramp(from, to) => 0.5 * (from + to),
+        RateAst::Sine { mean, .. } => mean,
+    }
+}
+
+/// Compile a parsed scenario into a runnable configuration.
+pub fn compile(ast: &ScenarioAst) -> Result<CompiledScenario> {
+    let model = parse_model(&ast.model)?;
+    let attn = parse_gpu(&ast.attn_gpu)?;
+    let cluster = match &ast.expert_gpu {
+        None => ClusterSpec::homogeneous(attn),
+        Some(e) => ClusterSpec {
+            attention: NodeSpec {
+                gpu: attn,
+                gpus_per_node: 8,
+                nodes: None,
+            },
+            expert: NodeSpec {
+                gpu: parse_gpu(e)?,
+                gpus_per_node: 8,
+                nodes: None,
+            },
+        },
+    };
+
+    if ast.phases.is_empty() {
+        bail!("scenario \"{}\" has no workload phases", ast.name);
+    }
+    let mut tenants = Vec::new();
+    let mut tenant_mix = Vec::new();
+    for t in &ast.tenants {
+        check_finite("tenant weight", t.weight)?;
+        check_finite("tenant slo", t.slo)?;
+        if t.weight < 0.0 || t.slo <= 0.0 {
+            bail!("tenant \"{}\" needs weight >= 0 and slo > 0", t.name);
+        }
+        tenant_mix.push(t.weight);
+        tenants.push(TenantClass {
+            name: t.name.clone(),
+            weight: t.weight,
+            slo_e2e: t.slo,
+        });
+    }
+    if !tenant_mix.is_empty() && tenant_mix.iter().sum::<f64>() <= 0.0 {
+        bail!("tenant weights must not all be zero");
+    }
+
+    // Phases: validate and lower to the workload layer, accumulating the
+    // request-weighted average sequence length for the plan search.
+    let mut phases = Vec::with_capacity(ast.phases.len());
+    let (mut wsum, mut wavg) = (0.0f64, 0.0f64);
+    for p in &ast.phases {
+        let ctx = |what: &str| format!("phase \"{}\": {what}", p.name);
+        check_finite(&ctx("duration"), p.duration)?;
+        if p.duration <= 0.0 {
+            bail!("{}", ctx("duration must be > 0"));
+        }
+        if !(p.input >= 1.0 && p.input.is_finite()) {
+            bail!("{}", ctx("input must be >= 1"));
+        }
+        if !(p.output >= 1.0 && p.output.is_finite()) {
+            bail!("{}", ctx("output must be >= 1"));
+        }
+        if !(p.sigma >= 0.0 && p.sigma.is_finite()) {
+            bail!("{}", ctx("sigma must be >= 0"));
+        }
+        let rate = match p.rate {
+            RateAst::Constant(r) => {
+                if !(r >= 0.0 && r.is_finite()) {
+                    bail!("{}", ctx("rate must be >= 0"));
+                }
+                RateCurve::Constant(r)
+            }
+            RateAst::Ramp(from, to) => {
+                if !(from >= 0.0 && to >= 0.0 && from.is_finite() && to.is_finite()) {
+                    bail!("{}", ctx("ramp rates must be >= 0"));
+                }
+                RateCurve::Ramp { from, to }
+            }
+            RateAst::Sine {
+                mean,
+                amplitude,
+                period,
+            } => {
+                if !(mean >= 0.0 && mean.is_finite()) {
+                    bail!("{}", ctx("sine mean must be >= 0"));
+                }
+                if !(0.0..=1.0).contains(&amplitude) {
+                    bail!("{}", ctx("sine amplitude must be in [0, 1]"));
+                }
+                if !(period > 0.0 && period.is_finite()) {
+                    bail!("{}", ctx("sine period must be > 0"));
+                }
+                RateCurve::Sine {
+                    mean,
+                    amplitude,
+                    period,
+                }
+            }
+        };
+        let mix = match &p.mix {
+            None => None,
+            Some(m) => {
+                if m.len() != tenants.len() {
+                    bail!(
+                        "{}",
+                        ctx(&format!(
+                            "mix has {} weights but the scenario declares {} tenants",
+                            m.len(),
+                            tenants.len()
+                        ))
+                    );
+                }
+                if m.iter().any(|&w| !(w >= 0.0) || !w.is_finite()) {
+                    bail!("{}", ctx("mix weights must be >= 0"));
+                }
+                if m.iter().sum::<f64>() <= 0.0 {
+                    bail!("{}", ctx("mix weights must not all be zero"));
+                }
+                Some(m.clone())
+            }
+        };
+        // E[lognormal] = median · exp(σ²/2); steady-state decode holds
+        // prompt + half the output on average (WorkloadSpec::avg_seq_len).
+        let blowup = (p.sigma * p.sigma / 2.0).exp();
+        let w = (p.duration * mean_rate(&p.rate)).max(1e-9);
+        wsum += w;
+        wavg += w * (p.input * blowup + p.output * blowup / 2.0);
+        phases.push(PhaseSpec {
+            duration: p.duration,
+            rate,
+            median_input: p.input,
+            median_output: p.output,
+            sigma: p.sigma,
+            mix,
+        });
+    }
+    let avg_seq = wavg / wsum;
+
+    let mut plan = PlanSearcher::new(model.clone(), cluster.clone(), avg_seq)
+        .search()
+        .ok_or_else(|| anyhow!("no feasible deployment plan for scenario \"{}\"", ast.name))?;
+    if let Some(m) = ast.micro_batches {
+        if m == 0 {
+            bail!("micro-batches must be >= 1");
+        }
+        plan.m = m;
+    }
+    let prefill_nodes = match ast.prefill {
+        Some(p) => p,
+        None => plan.n_p,
+    };
+
+    if let Some(h) = ast.horizon {
+        if !(h > 0.0 && h.is_finite()) {
+            bail!("horizon must be > 0");
+        }
+    }
+    if let Some(a) = ast.skew {
+        if !(a >= 0.0 && a.is_finite()) {
+            bail!("skew must be >= 0");
+        }
+    }
+    if let Some(r) = ast.rebalance {
+        if !(r > 0.0 && r.is_finite()) {
+            bail!("rebalance interval must be > 0");
+        }
+    }
+
+    // Injections: validate against the plan shape and fold the relative
+    // shrink/grow elasticity ops into absolute expert-pool targets, in
+    // time order.
+    let mut injections = Vec::with_capacity(ast.injects.len());
+    let mut last_at = 0.0f64;
+    let mut n_e = plan.n_e;
+    for inj in &ast.injects {
+        check_finite("inject time", inj.at)?;
+        if inj.at < 0.0 {
+            bail!("inject time must be >= 0 (got {})", inj.at);
+        }
+        if inj.at < last_at {
+            bail!(
+                "inject events must be in non-decreasing time order \
+                 (at {} after at {last_at})",
+                inj.at
+            );
+        }
+        last_at = inj.at;
+        let node_ok = |node: usize| -> Result<()> {
+            if node >= plan.n_a {
+                bail!(
+                    "attention node {node} out of range (the plan has {} attention nodes)",
+                    plan.n_a
+                );
+            }
+            Ok(())
+        };
+        let factor_ok = |factor: f64| -> Result<()> {
+            if !(factor > 0.0 && factor.is_finite()) {
+                bail!("factor must be > 0 (got {factor})");
+            }
+            Ok(())
+        };
+        let kind = match inj.action {
+            ActionAst::FailAttention(node) => {
+                node_ok(node)?;
+                FaultKind::FailAttention { node }
+            }
+            ActionAst::RecoverAttention(node) => {
+                node_ok(node)?;
+                FaultKind::RecoverAttention { node }
+            }
+            ActionAst::StraggleAttention { node, factor } => {
+                node_ok(node)?;
+                factor_ok(factor)?;
+                FaultKind::StraggleAttention { node, factor }
+            }
+            ActionAst::DegradeNic { factor } => {
+                factor_ok(factor)?;
+                FaultKind::DegradeNic { factor }
+            }
+            ActionAst::RestoreNic => FaultKind::DegradeNic { factor: 1.0 },
+            ActionAst::ShrinkExperts(k) => {
+                if k >= n_e {
+                    bail!(
+                        "shrink experts {k} would leave the {n_e}-node expert pool empty"
+                    );
+                }
+                n_e -= k;
+                FaultKind::ResizeExperts { n_e }
+            }
+            ActionAst::GrowExperts(k) => {
+                if n_e + k > plan.n_e {
+                    bail!(
+                        "grow experts {k} exceeds the provisioned expert pool \
+                         ({} of {} nodes in use)",
+                        n_e,
+                        plan.n_e
+                    );
+                }
+                n_e += k;
+                FaultKind::ResizeExperts { n_e }
+            }
+        };
+        injections.push(FaultInjection { at: inj.at, kind });
+    }
+
+    let cfg = ClusterSimConfig {
+        route: crate::coordinator::RoutePolicy::LeastLoaded,
+        popularity: match ast.skew {
+            Some(a) if a > 0.0 => ExpertPopularity::Zipf(a),
+            _ => ExpertPopularity::Uniform,
+        },
+        seed: ast.seed,
+        tenants,
+        rebalance_period: ast.rebalance,
+        max_sim_seconds: ast.horizon,
+        prefill_nodes,
+        mode: EngineMode::Disaggregated,
+        injections,
+        ..ClusterSimConfig::new(model, cluster, plan)
+    };
+
+    Ok(CompiledScenario {
+        name: ast.name.clone(),
+        cfg,
+        phases,
+        tenant_mix,
+        max_len: WorkloadSpec::default().max_len,
+    })
+}

@@ -1,0 +1,226 @@
+//! Hand-rolled tokenizer for `.msc` scenario files (no dependencies, the
+//! `tools/msi-lint` discipline): identifiers, quoted strings, numbers,
+//! braces, `->`, and `#` line comments, with 1-based line/column tracking
+//! for the golden `line:col: expected X, found Y` diagnostics.
+
+use std::fmt;
+
+/// A parse (or lex) failure with its source position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScenarioError {
+    /// 1-based source line.
+    pub line: u32,
+    /// 1-based source column.
+    pub col: u32,
+    /// Human-readable message (`expected X, found Y` for parse errors).
+    pub msg: String,
+}
+
+impl fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+/// Token classes of the scenario language.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Keyword or name: `[A-Za-z_][A-Za-z0-9_-]*`.
+    Ident,
+    /// Double-quoted string (no escapes; names only).
+    Str,
+    /// Decimal number, optionally signed / fractional / exponent form.
+    Num,
+    /// `{`
+    LBrace,
+    /// `}`
+    RBrace,
+    /// `->`
+    Arrow,
+    /// End of input (always the final token).
+    Eof,
+}
+
+/// One token with its source position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    /// Class.
+    pub kind: TokKind,
+    /// Source text (string tokens: the unquoted contents).
+    pub text: String,
+    /// Numeric value (`Num` tokens only, 0 otherwise).
+    pub num: f64,
+    /// 1-based line of the first character.
+    pub line: u32,
+    /// 1-based column of the first character.
+    pub col: u32,
+}
+
+impl Token {
+    /// How the parser names this token in diagnostics.
+    pub fn describe(&self) -> String {
+        match self.kind {
+            TokKind::Ident => format!("`{}`", self.text),
+            TokKind::Str => format!("string \"{}\"", self.text),
+            TokKind::Num => format!("number `{}`", self.text),
+            TokKind::LBrace => "`{`".to_string(),
+            TokKind::RBrace => "`}`".to_string(),
+            TokKind::Arrow => "`->`".to_string(),
+            TokKind::Eof => "end of input".to_string(),
+        }
+    }
+}
+
+/// Tokenize `src`; the result always ends with an `Eof` token carrying
+/// the position just past the input.
+pub fn lex(src: &str) -> Result<Vec<Token>, ScenarioError> {
+    let bytes = src.as_bytes();
+    let mut toks = Vec::new();
+    let (mut i, mut line, mut col) = (0usize, 1u32, 1u32);
+    let err = |line: u32, col: u32, msg: String| ScenarioError { line, col, msg };
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            b'\n' => {
+                i += 1;
+                line += 1;
+                col = 1;
+            }
+            b' ' | b'\t' | b'\r' => {
+                i += 1;
+                col += 1;
+            }
+            b'#' => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'{' => {
+                toks.push(Token {
+                    kind: TokKind::LBrace,
+                    text: "{".into(),
+                    num: 0.0,
+                    line,
+                    col,
+                });
+                i += 1;
+                col += 1;
+            }
+            b'}' => {
+                toks.push(Token {
+                    kind: TokKind::RBrace,
+                    text: "}".into(),
+                    num: 0.0,
+                    line,
+                    col,
+                });
+                i += 1;
+                col += 1;
+            }
+            b'"' => {
+                let (sl, sc) = (line, col);
+                let start = i + 1;
+                let mut j = start;
+                while j < bytes.len() && bytes[j] != b'"' && bytes[j] != b'\n' {
+                    j += 1;
+                }
+                if j >= bytes.len() || bytes[j] != b'"' {
+                    return Err(err(sl, sc, "unterminated string".into()));
+                }
+                let text = src[start..j].to_string();
+                col += (j + 1 - i) as u32;
+                i = j + 1;
+                toks.push(Token {
+                    kind: TokKind::Str,
+                    text,
+                    num: 0.0,
+                    line: sl,
+                    col: sc,
+                });
+            }
+            b'-' if i + 1 < bytes.len() && bytes[i + 1] == b'>' => {
+                toks.push(Token {
+                    kind: TokKind::Arrow,
+                    text: "->".into(),
+                    num: 0.0,
+                    line,
+                    col,
+                });
+                i += 2;
+                col += 2;
+            }
+            _ if c.is_ascii_digit() || (c == b'-' && i + 1 < bytes.len() && {
+                let d = bytes[i + 1];
+                d.is_ascii_digit() || d == b'.'
+            }) || (c == b'.' && i + 1 < bytes.len() && bytes[i + 1].is_ascii_digit()) =>
+            {
+                let (sl, sc) = (line, col);
+                let start = i;
+                let mut j = i + 1;
+                while j < bytes.len() {
+                    let d = bytes[j];
+                    let numeric = d.is_ascii_digit()
+                        || d == b'.'
+                        || d == b'e'
+                        || d == b'E'
+                        || ((d == b'+' || d == b'-')
+                            && matches!(bytes[j - 1], b'e' | b'E'));
+                    if !numeric {
+                        break;
+                    }
+                    j += 1;
+                }
+                let text = &src[start..j];
+                let num: f64 = text
+                    .parse()
+                    .map_err(|_| err(sl, sc, format!("malformed number `{text}`")))?;
+                col += (j - i) as u32;
+                i = j;
+                toks.push(Token {
+                    kind: TokKind::Num,
+                    text: text.to_string(),
+                    num,
+                    line: sl,
+                    col: sc,
+                });
+            }
+            _ if c.is_ascii_alphabetic() || c == b'_' => {
+                let (sl, sc) = (line, col);
+                let start = i;
+                let mut j = i + 1;
+                while j < bytes.len()
+                    && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_' || bytes[j] == b'-')
+                {
+                    j += 1;
+                }
+                let text = src[start..j].to_string();
+                col += (j - i) as u32;
+                i = j;
+                toks.push(Token {
+                    kind: TokKind::Ident,
+                    text,
+                    num: 0.0,
+                    line: sl,
+                    col: sc,
+                });
+            }
+            _ => {
+                return Err(err(
+                    line,
+                    col,
+                    format!("unexpected character `{}`", char::from(c)),
+                ));
+            }
+        }
+    }
+    toks.push(Token {
+        kind: TokKind::Eof,
+        text: String::new(),
+        num: 0.0,
+        line,
+        col,
+    });
+    Ok(toks)
+}

@@ -1,0 +1,171 @@
+//! `msi scenario`: a declarative scenario language (`.msc`) for the
+//! cluster simulator.
+//!
+//! A scenario file is the whole experiment as data — deployment knobs,
+//! a phased non-stationary workload timeline, and scheduled fault /
+//! elasticity injections — replacing ad-hoc CLI flag combinations
+//! (ROADMAP item 4: production-scale serving of heavy, shifting traffic):
+//!
+//! ```text
+//! scenario "flash-crowd" {
+//!   seed 7
+//!   model tiny
+//!   gpu ampere
+//!   workload {
+//!     phase "calm"  { duration 4 rate constant 20 }
+//!     phase "spike" { duration 2 rate constant 200 input 120 }
+//!     phase "cool"  { duration 6 rate ramp 40 -> 10 }
+//!   }
+//!   inject {
+//!     at 5.0 fail attention 1
+//!     at 8.0 recover attention 1
+//!   }
+//! }
+//! ```
+//!
+//! The pipeline is [`parse`] (hand-rolled lexer + recursive-descent
+//! parser, zero dependencies, golden `line:col: expected X, found Y`
+//! diagnostics pinned by the fixture corpus) → [`compile`] (name
+//! resolution, plan search, semantic validation, folding relative expert
+//! elasticity into absolute targets) → [`CompiledScenario::run`] (or the
+//! sharded runner). Workload phases lower to
+//! [`crate::workload::PhasedSource`]; injections lower to
+//! [`crate::sim::cluster::FaultInjection`] events applied by the engine
+//! at iteration boundaries, which keeps fused and stepwise runs
+//! byte-identical (see `DESIGN.md`).
+
+mod ast;
+mod compile;
+mod lexer;
+mod parser;
+
+pub use ast::{
+    ActionAst, InjectAst, PhaseAst, RateAst, ScenarioAst, TenantAst, DEFAULT_INPUT,
+    DEFAULT_OUTPUT, DEFAULT_SIGMA,
+};
+pub use compile::{compile, CompiledScenario};
+pub use lexer::ScenarioError;
+pub use parser::parse;
+
+/// Read, parse, and compile a scenario file; parse errors are prefixed
+/// with the path (`file.msc:line:col: ...`).
+pub fn load(path: &str) -> anyhow::Result<CompiledScenario> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let ast = parse(&src).map_err(|e| anyhow::anyhow!("{path}:{e}"))?;
+    compile(&ast).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+# A kitchen-sink scenario exercising every construct once.
+scenario "kitchen-sink" {
+  seed 7
+  model tiny
+  gpu ampere
+  horizon 30.0
+  micro-batches 2
+  prefill 2
+  skew 1.2
+  rebalance 2.0
+  tenant "interactive" weight 3.0 slo 4.0
+  tenant "batch" weight 1.0 slo 30.0
+  workload {
+    phase "calm" {
+      duration 4.0
+      rate constant 20.0
+    }
+    phase "spike" {
+      duration 2.0
+      rate ramp 40.0 -> 200.0
+      input 120.0
+      output 32.0
+      sigma 0.4
+      mix 1.0 0.0
+    }
+    phase "diurnal" {
+      duration 8.0
+      rate sine 30.0 amplitude 0.8 period 4.0
+    }
+  }
+  inject {
+    at 3.0 straggle attention 0 factor 2.5
+    at 4.0 fail attention 1
+    at 5.0 degrade nic factor 3.0
+    at 6.0 shrink experts 1
+    at 7.0 grow experts 1
+    at 8.0 restore nic
+    at 9.0 recover attention 1
+    at 9.5 straggle attention 0 factor 1.0
+  }
+}
+"#;
+
+    #[test]
+    fn example_parses_compiles_and_round_trips() {
+        let ast = parse(EXAMPLE).expect("parse");
+        assert_eq!(ast.name, "kitchen-sink");
+        assert_eq!(ast.phases.len(), 3);
+        assert_eq!(ast.injects.len(), 8);
+        let printed = ast.pretty();
+        let reparsed = parse(&printed).expect("reparse the pretty-print");
+        assert_eq!(ast, reparsed, "pretty-print round-trips");
+        let c = compile(&ast).expect("compile");
+        assert_eq!(c.cfg.seed, 7);
+        assert_eq!(c.cfg.plan.m, 2);
+        assert_eq!(c.cfg.prefill_nodes, 2);
+        assert_eq!(c.cfg.injections.len(), 8);
+        assert_eq!(c.cfg.tenants.len(), 2);
+        assert!((c.cfg.max_sim_seconds.unwrap() - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_errors_carry_line_and_column() {
+        let e = parse("scenario \"x\" {\n  bogus 3\n}").unwrap_err();
+        assert_eq!((e.line, e.col), (2, 3));
+        assert_eq!(e.to_string(), "2:3: expected a scenario item or `}`, found `bogus`");
+    }
+
+    #[test]
+    fn elasticity_folds_to_absolute_targets_in_time_order() {
+        let src = r#"scenario "x" {
+  workload { phase "p" { duration 5.0 rate constant 10.0 } }
+  inject {
+    at 1.0 shrink experts 2
+    at 2.0 shrink experts 1
+    at 3.0 grow experts 3
+  }
+}"#;
+        let c = compile(&parse(src).expect("parse")).expect("compile");
+        let base = c.cfg.plan.n_e;
+        let targets: Vec<usize> = c
+            .cfg
+            .injections
+            .iter()
+            .map(|i| match i.kind {
+                crate::sim::cluster::FaultKind::ResizeExperts { n_e } => n_e,
+                _ => panic!("expected resize"),
+            })
+            .collect();
+        assert_eq!(targets, vec![base - 2, base - 3, base]);
+    }
+
+    #[test]
+    fn compile_rejects_out_of_range_nodes_and_bad_factors() {
+        let mk = |inject: &str| {
+            let src = format!(
+                "scenario \"x\" {{\n  workload {{ phase \"p\" {{ duration 5.0 \
+                 rate constant 10.0 }} }}\n  inject {{ {inject} }}\n}}"
+            );
+            compile(&parse(&src).expect("parse"))
+        };
+        assert!(mk("at 1.0 fail attention 99").is_err());
+        assert!(mk("at 1.0 straggle attention 0 factor 0.0").is_err());
+        assert!(mk("at 1.0 shrink experts 999").is_err());
+        assert!(mk("at 2.0 fail attention 0 at 1.0 recover attention 0").is_err());
+        assert!(mk("at 1.0 fail attention 0").is_ok());
+    }
+}

@@ -1,0 +1,358 @@
+//! Recursive-descent parser for `.msc` scenario files.
+//!
+//! Diagnostics are golden-pinned by the fixture corpus
+//! (`rust/tests/fixtures/scenario/`): every error is
+//! `line:col: expected X, found Y` (or a `duplicate`/`missing` message
+//! with the same position format), so a message change is a deliberate,
+//! reviewed event — the msi-lint discipline applied to a language.
+
+use super::ast::{
+    ActionAst, InjectAst, PhaseAst, RateAst, ScenarioAst, TenantAst, DEFAULT_INPUT,
+    DEFAULT_OUTPUT, DEFAULT_SIGMA,
+};
+use super::lexer::{lex, ScenarioError, TokKind, Token};
+
+/// Parse one scenario file.
+pub fn parse(src: &str) -> Result<ScenarioAst, ScenarioError> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    p.scenario()
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn cur(&self) -> &Token {
+        &self.toks[self.pos]
+    }
+
+    fn bump(&mut self) -> Token {
+        let t = self.toks[self.pos].clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err_at(&self, tok: &Token, msg: String) -> ScenarioError {
+        ScenarioError {
+            line: tok.line,
+            col: tok.col,
+            msg,
+        }
+    }
+
+    fn expected(&self, what: &str) -> ScenarioError {
+        let cur = self.cur();
+        self.err_at(cur, format!("expected {what}, found {}", cur.describe()))
+    }
+
+    /// Consume the keyword `kw` if it is next.
+    fn eat_kw(&mut self, kw: &str) -> bool {
+        if self.cur().kind == TokKind::Ident && self.cur().text == kw {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_kw(&mut self, kw: &str) -> Result<(), ScenarioError> {
+        if self.eat_kw(kw) {
+            Ok(())
+        } else {
+            Err(self.expected(&format!("`{kw}`")))
+        }
+    }
+
+    fn expect_kind(&mut self, kind: TokKind, what: &str) -> Result<Token, ScenarioError> {
+        if self.cur().kind == kind {
+            Ok(self.bump())
+        } else {
+            Err(self.expected(what))
+        }
+    }
+
+    fn expect_str(&mut self, what: &str) -> Result<String, ScenarioError> {
+        Ok(self.expect_kind(TokKind::Str, what)?.text)
+    }
+
+    fn expect_num(&mut self, what: &str) -> Result<f64, ScenarioError> {
+        Ok(self.expect_kind(TokKind::Num, what)?.num)
+    }
+
+    fn expect_int(&mut self, what: &str) -> Result<u64, ScenarioError> {
+        let err = self.expected(what);
+        let tok = self.expect_kind(TokKind::Num, what)?;
+        tok.text.parse::<u64>().map_err(|_| err)
+    }
+
+    fn expect_ident(&mut self, what: &str) -> Result<String, ScenarioError> {
+        Ok(self.expect_kind(TokKind::Ident, what)?.text)
+    }
+
+    /// `seen` guard: error on the second occurrence of a scalar item.
+    fn once(&self, tok: &Token, seen: &mut bool) -> Result<(), ScenarioError> {
+        if *seen {
+            Err(self.err_at(tok, format!("duplicate `{}`", tok.text)))
+        } else {
+            *seen = true;
+            Ok(())
+        }
+    }
+
+    fn scenario(&mut self) -> Result<ScenarioAst, ScenarioError> {
+        self.expect_kw("scenario")?;
+        let name = self.expect_str("a scenario name string")?;
+        self.expect_kind(TokKind::LBrace, "`{`")?;
+        let mut ast = ScenarioAst {
+            name,
+            seed: 0,
+            model: "tiny".into(),
+            attn_gpu: "ampere".into(),
+            expert_gpu: None,
+            horizon: None,
+            micro_batches: None,
+            prefill: None,
+            skew: None,
+            rebalance: None,
+            tenants: Vec::new(),
+            phases: Vec::new(),
+            injects: Vec::new(),
+        };
+        let mut seen = [false; 11];
+        loop {
+            if self.cur().kind == TokKind::RBrace {
+                break;
+            }
+            if self.cur().kind != TokKind::Ident {
+                return Err(self.expected("a scenario item or `}`"));
+            }
+            let tok = self.cur().clone();
+            match tok.text.as_str() {
+                "seed" => {
+                    self.once(&tok, &mut seen[0])?;
+                    self.bump();
+                    ast.seed = self.expect_int("an integer seed")?;
+                }
+                "model" => {
+                    self.once(&tok, &mut seen[1])?;
+                    self.bump();
+                    ast.model = self.expect_ident("a model name")?;
+                }
+                "gpu" => {
+                    self.once(&tok, &mut seen[2])?;
+                    self.bump();
+                    ast.attn_gpu = self.expect_ident("a gpu name")?;
+                    ast.expert_gpu = None;
+                }
+                "attention-gpu" => {
+                    self.once(&tok, &mut seen[2])?;
+                    self.bump();
+                    ast.attn_gpu = self.expect_ident("a gpu name")?;
+                }
+                "expert-gpu" => {
+                    self.once(&tok, &mut seen[3])?;
+                    self.bump();
+                    ast.expert_gpu = Some(self.expect_ident("a gpu name")?);
+                }
+                "horizon" => {
+                    self.once(&tok, &mut seen[4])?;
+                    self.bump();
+                    ast.horizon = Some(self.expect_num("a horizon in seconds")?);
+                }
+                "micro-batches" => {
+                    self.once(&tok, &mut seen[5])?;
+                    self.bump();
+                    ast.micro_batches = Some(self.expect_int("a micro-batch count")? as usize);
+                }
+                "prefill" => {
+                    self.once(&tok, &mut seen[6])?;
+                    self.bump();
+                    ast.prefill = Some(self.expect_int("a prefill node count")? as usize);
+                }
+                "skew" => {
+                    self.once(&tok, &mut seen[7])?;
+                    self.bump();
+                    ast.skew = Some(self.expect_num("a Zipf skew")?);
+                }
+                "rebalance" => {
+                    self.once(&tok, &mut seen[8])?;
+                    self.bump();
+                    ast.rebalance = Some(self.expect_num("a re-balance interval in seconds")?);
+                }
+                "tenant" => {
+                    self.bump();
+                    let name = self.expect_str("a tenant name string")?;
+                    self.expect_kw("weight")?;
+                    let weight = self.expect_num("a traffic weight")?;
+                    self.expect_kw("slo")?;
+                    let slo = self.expect_num("an SLO in seconds")?;
+                    ast.tenants.push(TenantAst { name, weight, slo });
+                }
+                "workload" => {
+                    self.once(&tok, &mut seen[9])?;
+                    self.bump();
+                    self.expect_kind(TokKind::LBrace, "`{`")?;
+                    while !matches!(self.cur().kind, TokKind::RBrace) {
+                        ast.phases.push(self.phase()?);
+                    }
+                    self.bump();
+                }
+                "inject" => {
+                    self.once(&tok, &mut seen[10])?;
+                    self.bump();
+                    self.expect_kind(TokKind::LBrace, "`{`")?;
+                    while !matches!(self.cur().kind, TokKind::RBrace) {
+                        ast.injects.push(self.inject()?);
+                    }
+                    self.bump();
+                }
+                _ => return Err(self.expected("a scenario item or `}`")),
+            }
+        }
+        self.bump(); // the scenario `}`
+        if self.cur().kind != TokKind::Eof {
+            return Err(self.expected("end of input"));
+        }
+        Ok(ast)
+    }
+
+    fn phase(&mut self) -> Result<PhaseAst, ScenarioError> {
+        self.expect_kw("phase")?;
+        let name = self.expect_str("a phase name string")?;
+        self.expect_kind(TokKind::LBrace, "`{`")?;
+        let mut duration: Option<f64> = None;
+        let mut rate: Option<RateAst> = None;
+        let mut input = DEFAULT_INPUT;
+        let mut output = DEFAULT_OUTPUT;
+        let mut sigma = DEFAULT_SIGMA;
+        let mut mix: Option<Vec<f64>> = None;
+        let mut seen = [false; 6];
+        loop {
+            if self.cur().kind == TokKind::RBrace {
+                break;
+            }
+            if self.cur().kind != TokKind::Ident {
+                return Err(self.expected("a phase item or `}`"));
+            }
+            let tok = self.cur().clone();
+            match tok.text.as_str() {
+                "duration" => {
+                    self.once(&tok, &mut seen[0])?;
+                    self.bump();
+                    duration = Some(self.expect_num("a duration in seconds")?);
+                }
+                "rate" => {
+                    self.once(&tok, &mut seen[1])?;
+                    self.bump();
+                    rate = Some(self.rate()?);
+                }
+                "input" => {
+                    self.once(&tok, &mut seen[2])?;
+                    self.bump();
+                    input = self.expect_num("a median prompt length")?;
+                }
+                "output" => {
+                    self.once(&tok, &mut seen[3])?;
+                    self.bump();
+                    output = self.expect_num("a median output length")?;
+                }
+                "sigma" => {
+                    self.once(&tok, &mut seen[4])?;
+                    self.bump();
+                    sigma = self.expect_num("a log-normal sigma")?;
+                }
+                "mix" => {
+                    self.once(&tok, &mut seen[5])?;
+                    self.bump();
+                    let mut weights = vec![self.expect_num("a tenant weight")?];
+                    while self.cur().kind == TokKind::Num {
+                        weights.push(self.bump().num);
+                    }
+                    mix = Some(weights);
+                }
+                _ => return Err(self.expected("a phase item or `}`")),
+            }
+        }
+        let close = self.bump(); // the phase `}`
+        let duration = duration
+            .ok_or_else(|| self.err_at(&close, format!("phase \"{name}\" is missing `duration`")))?;
+        let rate = rate
+            .ok_or_else(|| self.err_at(&close, format!("phase \"{name}\" is missing `rate`")))?;
+        Ok(PhaseAst {
+            name,
+            duration,
+            rate,
+            input,
+            output,
+            sigma,
+            mix,
+        })
+    }
+
+    fn rate(&mut self) -> Result<RateAst, ScenarioError> {
+        if self.eat_kw("constant") {
+            Ok(RateAst::Constant(self.expect_num("a rate in requests/s")?))
+        } else if self.eat_kw("ramp") {
+            let from = self.expect_num("a starting rate")?;
+            self.expect_kind(TokKind::Arrow, "`->`")?;
+            let to = self.expect_num("an ending rate")?;
+            Ok(RateAst::Ramp(from, to))
+        } else if self.eat_kw("sine") {
+            let mean = self.expect_num("a mean rate")?;
+            self.expect_kw("amplitude")?;
+            let amplitude = self.expect_num("a relative amplitude")?;
+            self.expect_kw("period")?;
+            let period = self.expect_num("a period in seconds")?;
+            Ok(RateAst::Sine {
+                mean,
+                amplitude,
+                period,
+            })
+        } else {
+            Err(self.expected("`constant`, `ramp`, or `sine`"))
+        }
+    }
+
+    fn inject(&mut self) -> Result<InjectAst, ScenarioError> {
+        self.expect_kw("at")?;
+        let at = self.expect_num("a time in seconds")?;
+        let action = if self.eat_kw("fail") {
+            self.expect_kw("attention")?;
+            ActionAst::FailAttention(self.expect_int("an attention-node index")? as usize)
+        } else if self.eat_kw("recover") {
+            self.expect_kw("attention")?;
+            ActionAst::RecoverAttention(self.expect_int("an attention-node index")? as usize)
+        } else if self.eat_kw("straggle") {
+            self.expect_kw("attention")?;
+            let node = self.expect_int("an attention-node index")? as usize;
+            self.expect_kw("factor")?;
+            let factor = self.expect_num("a slowdown factor")?;
+            ActionAst::StraggleAttention { node, factor }
+        } else if self.eat_kw("degrade") {
+            self.expect_kw("nic")?;
+            self.expect_kw("factor")?;
+            ActionAst::DegradeNic {
+                factor: self.expect_num("a slowdown factor")?,
+            }
+        } else if self.eat_kw("restore") {
+            self.expect_kw("nic")?;
+            ActionAst::RestoreNic
+        } else if self.eat_kw("shrink") {
+            self.expect_kw("experts")?;
+            ActionAst::ShrinkExperts(self.expect_int("an expert-node count")? as usize)
+        } else if self.eat_kw("grow") {
+            self.expect_kw("experts")?;
+            ActionAst::GrowExperts(self.expect_int("an expert-node count")? as usize)
+        } else {
+            return Err(self.expected(
+                "`fail`, `recover`, `straggle`, `degrade`, `restore`, `shrink`, or `grow`",
+            ));
+        };
+        Ok(InjectAst { at, action })
+    }
+}

@@ -97,6 +97,13 @@ pub fn effective_shards(cfg: &ClusterSimConfig, requested: usize) -> usize {
     if matches!(cfg.mode, EngineMode::Colocated(_)) {
         return 1;
     }
+    // Fault/elasticity injections address GLOBAL node indices ("fail
+    // attention 3") and mutate shared pools; a shard sees only a slice
+    // of each, so injected scenarios run unsharded — which also makes
+    // their reports trivially identical across requested shard counts.
+    if !cfg.injections.is_empty() {
+        return 1;
+    }
     let mut s = requested
         .max(1)
         .min(cfg.plan.n_a.max(1))
@@ -286,6 +293,14 @@ fn merge_reports(configs: &[ClusterSimConfig], mut reports: Vec<ClusterReport>) 
         acc.combined_copies += r.combined_copies;
         acc.processed_copies += r.processed_copies;
         acc.rebalances += r.rebalances;
+        acc.injections_applied += r.injections_applied;
+        acc.node_failures += r.node_failures;
+        acc.node_recoveries += r.node_recoveries;
+        acc.requeued_requests += r.requeued_requests;
+        acc.lost_kv_blocks += r.lost_kv_blocks;
+        acc.lost_decode_tokens += r.lost_decode_tokens;
+        acc.re_prefilled_tokens += r.re_prefilled_tokens;
+        acc.expert_resizes += r.expert_resizes;
         acc.clamped_past_schedules += r.clamped_past_schedules;
         debug_assert_eq!(acc.tenants.len(), r.tenants.len(), "tenant lists align");
         for (a, b) in acc.tenants.iter_mut().zip(r.tenants) {

@@ -243,6 +243,7 @@ fn run_cell(
                 prefill_chunk: DEFAULT_PREFILL_CHUNK,
                 mode: crate::sim::cluster::EngineMode::Disaggregated,
                 fuse: true,
+                injections: Vec::new(),
             }
         }
     };

@@ -49,9 +49,9 @@ pub trait ArrivalSource: Send {
 }
 
 /// KV-token demand of one request (prompt + output + one block of
-/// partial-block rounding) — shared by both sources so a trace and a
+/// partial-block rounding) — shared by all sources so a trace and a
 /// generator replaying the same requests size the allocator identically.
-fn request_kv_demand(r: &Request) -> u64 {
+pub(crate) fn request_kv_demand(r: &Request) -> u64 {
     (r.input_len + r.output_len) as u64 + KV_BLOCK
 }
 

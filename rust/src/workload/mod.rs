@@ -9,9 +9,11 @@
 //! O(1) state, so simulations only ever hold in-flight requests.
 
 mod arrivals;
+mod phased;
 mod trace;
 
 pub use arrivals::{ArrivalSource, RequestStream, StridedSource, TraceSource};
+pub use phased::{PhaseSpec, PhasedSource, RateCurve};
 pub use trace::{Trace, TraceStats};
 
 use anyhow::bail;

@@ -1,0 +1,353 @@
+//! Phased, non-stationary arrival streams for `msi scenario`.
+//!
+//! A [`PhasedSource`] concatenates [`PhaseSpec`] segments — each with its
+//! own duration, rate curve, prompt/output length regime, and optional
+//! tenant-mix override — into one pull-based [`ArrivalSource`]. This is
+//! how scenario files express diurnal load, flash crowds, tenant-mix
+//! shifts, and prompt-length regime changes as *data* instead of CLI
+//! flags.
+//!
+//! Arrivals are a piecewise non-homogeneous Poisson process: each gap is
+//! drawn from the instantaneous rate at the draw point, and a gap that
+//! would cross the current phase boundary is discarded and redrawn from
+//! the boundary (by memorylessness this is *exact* for constant-rate
+//! phases; for ramp/sine curves the rate is frozen over each gap, a
+//! standard and deterministic approximation). Everything derives from the
+//! construction seed, so replaying a phased stream — including the
+//! [`ArrivalSource::kv_demand`] sizing pass and sharded
+//! [`super::StridedSource`] copies — reproduces the same requests bit for
+//! bit.
+
+use crate::sim::SimRng;
+
+use super::arrivals::request_kv_demand;
+use super::{ArrivalSource, Request};
+
+/// Rates below this are treated as silence: the stream skips to the next
+/// phase boundary instead of drawing astronomically long gaps.
+const MIN_RATE: f64 = 1e-9;
+
+/// Shape of the arrival-rate curve over one phase, in requests/second as
+/// a function of time since the phase started.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RateCurve {
+    /// Constant `rate` for the whole phase (0 = silence).
+    Constant(f64),
+    /// Linear ramp from `from` at the phase start to `to` at its end.
+    Ramp {
+        /// Rate at the phase start.
+        from: f64,
+        /// Rate at the phase end.
+        to: f64,
+    },
+    /// Diurnal-style `mean · (1 + amplitude · sin(2π·t/period))`, clamped
+    /// at zero.
+    Sine {
+        /// Mean rate the curve oscillates around.
+        mean: f64,
+        /// Relative swing (0..=1 keeps the rate non-negative on its own).
+        amplitude: f64,
+        /// Oscillation period in seconds.
+        period: f64,
+    },
+}
+
+impl RateCurve {
+    /// Instantaneous rate `elapsed` seconds into a phase of length
+    /// `duration`, clamped to be non-negative.
+    pub fn at(&self, elapsed: f64, duration: f64) -> f64 {
+        let r = match *self {
+            RateCurve::Constant(r) => r,
+            RateCurve::Ramp { from, to } => {
+                let frac = if duration > 0.0 { elapsed / duration } else { 0.0 };
+                from + (to - from) * frac.clamp(0.0, 1.0)
+            }
+            RateCurve::Sine {
+                mean,
+                amplitude,
+                period,
+            } => {
+                let phase = if period > 0.0 {
+                    std::f64::consts::TAU * elapsed / period
+                } else {
+                    0.0
+                };
+                mean * (1.0 + amplitude * phase.sin())
+            }
+        };
+        r.max(0.0)
+    }
+}
+
+/// One segment of a phased workload timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSpec {
+    /// Segment length in virtual seconds.
+    pub duration: f64,
+    /// Arrival-rate curve over the segment.
+    pub rate: RateCurve,
+    /// Median prompt length (tokens) of requests arriving in the segment.
+    pub median_input: f64,
+    /// Median output length (tokens).
+    pub median_output: f64,
+    /// Log-normal sigma shared by both length draws (0 = deterministic).
+    pub sigma: f64,
+    /// Tenant-mix override for the segment: relative weights, one per
+    /// tenant class. `None` keeps the stream's base mix.
+    pub mix: Option<Vec<f64>>,
+}
+
+/// Pull-based stream over a sequence of [`PhaseSpec`] segments. The
+/// stream ends when the last phase does, so a scenario run without an
+/// explicit horizon quiesces once the timeline is served.
+#[derive(Debug, Clone)]
+pub struct PhasedSource {
+    phases: Vec<PhaseSpec>,
+    /// Base tenant weights (empty or singleton = single-tenant).
+    base_mix: Vec<f64>,
+    max_len: usize,
+    /// Construction seed, kept so `kv_demand` can replay from the start.
+    seed: u64,
+    rng: SimRng,
+    t: f64,
+    next_id: u64,
+}
+
+impl PhasedSource {
+    /// Stream over `phases` with tenant weights `base_mix` (empty for a
+    /// single-tenant workload); lengths are clamped to `[1, max_len]`.
+    pub fn new(phases: Vec<PhaseSpec>, base_mix: Vec<f64>, max_len: usize, seed: u64) -> Self {
+        assert!(!phases.is_empty(), "phased source needs at least one phase");
+        Self {
+            phases,
+            base_mix,
+            max_len: max_len.max(1),
+            seed,
+            rng: SimRng::new(seed),
+            t: 0.0,
+            next_id: 0,
+        }
+    }
+
+    /// Total timeline length in seconds.
+    pub fn total_duration(&self) -> f64 {
+        self.phases.iter().map(|p| p.duration.max(0.0)).sum()
+    }
+
+    /// Index and `[start, end)` window of the phase containing `t`, or
+    /// `None` past the end of the timeline.
+    fn phase_at(&self, t: f64) -> Option<(usize, f64, f64)> {
+        let mut start = 0.0;
+        for (i, p) in self.phases.iter().enumerate() {
+            let end = start + p.duration.max(0.0);
+            if t < end {
+                return Some((i, start, end));
+            }
+            start = end;
+        }
+        None
+    }
+
+    fn draw_tenant(&mut self, phase: usize) -> usize {
+        let mix = self.phases[phase]
+            .mix
+            .as_deref()
+            .unwrap_or(&self.base_mix);
+        if mix.len() <= 1 {
+            return 0;
+        }
+        let total: f64 = mix.iter().sum();
+        let mut u = self.rng.uniform() * total;
+        for (i, &w) in mix.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        mix.len() - 1
+    }
+}
+
+impl ArrivalSource for PhasedSource {
+    fn next_request(&mut self) -> Option<Request> {
+        loop {
+            let (idx, start, end) = self.phase_at(self.t)?;
+            let rate = self.phases[idx].rate.at(self.t - start, end - start);
+            if rate < MIN_RATE {
+                // Silent stretch: jump to the phase boundary.
+                self.t = end;
+                continue;
+            }
+            let gap = self.rng.exponential(1.0 / rate);
+            if self.t + gap >= end {
+                // The gap crosses into the next phase; redraw there (exact
+                // for constant rates by memorylessness).
+                self.t = end;
+                continue;
+            }
+            self.t += gap;
+            let p = &self.phases[idx];
+            let (median_input, median_output, sigma) = (p.median_input, p.median_output, p.sigma);
+            let id = self.next_id;
+            self.next_id += 1;
+            let input_len = (self.rng.lognormal_median(median_input, sigma) as usize)
+                .clamp(1, self.max_len);
+            let output_len = (self.rng.lognormal_median(median_output, sigma) as usize)
+                .clamp(1, self.max_len);
+            let tenant = self.draw_tenant(idx);
+            return Some(Request {
+                id,
+                arrival: self.t,
+                input_len,
+                output_len,
+                tenant,
+            });
+        }
+    }
+
+    fn kv_demand(&self, cap: u64) -> u64 {
+        // O(1)-memory replay from the construction seed, with the same
+        // cap-saturated early stop as the other generator sources.
+        let mut replay = Self::new(
+            self.phases.clone(),
+            self.base_mix.clone(),
+            self.max_len,
+            self.seed,
+        );
+        let mut sum = 0u64;
+        while let Some(r) = replay.next_request() {
+            sum += request_kv_demand(&r);
+            if sum >= cap {
+                break;
+            }
+        }
+        sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phase(duration: f64, rate: RateCurve) -> PhaseSpec {
+        PhaseSpec {
+            duration,
+            rate,
+            median_input: 64.0,
+            median_output: 16.0,
+            sigma: 0.4,
+            mix: None,
+        }
+    }
+
+    #[test]
+    fn arrivals_stay_ordered_and_inside_the_timeline() {
+        let mut src = PhasedSource::new(
+            vec![
+                phase(5.0, RateCurve::Constant(40.0)),
+                phase(2.0, RateCurve::Constant(0.0)),
+                phase(
+                    5.0,
+                    RateCurve::Sine {
+                        mean: 30.0,
+                        amplitude: 0.8,
+                        period: 2.5,
+                    },
+                ),
+            ],
+            Vec::new(),
+            4096,
+            7,
+        );
+        let mut last = 0.0;
+        let mut n = 0u64;
+        let mut silent = 0u64;
+        while let Some(r) = src.next_request() {
+            assert!(r.arrival >= last, "non-decreasing arrivals");
+            assert!(r.arrival < 12.0, "arrival inside the timeline");
+            if r.arrival >= 5.0 && r.arrival < 7.0 {
+                silent += 1;
+            }
+            last = r.arrival;
+            n += 1;
+        }
+        assert!(n > 100, "got {n} arrivals");
+        assert_eq!(silent, 0, "zero-rate phase stays silent");
+    }
+
+    #[test]
+    fn replay_is_bit_identical() {
+        let mk = || {
+            PhasedSource::new(
+                vec![
+                    phase(3.0, RateCurve::Ramp { from: 5.0, to: 80.0 }),
+                    phase(3.0, RateCurve::Constant(20.0)),
+                ],
+                vec![3.0, 1.0],
+                4096,
+                11,
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        loop {
+            let (x, y) = (a.next_request(), b.next_request());
+            assert_eq!(x, y);
+            if x.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn ramp_shifts_arrival_mass_toward_the_heavy_end() {
+        let mut src = PhasedSource::new(
+            vec![phase(10.0, RateCurve::Ramp { from: 2.0, to: 60.0 })],
+            Vec::new(),
+            4096,
+            3,
+        );
+        let (mut early, mut late) = (0u64, 0u64);
+        while let Some(r) = src.next_request() {
+            if r.arrival < 5.0 {
+                early += 1;
+            } else {
+                late += 1;
+            }
+        }
+        assert!(late > early * 2, "ramp skews arrivals: {early} vs {late}");
+    }
+
+    #[test]
+    fn mix_override_changes_the_tenant_draw() {
+        let mut p0 = phase(4.0, RateCurve::Constant(50.0));
+        p0.mix = Some(vec![0.0, 1.0]); // all traffic from tenant 1
+        let mut src = PhasedSource::new(vec![p0], vec![1.0, 1.0], 4096, 5);
+        let mut n = 0u64;
+        while let Some(r) = src.next_request() {
+            assert_eq!(r.tenant, 1);
+            n += 1;
+        }
+        assert!(n > 50);
+    }
+
+    #[test]
+    fn kv_demand_matches_a_full_replay_and_respects_the_cap() {
+        let src = PhasedSource::new(
+            vec![phase(4.0, RateCurve::Constant(25.0))],
+            Vec::new(),
+            4096,
+            9,
+        );
+        let exact = src.kv_demand(u64::MAX);
+        assert!(exact > 0);
+        let capped = src.kv_demand(exact / 3);
+        assert!(capped >= exact / 3 && capped <= exact);
+        // The sizing pass must not consume the stream.
+        let mut consume = src.clone();
+        let mut sum = 0u64;
+        while let Some(r) = consume.next_request() {
+            sum += (r.input_len + r.output_len) as u64 + crate::sim::engine::KV_BLOCK;
+        }
+        assert_eq!(sum, exact);
+    }
+}

@@ -1,0 +1,515 @@
+//! Scenario-language test suite: the fixture corpus pins the parser's
+//! golden diagnostics, hand-rolled property tests pin the AST
+//! pretty-print round-trip and run determinism, conservation observers
+//! pin the token/KV accounting under every injected fault type, and the
+//! committed `scenarios/` library is exercised fused vs stepwise.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use megascale_infer::sim::scenario::{
+    compile, load, parse, ActionAst, InjectAst, PhaseAst, RateAst, ScenarioAst, TenantAst,
+    DEFAULT_INPUT, DEFAULT_OUTPUT, DEFAULT_SIGMA,
+};
+use megascale_infer::sim::{run_sharded, ShardPlan, SimRng};
+use megascale_infer::workload::{ArrivalSource, StridedSource};
+
+fn fixture_dir(sub: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/scenario")
+        .join(sub)
+}
+
+/// All files with extension `ext` in `dir`, sorted by name so failures
+/// replay in a stable order.
+fn files_with_ext(dir: &Path, ext: &str) -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", dir.display()))
+        .map(|e| e.expect("directory entry").path())
+        .filter(|p| p.extension().is_some_and(|x| x == ext))
+        .collect();
+    files.sort();
+    files
+}
+
+fn read(path: &Path) -> String {
+    fs::read_to_string(path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+// ---------------------------------------------------------------- corpus
+
+/// Every positive fixture parses, and its canonical pretty-print parses
+/// back to an identical AST.
+#[test]
+fn ok_corpus_parses_and_round_trips() {
+    let files = files_with_ext(&fixture_dir("ok"), "msc");
+    assert!(!files.is_empty(), "empty positive corpus");
+    for path in files {
+        let src = read(&path);
+        let ast = parse(&src)
+            .unwrap_or_else(|e| panic!("{} failed to parse: {e}", path.display()));
+        let printed = ast.pretty();
+        let reparsed = parse(&printed).unwrap_or_else(|e| {
+            panic!("{}: pretty-print failed to re-parse: {e}", path.display())
+        });
+        assert_eq!(ast, reparsed, "{}: pretty-print round-trip", path.display());
+    }
+}
+
+/// Every negative fixture fails with exactly the `line:col: message`
+/// pinned in its sibling `.err` golden file.
+#[test]
+fn err_corpus_fails_with_golden_messages() {
+    let files = files_with_ext(&fixture_dir("err"), "msc");
+    assert!(!files.is_empty(), "empty negative corpus");
+    for path in files {
+        let src = read(&path);
+        let golden_path = path.with_extension("err");
+        let golden = read(&golden_path);
+        let err = parse(&src).map(|_| ()).expect_err(&format!(
+            "{} unexpectedly parsed (golden: {})",
+            path.display(),
+            golden.trim()
+        ));
+        assert_eq!(
+            err.to_string(),
+            golden.trim(),
+            "{}: diagnostic drifted from its golden",
+            path.display()
+        );
+    }
+}
+
+/// Corpus meta-test: both directories are populated and every golden is
+/// paired with a fixture (and vice versa) — an orphaned file is a
+/// corpus-maintenance bug, not a silent skip.
+#[test]
+fn corpus_is_paired_and_nonempty() {
+    let ok = files_with_ext(&fixture_dir("ok"), "msc");
+    assert!(ok.len() >= 5, "positive corpus too small: {}", ok.len());
+    let err_dir = fixture_dir("err");
+    let mscs = files_with_ext(&err_dir, "msc");
+    let goldens = files_with_ext(&err_dir, "err");
+    assert!(mscs.len() >= 10, "negative corpus too small: {}", mscs.len());
+    assert_eq!(
+        mscs.len(),
+        goldens.len(),
+        "every negative fixture needs exactly one .err golden"
+    );
+    for m in &mscs {
+        assert!(
+            m.with_extension("err").exists(),
+            "{} has no golden .err",
+            m.display()
+        );
+    }
+}
+
+// ------------------------------------------------------------- proptests
+
+fn cases(n: usize) -> impl Iterator<Item = (u64, SimRng)> {
+    (0..n as u64).map(|seed| (seed, SimRng::new(seed.wrapping_mul(0x9e37_79b9))))
+}
+
+/// A quarter-resolution draw in `[lo, hi)`: keeps generated sources
+/// readable; `{:?}` round-trips any `f64` regardless.
+fn qnum(rng: &mut SimRng, lo: f64, hi: f64) -> f64 {
+    let steps = (((hi - lo) * 4.0) as usize).max(1);
+    lo + rng.below(steps) as f64 / 4.0
+}
+
+fn gen_rate(rng: &mut SimRng) -> RateAst {
+    match rng.below(3) {
+        0 => RateAst::Constant(qnum(rng, 0.0, 100.0)),
+        1 => RateAst::Ramp(qnum(rng, 0.0, 50.0), qnum(rng, 0.0, 50.0)),
+        _ => RateAst::Sine {
+            mean: qnum(rng, 1.0, 40.0),
+            amplitude: qnum(rng, 0.0, 1.0),
+            period: qnum(rng, 1.0, 20.0),
+        },
+    }
+}
+
+fn gen_action(rng: &mut SimRng) -> ActionAst {
+    match rng.below(7) {
+        0 => ActionAst::FailAttention(rng.below(4)),
+        1 => ActionAst::RecoverAttention(rng.below(4)),
+        2 => ActionAst::StraggleAttention {
+            node: rng.below(4),
+            factor: qnum(rng, 0.25, 4.0),
+        },
+        3 => ActionAst::DegradeNic {
+            factor: qnum(rng, 0.25, 4.0),
+        },
+        4 => ActionAst::RestoreNic,
+        5 => ActionAst::ShrinkExperts(1 + rng.below(3)),
+        _ => ActionAst::GrowExperts(1 + rng.below(3)),
+    }
+}
+
+fn gen_scenario(case: u64, rng: &mut SimRng) -> ScenarioAst {
+    let mut tenants = Vec::new();
+    for i in 0..rng.below(3) {
+        tenants.push(TenantAst {
+            name: format!("t{i}"),
+            weight: qnum(rng, 0.25, 4.0),
+            slo: qnum(rng, 0.5, 60.0),
+        });
+    }
+    let mut phases = Vec::new();
+    for i in 0..1 + rng.below(3) {
+        let mix = if !tenants.is_empty() && rng.below(2) == 1 {
+            let mut w = Vec::new();
+            for _ in 0..tenants.len() {
+                w.push(qnum(rng, 0.0, 4.0));
+            }
+            Some(w)
+        } else {
+            None
+        };
+        phases.push(PhaseAst {
+            name: format!("p{i}"),
+            duration: qnum(rng, 0.25, 10.0),
+            rate: gen_rate(rng),
+            input: if rng.below(2) == 0 {
+                DEFAULT_INPUT
+            } else {
+                qnum(rng, 1.0, 512.0)
+            },
+            output: if rng.below(2) == 0 {
+                DEFAULT_OUTPUT
+            } else {
+                qnum(rng, 1.0, 128.0)
+            },
+            sigma: if rng.below(2) == 0 {
+                DEFAULT_SIGMA
+            } else {
+                qnum(rng, 0.0, 1.5)
+            },
+            mix,
+        });
+    }
+    let mut injects = Vec::new();
+    let mut t = 0.0;
+    for _ in 0..rng.below(6) {
+        t += qnum(rng, 0.0, 3.0);
+        let action = gen_action(rng);
+        injects.push(InjectAst { at: t, action });
+    }
+    ScenarioAst {
+        name: format!("gen-{case}"),
+        seed: rng.below(100_000) as u64,
+        model: ["tiny", "mixtral", "dbrx", "scaled-moe"][rng.below(4)].to_string(),
+        attn_gpu: ["ampere", "h20", "l40s"][rng.below(3)].to_string(),
+        expert_gpu: if rng.below(2) == 0 {
+            None
+        } else {
+            Some("l40s".to_string())
+        },
+        horizon: if rng.below(2) == 0 {
+            None
+        } else {
+            Some(qnum(rng, 1.0, 60.0))
+        },
+        micro_batches: if rng.below(2) == 0 {
+            None
+        } else {
+            Some(1 + rng.below(4))
+        },
+        prefill: if rng.below(2) == 0 {
+            None
+        } else {
+            Some(rng.below(8))
+        },
+        skew: if rng.below(2) == 0 {
+            None
+        } else {
+            Some(qnum(rng, 0.0, 2.0))
+        },
+        rebalance: if rng.below(2) == 0 {
+            None
+        } else {
+            Some(qnum(rng, 0.5, 8.0))
+        },
+        tenants,
+        phases,
+        injects,
+    }
+}
+
+/// AST → pretty-print → parse is the identity, for every AST the
+/// generator can produce (the satellite property pinning the canonical
+/// form against grammar drift).
+#[test]
+fn prop_ast_pretty_print_round_trips() {
+    for (case, mut rng) in cases(300) {
+        let ast = gen_scenario(case, &mut rng);
+        let printed = ast.pretty();
+        let reparsed = parse(&printed)
+            .unwrap_or_else(|e| panic!("case {case}: pretty output failed to parse: {e}\n{printed}"));
+        assert_eq!(ast, reparsed, "case {case}: round-trip drift\n{printed}");
+    }
+}
+
+// --------------------------------------------------------- determinism
+
+/// A small fault-bearing scenario used by the determinism properties;
+/// `{seed}` is substituted per case.
+fn fault_scenario_src(seed: u64) -> String {
+    format!(
+        r#"scenario "det" {{
+  seed {seed}
+  model tiny
+  gpu ampere
+  workload {{
+    phase "steady" {{ duration 4 rate constant 30 input 96 output 24 sigma 0.3 }}
+  }}
+  inject {{
+    at 0.7 fail attention 1
+    at 1.3 degrade nic factor 2.0
+    at 2.1 recover attention 1
+    at 2.9 restore nic
+  }}
+}}"#
+    )
+}
+
+fn report_json(rep: &megascale_infer::sim::ClusterReport) -> String {
+    rep.to_json().to_string()
+}
+
+/// Same scenario + same seed → byte-identical report JSON across runs,
+/// and across fused vs stepwise stepping.
+#[test]
+fn prop_same_seed_same_bytes() {
+    for seed in [0u64, 7, 23] {
+        let ast = parse(&fault_scenario_src(seed)).expect("parse");
+        let compiled = compile(&ast).expect("compile");
+        let a = report_json(&compiled.run());
+        let b = report_json(&compiled.run());
+        assert_eq!(a, b, "seed {seed}: repeat run diverged");
+        let mut stepwise = compiled.clone();
+        stepwise.cfg.fuse = false;
+        let c = report_json(&stepwise.run());
+        assert_eq!(a, c, "seed {seed}: fused vs stepwise diverged");
+    }
+}
+
+/// Fault scenarios pin global node indices, so any `--shards` request
+/// collapses to one shard — and the report stays byte-identical to the
+/// direct run for every requested shard/worker combination.
+#[test]
+fn fault_scenarios_identical_across_shard_requests() {
+    let ast = parse(&fault_scenario_src(5)).expect("parse");
+    let compiled = compile(&ast).expect("compile");
+    let direct = report_json(&compiled.run());
+    for (shards, workers) in [(2, 1), (4, 2)] {
+        let base = compiled.source();
+        let rep = run_sharded(
+            &compiled.cfg,
+            ShardPlan::new(shards).with_workers(workers),
+            move |shard, stride| -> Box<dyn ArrivalSource> {
+                Box::new(StridedSource::new(base.clone(), shard, stride))
+            },
+        );
+        assert_eq!(
+            direct,
+            report_json(&rep),
+            "shards {shards} workers {workers} diverged from the direct run"
+        );
+    }
+}
+
+/// An injection-free phased scenario shards normally; the merged report
+/// must not depend on how many worker threads step the shards.
+#[test]
+fn phased_scenarios_identical_across_worker_counts() {
+    let src = r#"scenario "phased" {
+  seed 13
+  model tiny
+  gpu ampere
+  workload {
+    phase "calm"  { duration 3 rate constant 20 input 96 output 24 sigma 0.3 }
+    phase "spike" { duration 1 rate ramp 40 -> 120 input 48 output 16 sigma 0.3 }
+  }
+}"#;
+    let compiled = compile(&parse(src).expect("parse")).expect("compile");
+    let mut reports = Vec::new();
+    for workers in [1usize, 4] {
+        let base = compiled.source();
+        let rep = run_sharded(
+            &compiled.cfg,
+            ShardPlan::new(2).with_workers(workers),
+            move |shard, stride| -> Box<dyn ArrivalSource> {
+                Box::new(StridedSource::new(base.clone(), shard, stride))
+            },
+        );
+        reports.push(report_json(&rep));
+    }
+    assert_eq!(reports[0], reports[1], "worker count changed the report");
+}
+
+// -------------------------------------------------------- conservation
+
+/// Injection schedules covering every fault type, alone and combined
+/// (the last one fires everything at odd mid-iteration instants).
+const FAULT_SCHEDULES: &[&str] = &[
+    "",
+    "at 1.0 fail attention 1",
+    "at 0.8 fail attention 0 at 1.6 fail attention 1 \
+     at 2.4 recover attention 0 at 3.2 recover attention 1",
+    "at 1.0 straggle attention 0 factor 4.0 at 3.0 straggle attention 0 factor 1.0",
+    "at 0.5 degrade nic factor 3.0 at 2.5 restore nic",
+    "at 1.0 shrink experts 3 at 3.0 grow experts 3",
+    "at 0.137 fail attention 0 at 0.81 degrade nic factor 2.0 \
+     at 1.44 shrink experts 2 at 2.2 recover attention 0 \
+     at 2.9 restore nic at 3.6 grow experts 2",
+];
+
+/// Token / KV-block conservation at quiescence under every fault type:
+/// lost in-flight decode tokens and re-prefilled prompts are accounted
+/// exactly, no KV slot leaks, and every generated request completes.
+#[test]
+fn conservation_holds_under_every_fault_type() {
+    for (i, sched) in FAULT_SCHEDULES.iter().enumerate() {
+        for seed in [3u64, 17] {
+            let inject_block = if sched.is_empty() {
+                String::new()
+            } else {
+                format!("inject {{ {sched} }}")
+            };
+            let src = format!(
+                r#"scenario "conserve-{i}" {{
+  seed {seed}
+  model tiny
+  gpu ampere
+  workload {{
+    phase "steady" {{ duration 5 rate constant 30 input 96 output 24 sigma 0.3 }}
+  }}
+  {inject_block}
+}}"#
+            );
+            let compiled = compile(&parse(&src).expect("parse")).expect("compile");
+            let tag = format!("schedule {i} seed {seed}");
+
+            // Replay the arrival stream independently to get the ground
+            // truth the report must reconcile against.
+            let mut source = compiled.source();
+            let (mut n, mut input_sum, mut output_sum) = (0u64, 0u64, 0u64);
+            while let Some(r) = source.next_request() {
+                n += 1;
+                input_sum += r.input_len as u64;
+                output_sum += r.output_len as u64;
+            }
+            assert!(n > 0, "{tag}: generator produced no requests");
+
+            let rep = compiled.run();
+            assert_eq!(rep.rejected, 0, "{tag}: nothing is infeasibly large");
+            assert_eq!(rep.unserved_queued, 0, "{tag}: quiescence serves everyone");
+            assert_eq!(rep.completed, n, "{tag}: every request completes");
+            assert_eq!(rep.e2e.count(), n, "{tag}: one E2E sample per request");
+            assert_eq!(
+                rep.kv_blocks_in_use_at_end, 0,
+                "{tag}: KV slots leaked across failures"
+            );
+            assert_eq!(
+                rep.tokens,
+                output_sum + rep.lost_decode_tokens,
+                "{tag}: decode tokens = final outputs + discarded in-flight work"
+            );
+            if compiled.cfg.prefill_nodes > 0 {
+                assert_eq!(
+                    rep.prefilled_tokens,
+                    input_sum + rep.re_prefilled_tokens,
+                    "{tag}: prefilled tokens = prompts + re-prefills"
+                );
+            }
+            assert!(
+                rep.ttft.count() >= rep.completed,
+                "{tag}: a completed request lost its TTFT sample"
+            );
+            assert!(
+                rep.ttft.count() - rep.completed <= rep.requeued_requests,
+                "{tag}: more duplicate TTFT samples than requeues"
+            );
+            assert_eq!(
+                rep.dispatched_copies, rep.processed_copies,
+                "{tag}: dispatched expert copies all processed"
+            );
+            assert_eq!(
+                rep.dispatched_copies, rep.combined_copies,
+                "{tag}: processed expert copies all combined"
+            );
+            assert_eq!(
+                rep.injections_applied,
+                compiled.cfg.injections.len() as u64,
+                "{tag}: every scheduled injection fired"
+            );
+            if sched.is_empty() {
+                assert_eq!(rep.requeued_requests, 0, "{tag}: requeues without faults");
+                assert_eq!(rep.lost_kv_blocks, 0, "{tag}: losses without faults");
+                assert_eq!(rep.lost_decode_tokens, 0, "{tag}: losses without faults");
+            }
+        }
+    }
+}
+
+// --------------------------------------------------- committed library
+
+fn scenario_library() -> Vec<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios");
+    files_with_ext(&dir, "msc")
+}
+
+/// The committed scenario library loads, and every scenario's report is
+/// byte-identical between the fused fast path and the stepwise
+/// reference — including `midfault-regression.msc`, whose injections
+/// all land mid-iteration.
+#[test]
+fn committed_scenarios_fused_equals_stepwise() {
+    let lib = scenario_library();
+    assert!(lib.len() >= 6, "scenario library too small: {}", lib.len());
+    let names: Vec<String> = lib
+        .iter()
+        .map(|p| p.file_stem().expect("stem").to_string_lossy().into_owned())
+        .collect();
+    for required in ["node-failure", "flash-crowd", "midfault-regression"] {
+        assert!(
+            names.iter().any(|n| n == required),
+            "scenario library is missing {required}.msc"
+        );
+    }
+    for path in lib {
+        let compiled = load(path.to_str().expect("utf-8 path"))
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(compiled.cfg.fuse, "scenarios default to the fused path");
+        let fused = report_json(&compiled.run());
+        let mut stepwise = compiled.clone();
+        stepwise.cfg.fuse = false;
+        assert_eq!(
+            fused,
+            report_json(&stepwise.run()),
+            "{}: fused vs stepwise drift",
+            path.display()
+        );
+    }
+}
+
+/// The node-failure scenario actually exercises the fault machinery —
+/// a regression here means injections silently stopped doing anything.
+#[test]
+fn node_failure_scenario_loses_and_recovers_work() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios");
+    let compiled = load(dir.join("node-failure.msc").to_str().expect("utf-8 path"))
+        .expect("load node-failure.msc");
+    let rep = compiled.run();
+    assert_eq!(rep.node_failures, 1);
+    assert_eq!(rep.node_recoveries, 1);
+    assert_eq!(rep.injections_applied, 2);
+    assert!(
+        rep.requeued_requests > 0,
+        "failing a loaded node must displace in-flight requests"
+    );
+    assert_eq!(rep.unserved_queued, 0);
+    assert_eq!(rep.kv_blocks_in_use_at_end, 0);
+}
