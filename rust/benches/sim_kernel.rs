@@ -159,17 +159,70 @@ fn main() {
         black_box(h.percentile(99.0));
     }
 
+    // ---- macro-stepping: span detection + bulk advance ----
+    // A uniform closed-loop decode batch is one long externally-quiet
+    // span: the first entry times the span probe plus the bulk
+    // advance/flush machinery, the second the per-iteration boundary
+    // loop it replaces (same trace, macro-stepping off). Their gap is
+    // the per-span win `diurnal_*` in BENCH_sim.json measures at scale.
+    {
+        use megascale_infer::config::{ClusterSpec, GpuKind, ModelConfig};
+        use megascale_infer::plan::PlanSearcher;
+        use megascale_infer::sim::{ClusterEngine, ClusterSimConfig, ExpertPopularity};
+        use megascale_infer::workload::{RequestStream, WorkloadSpec};
+
+        let model = ModelConfig::tiny();
+        let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+        let spec = WorkloadSpec {
+            median_input: 32.0,
+            median_output: 256.0,
+            sigma: 0.0,
+            ..Default::default()
+        };
+        let mut plan = PlanSearcher::new(model.clone(), cluster.clone(), spec.avg_seq_len())
+            .search()
+            .expect("tiny plan");
+        plan.n_a = 1;
+        plan.m = 1;
+        plan.global_batch = 256;
+        plan.n_p = 0;
+        let cfg = |macro_step: bool| ClusterSimConfig {
+            popularity: ExpertPopularity::Ideal,
+            seed: 17,
+            macro_step,
+            ..ClusterSimConfig::new(model.clone(), cluster.clone(), plan.clone())
+        };
+        run("engine span detect+bulk advance, 256x256", quick, || {
+            let rep = ClusterEngine::new(
+                cfg(true),
+                Box::new(RequestStream::new(spec.clone(), 256, 17)),
+            )
+            .run();
+            black_box(rep.iterations);
+        });
+        run("engine stepwise boundary loop, 256x256", quick, || {
+            let rep = ClusterEngine::new(
+                cfg(false),
+                Box::new(RequestStream::new(spec.clone(), 256, 17)),
+            )
+            .run();
+            black_box(rep.iterations);
+        });
+    }
+
     // ---- end-to-end: a small streamed engine run ----
     // The real composition of all of the above; `msi sweep --bench` runs
     // the full-size (1M-request) version and maintains BENCH_sim.json.
+    // `None`: the bench binary may run outside the repo root, so the
+    // scenario-library leg is left to `msi sweep --bench`.
     {
         use megascale_infer::sim::run_sim_bench;
         if quick {
-            let payload = run_sim_bench(2_000, 42);
+            let payload = run_sim_bench(2_000, 42, None);
             println!("  {:<44} ok (quick)", "engine e2e 2k requests");
             black_box(payload);
         } else {
-            let payload = run_sim_bench(50_000, 42);
+            let payload = run_sim_bench(50_000, 42, None);
             let tps = payload
                 .get("tokens_per_wall_second")
                 .and_then(|j| j.as_f64())

@@ -108,6 +108,37 @@ impl BlockAllocator {
         true
     }
 
+    /// Extra blocks a request holding `tokens` of context needs to grow by
+    /// `k` more tokens. Used by the macro-step span precheck: summing this
+    /// over a decode batch against [`BlockAllocator::free_blocks`] proves
+    /// `k` iterations of appends cannot hit out-of-memory.
+    pub fn extra_blocks_for(&self, tokens: usize, k: usize) -> usize {
+        self.blocks_for(tokens + k) - self.blocks_for(tokens)
+    }
+
+    /// Append `k` decoded tokens at once, topping the request's block list
+    /// up to the new requirement. Equivalent to `k` successful
+    /// [`BlockAllocator::append_token`] calls; returns false (allocating
+    /// and appending nothing) if the request is unknown or the free list
+    /// cannot cover the growth — callers precheck with
+    /// [`BlockAllocator::extra_blocks_for`] so this cannot fail mid-span.
+    // msi-lint: hot
+    pub fn bulk_append(&mut self, request_id: u64, k: usize) -> bool {
+        let Some(tokens) = self.tokens.get_mut(&request_id) else {
+            return false;
+        };
+        let need = (*tokens + k).div_ceil(self.config.block_size);
+        let blocks = self.owned.get_mut(&request_id).unwrap();
+        if need > blocks.len() && need - blocks.len() > self.free.len() {
+            return false;
+        }
+        *tokens += k;
+        while blocks.len() < need {
+            blocks.push(self.free.pop().unwrap());
+        }
+        true
+    }
+
     /// Release all blocks of a finished/preempted request.
     pub fn release(&mut self, request_id: u64) -> usize {
         let blocks = self.owned.remove(&request_id).unwrap_or_default();
@@ -211,6 +242,33 @@ mod tests {
             b.request_ids().collect::<Vec<_>>(),
             "same live set, same order, different histories"
         );
+    }
+
+    #[test]
+    fn bulk_append_matches_repeated_append() {
+        let mut a = alloc(16);
+        let mut b = alloc(16);
+        assert!(a.admit(1, 13));
+        assert!(b.admit(1, 13));
+        for _ in 0..37 {
+            assert!(a.append_token(1));
+        }
+        assert_eq!(b.extra_blocks_for(13, 37), 3);
+        assert!(b.bulk_append(1, 37));
+        assert_eq!(a.tokens_of(1), b.tokens_of(1));
+        assert_eq!(a.allocated_blocks(), b.allocated_blocks());
+        assert_eq!(a.free_blocks(), b.free_blocks());
+    }
+
+    #[test]
+    fn bulk_append_refuses_oversized_growth() {
+        let mut a = alloc(2);
+        assert!(a.admit(1, 16));
+        assert!(!a.bulk_append(1, 17), "needs 2 extra blocks, 1 free");
+        assert_eq!(a.tokens_of(1), Some(16), "nothing appended");
+        assert_eq!(a.allocated_blocks(), 1, "nothing allocated");
+        assert!(a.bulk_append(1, 16));
+        assert_eq!(a.allocated_blocks(), 2);
     }
 
     #[test]

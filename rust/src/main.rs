@@ -18,7 +18,7 @@
 //!               [--tenants name:weight:slo_s,...] [--simnet]
 //!               [--micro-batches m] [--prefill N] [--prefill-chunk 2048]
 //!               [--max-seconds <s>] [--shards K|auto] [--shard-workers N]
-//!               [--no-fuse] [--seed 42] [--json report.json]
+//!               [--no-fuse] [--no-macro] [--seed 42] [--json report.json]
 //! msi serve     --artifacts artifacts [--micro-batches 2] [--requests 16]
 //!               (requires the `pjrt` feature)
 //! msi sweep     [--model tiny] [--gpu ampere] [--requests 2000]
@@ -35,7 +35,7 @@
 //! msi hardware
 //! msi trace     --out trace.jsonl [--requests 1000] [--seed 42]
 //! msi lint      [--path rust/src] [--json lint.json] [--waivers]
-//! msi scenario  run <file.msc> [--no-fuse] [--shards K|auto]
+//! msi scenario  run <file.msc> [--no-fuse] [--no-macro] [--shards K|auto]
 //!               [--shard-workers N] [--json report.json]
 //! msi scenario  check <file.msc>
 //! ```
@@ -145,6 +145,7 @@ fn main() -> Result<()> {
             "bench",
             "prompt-heavy",
             "no-fuse",
+            "no-macro",
             "waivers",
         ],
     )?;
@@ -471,6 +472,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
         prefill_chunk,
         mode: EngineMode::Disaggregated,
         fuse: !args.flag("no-fuse"),
+        macro_step: !args.flag("no-macro"),
         injections: Vec::new(),
     };
     let plan_json = cfg.plan.to_json();
@@ -528,7 +530,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
 /// the cluster engine. `check` stops after compilation.
 fn cmd_scenario(rest: &[String]) -> Result<()> {
     const SCENARIO_USAGE: &str = "usage: msi scenario <run|check> <file.msc> \
-[--no-fuse] [--shards K|auto] [--shard-workers N] [--json report.json]";
+[--no-fuse] [--no-macro] [--shards K|auto] [--shard-workers N] [--json report.json]";
     let verb = rest.first().map(String::as_str).unwrap_or("");
     let check_only = match verb {
         "run" => false,
@@ -544,11 +546,12 @@ fn cmd_scenario(rest: &[String]) -> Result<()> {
     };
     let args = Args::parse(
         std::iter::once("scenario".to_string()).chain(rest[2..].iter().cloned()),
-        &["no-fuse"],
+        &["no-fuse", "no-macro"],
     )?;
     let compiled = megascale_infer::sim::scenario::load(file)?;
     let mut cfg = compiled.cfg.clone();
     cfg.fuse = !args.flag("no-fuse");
+    cfg.macro_step = !args.flag("no-macro");
     println!(
         "scenario `{}`: {} phase(s), {} injection(s) | plan tp_a={} tp_e={} \
          n_a={} m={} B={} | prefill {} nodes",
@@ -579,7 +582,7 @@ fn cmd_scenario(rest: &[String]) -> Result<()> {
         if eff != shards {
             println!(
                 "note: --shards {shards} clamped to {eff} \
-                 (pool widths and fault injections bound the shard count)"
+                 (pool widths bound the shard count)"
             );
         }
         let mut splan = ShardPlan::new(eff);
@@ -680,10 +683,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             Some(path) => {
                 let text = std::fs::read_to_string(path)
                     .with_context(|| format!("reading committed bench baseline {path}"))?;
-                let committed = megascale_infer::util::json::Json::parse(&text)?
-                    .get("tokens_per_wall_second")?
-                    .as_f64()?;
-                Some((path.to_string(), committed))
+                let baseline = megascale_infer::util::json::Json::parse(&text)?;
+                let committed = baseline.get("tokens_per_wall_second")?.as_f64()?;
+                // Tolerate baselines committed before the scenario-library
+                // leg existed (and 0.0 = "directory absent when measured").
+                let committed_library = baseline
+                    .opt("scenario_library_wall_seconds")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0);
+                Some((path.to_string(), committed, committed_library))
             }
             None => None,
         };
@@ -691,12 +699,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         if !(0.0..1.0).contains(&threshold) {
             bail!("--bench-threshold must be in [0, 1) (got {threshold})");
         }
-        let payload = run_sim_bench(n, seed);
+        let scenario_dir = std::path::Path::new("scenarios").is_dir().then_some("scenarios");
+        let payload = run_sim_bench(n, seed, scenario_dir);
         std::fs::write(&out, format!("{payload}\n"))
             .with_context(|| format!("writing {out}"))?;
         println!("{payload}");
         println!("wrote benchmark report to {out}");
-        if let Some((path, committed)) = gate {
+        if let Some((path, committed, committed_library)) = gate {
             let fresh = payload.get("tokens_per_wall_second")?.as_f64()?;
             let floor = committed * (1.0 - threshold);
             if fresh < floor {
@@ -712,6 +721,31 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                  (floor {floor:.0}, -{:.0}%)",
                 threshold * 100.0
             );
+            // Second gate: wall time over the committed scenario library.
+            // Skipped (with a note) when either side is 0 — the library
+            // wasn't measured there, so there is nothing to compare.
+            let fresh_library = payload.get("scenario_library_wall_seconds")?.as_f64()?;
+            if committed_library > 0.0 && fresh_library > 0.0 {
+                let ceiling = committed_library * (1.0 + threshold);
+                if fresh_library > ceiling {
+                    bail!(
+                        "scenario-library regression: {fresh_library:.3} s is more than \
+                         {:.0}% above the committed baseline {committed_library:.3} s \
+                         (ceiling {ceiling:.3} s) from {path}",
+                        threshold * 100.0
+                    );
+                }
+                println!(
+                    "scenario-library gate OK: {fresh_library:.3} s vs committed \
+                     {committed_library:.3} s (ceiling {ceiling:.3} s, +{:.0}%)",
+                    threshold * 100.0
+                );
+            } else {
+                println!(
+                    "scenario-library gate skipped (committed {committed_library:.3} s, \
+                     fresh {fresh_library:.3} s)"
+                );
+            }
         }
         return Ok(());
     }

@@ -92,6 +92,42 @@ impl Histogram {
         self.buckets[Self::bucket_index(v)] += 1;
     }
 
+    /// Record `n` observations of the same value, bit-identically to `n`
+    /// consecutive [`Histogram::record`] calls. The macro-step fast path
+    /// uses this for run-length-grouped samples (e.g. a completion burst
+    /// whose requests share one end-to-end latency), so the summary JSON
+    /// must not move by a single bit versus per-sample recording: the
+    /// running `sum` is advanced by `n` separate `+= v` additions (float
+    /// addition does not distribute over multiplication — `sum + n·v`
+    /// rounds differently), and the exact reservoir takes the same prefix
+    /// it would have taken sample-by-sample.
+    // msi-lint: hot
+    pub fn record_n(&mut self, v: f64, n: u64) {
+        debug_assert!(
+            v.is_finite() && v >= 0.0,
+            "histogram sample must be finite and non-negative, got {v}"
+        );
+        if n == 0 {
+            return;
+        }
+        if !(v.is_finite() && v >= 0.0) {
+            self.skipped += n;
+            return;
+        }
+        self.count += n;
+        for _ in 0..n {
+            self.sum += v;
+        }
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        let room = EXACT_LIMIT.saturating_sub(self.exact.len());
+        let take = (n as usize).min(room);
+        for _ in 0..take {
+            self.exact.push(v);
+        }
+        self.buckets[Self::bucket_index(v)] += n;
+    }
+
     /// Samples rejected by [`Histogram::record`] (non-finite or negative).
     /// Always 0 in debug builds, where rejection asserts instead.
     pub fn skipped_samples(&self) -> u64 {
@@ -238,6 +274,27 @@ impl Histogram {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn record_n_is_bit_identical_to_repeated_record() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        // Irrational-ish values so float-accumulation order matters, and
+        // enough repeats to cross the exact-sample reservoir limit.
+        for (v, n) in [(0.1234567, 2000u64), (3.9e-3, 1700), (0.1234567, 900)] {
+            a.record_n(v, n);
+            for _ in 0..n {
+                b.record(v);
+            }
+        }
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.mean().to_bits(), b.mean().to_bits());
+        assert_eq!(a.min().to_bits(), b.min().to_bits());
+        assert_eq!(a.max().to_bits(), b.max().to_bits());
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(a.percentile(p).to_bits(), b.percentile(p).to_bits());
+        }
+    }
 
     #[test]
     fn exact_small_sample() {

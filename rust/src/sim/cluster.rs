@@ -119,6 +119,13 @@ pub struct FaultInjection {
     pub at: f64,
     /// What happens.
     pub kind: FaultKind,
+    /// Whether this shard's engine counts the injection toward the
+    /// report's `injections_applied` / failure / resize counters. Sharded
+    /// runs localize each scenario injection to the shard(s) it affects
+    /// but mark exactly ONE copy `counted` (the owning shard for
+    /// node-targeted kinds, shard 0 for broadcasts), so merged counters
+    /// equal the unsharded run's. Unsharded configs always set `true`.
+    pub counted: bool,
 }
 
 /// The fault / elasticity event kinds the engine can inject mid-run.
@@ -212,9 +219,18 @@ pub struct ClusterSimConfig {
     /// queue's exact pop and RNG-draw order); `false` (`msi replay
     /// --no-fuse`) keeps the stepwise reference path for A/B checks.
     pub fuse: bool,
+    /// Macro-step fast-forward (default on): when the span until the next
+    /// external event (arrival, prefill pass, KV arrival, rebalance tick,
+    /// injection, horizon cutoff) contains several decode iterations whose
+    /// stage times are state-independent, the engine advances them without
+    /// returning to the global event queue, bulk-updating per-request
+    /// counters and histograms with values identical to per-iteration
+    /// stepping. Requires `fuse`; `false` (`--no-macro`) keeps the
+    /// one-iteration-per-event reference path for A/B checks.
+    pub macro_step: bool,
     /// Scheduled fault / elasticity events (`msi scenario` `inject`
-    /// blocks). Node indices are global, so a non-empty list clamps
-    /// sharded runs to one shard (see [`crate::sim::effective_shards`]).
+    /// blocks). Node indices are global; sharded runs localize each
+    /// injection to the owning shard (see [`crate::sim::shard_config`]).
     pub injections: Vec<FaultInjection>,
 }
 
@@ -238,6 +254,7 @@ impl ClusterSimConfig {
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             mode: EngineMode::Disaggregated,
             fuse: true,
+            macro_step: true,
             injections: Vec::new(),
         }
     }

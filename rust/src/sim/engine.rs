@@ -199,6 +199,19 @@ impl RequestTable {
         }
     }
 
+    /// Return the table to its empty state, keeping the slot allocations
+    /// for reuse. Semantically identical to a fresh [`RequestTable::new`]
+    /// — `insert` refills from the cleared free list exactly as it pushes
+    /// onto empty vectors — so `msi sweep` can recycle one table across
+    /// grid cells without re-growing it per cell.
+    pub fn reset(&mut self) {
+        self.reqs.clear();
+        self.meta.clear();
+        self.free.clear();
+        self.live = 0;
+        self.peak = 0;
+    }
+
     /// Claim a slot for a newly-pulled request.
     pub fn insert(&mut self, req: Request) -> usize {
         let meta = SlotMeta {
@@ -773,6 +786,20 @@ struct NodeIterOutcome {
     done: Vec<u64>,
 }
 
+/// Recycled scratch of the macro-step span probe: per-node batch sizes
+/// and integer sequence-length sums captured at span start, from which
+/// the bulk replay reconstructs every intermediate iteration's average
+/// sequence length in closed form (see [`AttentionPool::bulk_avg_seq`]).
+#[derive(Default)]
+struct SpanScratch {
+    /// Per-node live batch size at span start.
+    len: Vec<u64>,
+    /// Per-node Σ `seq_len` (exact integer) at span start.
+    seq_sum: Vec<u64>,
+    /// Pool-wide batch size at span start.
+    total: u64,
+}
+
 /// The attention pool: `n_a` nodes with continuous batching + paged KV,
 /// each with its own busy clock (the pool stage is paced by the slowest
 /// node of each micro-batch).
@@ -972,6 +999,129 @@ impl AttentionPool {
         (lost_blocks, lost_tokens)
     }
 
+    /// Probe whether the pool can macro-step: returns the number of
+    /// consecutive decode iterations guaranteed to produce **no**
+    /// externally-visible per-request event (no admission, no first
+    /// token, no completion, no KV out-of-memory), filling `scratch`
+    /// with the per-node batch sizes and integer sequence-length sums
+    /// the closed-form average-sequence replay reads. Returns 0 when no
+    /// such span exists.
+    ///
+    /// The span bound is a min-scan over remaining output tokens: a
+    /// request with `remaining = r` completes at the end of the `r`-th
+    /// iteration from here, so the first `min(remaining) - 1` iterations
+    /// are completion-free. Everything else the boundary does per
+    /// iteration is provably inert over that window: admission needs a
+    /// non-empty waiting queue, first-token accounting needs a request
+    /// with `decoded == 0`, and the KV appends cannot fail when the free
+    /// list covers the whole span's block growth up front.
+    // msi-lint: hot
+    fn span_probe(&self, scratch: &mut SpanScratch) -> u64 {
+        scratch.len.clear();
+        scratch.seq_sum.clear();
+        scratch.total = 0;
+        if self.waiting_total() != 0 || self.backlog_requests() != 0 {
+            return 0;
+        }
+        let mut r_min = usize::MAX;
+        for node in &self.nodes {
+            let mut sum = 0u64;
+            for r in &node.batcher.batch.requests {
+                if r.decoded == 0 {
+                    // First token due next iteration: TTFT must record.
+                    return 0;
+                }
+                r_min = r_min.min(r.remaining);
+                sum += r.seq_len as u64;
+            }
+            scratch.len.push(node.batcher.batch.len() as u64);
+            scratch.seq_sum.push(sum);
+            scratch.total += node.batcher.batch.len() as u64;
+        }
+        if scratch.total == 0 || r_min < 2 {
+            return 0;
+        }
+        let k = (r_min - 1) as u64;
+        for (len, sum) in scratch.len.iter().zip(&scratch.seq_sum) {
+            // The closed-form replay casts `sum + len·i` to f64; above
+            // 2^52 that cast could round where the stepwise per-request
+            // f64 summation would not. Unreachable for any realistic
+            // batch, but refuse to arm rather than risk a ULP.
+            if sum + len * k >= (1u64 << 52) {
+                return 0;
+            }
+        }
+        for node in &self.nodes {
+            let mut extra = 0usize;
+            for r in &node.batcher.batch.requests {
+                let Some(tokens) = node.kv.tokens_of(r.id) else {
+                    return 0;
+                };
+                extra += node.kv.extra_blocks_for(tokens, k as usize);
+            }
+            if extra > node.kv.free_blocks() {
+                // The span could run a node out of KV blocks; stepwise
+                // append-OOM behavior (silently tolerated per iteration)
+                // must be reproduced exactly, so step instead.
+                return 0;
+            }
+        }
+        k
+    }
+
+    /// Closed-form [`AttentionPool::avg_seq`] after `advanced` un-flushed
+    /// macro-stepped iterations: every live request's sequence grows by
+    /// exactly one token per iteration, so node `n` averages `(S_n +
+    /// len_n·advanced) / len_n`. Integer sums below 2^52 cast to f64
+    /// exactly, and f64 summation of integer-valued terms is exact, so
+    /// this is bit-identical to scanning the (hypothetically advanced)
+    /// batch — the probe guarantees the magnitude bound.
+    // msi-lint: hot
+    fn bulk_avg_seq(&self, scratch: &SpanScratch, advanced: u64) -> f64 {
+        debug_assert!(scratch.total > 0, "armed span over an empty batch");
+        let mut sum = 0.0f64;
+        for (len, s0) in scratch.len.iter().zip(&scratch.seq_sum) {
+            if *len == 0 {
+                // An empty node contributes `0.0 * 0.0 = +0.0`, which is
+                // bit-neutral on the non-negative running sum.
+                continue;
+            }
+            let a = (s0 + len * advanced) as f64 / *len as f64;
+            sum += a * *len as f64;
+        }
+        (sum / scratch.total as f64).max(1.0)
+    }
+
+    /// Apply `k` macro-stepped iterations' per-request effects in bulk:
+    /// each live request decodes `k` tokens (sequence, decoded and
+    /// remaining counters move by `k`), its KV grows `k` tokens (the
+    /// probe prechecked the block headroom), and the per-node token
+    /// counters advance by `batch·k` — element-for-element what `k`
+    /// passes of [`AttentionPool::finish_node_iteration`] would do to a
+    /// completion-free batch. Block *identities* can differ from the
+    /// stepwise interleaving (the free list pops in a different order);
+    /// identities never reach any report, only counts do.
+    // msi-lint: hot
+    fn flush_span(&mut self, k: u64) {
+        if k == 0 {
+            return;
+        }
+        for (nid, node) in self.nodes.iter_mut().enumerate() {
+            let AttnNode { batcher, kv, .. } = node;
+            let len = batcher.batch.len() as u64;
+            for r in &mut batcher.batch.requests {
+                r.seq_len += k as usize;
+                r.decoded += k as usize;
+                debug_assert!(r.remaining > k as usize, "span crossed a completion");
+                r.remaining -= k as usize;
+                let ok = kv.bulk_append(r.id, k as usize);
+                debug_assert!(ok, "span precheck guarantees block headroom");
+            }
+            self.node_tokens[nid] += len * k;
+            self.decoded_tokens += len * k;
+        }
+    }
+
     /// End-of-iteration bookkeeping for one node: extend KV, retire
     /// finished requests, report first-token and completion ids.
     // msi-lint: hot
@@ -1146,7 +1296,10 @@ impl ExpertPool {
     /// popularity keeps its implicit `e % n_e` map and only changes the
     /// divisor. Node clocks of surviving ranks are preserved; new ranks
     /// start cold.
-    fn resize(&mut self, n_e: usize) {
+    /// `counted` gates the `resizes` report counter: in a sharded run
+    /// every shard resizes its slice of the pool, but only one copy of
+    /// the broadcast injection counts, so merged totals match unsharded.
+    fn resize(&mut self, n_e: usize, counted: bool) {
         let n_e = n_e.max(1);
         self.n_e = n_e;
         self.node_busy.resize(n_e, 0.0);
@@ -1164,7 +1317,9 @@ impl ExpertPool {
                 *o = 0.0;
             }
         }
-        self.resizes += 1;
+        if counted {
+            self.resizes += 1;
+        }
     }
 
     /// Fill `scratch` with the popularity weights in effect at virtual time
@@ -1296,6 +1451,46 @@ impl TenantAcc {
     }
 }
 
+/// Outcome of one [`ClusterEngine::begin_iteration_once`] pass, driving
+/// the macro-step loop in [`ClusterEngine::begin_iteration`].
+enum IterOutcome {
+    /// The engine went idle, the stepwise path scheduled its hops, or a
+    /// horizon overrun parked the iteration: return to the event queue.
+    Yield,
+    /// A fused iteration completed at the carried time with its stats
+    /// parked: the driver may process its `IterEnd` inline.
+    Fused(f64),
+}
+
+/// Outcome of a [`ClusterEngine::bulk_span`] attempt.
+enum SpanExit {
+    /// Events were scheduled (span-ending `IterEnd`, horizon overrun):
+    /// return to the event queue.
+    Yield,
+    /// No span was armed, or the span committed fully and flushed: the
+    /// driver continues with a full iteration pass.
+    Continue,
+}
+
+/// Reusable engine allocations for back-to-back runs — the `msi sweep`
+/// cell loop keeps one per worker thread so every cell recycles the
+/// request-table slab, the pipeline core and the engine's scratch
+/// vectors instead of reallocating them. Adoption is behavior-neutral:
+/// each buffer is reset to its `new()` state (only capacity survives),
+/// so recycled and fresh runs produce byte-identical reports — pinned by
+/// `sweep_is_deterministic_across_worker_counts` and the alloc-counter
+/// harness.
+#[derive(Default)]
+pub struct EngineScratch {
+    table: RequestTable,
+    core: Option<PipelineCore>,
+    fused: FusedQueue,
+    span: SpanScratch,
+    pipe: Vec<(f64, PipeEvent)>,
+    out: Vec<(f64, Event)>,
+    requeue: Vec<usize>,
+}
+
 /// The end-to-end cluster engine: components wired onto one event queue,
 /// pulling arrivals one at a time from an [`ArrivalSource`].
 pub struct ClusterEngine {
@@ -1341,6 +1536,8 @@ pub struct ClusterEngine {
     iter_stats: Option<PipelineStats>,
     /// Local replay queue of the fused fast path (reused every iteration).
     fused: FusedQueue,
+    /// Recycled macro-step span scratch (per-node sums at span start).
+    span: SpanScratch,
     /// Reusable buffer for pipe events emitted by the core.
     pipe_scratch: Vec<(f64, PipeEvent)>,
     /// Cached attention-GPU spec ([`ClusterSpec::attention_gpu`] clones a
@@ -1565,6 +1762,7 @@ impl ClusterEngine {
             stage_spare: None,
             iter_stats: Some(PipelineStats::default()),
             fused: FusedQueue::new(),
+            span: SpanScratch::default(),
             pipe_scratch: Vec::new(),
             attn_gpu,
             internal: 0,
@@ -1604,6 +1802,56 @@ impl ClusterEngine {
         self.prime();
         self.step_until(f64::INFINITY);
         self.finalize()
+    }
+
+    /// Run to quiescence while recycling allocations through `scratch` —
+    /// the `msi sweep` per-worker cell loop. Byte-identical to
+    /// [`ClusterEngine::run`]: adopted buffers are reset to fresh state
+    /// (only their capacity survives) and stashed back for the next run.
+    pub fn run_recycled(mut self, scratch: &mut EngineScratch) -> ClusterReport {
+        self.adopt_scratch(scratch);
+        self.prime();
+        self.step_until(f64::INFINITY);
+        let report = self.build_report();
+        self.stash_scratch(scratch);
+        report
+    }
+
+    /// Swap `scratch`'s recycled buffers into the freshly-built engine
+    /// (resetting each to its `new()` state first). Call before
+    /// [`ClusterEngine::prime`].
+    fn adopt_scratch(&mut self, scratch: &mut EngineScratch) {
+        scratch.table.reset();
+        scratch.fused.clear();
+        scratch.pipe.clear();
+        scratch.out.clear();
+        scratch.requeue.clear();
+        std::mem::swap(&mut self.ctx.table, &mut scratch.table);
+        std::mem::swap(&mut self.fused, &mut scratch.fused);
+        std::mem::swap(&mut self.span, &mut scratch.span);
+        std::mem::swap(&mut self.pipe_scratch, &mut scratch.pipe);
+        std::mem::swap(&mut self.out, &mut scratch.out);
+        std::mem::swap(&mut self.requeue_scratch, &mut scratch.requeue);
+        if let Some(core) = scratch.core.take() {
+            // `begin_iteration` resets the spare core to this run's
+            // (m, layers) in place before first use.
+            self.spare = Some(core);
+        }
+    }
+
+    /// Return the recycled buffers to `scratch` for the next run. Call
+    /// only after [`ClusterEngine::build_report`] — the report reads the
+    /// table's high-water mark.
+    fn stash_scratch(&mut self, scratch: &mut EngineScratch) {
+        std::mem::swap(&mut self.ctx.table, &mut scratch.table);
+        std::mem::swap(&mut self.fused, &mut scratch.fused);
+        std::mem::swap(&mut self.span, &mut scratch.span);
+        std::mem::swap(&mut self.pipe_scratch, &mut scratch.pipe);
+        std::mem::swap(&mut self.out, &mut scratch.out);
+        std::mem::swap(&mut self.requeue_scratch, &mut scratch.requeue);
+        if let Some(core) = self.spare.take().or_else(|| self.pipeline.take()) {
+            scratch.core = Some(core);
+        }
     }
 
     /// Prime the arrival chain: exactly one future Arrive is outstanding
@@ -1838,10 +2086,16 @@ impl ClusterEngine {
     }
 
     /// Apply one injection (always at an iteration boundary or while
-    /// idle — never between hops).
+    /// idle — never between hops). A sharded run localizes each scenario
+    /// injection and marks exactly one shard's copy `counted`, so the
+    /// merged `injections_applied`/resize counters match the unsharded
+    /// run; the state change itself applies on every receiving shard.
     fn apply_injection(&mut self, now: f64, idx: usize, out: &mut Vec<(f64, Event)>) {
-        self.injections_applied += 1;
-        match self.cfg.injections[idx].kind {
+        let inj = self.cfg.injections[idx];
+        if inj.counted {
+            self.injections_applied += 1;
+        }
+        match inj.kind {
             FaultKind::FailAttention { node } => self.fail_attention(now, node, out),
             FaultKind::RecoverAttention { node } => {
                 if self.node_down[node] {
@@ -1860,7 +2114,7 @@ impl ClusterEngine {
                 self.link.degrade = factor;
             }
             FaultKind::ResizeExperts { n_e } => {
-                self.experts.resize(n_e);
+                self.experts.resize(n_e, inj.counted);
             }
         }
     }
@@ -1905,12 +2159,271 @@ impl ClusterEngine {
         self.front_door(now, slot, out);
     }
 
-    /// Iteration boundary: admission on every node, inline-prefill chunk
-    /// selection (colocated), stage-context build, pipeline kickoff. A
-    /// boundary with neither decode nor backlog work simply goes idle —
-    /// the next KV arrival or placement re-arms the clock.
+    /// Iteration boundary: one [`ClusterEngine::begin_iteration_once`]
+    /// pass, then — when the macro-step fast-forward is on and nothing in
+    /// the global queue can interleave — the loop that keeps iterating
+    /// WITHOUT returning to the event queue. Two tiers:
+    ///
+    /// 1. When a fused iteration completes at `done_at` with nothing
+    ///    scheduled and no queued event at or before `done_at`, its
+    ///    `IterEnd` is processed inline (the queue would pop it next
+    ///    anyway), and if that schedules exactly the next `IterBegin`,
+    ///    the loop continues in place — saving two global-queue
+    ///    round-trips per decode iteration.
+    /// 2. Before each full pass, [`ClusterEngine::bulk_span`] tries to
+    ///    fast-forward a whole externally-quiet span of iterations with
+    ///    bulk per-request accounting (see its doc for the argument).
+    ///
+    /// Every inline continuation re-checks the queue, so any external
+    /// event (arrival, prefill pass, KV arrival, injection, shard-epoch
+    /// boundary — which only bounds pops, never this loop's virtual
+    /// clock) regains control at exactly the virtual time it would have
+    /// under `--no-macro`; reports are byte-identical either way.
     // msi-lint: hot
     fn begin_iteration(&mut self, now: f64, out: &mut Vec<(f64, Event)>) {
+        let mut now = now;
+        loop {
+            let done_at = match self.begin_iteration_once(now, out) {
+                IterOutcome::Yield => return,
+                IterOutcome::Fused(t) => t,
+            };
+            let macro_on =
+                self.cfg.macro_step && matches!(self.cfg.mode, EngineMode::Disaggregated);
+            if !macro_on || !out.is_empty() || self.q.peek_time().is_some_and(|t| t <= done_at) {
+                // Something else must interleave (injection follow-ups,
+                // an external event due first — at a timestamp tie the
+                // queued event holds the earlier insertion seq and pops
+                // first): schedule the IterEnd and let the queue order it.
+                out.push((done_at, Event::IterEnd));
+                return;
+            }
+            // Inline the IterEnd the queue would pop next anyway.
+            // msi-lint: allow(unwrap-in-engine) -- the Fused outcome parks the stats two calls up
+            let st = self.iter_stats.take().expect("fused stats pending");
+            self.end_iteration(done_at, &st, out);
+            self.iter_stats = Some(st);
+            match out.as_slice() {
+                [(at, Event::IterBegin)] => {
+                    debug_assert_eq!(*at, done_at, "IterBegin at the boundary");
+                    out.clear();
+                    // The stepwise trace's high-water sample at this point:
+                    // the queue plus the IterBegin it would have held.
+                    self.peak_events = self.peak_events.max(self.q.len() - self.internal + 1);
+                }
+                // Quiescent, or follow-ups (overflow placements, deferred
+                // injections) the global queue must order.
+                _ => return,
+            }
+            now = done_at;
+            match self.bulk_span(&mut now, out) {
+                SpanExit::Yield => return,
+                SpanExit::Continue => {}
+            }
+        }
+    }
+
+    /// Fast-forward an externally-quiet span of decode iterations without
+    /// per-iteration per-request work. Armed by
+    /// [`AttentionPool::span_probe`] (no admission, first token,
+    /// completion, or KV out-of-memory possible for `k` iterations), each
+    /// span iteration still replays the full fused ping-pong traversal —
+    /// per-hop stage times, per-node busy clocks and gating RNG draws are
+    /// float-order-dependent and must accrue in stepwise order — but the
+    /// O(batch) boundary work (admission scan, average-sequence scan,
+    /// per-request counter/KV updates) collapses to O(nodes) per
+    /// iteration plus one O(batch) flush at span exit. Every iteration
+    /// re-checks the global queue and yields (with the span flushed and
+    /// its own `IterEnd` scheduled) the moment anything is due, so the
+    /// event interleaving matches `--no-macro` exactly.
+    // msi-lint: hot
+    fn bulk_span(&mut self, now: &mut f64, out: &mut Vec<(f64, Event)>) -> SpanExit {
+        debug_assert!(out.is_empty(), "span entered with follow-ups pending");
+        if !self.pending_inject.is_empty() {
+            return SpanExit::Continue;
+        }
+        let k = self.attention.span_probe(&mut self.span);
+        if k == 0 {
+            return SpanExit::Continue;
+        }
+        // The span refreshes the recycled disaggregated stage bundle in
+        // place; anything else (cold start, mode switch) steps normally.
+        let Some(mut sc) = self.stage_spare.take() else {
+            return SpanExit::Continue;
+        };
+        if !matches!(sc.pm, StageModel::Disaggregated(_)) {
+            self.stage_spare = Some(sc);
+            return SpanExit::Continue;
+        }
+        let m = self.cfg.plan.m.max(1);
+        let tp_a = self.cfg.plan.tp_a;
+        let layers = self.cfg.model.layers.max(1);
+        let n_e = self.experts.n_e.max(1);
+        let experts = self.cfg.model.experts.max(1);
+        // Batch membership is frozen for the whole span, so the splits,
+        // paced micro-batch sizes and token totals are loop constants;
+        // only the average sequence length (and with it the attention
+        // stage times) drifts, one token per request per iteration.
+        let n_nodes = self.attention.len();
+        sc.prefill_node_time.clear();
+        sc.prefill_node_time.resize(n_nodes, 0.0);
+        // msi-lint: allow(hot-path-alloc) -- grow-once: allocates only on the first iteration after a topology change
+        sc.prefill_finish.resize_with(n_nodes, Vec::new);
+        for f in &mut sc.prefill_finish {
+            f.clear();
+        }
+        sc.prefill_tokens = 0;
+        self.attention.splits_into(m, &mut sc.share);
+        {
+            let share = &sc.share;
+            sc.b_a.clear();
+            sc.b_a
+                .extend((0..m).map(|j| share.iter().map(|s| s[j]).max().unwrap_or(0) as f64));
+            sc.tok.clear();
+            sc.tok
+                .extend((0..m).map(|j| share.iter().map(|s| s[j]).sum::<usize>()));
+        }
+        sc.extra_weight_loads =
+            (experts.div_ceil(n_e).saturating_sub(1)) as f64 * sc.pm.expert_weight_floor();
+        sc.has_decode = true;
+        self.ctx.stage = Some(sc);
+        let horizon = self.cfg.max_sim_seconds.unwrap_or(f64::INFINITY);
+        let mut advanced = 0u64;
+        loop {
+            // Periodic §6 re-balancing, inline as the fused path applies it.
+            if let Some(period) = self.cfg.rebalance_period {
+                if *now >= self.next_rebalance {
+                    self.experts.handle(*now, &Event::Rebalance, &mut self.ctx, out);
+                    while self.next_rebalance <= *now {
+                        self.next_rebalance += period;
+                    }
+                }
+            }
+            let avg_seq = self.attention.bulk_avg_seq(&self.span, advanced);
+            {
+                // msi-lint: allow(unwrap-in-engine) -- installed above; arming checked the disaggregated model
+                let sc = self.ctx.stage.as_mut().expect("span stage installed");
+                let StageModel::Disaggregated(pm) = &mut sc.pm else {
+                    unreachable!("span arming checked the stage model")
+                };
+                pm.set_avg_seq(&self.cfg.model, &self.attn_gpu, tp_a, avg_seq);
+            }
+            self.ctx.in_iteration = true;
+            let mut core = match self.spare.take() {
+                Some(mut c) => {
+                    c.reset(m, layers);
+                    c
+                }
+                None => PipelineCore::new(m, layers),
+            };
+            let mut pipe_out = std::mem::take(&mut self.pipe_scratch);
+            pipe_out.clear();
+            core.start(*now, &mut pipe_out);
+            self.fused.clear();
+            for (at, pe) in pipe_out.drain(..) {
+                self.fused.push(at, pe);
+            }
+            let mut done_at = *now;
+            let mut finished = false;
+            while let Some((t, pe)) = self.fused.pop() {
+                if t > horizon {
+                    done_at = t;
+                    break;
+                }
+                self.elapsed = self.elapsed.max(t);
+                let ev = Event::Pipe(pe);
+                self.link.handle(t, &ev, &mut self.ctx, out);
+                self.experts.handle(t, &ev, &mut self.ctx, out);
+                let done = {
+                    let ctx = &mut self.ctx;
+                    let attention = &mut self.attention;
+                    let experts = &mut self.experts;
+                    let link = &mut self.link;
+                    core.on_event_done(
+                        t,
+                        pe,
+                        &mut |tt, mb, layer| hop_times(attention, experts, link, ctx, tt, mb, layer),
+                        &mut pipe_out,
+                    )
+                };
+                for (at, e) in pipe_out.drain(..) {
+                    self.fused.push(at, e);
+                }
+                if done {
+                    done_at = t;
+                    finished = true;
+                    break;
+                }
+            }
+            self.pipe_scratch = pipe_out;
+            if !finished {
+                // Horizon overrun mid-span: park the core with the
+                // iteration in flight (identical to the full path) and
+                // let the queued IterEnd trip the cut.
+                debug_assert!(done_at > horizon, "fused queue drained without completion");
+                self.pipeline = Some(core);
+                self.attention.flush_span(advanced);
+                out.push((done_at, Event::IterEnd));
+                return SpanExit::Yield;
+            }
+            debug_assert!(self.fused.is_empty(), "hops past iteration completion");
+            // msi-lint: allow(unwrap-in-engine) -- the span loop takes and restores the stats every iteration
+            let mut st = self.iter_stats.take().expect("one iteration in flight");
+            core.stats_into(&mut st);
+            self.iter_stats = Some(st);
+            self.spare = Some(core);
+            if self.q.peek_time().is_some_and(|t| t <= done_at) {
+                // An external event is due first: flush the committed
+                // iterations and schedule this one's IterEnd so the queue
+                // pops them in stepwise order — the event's handlers run
+                // mid-iteration (`in_iteration` is still set), then the
+                // real `end_iteration` does this iteration's boundary.
+                self.attention.flush_span(advanced);
+                out.push((done_at, Event::IterEnd));
+                return SpanExit::Yield;
+            }
+            self.end_iteration_bulk();
+            advanced += 1;
+            *now = done_at;
+            if advanced == k {
+                self.attention.flush_span(advanced);
+                // Park the stage exactly as `end_iteration` would; the
+                // driver's next full pass re-admits, re-scans and handles
+                // the span-bounding completion iteration normally.
+                self.ctx.in_iteration = false;
+                self.stage_spare = self.ctx.stage.take();
+                return SpanExit::Continue;
+            }
+        }
+    }
+
+    /// The boundary bookkeeping a macro-stepped span iteration cannot
+    /// skip: utilization busy-time, the TPOT sample (the span always
+    /// decodes), and the iteration counter — the values
+    /// [`ClusterEngine::end_iteration`] would have produced, read off the
+    /// same parked stats. Everything per-request is provably a no-op
+    /// inside a span (see [`AttentionPool::span_probe`]) and the overflow
+    /// drain cannot progress without a completion, so nothing else moves.
+    // msi-lint: hot
+    fn end_iteration_bulk(&mut self) {
+        // msi-lint: allow(unwrap-in-engine) -- the span loop parked the stats right before calling this
+        let st = self.iter_stats.as_ref().expect("span stats parked");
+        let t_iter = st.total_time;
+        self.attn_util.add_busy(st.attn_utilization * t_iter);
+        self.expert_util.add_busy(st.expert_utilization * t_iter);
+        self.tpot.record(t_iter);
+        self.iterations += 1;
+        self.ctx.in_iteration = false;
+        // The stepwise trace samples the queue high-water at every
+        // IterEnd pop with the follow-up IterBegin scheduled.
+        self.peak_events = self.peak_events.max(self.q.len() - self.internal + 1);
+    }
+
+    /// One iteration boundary: admission on every node, inline-prefill
+    /// chunk selection (colocated), stage-context build, pipeline
+    /// kickoff. A boundary with neither decode nor backlog work simply
+    /// goes idle — the next KV arrival or placement re-arms the clock.
+    // msi-lint: hot
+    fn begin_iteration_once(&mut self, now: f64, out: &mut Vec<(f64, Event)>) -> IterOutcome {
         self.ctx.iter_pending = false;
         // Deferred injections first, in firing order, BEFORE admission:
         // a node that died mid-iteration must not admit new work, and a
@@ -1926,7 +2439,7 @@ impl ClusterEngine {
         self.attention.admit_all(now);
         let has_backlog = self.inline_prefill() && self.attention.backlog_requests() > 0;
         if self.attention.batch_total() == 0 && !has_backlog {
-            return;
+            return IterOutcome::Yield;
         }
         // Periodic §6 online re-balancing, applied before this iteration's
         // hops draw their expert loads. The stepwise path schedules the
@@ -2042,7 +2555,7 @@ impl ClusterEngine {
             }
             self.pipe_scratch = pipe_out;
             self.pipeline = Some(core);
-            return;
+            return IterOutcome::Yield;
         }
 
         // Fused fast path: within an iteration the per-hop stage times are
@@ -2110,11 +2623,14 @@ impl ClusterEngine {
             core.stats_into(&mut st);
             self.iter_stats = Some(st);
             self.spare = Some(core);
-        } else {
-            debug_assert!(done_at > horizon, "fused queue drained without completion");
-            self.pipeline = Some(core);
+            // The driver decides whether this iteration's IterEnd goes
+            // through the queue or is processed inline (macro-stepping).
+            return IterOutcome::Fused(done_at);
         }
+        debug_assert!(done_at > horizon, "fused queue drained without completion");
+        self.pipeline = Some(core);
         out.push((done_at, Event::IterEnd));
+        IterOutcome::Yield
     }
 
     /// This iteration's stage-time provider, built fresh (the recycled
@@ -2254,19 +2770,32 @@ impl ClusterEngine {
                     acc.ttft_decode.record(decode);
                 }
             }
+            // Completion bursts share a finish time and — closed-loop
+            // batches arriving together — often an arrival time, so runs
+            // of bit-equal latencies within a tenant collapse into one
+            // bulk histogram record (`record_n` is bit-identical to
+            // repeated `record`; the interleaved router/table work never
+            // touches the histograms, so deferring a run's record to its
+            // end changes nothing).
+            let mut run_latency = 0.0f64;
+            let mut run_tenant = usize::MAX;
+            let mut run_n = 0u64;
             for id in outcome.done {
                 let slot = id as usize;
-                self.completed += 1;
-                {
+                let (latency, tenant) = {
                     let r = self.ctx.table.get(slot);
-                    let latency = now - r.arrival;
-                    self.e2e.record(latency);
-                    if !self.cfg.tenants.is_empty() {
-                        let t = r.tenant.min(self.cfg.tenants.len() - 1);
-                        let acc = &mut self.tenant_stats[t];
-                        acc.completed += 1;
-                        acc.e2e.record(latency);
+                    (now - r.arrival, r.tenant)
+                };
+                if run_n > 0 && latency.to_bits() == run_latency.to_bits() && tenant == run_tenant
+                {
+                    run_n += 1;
+                } else {
+                    if run_n > 0 {
+                        self.record_completions(run_latency, run_tenant, run_n);
                     }
+                    run_latency = latency;
+                    run_tenant = tenant;
+                    run_n = 1;
                 }
                 if let Some(node) = self.ctx.table.take_placed(slot) {
                     self.router.complete(node, self.ctx.table.get(slot));
@@ -2274,6 +2803,9 @@ impl ClusterEngine {
                 // Completion frees the slot for reuse by later arrivals.
                 self.ctx.table.advance(slot, RequestPhase::Done, now);
                 self.ctx.table.remove(slot);
+            }
+            if run_n > 0 {
+                self.record_completions(run_latency, run_tenant, run_n);
             }
         }
 
@@ -2292,8 +2824,33 @@ impl ClusterEngine {
         self.stage_spare = Some(stage);
     }
 
+    /// Record `n` completions sharing one bit-identical E2E latency and
+    /// raw tenant id. Bulk [`Histogram::record_n`] is defined to be
+    /// bit-identical to `n` repeated `record` calls, so run-length
+    /// grouping in [`ClusterEngine::end_iteration`] never changes a
+    /// report.
+    // msi-lint: hot
+    fn record_completions(&mut self, latency: f64, tenant: usize, n: u64) {
+        self.completed += n;
+        self.e2e.record_n(latency, n);
+        if !self.cfg.tenants.is_empty() {
+            let t = tenant.min(self.cfg.tenants.len() - 1);
+            let acc = &mut self.tenant_stats[t];
+            acc.completed += n;
+            acc.e2e.record_n(latency, n);
+        }
+    }
+
     /// Fold the engine's terminal state into a [`ClusterReport`].
     pub(crate) fn finalize(mut self) -> ClusterReport {
+        self.build_report()
+    }
+
+    /// [`ClusterEngine::finalize`] body on `&mut self`: moves the metric
+    /// state (histograms, tenant accumulators) into the report and leaves
+    /// the engine a husk, so [`ClusterEngine::run_recycled`] can still
+    /// stash the recycled buffers afterwards.
+    fn build_report(&mut self) -> ClusterReport {
         let now = self.elapsed;
         self.attn_util.set_horizon(now);
         self.expert_util.set_horizon(now);
@@ -2350,7 +2907,7 @@ impl ClusterEngine {
             .cfg
             .tenants
             .iter()
-            .zip(self.tenant_stats)
+            .zip(std::mem::take(&mut self.tenant_stats))
             .map(|(tc, acc)| TenantReport {
                 name: tc.name.clone(),
                 slo_e2e: tc.slo_e2e,
@@ -2370,13 +2927,13 @@ impl ClusterEngine {
             iterations: self.iterations,
             throughput,
             per_gpu_throughput: throughput / gpus.max(1.0),
-            ttft: self.ttft,
-            ttft_queue: self.ttft_queue,
-            ttft_prefill: self.ttft_prefill,
-            ttft_transfer: self.ttft_transfer,
-            ttft_decode: self.ttft_decode,
-            tpot: self.tpot,
-            e2e: self.e2e,
+            ttft: std::mem::take(&mut self.ttft),
+            ttft_queue: std::mem::take(&mut self.ttft_queue),
+            ttft_prefill: std::mem::take(&mut self.ttft_prefill),
+            ttft_transfer: std::mem::take(&mut self.ttft_transfer),
+            ttft_decode: std::mem::take(&mut self.ttft_decode),
+            tpot: std::mem::take(&mut self.tpot),
+            e2e: std::mem::take(&mut self.e2e),
             attn_utilization: self.attn_util.fraction(),
             expert_utilization: self.expert_util.fraction(),
             per_node_tokens: self.attention.node_tokens.clone(),

@@ -46,7 +46,8 @@ pub use cluster::{
     FaultKind, TenantReport, Transport,
 };
 pub use engine::{
-    ClusterEngine, Component, Event, PrefillPool, RequestPhase, RequestTable, StageModel,
+    ClusterEngine, Component, EngineScratch, Event, PrefillPool, RequestPhase, RequestTable,
+    StageModel,
 };
 pub use pipeline::{FusedQueue, PipeEvent, PipelineCore, PipelineStats, StageTimes};
 pub use rng::SimRng;

@@ -336,7 +336,7 @@ pub fn compile(ast: &ScenarioAst) -> Result<CompiledScenario> {
                 FaultKind::ResizeExperts { n_e }
             }
         };
-        injections.push(FaultInjection { at: inj.at, kind });
+        injections.push(FaultInjection { at: inj.at, kind, counted: true });
     }
 
     let cfg = ClusterSimConfig {

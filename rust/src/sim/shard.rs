@@ -37,7 +37,9 @@ use std::thread;
 use crate::perf_model::prefill_node_gpus;
 use crate::workload::ArrivalSource;
 
-use super::cluster::{ClusterReport, ClusterSimConfig, EngineMode, TenantReport};
+use super::cluster::{
+    ClusterReport, ClusterSimConfig, EngineMode, FaultInjection, FaultKind, TenantReport,
+};
 use super::engine::ClusterEngine;
 
 /// Default epoch width in virtual seconds — coarse enough that each worker
@@ -97,13 +99,10 @@ pub fn effective_shards(cfg: &ClusterSimConfig, requested: usize) -> usize {
     if matches!(cfg.mode, EngineMode::Colocated(_)) {
         return 1;
     }
-    // Fault/elasticity injections address GLOBAL node indices ("fail
-    // attention 3") and mutate shared pools; a shard sees only a slice
-    // of each, so injected scenarios run unsharded — which also makes
-    // their reports trivially identical across requested shard counts.
-    if !cfg.injections.is_empty() {
-        return 1;
-    }
+    // Fault/elasticity injections DO shard: `shard_config` rewrites each
+    // one against the shard's local pool slice (node-targeted kinds go to
+    // the owning shard with a localized index, pool-wide kinds broadcast),
+    // and `run_sharded` aligns epoch boundaries on injection instants.
     let mut s = requested
         .max(1)
         .min(cfg.plan.n_a.max(1))
@@ -119,6 +118,15 @@ pub fn effective_shards(cfg: &ClusterSimConfig, requested: usize) -> usize {
 /// low-index shards), with an independent derived seed. Everything else —
 /// model, hardware, routing, popularity, transport, tenants, horizon —
 /// is inherited verbatim.
+///
+/// Fault/elasticity injections are rewritten against the shard's slice:
+/// node-targeted kinds (fail/recover/straggle attention) survive only on
+/// the shard owning the global node index, with the index localized to the
+/// shard's pool; pool-wide kinds broadcast to every shard (`ResizeExperts`
+/// with the width split the same way the expert pool itself is). Exactly
+/// one surviving copy keeps `counted` so the merged report's injection
+/// counters equal the unsharded run's — see
+/// [`crate::sim::cluster::FaultInjection::counted`].
 pub fn shard_config(cfg: &ClusterSimConfig, shard: usize, shards: usize) -> ClusterSimConfig {
     assert!(shard < shards, "shard {shard} of {shards}");
     let split = |total: usize| total / shards + usize::from(shard < total % shards);
@@ -129,6 +137,52 @@ pub fn shard_config(cfg: &ClusterSimConfig, shard: usize, shards: usize) -> Clus
     c.plan.global_batch = split(cfg.plan.global_batch).max(1);
     c.prefill_nodes = split(cfg.prefill_nodes);
     c.seed = shard_seed(cfg.seed, shard);
+    if !cfg.injections.is_empty() {
+        // This shard owns global attention nodes [start, start + count):
+        // the same even split (remainders to low-index shards) as
+        // `plan.n_a` above, expressed as a prefix-sum.
+        let n_a = cfg.plan.n_a.max(1);
+        let (base, rem) = (n_a / shards, n_a % shards);
+        let start = shard * base + shard.min(rem);
+        let count = base + usize::from(shard < rem);
+        let localize =
+            |node: usize| (node >= start && node < start + count).then_some(node - start);
+        c.injections = cfg
+            .injections
+            .iter()
+            .filter_map(|inj| {
+                let (kind, owner) = match inj.kind {
+                    FaultKind::FailAttention { node } => {
+                        (FaultKind::FailAttention { node: localize(node)? }, true)
+                    }
+                    FaultKind::RecoverAttention { node } => {
+                        (FaultKind::RecoverAttention { node: localize(node)? }, true)
+                    }
+                    FaultKind::StraggleAttention { node, factor } => (
+                        FaultKind::StraggleAttention {
+                            node: localize(node)?,
+                            factor,
+                        },
+                        true,
+                    ),
+                    FaultKind::DegradeNic { factor } => {
+                        (FaultKind::DegradeNic { factor }, shard == 0)
+                    }
+                    FaultKind::ResizeExperts { n_e } => (
+                        FaultKind::ResizeExperts {
+                            n_e: (n_e / shards + usize::from(shard < n_e % shards)).max(1),
+                        },
+                        shard == 0,
+                    ),
+                };
+                Some(FaultInjection {
+                    at: inj.at,
+                    kind,
+                    counted: inj.counted && owner,
+                })
+            })
+            .collect();
+    }
     c
 }
 
@@ -185,12 +239,24 @@ where
     } else {
         DEFAULT_EPOCH
     };
+    // Injection instants are epoch barriers: every shard crosses each
+    // scenario injection in the same worker round, at the identical
+    // virtual time, so fault application stays aligned across shards —
+    // derived from the config alone, never from thread scheduling.
+    let mut barriers: Vec<f64> = cfg.injections.iter().map(|i| i.at).collect();
+    barriers.sort_by(f64::total_cmp);
+    barriers.dedup_by(|a, b| a.to_bits() == b.to_bits());
+    let mut prev = 0.0;
     let mut end = epoch;
     loop {
+        if let Some(&b) = barriers.iter().find(|&&b| b > prev && b < end) {
+            end = b;
+        }
         let min_next = step_round(&mut engines, end, workers);
         if !min_next.is_finite() {
             break; // every shard quiescent (or horizon-cut)
         }
+        prev = end;
         // Next boundary: the epoch-grid point strictly after the earliest
         // pending event, so idle stretches are skipped in one jump while
         // boundaries stay deterministic (engine state only, no clocks).
@@ -531,6 +597,112 @@ mod tests {
             stepwise.to_json().to_string(),
             "fused and stepwise sharded runs must agree byte-for-byte"
         );
+    }
+
+    #[test]
+    fn shard_config_localizes_injections() {
+        let mut cfg = shardable_setup();
+        cfg.injections = vec![
+            FaultInjection {
+                at: 0.1,
+                kind: FaultKind::FailAttention { node: 3 },
+                counted: true,
+            },
+            FaultInjection {
+                at: 0.2,
+                kind: FaultKind::DegradeNic { factor: 2.0 },
+                counted: true,
+            },
+            FaultInjection {
+                at: 0.3,
+                kind: FaultKind::ResizeExperts { n_e: 4 },
+                counted: true,
+            },
+        ];
+        assert_eq!(effective_shards(&cfg, 2), 2, "injections no longer clamp");
+        let s0 = shard_config(&cfg, 0, 2);
+        let s1 = shard_config(&cfg, 1, 2);
+        // Shard 0 owns global attention nodes [0, 2): the node-targeted
+        // failure on node 3 lands only on shard 1, localized to index 1.
+        assert_eq!(s0.injections.len(), 2, "broadcasts only");
+        assert_eq!(s1.injections.len(), 3);
+        assert_eq!(
+            s1.injections[0].kind,
+            FaultKind::FailAttention { node: 1 },
+            "global node 3 → shard-1 local node 1"
+        );
+        assert!(s1.injections[0].counted, "owner counts the failure");
+        // Broadcasts reach both shards but only shard 0 counts them, and
+        // the resize target splits like the expert pool itself (4 → 2+2).
+        for (i, kind) in [
+            (0, FaultKind::DegradeNic { factor: 2.0 }),
+            (1, FaultKind::ResizeExperts { n_e: 2 }),
+        ] {
+            assert_eq!(s0.injections[i].kind, kind);
+            assert!(s0.injections[i].counted);
+            assert_eq!(s1.injections[i + 1].kind, kind);
+            assert!(!s1.injections[i + 1].counted);
+        }
+        // Exactly one counted copy per scenario injection, shards summed.
+        let counted = |c: &ClusterSimConfig| c.injections.iter().filter(|i| i.counted).count();
+        assert_eq!(counted(&s0) + counted(&s1), cfg.injections.len());
+    }
+
+    #[test]
+    fn injected_sharded_run_is_worker_invariant() {
+        let mut cfg = shardable_setup();
+        cfg.injections = vec![
+            FaultInjection {
+                at: 0.05,
+                kind: FaultKind::FailAttention { node: 3 },
+                counted: true,
+            },
+            FaultInjection {
+                at: 0.1,
+                kind: FaultKind::DegradeNic { factor: 1.5 },
+                counted: true,
+            },
+            FaultInjection {
+                at: 0.25,
+                kind: FaultKind::RecoverAttention { node: 3 },
+                counted: true,
+            },
+        ];
+        let n = 160;
+        // Two shards of two attention nodes each: the failure hits shard
+        // 1's second node, so the shard keeps a live node throughout.
+        let base = run_sharded(
+            &cfg,
+            ShardPlan {
+                shards: 2,
+                workers: 1,
+                epoch: DEFAULT_EPOCH,
+            },
+            source_factory(spec(), n, cfg.seed),
+        );
+        assert_eq!(
+            base.injections_applied,
+            cfg.injections.len() as u64,
+            "each scenario injection counted exactly once across shards"
+        );
+        assert_eq!(base.node_failures, 1);
+        assert_eq!(base.node_recoveries, 1);
+        for workers in [2, 4] {
+            let rep = run_sharded(
+                &cfg,
+                ShardPlan {
+                    shards: 2,
+                    workers,
+                    epoch: DEFAULT_EPOCH,
+                },
+                source_factory(spec(), n, cfg.seed),
+            );
+            assert_eq!(
+                rep.to_json().to_string(),
+                base.to_json().to_string(),
+                "byte-identical injected report with {workers} workers"
+            );
+        }
     }
 
     #[test]

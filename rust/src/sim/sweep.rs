@@ -28,9 +28,9 @@ use crate::coordinator::RoutePolicy;
 use crate::perf_model::DEFAULT_PREFILL_CHUNK;
 use crate::plan::{DeploymentPlan, PlanSearcher};
 use crate::sim::cluster::{ClusterSim, ClusterSimConfig, ExpertPopularity, Transport};
-use crate::sim::engine::ClusterEngine;
+use crate::sim::engine::{ClusterEngine, EngineScratch};
 use crate::util::json::Json;
-use crate::workload::{RequestStream, TenantClass, WorkloadSpec};
+use crate::workload::{Request, RequestStream, TenantClass, TraceSource, WorkloadSpec};
 
 /// The sweep's cartesian grid: scenario axes plus the shared base
 /// configuration every cell starts from.
@@ -178,7 +178,11 @@ fn cell_seed(base: u64, idx: u64) -> u64 {
     z ^ (z >> 31)
 }
 
-/// Run one cell to completion through the streaming engine.
+/// Run one cell to completion through the streaming engine. `scratch`
+/// carries the engine's heap-backed working state (request table,
+/// pipeline core, queues) from the worker's previous cell, so a grid of
+/// thousands of cells allocates that state once per worker instead of
+/// once per cell.
 #[allow(clippy::too_many_arguments)]
 fn run_cell(
     grid: &SweepGrid,
@@ -189,6 +193,7 @@ fn run_cell(
     prompt_len: f64,
     mix: usize,
     system: SystemKind,
+    scratch: &mut EngineScratch,
 ) -> SweepCell {
     let seed = cell_seed(grid.base_seed, idx as u64);
     let tenants = grid.tenant_mixes.get(mix).cloned().unwrap_or_default();
@@ -243,6 +248,7 @@ fn run_cell(
                 prefill_chunk: DEFAULT_PREFILL_CHUNK,
                 mode: crate::sim::cluster::EngineMode::Disaggregated,
                 fuse: true,
+                macro_step: true,
                 injections: Vec::new(),
             }
         }
@@ -252,8 +258,8 @@ fn run_cell(
     // both SimRngs the identical seed would make request lengths track the
     // expert-gating draws sample for sample.
     let wl_seed = seed ^ 0xa076_1d64_78bd_642f;
-    let rep = ClusterSim::new(cfg)
-        .run_streaming(Box::new(RequestStream::new(spec, grid.requests, wl_seed)));
+    let rep = ClusterEngine::new(cfg, Box::new(RequestStream::new(spec, grid.requests, wl_seed)))
+        .run_recycled(scratch);
     SweepCell {
         rate,
         skew,
@@ -348,14 +354,21 @@ pub fn run_sweep(grid: &SweepGrid, workers: usize) -> Vec<SweepCell> {
     let workers = workers.clamp(1, n.max(1));
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                // One scratch per worker: each cell's engine adopts the
+                // previous cell's request table / pipeline core / queues
+                // instead of reallocating them (reports stay byte-identical
+                // — `sweep_is_deterministic_across_worker_counts` pins it).
+                let mut scratch = EngineScratch::default();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let (rate, skew, m, prompt, mix, system) = coords[i];
+                    let cell = run_cell(grid, i, rate, skew, m, prompt, mix, system, &mut scratch);
+                    *results[i].lock().unwrap() = Some(cell);
                 }
-                let (rate, skew, m, prompt, mix, system) = coords[i];
-                let cell = run_cell(grid, i, rate, skew, m, prompt, mix, system);
-                *results[i].lock().unwrap() = Some(cell);
             });
         }
     });
@@ -456,7 +469,16 @@ pub fn sweep_to_csv(cells: &[SweepCell]) -> String {
 /// open-loop arrival rate and measure simulated output tokens per
 /// wall-clock second. Memory stays bounded by in-flight requests — this is
 /// the scale check the streaming arrival engine exists for.
-pub fn run_sim_bench(requests: usize, seed: u64) -> Json {
+///
+/// Two more legs ride along in the report:
+/// * `scenario_library_wall_seconds` — wall time to run every `.msc`
+///   scenario under `scenario_dir` once (0.0 when the directory is absent,
+///   e.g. when the bench runs outside the repo root), so CI can gate
+///   regressions on the committed scenario library, not just the
+///   synthetic stream.
+/// * the `diurnal_*` fields from [`diurnal_bench`] — the long-horizon
+///   macro-stepping benchmark and its built-in exactness assertion.
+pub fn run_sim_bench(requests: usize, seed: u64, scenario_dir: Option<&str>) -> Json {
     let model = ModelConfig::tiny();
     let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
     let spec = WorkloadSpec::tiny_bench();
@@ -499,6 +521,7 @@ pub fn run_sim_bench(requests: usize, seed: u64) -> Json {
     let rep = engine.run();
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
 
+    let diurnal = diurnal_bench(seed);
     Json::obj()
         .set("requests", requests)
         .set("completed", rep.completed)
@@ -511,6 +534,131 @@ pub fn run_sim_bench(requests: usize, seed: u64) -> Json {
         .set("peak_in_flight", rep.peak_in_flight)
         .set("peak_queue_events", rep.peak_queue_events)
         .set("calibrated_arrival_rate_rps", rate)
+        .set(
+            "scenario_library_wall_seconds",
+            scenario_dir.map_or(0.0, scenario_library_wall),
+        )
+        .set("diurnal_simulated_seconds", diurnal.simulated_seconds)
+        .set("diurnal_iterations", diurnal.iterations)
+        .set("diurnal_wall_seconds", diurnal.wall_macro)
+        .set("diurnal_wall_seconds_no_macro", diurnal.wall_no_macro)
+        .set(
+            "diurnal_macro_speedup",
+            diurnal.wall_no_macro / diurnal.wall_macro,
+        )
+}
+
+/// Wall seconds to run the committed scenario library once: every `.msc`
+/// file under `dir`, sorted path order, unsharded, default engine knobs.
+/// Returns 0.0 when the directory is missing or holds no scenarios — the
+/// CI regression gate skips on 0.
+fn scenario_library_wall(dir: &str) -> f64 {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0.0;
+    };
+    let mut files: Vec<std::path::PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "msc"))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return 0.0;
+    }
+    // msi-lint: allow(wall-clock-in-sim) -- bench wall timing by design; never feeds a report
+    let t0 = std::time::Instant::now();
+    for path in &files {
+        let scenario = crate::sim::scenario::load(&path.to_string_lossy())
+            .unwrap_or_else(|e| panic!("scenario library bench: {e}"));
+        let _ = scenario.run();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Result of [`diurnal_bench`]: one simulated day, run twice.
+struct DiurnalBench {
+    simulated_seconds: f64,
+    iterations: u64,
+    wall_macro: f64,
+    wall_no_macro: f64,
+}
+
+/// The long-horizon macro-stepping benchmark: a day-shaped trace — a dense
+/// surge of long uniform decodes at t = 0, then a sparse overnight trickle
+/// pacing the clock out to four simulated hours. Between external events
+/// the decode batch is externally quiet, so under macro-stepping the wall
+/// time scales with the external-event count instead of the iteration
+/// count; the same trace re-run with macro-stepping off provides the
+/// denominator for `diurnal_macro_speedup`. The two reports are asserted
+/// byte-identical, so the bench doubles as an end-to-end exactness check
+/// at a batch size and horizon the unit tests don't reach.
+fn diurnal_bench(seed: u64) -> DiurnalBench {
+    const SURGE: usize = 4096;
+    const TRICKLE: usize = 36;
+    const HORIZON_S: f64 = 4.0 * 3600.0;
+
+    let model = ModelConfig::tiny();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    // sigma 0: uniform decode lengths keep the whole surge one span (no
+    // early completions splitting it) — the externally-quiet shape the
+    // macro path exists to collapse.
+    let spec = WorkloadSpec {
+        median_input: 32.0,
+        median_output: 4096.0,
+        sigma: 0.0,
+        ..Default::default()
+    };
+    let mut reqs: Vec<Request> = RequestStream::new(spec.clone(), SURGE, seed).collect();
+    for i in 0..TRICKLE {
+        reqs.push(Request {
+            id: (SURGE + i) as u64,
+            arrival: (i as f64 + 1.0) * HORIZON_S / (TRICKLE as f64 + 1.0),
+            input_len: 32,
+            // Short overnight decodes: a near-empty batch costs about the
+            // same with or without macro-stepping, so long solo decodes
+            // would only dilute the measured ratio.
+            output_len: 64,
+            tenant: 0,
+        });
+    }
+
+    let mut plan = PlanSearcher::new(model.clone(), cluster.clone(), spec.avg_seq_len())
+        .search()
+        .expect("tiny plan");
+    // One attention node, one micro-batch, batch = the whole surge, no
+    // prefill pool: the bench isolates decode boundary-work scaling from
+    // scheduler packing and prefill-pass events.
+    plan.n_a = 1;
+    plan.m = 1;
+    plan.global_batch = SURGE;
+    plan.n_p = 0;
+    let cfg = |macro_step: bool| ClusterSimConfig {
+        // Ideal popularity for the same reason as the streaming bench: the
+        // target is event machinery, not per-token gating draws.
+        popularity: ExpertPopularity::Ideal,
+        seed,
+        macro_step,
+        ..ClusterSimConfig::new(model.clone(), cluster.clone(), plan.clone())
+    };
+    let timed = |macro_step: bool| {
+        let engine = ClusterEngine::new(cfg(macro_step), Box::new(TraceSource::new(reqs.clone())));
+        // msi-lint: allow(wall-clock-in-sim) -- bench wall timing by design; never feeds a report
+        let t0 = std::time::Instant::now();
+        let rep = engine.run();
+        (t0.elapsed().as_secs_f64().max(1e-9), rep)
+    };
+    let (wall_macro, rep) = timed(true);
+    let (wall_no_macro, rep_no) = timed(false);
+    assert_eq!(
+        rep.to_json().to_string(),
+        rep_no.to_json().to_string(),
+        "macro-stepped diurnal report must be byte-identical to --no-macro"
+    );
+    DiurnalBench {
+        simulated_seconds: rep.elapsed,
+        iterations: rep.iterations,
+        wall_macro,
+        wall_no_macro,
+    }
 }
 
 #[cfg(test)]

@@ -124,3 +124,54 @@ fn decode_loop_is_allocation_free_in_steady_state() {
          fused path"
     );
 }
+
+/// Sweep-cell recycling: a run that adopts a warmed [`EngineScratch`]
+/// (request table, pipeline core, fused queue, span/event scratch from a
+/// previous cell) must allocate strictly fewer times than an identical
+/// fresh run — and produce a byte-identical report. This is the property
+/// `run_sweep` relies on to amortize engine state across a grid instead
+/// of rebuilding it per cell.
+#[test]
+fn recycled_scratch_allocates_less_than_fresh_run() {
+    use megascale_infer::sim::{ClusterEngine, EngineScratch};
+    use megascale_infer::workload::TraceSource;
+
+    let n = 64;
+    // Warm up lazily-initialized process state.
+    let _ = measure(n, 8);
+
+    let (cfg, reqs) = scenario(n, 64);
+    let (fresh_allocs, fresh_json) = {
+        let cfg = cfg.clone();
+        let src = Box::new(TraceSource::new(reqs.clone()));
+        let before = ALLOCS.load(Ordering::Relaxed);
+        let rep = ClusterEngine::new(cfg, src).run();
+        let allocs = ALLOCS.load(Ordering::Relaxed) - before;
+        assert_eq!(rep.completed, n as u64, "fresh run drains");
+        (allocs, rep.to_json().to_string())
+    };
+
+    let mut scratch = EngineScratch::default();
+    // First recycled run only warms the scratch buffers.
+    let _ = ClusterEngine::new(cfg.clone(), Box::new(TraceSource::new(reqs.clone())))
+        .run_recycled(&mut scratch);
+    let (warm_allocs, warm_json) = {
+        let cfg = cfg.clone();
+        let src = Box::new(TraceSource::new(reqs.clone()));
+        let before = ALLOCS.load(Ordering::Relaxed);
+        let rep = ClusterEngine::new(cfg, src).run_recycled(&mut scratch);
+        let allocs = ALLOCS.load(Ordering::Relaxed) - before;
+        assert_eq!(rep.completed, n as u64, "recycled run drains");
+        (allocs, rep.to_json().to_string())
+    };
+
+    assert_eq!(
+        warm_json, fresh_json,
+        "recycling must not change the report in any byte"
+    );
+    assert!(
+        warm_allocs < fresh_allocs,
+        "warmed scratch must cut allocations: fresh {fresh_allocs}, \
+         recycled {warm_allocs}"
+    );
+}

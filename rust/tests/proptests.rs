@@ -627,6 +627,133 @@ fn prop_fused_matches_stepwise_byte_identical() {
     }
 }
 
+/// Macro-stepping (collapsing externally-quiet decode iterations into one
+/// bulk advance) is BYTE-identical to per-iteration stepping: for
+/// arbitrary workloads, expert popularity skews (including drifting),
+/// rebalance cadences, fault/elasticity schedules, and horizon cuts that
+/// bisect a span, running the same trace with `macro_step: true` and
+/// `macro_step: false` must serialize to the exact same JSON report. A
+/// third run with the fused fast path ALSO disabled pins that the whole
+/// fast-path stack (macro over fused over stepwise) collapses to one
+/// answer. This is the contract that lets a quiet span cost O(1) boundary
+/// scans instead of O(k).
+#[test]
+fn prop_macro_step_matches_stepwise_byte_identical() {
+    use megascale_infer::sim::{FaultInjection, FaultKind};
+    let model = ModelConfig::tiny();
+    let cluster = ClusterSpec::homogeneous(GpuKind::Ampere80G);
+    let base_plan = PlanSearcher::new(model.clone(), cluster.clone(), 200.0)
+        .search()
+        .expect("tiny plan");
+    for (seed, mut rng) in cases(40) {
+        let n = 2 + rng.below(40);
+        let open = rng.chance(0.4);
+        let spec = WorkloadSpec {
+            median_input: 16.0 + rng.uniform() * 96.0,
+            // Long enough decodes that closed-loop cases form real spans
+            // (the span length is min remaining output across the batch).
+            median_output: 4.0 + rng.uniform() * 28.0,
+            sigma: 0.3,
+            arrival_rate: open.then(|| 30.0 + rng.uniform() * 300.0),
+            burst_sigma: if open { rng.uniform() } else { 0.0 },
+            ..Default::default()
+        };
+        let reqs = spec.generate(n, seed.wrapping_add(17));
+        let colocated = rng.chance(0.2);
+        let mut cfg = if colocated {
+            let cplan = ColocatedPlan::sized_to_match(BaselineKind::Vllm, &model, &cluster, 8);
+            ClusterSimConfig::colocated(model.clone(), cluster.clone(), cplan)
+        } else {
+            let mut plan = base_plan.clone();
+            plan.m = 1 + rng.below(4);
+            ClusterSimConfig::new(model.clone(), cluster.clone(), plan)
+        };
+        cfg.seed = seed.wrapping_mul(37).wrapping_add(7);
+        cfg.popularity = match rng.below(4) {
+            0 => ExpertPopularity::Uniform,
+            1 => ExpertPopularity::Zipf(0.5 + rng.uniform()),
+            2 => ExpertPopularity::ZipfBalanced(0.5 + rng.uniform()),
+            _ => ExpertPopularity::ZipfDrifting {
+                alpha: 0.5 + rng.uniform(),
+                period: 0.01 + rng.uniform() * 0.1,
+            },
+        };
+        cfg.rebalance_period = rng.chance(0.4).then(|| 0.005 + rng.uniform() * 0.05);
+        cfg.prefill_chunk = [0usize, 64, 1024][rng.below(3)];
+        // Fault/elasticity schedules: injections are external events, so a
+        // span must never step across one. Failures always get a matching
+        // recovery so closed-loop runs still quiesce.
+        let n_a = cfg.plan.n_a.max(1);
+        let mut injections = Vec::new();
+        if n_a >= 2 && rng.chance(0.5) {
+            let node = rng.below(n_a);
+            let at = rng.uniform() * 0.02;
+            injections.push(FaultInjection {
+                at,
+                kind: FaultKind::FailAttention { node },
+                counted: true,
+            });
+            injections.push(FaultInjection {
+                at: at + 0.005 + rng.uniform() * 0.05,
+                kind: FaultKind::RecoverAttention { node },
+                counted: true,
+            });
+        }
+        if rng.chance(0.4) {
+            injections.push(FaultInjection {
+                at: rng.uniform() * 0.05,
+                kind: FaultKind::StraggleAttention {
+                    node: rng.below(n_a),
+                    factor: 1.0 + rng.uniform() * 3.0,
+                },
+                counted: true,
+            });
+        }
+        if rng.chance(0.4) {
+            injections.push(FaultInjection {
+                at: rng.uniform() * 0.05,
+                kind: FaultKind::DegradeNic {
+                    factor: 1.0 + rng.uniform() * 2.0,
+                },
+                counted: true,
+            });
+        }
+        if !colocated && rng.chance(0.4) {
+            // Shrink or grow, staying within the model's expert count —
+            // the bound `msi scenario` compilation enforces.
+            let target = (1 + rng.below(cfg.plan.n_e.max(1) * 2)).min(model.experts.max(1));
+            injections.push(FaultInjection {
+                at: rng.uniform() * 0.05,
+                kind: FaultKind::ResizeExperts { n_e: target },
+                counted: true,
+            });
+        }
+        cfg.injections = injections;
+        if rng.chance(0.3) {
+            // Horizon cut landing mid-run — typically bisecting a span.
+            cfg.max_sim_seconds = Some(1e-4 + rng.uniform() * 0.05);
+        }
+        assert!(cfg.macro_step, "seed {seed}: macro-stepping is the default");
+        assert!(cfg.fuse, "seed {seed}: fused fast path is the default");
+
+        let macro_run = ClusterSim::new(cfg.clone()).run(&reqs);
+        cfg.macro_step = false;
+        let stepped = ClusterSim::new(cfg.clone()).run(&reqs);
+        assert_eq!(
+            macro_run.to_json().to_string(),
+            stepped.to_json().to_string(),
+            "seed {seed}: macro and per-iteration reports must be byte-identical"
+        );
+        cfg.fuse = false;
+        let unfused = ClusterSim::new(cfg).run(&reqs);
+        assert_eq!(
+            macro_run.to_json().to_string(),
+            unfused.to_json().to_string(),
+            "seed {seed}: macro report must match the unfused stepwise reference"
+        );
+    }
+}
+
 /// Reference event queue for the equivalence property below: the seed's
 /// original `BinaryHeap` implementation, kept verbatim in spirit —
 /// earliest time first, insertion order among equal timestamps.
